@@ -1,0 +1,74 @@
+//! 100-chiplet LLM scalability study (paper Fig 10 + Table 4b + the
+//! headline "up to 11.8x latency / 2.36x energy" claim): GPT-J (parallel
+//! MHA-FF) and Llama2-7B (MQA) against the chiplet-rebuilt and original
+//! HAIMA/TransPIM baselines.
+//!
+//! Run: `cargo run --release --example llm_100chiplet`
+
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::sim::{simulate, SimOptions};
+use chiplet_hi::util::bench::Table;
+
+fn main() {
+    let sys = SystemConfig::s100();
+    let opts = SimOptions::default();
+
+    for model in [ModelZoo::gpt_j(), ModelZoo::llama2_7b()] {
+        let mut t = Table::new(
+            &format!("Fig 10 - {} on 100 chiplets", model.name),
+            &["N", "HI ms", "TP_c ms", "HA_c ms", "TP ms", "HA ms", "lat gain", "energy gain"],
+        );
+        let mut max_lat_gain: f64 = 0.0;
+        let mut max_e_gain: f64 = 0.0;
+        for n in [64usize, 256, 1024, 4096] {
+            let hi = simulate(Arch::Hi25D, &sys, &model, n, &opts);
+            let tpc = simulate(Arch::TransPimChiplet, &sys, &model, n, &opts);
+            let hac = simulate(Arch::HaimaChiplet, &sys, &model, n, &opts);
+            let tpo = simulate(Arch::TransPimOriginal, &sys, &model, n, &opts);
+            let hao = simulate(Arch::HaimaOriginal, &sys, &model, n, &opts);
+            let lat_gain = tpc.latency_secs.max(hac.latency_secs) / hi.latency_secs;
+            let e_gain = tpc.energy_j.max(hac.energy_j) / hi.energy_j;
+            max_lat_gain = max_lat_gain.max(lat_gain);
+            max_e_gain = max_e_gain.max(e_gain);
+            t.row(vec![
+                n.to_string(),
+                format!("{:.2}", hi.latency_secs * 1e3),
+                format!("{:.2}", tpc.latency_secs * 1e3),
+                format!("{:.2}", hac.latency_secs * 1e3),
+                format!("{:.2}", tpo.latency_secs * 1e3),
+                format!("{:.2}", hao.latency_secs * 1e3),
+                format!("{lat_gain:.1}x"),
+                format!("{e_gain:.2}x"),
+            ]);
+        }
+        t.print();
+        println!(
+            "  max gains vs chiplet baselines: {max_lat_gain:.1}x latency, {max_e_gain:.2}x energy (paper: up to 11.8x / 2.36x)"
+        );
+    }
+
+    // Table 4b point
+    let model = ModelZoo::gpt_j();
+    let hi = simulate(Arch::Hi25D, &sys, &model, 64, &opts);
+    let tp = simulate(Arch::TransPimChiplet, &sys, &model, 64, &opts);
+    let ha = simulate(Arch::HaimaChiplet, &sys, &model, 64, &opts);
+    let mut t = Table::new(
+        "Table 4b - GPT-J n=64, 100 chiplets (paper ms vs ours)",
+        &["arch", "paper (ms)", "ours (ms)", "paper rel", "ours rel"],
+    );
+    for (name, paper, ours) in [
+        ("TransPIM_chiplet", 1435.0, tp.latency_secs * 1e3),
+        ("HAIMA_chiplet", 975.0, ha.latency_secs * 1e3),
+        ("2.5D-HI", 143.0, hi.latency_secs * 1e3),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            format!("{paper:.0}"),
+            format!("{ours:.2}"),
+            format!("{:.2}x", paper / 143.0),
+            format!("{:.2}x", ours / (hi.latency_secs * 1e3)),
+        ]);
+    }
+    t.print();
+}

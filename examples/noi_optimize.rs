@@ -1,0 +1,90 @@
+//! NoI design-space optimization (paper Fig 4 + SS3.3): run MOO-STAGE,
+//! AMOSA and NSGA-II on the 64-chiplet BERT-Large design problem, print
+//! each Pareto front (mesh-normalized mu/sigma) and the PHV-vs-solver
+//! comparison, then validate the best design with the cycle-accurate
+//! NoI simulator.
+//!
+//! Run: `cargo run --release --example noi_optimize`
+
+use chiplet_hi::arch::SfcKind;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::model::kernels::Workload;
+use chiplet_hi::moo::{amosa, design::NoiDesign, nsga2, stage, Evaluator};
+use chiplet_hi::noi::{CycleSim, RoutingTable};
+use chiplet_hi::sim::engine::chiplets_for;
+use chiplet_hi::util::bench::Table;
+
+fn main() {
+    let sys = SystemConfig::s64();
+    let model = ModelZoo::bert_large();
+    let chiplets = chiplets_for(&sys);
+    let workload = Workload::build(&model, 256);
+    let ev = Evaluator::new(&sys, &chiplets, &workload);
+
+    let seeds = vec![
+        NoiDesign::mesh_seed(&sys, chiplets.len()),
+        NoiDesign::hi_seed(&sys, &chiplets, SfcKind::Boustrophedon),
+        NoiDesign::hi_seed(&sys, &chiplets, SfcKind::Hilbert),
+    ];
+
+    println!("== SFC ablation (seed designs, mesh-normalized) ==");
+    for sfc in SfcKind::all() {
+        let d = NoiDesign::hi_seed(&sys, &chiplets, sfc);
+        let o = ev.objectives(&d);
+        println!("  {:<14} mu {:.4}  sigma {:.4}", sfc.name(), o[0], o[1]);
+    }
+
+    let mut t = Table::new(
+        "solver comparison (64 chiplets, BERT-Large N=256)",
+        &["solver", "PHV", "evaluations", "front size", "best mu", "best sigma"],
+    );
+    let stage_r = stage::moo_stage(&ev, seeds.clone(), &stage::StageConfig::default());
+    let amosa_r = amosa::amosa(&ev, seeds[1].clone(), &amosa::AmosaConfig::default());
+    let nsga_r = nsga2::nsga2(&ev, seeds, &nsga2::Nsga2Config::default());
+    let mut best_design = None;
+    for (name, phv, evals, objs, archive) in [
+        ("MOO-STAGE", stage_r.phv, stage_r.evaluations, stage_r.archive.objectives(), Some(&stage_r.archive)),
+        ("AMOSA", amosa_r.phv, amosa_r.evaluations, amosa_r.archive.objectives(), None),
+        ("NSGA-II", nsga_r.phv, nsga_r.evaluations, nsga_r.archive.objectives(), None),
+    ] {
+        let best_mu = objs.iter().map(|o| o[0]).fold(f64::MAX, f64::min);
+        let best_sg = objs.iter().map(|o| o[1]).fold(f64::MAX, f64::min);
+        t.row(vec![
+            name.into(),
+            format!("{phv:.4}"),
+            evals.to_string(),
+            objs.len().to_string(),
+            format!("{best_mu:.4}"),
+            format!("{best_sg:.4}"),
+        ]);
+        if let Some(a) = archive {
+            best_design = a.best_scalar().map(|(_, d)| d.clone());
+        }
+    }
+    t.print();
+
+    println!("\n== Fig 4 Pareto front (MOO-STAGE, mesh-normalized, minimize) ==");
+    let mut front = stage_r.archive.objectives();
+    front.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+    for o in &front {
+        println!("  mu {:.4}  sigma {:.4}", o[0], o[1]);
+    }
+
+    // cycle-accurate validation of the knee design (SS3.3 last step)
+    if let Some(d) = best_design {
+        let routes = RoutingTable::build(&d.topo);
+        let sim = CycleSim::new(&d.topo, &routes, sys.hw.noi_buffer_flits);
+        let phases = chiplet_hi::model::traffic::hi_traffic(&sys, &chiplets, &workload);
+        let mut total_cycles = 0u64;
+        for p in &phases {
+            let r = sim.run_phase(p, sys.hw.noi_flit_bits as f64 / 8.0);
+            total_cycles += (r.cycles as f64 * r.scale) as u64 * p.repeats as u64;
+        }
+        println!(
+            "\ncycle-accurate validation of knee design: {} NoI cycles ({:.3} ms at {:.1} GHz)",
+            total_cycles,
+            total_cycles as f64 / sys.hw.noi_clock_hz * 1e3,
+            sys.hw.noi_clock_hz / 1e9
+        );
+    }
+}

@@ -1,0 +1,50 @@
+//! Quickstart: simulate BERT-Base inference on the 36-chiplet 2.5D-HI
+//! platform and print the per-kernel breakdown + end-to-end metrics.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::sim::{simulate, SimOptions};
+
+fn main() {
+    let sys = SystemConfig::s36();
+    let model = ModelZoo::bert_base();
+    let seq_len = 64;
+
+    println!(
+        "system: {} chiplets ({} SM / {} MC / {} DRAM / {} ReRAM), grid {}x{}",
+        sys.size.chiplets(),
+        sys.alloc.sm,
+        sys.alloc.mc,
+        sys.alloc.dram,
+        sys.alloc.reram,
+        sys.grid.0,
+        sys.grid.1
+    );
+    println!("model: {} (d={}, {} layers)", model.name, model.d_model, model.layers);
+
+    for arch in Arch::chiplet_set() {
+        let r = simulate(arch, &sys, &model, seq_len, &SimOptions::default());
+        println!("\n== {} ==", r.arch);
+        for k in &r.kernels {
+            println!(
+                "  {:<10} {:>9.2} us/invocation x{:<3} (compute {:>8.2} | comm {:>8.2} | dram {:>7.2} | ovh {:>7.2})",
+                k.kind.name(),
+                k.secs_once() * 1e6,
+                k.repeats,
+                k.compute_secs * 1e6,
+                k.comm_secs * 1e6,
+                k.dram_secs * 1e6,
+                k.overhead_secs * 1e6,
+            );
+        }
+        println!(
+            "  end-to-end: {:.3} ms | {:.2} mJ | EDP {:.3e} | peak {:.1} C",
+            r.latency_secs * 1e3,
+            r.energy_j * 1e3,
+            r.edp(),
+            r.temp_c
+        );
+    }
+}

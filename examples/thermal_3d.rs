@@ -1,0 +1,71 @@
+//! 3D-HI thermal study (paper SS4.3 / Fig 11): joint
+//! performance-thermal-noise optimization vs the thermally-infeasible
+//! original HAIMA/TransPIM, plus the 4-objective MOO (Eq 20).
+//!
+//! Run: `cargo run --release --example thermal_3d`
+
+use chiplet_hi::arch::SfcKind;
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::model::kernels::Workload;
+use chiplet_hi::moo::{design::NoiDesign, stage, Evaluator};
+use chiplet_hi::sim::engine::chiplets_for;
+use chiplet_hi::sim::{simulate, SimOptions};
+use chiplet_hi::util::bench::Table;
+
+fn main() {
+    let sys = SystemConfig::s100();
+    let opts = SimOptions::default();
+
+    // ---- Fig 11: normalized execution time / EDP + steady-state temps
+    let mut t = Table::new(
+        "Fig 11 - exec time + EDP normalized to 3D-HI, steady-state temperature",
+        &["model", "N", "arch", "norm time", "norm EDP", "T (C)", "feasible"],
+    );
+    for (model, n) in [
+        (ModelZoo::bert_large(), 256usize),
+        (ModelZoo::bert_large(), 2056),
+        (ModelZoo::gpt_j(), 256),
+        (ModelZoo::llama2_7b(), 256),
+    ] {
+        let hi = simulate(Arch::Hi3D, &sys, &model, n, &opts);
+        for arch in [Arch::Hi3D, Arch::HaimaOriginal, Arch::TransPimOriginal] {
+            let r = simulate(arch, &sys, &model, n, &opts);
+            t.row(vec![
+                model.name.into(),
+                n.to_string(),
+                r.arch.clone(),
+                format!("{:.2}", r.latency_secs / hi.latency_secs),
+                format!("{:.2}", r.edp() / hi.edp()),
+                format!("{:.1}", r.temp_c),
+                if r.temp_c < sys.hw.dram_t_max_c { "yes" } else { "NO (>95C)" }.into(),
+            ]);
+        }
+    }
+    t.print();
+
+    // ---- Eq 20: 4-objective MOO with thermal + ReRAM-noise objectives
+    println!("\n== 3D-HI 4-objective MOO (mu, sigma, T, Noise — Eq 20) ==");
+    let chiplets = chiplets_for(&sys);
+    let w = Workload::build(&ModelZoo::bert_large(), 256);
+    let ev = Evaluator::new(&sys, &chiplets, &w).with_3d(2);
+    let seeds = vec![
+        NoiDesign::mesh_seed(&sys, chiplets.len()),
+        NoiDesign::hi_seed(&sys, &chiplets, SfcKind::Hilbert),
+    ];
+    let cfg = stage::StageConfig {
+        iterations: 4,
+        max_steps: 20,
+        ..Default::default()
+    };
+    let r = stage::moo_stage(&ev, seeds, &cfg);
+    println!("Pareto set ({} designs, PHV {:.4}):", r.archive.len(), r.phv);
+    let mut front = r.archive.objectives();
+    front.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+    for o in front.iter().take(10) {
+        println!(
+            "  mu {:.3}  sigma {:.3}  T-obj {:.3}  noise {:.4}",
+            o[0], o[1], o[2], o[3]
+        );
+    }
+}

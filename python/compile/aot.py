@@ -1,0 +1,120 @@
+"""AOT: lower L2 entry points to HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py.
+
+Artifacts (all at the TINY config, python/compile/model.py):
+  encoder_layer.hlo.txt   one full serial encoder block
+  encoder_layer_parallel.hlo.txt  GPT-J-style parallel MHA+FF block
+  attention.hlo.txt       fused MHA only (SM-chiplet kernel)
+  attention_mqa.hlo.txt   MQA variant (Llama2-style)
+  ffn.hlo.txt             fused FF only (ReRAM-macro kernel)
+  embed.hlo.txt           input embedding (Eq 1)
+  manifest.json           shapes + entry metadata consumed by rust runtime
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import attention
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entries(cfg: model.ModelConfig):
+    """(name, fn, arg_specs) for every artifact."""
+    n, d, h, dff, v = cfg.seq_len, cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.vocab
+    dh = cfg.d_head
+    param_specs = [
+        spec(d, d), spec(d, d), spec(d, d), spec(d, d),  # wq wk wv wo
+        spec(d, dff), spec(dff), spec(dff, d), spec(d),  # w1 b1 w2 b2
+        spec(d), spec(d), spec(d), spec(d),              # ln1_g ln1_b ln2_g ln2_b
+    ]
+    entries = [
+        ("encoder_layer", model.encoder_layer_fn(cfg), [spec(n, d)] + param_specs),
+        (
+            "encoder_layer_parallel",
+            model.encoder_layer_fn(model.ModelConfig(variant="parallel")),
+            [spec(n, d)] + param_specs,
+        ),
+        (
+            "attention",
+            model.attention_fn(cfg),
+            [spec(h, n, dh), spec(h, n, dh), spec(h, n, dh)],
+        ),
+        (
+            "attention_mqa",
+            lambda q, k, v: (attention.multi_query_attention(q, k, v),),
+            [spec(h, n, dh), spec(n, dh), spec(n, dh)],
+        ),
+        ("ffn", model.ffn_fn(cfg), [spec(n, d), spec(d, dff), spec(dff), spec(dff, d), spec(d)]),
+        (
+            "embed",
+            model.embed_fn(cfg),
+            [spec(v, d), spec(n, d), spec(n, dtype=jnp.int32)],
+        ),
+    ]
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = model.TINY
+    manifest = {
+        "config": {
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "vocab": cfg.vocab,
+        },
+        "entries": {},
+    }
+    for name, fn, specs in build_entries(cfg):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""L1 Pallas kernels for the 2.5D-HI transformer dataflow.
+
+- attention: FlashAttention-style fused attention (SM chiplet hot path)
+- mvm: ReRAM-crossbar bit-sliced MVM (embedding / FF static weights)
+- ffn: fused GeLU MLP tile kernel (ReRAM macro dataflow)
+- ref: pure-jnp oracles for all of the above
+"""
+
+from . import attention, ffn, mvm, ref  # noqa: F401

@@ -1,0 +1,120 @@
+"""L1: FlashAttention-style fused attention as a Pallas kernel.
+
+The paper (§3.2, Ref [36]) uses the FlashAttention dataflow to partition
+Q/K/V matrices onto the SM chiplets: weight tiles stream from HBM2 via the
+MC chiplets into SM scratchpads and the score+softmax+PV computation is
+fused on-chip ("2.5D-HI benefits from the fused score and Softmax
+calculations on the SM chiplets", §4.2).
+
+TPU adaptation: the threadblock tiling of the GPU formulation becomes a
+Pallas grid over (q_block, k_block); each K/V tile is staged HBM→VMEM by a
+BlockSpec, and the online-softmax accumulators (m, l, acc) live in VMEM
+scratch — the role shared memory plays on the GPU. Block sizes default to
+MXU-aligned 128 and are clamped to the problem size.
+
+interpret=True throughout: real-TPU lowering emits Mosaic custom-calls the
+CPU PJRT plugin cannot execute; the interpret path lowers to plain HLO so
+the rust runtime can run it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, kv_len: int):
+    """Grid cell: one Q block against the full K/V, online softmax.
+
+    q_ref: [block_q, d] VMEM tile; k_ref/v_ref: [kv_len, d] (small problems
+    keep K/V resident; the HBM→VMEM schedule over k-blocks is expressed by
+    the fori_loop below, matching the FlashAttention inner loop).
+    """
+    q = q_ref[...].astype(jnp.float32)
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    block_q = q.shape[0]
+    n_kb = pl.cdiv(kv_len, block_k)
+
+    def body(kb, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_tile = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v_tile = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        # zero out-of-range rows on the ragged final tile (OOB loads are
+        # undefined in interpret mode — NaNs would poison p @ v_tile)
+        row = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k, 1), 0)
+        valid = row < kv_len
+        k_tile = jnp.where(valid, k_tile.astype(jnp.float32), 0.0)
+        v_tile = jnp.where(valid, v_tile.astype(jnp.float32), 0.0)
+        s = (q @ k_tile.T) * scale  # [bq, bk]
+        # mask out-of-range keys so they get zero softmax weight
+        kidx = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kidx < kv_len, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * alpha[:, None] + p @ v_tile.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_kb, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Single-head fused attention. q,k,v: [n, d] -> [n, d].
+
+    Grid over Q blocks; K/V whole-array refs with the k-loop inside the
+    kernel (the paper's SM-cluster inner loop over HBM tiles).
+    """
+    n, d = q.shape
+    kv_len = k.shape[0]
+    block_q = min(block_q, n)
+    block_k = min(block_k, kv_len)
+    grid = (pl.cdiv(n, block_q),)
+    kernel = functools.partial(_attn_kernel, block_k=block_k, kv_len=kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((kv_len, d), lambda i: (0, 0)),
+            pl.BlockSpec((kv_len, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def multi_head_attention(q, k, v, *, block_q: int = 128, block_k: int = 128):
+    """MHA over stacked heads [h, n, d]; heads are independent grid work."""
+    f = functools.partial(flash_attention, block_q=block_q, block_k=block_k)
+    return jax.vmap(f)(q, k, v)
+
+
+def multi_query_attention(q, k, v, *, block_q: int = 128, block_k: int = 128):
+    """MQA (paper Fig 3): per-head Q [h, n, d], shared K/V [n, d].
+
+    Identical FLOPs to MHA but K/V stream from memory once — the traffic
+    asymmetry L3 models for Llama2-7B.
+    """
+    f = functools.partial(flash_attention, block_q=block_q, block_k=block_k)
+    return jax.vmap(lambda qh: f(qh, k, v))(q)

@@ -1,0 +1,57 @@
+"""L1: fused feed-forward (GeLU MLP) tile kernel.
+
+The FF layers dominate decoder runtime for LLMs (paper §3.1: >99% of GPT-3
+MVMs) and run on the ReRAM macro pipelined layer-to-layer along the SFC.
+The fused kernel computes GeLU(x@W1+b1)@W2+b2 for one row-tile per grid
+cell, keeping the [bm, d_ff] intermediate in VMEM — the analog of the
+activation never leaving the ReRAM macro in the paper's dataflow (§4.2
+"the entire data flow is confined within the ReRAM macro").
+
+interpret=True as everywhere (CPU PJRT).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    h = x @ w1_ref[...].astype(jnp.float32) + b1_ref[...].astype(jnp.float32)
+    h = jax.nn.gelu(h, approximate=True)
+    o = h @ w2_ref[...].astype(jnp.float32) + b2_ref[...].astype(jnp.float32)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def fused_ffn(
+    x: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    *,
+    block_m: int = 128,
+) -> jax.Array:
+    """x: [n, d] -> [n, d]; w1: [d, d_ff], w2: [d_ff, d]."""
+    n, d = x.shape
+    d_ff = w1.shape[1]
+    block_m = min(block_m, n)
+    grid = (pl.cdiv(n, block_m),)
+    return pl.pallas_call(
+        functools.partial(_ffn_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d_ff), lambda i: (0, 0)),
+            pl.BlockSpec((d_ff,), lambda i: (0,)),
+            pl.BlockSpec((d_ff, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)

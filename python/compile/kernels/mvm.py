@@ -1,0 +1,93 @@
+"""L1: ReRAM-crossbar bit-sliced MVM as a Pallas kernel.
+
+The paper maps the *static* weight kernels (input embedding, FF layers) to
+ReRAM PIM chiplets (Table 1: 128x128 crossbars, 2-bit/cell, 8-bit ADC,
+96 crossbars/tile, 16 tiles/chiplet). A crossbar computes an analog MVM
+over one 2-bit digit plane of the weight matrix; the shift-and-add
+peripheral combines n_slices digit planes into the full-precision product.
+
+This kernel reproduces that arithmetic *digitally*: the weight matrix is
+pre-sliced into 2-bit planes (kernels.ref.quantize_weights), the kernel
+accumulates plane partial-products with the same shift-and-add schedule,
+so the quantization error of the crossbar datapath is faithfully present
+in the numerics the rust driver executes. Crossbar/ADC *timing* is modeled
+in rust (compute/reram.rs) — here we only reproduce what the silicon
+computes.
+
+TPU adaptation: one grid cell = one (row-tile x col-tile) of the output,
+i.e. one crossbar-array-group; digit planes are accumulated in a VMEM
+scratch accumulator, mirroring how ISAAC's accumulator SRAM sits next to
+the ADC column.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _xbar_kernel(x_ref, planes_ref, o_ref, *, n_slices: int, base: int, zero: int):
+    """One output tile: accumulate digit-plane partial products.
+
+    x_ref: [bm, kdim]; planes_ref: [n_slices, kdim, bn]; o_ref: [bm, bn].
+    """
+    x = x_ref[...].astype(jnp.float32)
+    acc = jnp.zeros((x.shape[0], o_ref.shape[1]), jnp.float32)
+
+    def body(s, acc):
+        plane = planes_ref[s, :, :].astype(jnp.float32)
+        # shift-and-add: digit s has positional weight base^(n_slices-1-s)
+        w = jnp.asarray(base, jnp.float32) ** (n_slices - 1 - s)
+        return acc + w * (x @ plane)
+
+    acc = jax.lax.fori_loop(0, n_slices, body, acc)
+    # remove the symmetric zero-offset contribution (bias column in ISAAC)
+    xsum = jnp.sum(x, axis=-1, keepdims=True)
+    o_ref[...] = (acc - zero * xsum).astype(o_ref.dtype)
+
+
+def crossbar_matmul(
+    x: jax.Array,
+    planes: jax.Array,
+    scale: jax.Array,
+    *,
+    bits_per_cell: int = 2,
+    block_m: int = 128,
+    block_n: int = 128,
+) -> jax.Array:
+    """Bit-sliced matmul: x [m, kdim] @ planes [n_slices, kdim, n] -> [m, n].
+
+    `planes`/`scale` come from ref.quantize_weights (done once at weight
+    load — the paper's one-time ReRAM programming step).
+    """
+    m, kdim = x.shape
+    n_slices, _, n = planes.shape
+    base = 1 << bits_per_cell
+    zero = (base**n_slices) // 2
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    grid = (pl.cdiv(m, block_m), pl.cdiv(n, block_n))
+    kernel = functools.partial(_xbar_kernel, n_slices=n_slices, base=base, zero=zero)
+    raw = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, kdim), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_slices, kdim, block_n), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, planes)
+    return (raw * scale).astype(x.dtype)
+
+
+def crossbar_mvm(x: jax.Array, w: jax.Array, bits_per_cell: int = 2, n_slices: int = 8):
+    """Convenience wrapper: quantize w then run the crossbar kernel."""
+    planes, scale, _ = ref.quantize_weights(w, bits_per_cell, n_slices)
+    return crossbar_matmul(x, planes, scale, bits_per_cell=bits_per_cell)

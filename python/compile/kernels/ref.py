@@ -1,0 +1,108 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest (python/tests/) asserts allclose between kernel and oracle across a
+hypothesis-driven sweep of shapes and dtypes. The oracles are also the
+numerics ground truth for the rust end-to-end driver (the driver prints a
+checksum that EXPERIMENTS.md compares against these).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Standard scaled dot-product attention, one head.
+
+    q: [n, d], k: [n, d], v: [n, d]  ->  [n, d]
+    Softmax over the key axis with 1/sqrt(d) scaling (paper Eq 4-6; the
+    paper normalizes by sqrt(d_model), we normalize by the head dim as in
+    the transformer literature the paper cites — the constant only rescales
+    logits and does not change the dataflow being modeled).
+    """
+    d = q.shape[-1]
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return probs @ v
+
+
+def mha_ref(q, k, v):
+    """Multi-head attention over stacked heads: [h, n, d] each."""
+    return jax.vmap(attention_ref)(q, k, v)
+
+
+def mqa_ref(q, k, v):
+    """Multi-query attention: distinct Q per head, shared K/V.
+
+    q: [h, n, d], k: [n, d], v: [n, d] (paper Fig 3).
+    """
+    return jax.vmap(lambda qh: attention_ref(qh, k, v))(q)
+
+
+def quantize_weights(w: jax.Array, bits_per_cell: int = 2, n_slices: int = 8):
+    """Quantize a weight matrix into ReRAM-crossbar bit-slices.
+
+    Returns (planes, scale, zero) where planes is int32 [n_slices, in, out]
+    holding `bits_per_cell`-bit unsigned digits, most-significant first, so
+    w_q = sum_s planes[s] * base^(n_slices-1-s), and
+    w ≈ (w_q - zero) * scale with zero = base^n_slices/2 (symmetric).
+    """
+    total_bits = bits_per_cell * n_slices
+    assert total_bits <= 16, (
+        f"crossbar digit planes are int32-accumulated; {total_bits}-bit "
+        "weights exceed the paper's 16-bit datapath"
+    )
+    base = 1 << bits_per_cell
+    levels = base**n_slices  # total representable levels
+    zero = levels // 2
+    amax = jnp.max(jnp.abs(w)) + 1e-12
+    scale = amax / (levels // 2 - 1)
+    wq = jnp.clip(jnp.round(w / scale) + zero, 0, levels - 1).astype(jnp.int32)
+    planes = []
+    rem = wq
+    for s in range(n_slices):
+        shift = bits_per_cell * (n_slices - 1 - s)
+        digit = (rem >> shift) & (base - 1)
+        planes.append(digit)
+    return jnp.stack(planes), scale, zero
+
+
+def crossbar_mvm_ref(
+    x: jax.Array, w: jax.Array, bits_per_cell: int = 2, n_slices: int = 8
+) -> jax.Array:
+    """Reference for the ReRAM bit-sliced MVM: quantized x @ w.
+
+    Models the ISAAC-style arithmetic the paper assigns to ReRAM chiplets:
+    weights live as bits_per_cell-bit conductances across n_slices crossbar
+    columns; digit partial sums are shifted-and-added (the accumulator
+    peripheral in Table 1). The *quantization* is real; crossbar timing is
+    modeled in rust (L3).
+    """
+    planes, scale, zero = quantize_weights(w, bits_per_cell, n_slices)
+    base = 1 << bits_per_cell
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)
+    for s in range(n_slices):
+        weight = float(base ** (n_slices - 1 - s))
+        acc = acc + weight * (x.astype(jnp.float32) @ planes[s].astype(jnp.float32))
+    # subtract the zero offset: zero * sum(x) per output column
+    xsum = jnp.sum(x.astype(jnp.float32), axis=-1, keepdims=True)
+    acc = acc - zero * xsum
+    return (acc * scale).astype(x.dtype)
+
+
+def ffn_ref(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array, b2: jax.Array):
+    """Feed-forward block: GeLU(x@w1 + b1) @ w2 + b2 (paper §3.1: GeLU)."""
+    h = jax.nn.gelu(x @ w1 + b1, approximate=True)
+    return h @ w2 + b2
+
+
+def layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def softmax_ref(x: jax.Array) -> jax.Array:
+    return jax.nn.softmax(x, axis=-1)

@@ -1,0 +1,199 @@
+"""L2: transformer blocks in JAX, composed from the L1 Pallas kernels.
+
+The model zoo mirrors the paper's Table 3 *structurally* (encoder-only,
+encoder-decoder, decoder-only, MHA vs MQA, serial vs parallel MHA-FF) at
+artifact-friendly sizes: the rust coordinator loads one AOT-compiled
+encoder/decoder layer and iterates it `layers` times, exactly how the
+paper reuses one chiplet mapping per block ("the computational structure
+is identical in Transformer models with varying numbers of
+encoder/decoder blocks", §3.1).
+
+Everything here is build-time: aot.py lowers the entry points below to
+HLO text in artifacts/, and rust (runtime/) executes them via PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, ffn, mvm, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Structural knobs of one transformer block (paper Table 3)."""
+
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    seq_len: int = 64
+    vocab: int = 512
+    variant: str = "mha"  # "mha" | "mqa" | "parallel" (GPT-J-style)
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# The artifact config: BERT-Tiny-like (d_model=128, paper §3.1 cites
+# d_model=128 for BERT-Tiny). Small enough that AOT compile + interpret
+# execution stay fast, large enough to exercise every kernel tile path.
+TINY = ModelConfig()
+TINY_MQA = ModelConfig(variant="mqa")
+TINY_PARALLEL = ModelConfig(variant="parallel")
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Deterministic block parameters (the rust driver regenerates the
+    same values from the same seed via the exported `init` artifact is
+    unnecessary — params are baked as constants? No: params are runtime
+    inputs so the rust side can load real weights; here we just provide
+    the deterministic initializer used by tests and the e2e example)."""
+    k = jax.random.split(jax.random.PRNGKey(seed), 12)
+    d, h, dff, v = cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.vocab
+    s = 0.02
+    p = {
+        "wq": s * jax.random.normal(k[0], (d, d), cfg.dtype),
+        "wk": s * jax.random.normal(k[1], (d, d), cfg.dtype),
+        "wv": s * jax.random.normal(k[2], (d, d), cfg.dtype),
+        "wo": s * jax.random.normal(k[3], (d, d), cfg.dtype),
+        "w1": s * jax.random.normal(k[4], (d, dff), cfg.dtype),
+        "b1": jnp.zeros((dff,), cfg.dtype),
+        "w2": s * jax.random.normal(k[5], (dff, d), cfg.dtype),
+        "b2": jnp.zeros((d,), cfg.dtype),
+        "ln1_g": jnp.ones((d,), cfg.dtype),
+        "ln1_b": jnp.zeros((d,), cfg.dtype),
+        "ln2_g": jnp.ones((d,), cfg.dtype),
+        "ln2_b": jnp.zeros((d,), cfg.dtype),
+        "emb": s * jax.random.normal(k[6], (v, d), cfg.dtype),
+        "pos": s * jax.random.normal(k[7], (cfg.seq_len, d), cfg.dtype),
+    }
+    if cfg.variant == "mqa":
+        # shared single K/V head (paper Fig 3)
+        dh = cfg.d_head
+        p["wk"] = s * jax.random.normal(k[8], (d, dh), cfg.dtype)
+        p["wv"] = s * jax.random.normal(k[9], (d, dh), cfg.dtype)
+    return p
+
+
+def _split_heads(x: jax.Array, h: int) -> jax.Array:
+    n, d = x.shape
+    return x.reshape(n, h, d // h).transpose(1, 0, 2)  # [h, n, dh]
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    h, n, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(n, h * dh)
+
+
+def embed(cfg: ModelConfig, emb, pos, token_ids):
+    """Input embedding (paper Eq 1): H = H_emb + P_enc. Runs on the ReRAM
+    macro in the paper; the gather is the tokenization MVM."""
+    return emb[token_ids] + pos
+
+
+def attention_block(cfg: ModelConfig, p, x):
+    """Pre-LN multi-head (or multi-query) attention with residual.
+
+    KQV projections run through the crossbar MVM path in the paper only
+    for the *static* case; since QKV weights are static per model (the
+    dynamic operands are activations), the paper still uses SMs here —
+    we therefore use plain matmuls for the projections (SM tensor cores)
+    and the Pallas flash kernel for the score/softmax/PV fusion.
+    """
+    h = ref.layernorm_ref(x, p["ln1_g"], p["ln1_b"])
+    q = h @ p["wq"]
+    if cfg.variant == "mqa":
+        qh = _split_heads(q, cfg.n_heads)
+        kk = h @ p["wk"]  # [n, dh] shared
+        vv = h @ p["wv"]
+        o = attention.multi_query_attention(qh, kk, vv)
+    else:
+        kk = h @ p["wk"]
+        vv = h @ p["wv"]
+        o = attention.multi_head_attention(
+            _split_heads(q, cfg.n_heads),
+            _split_heads(kk, cfg.n_heads),
+            _split_heads(vv, cfg.n_heads),
+        )
+    return x + _merge_heads(o) @ p["wo"]
+
+
+def ffn_block(cfg: ModelConfig, p, x):
+    """Pre-LN feed-forward with residual; fused Pallas FF kernel (ReRAM)."""
+    h = ref.layernorm_ref(x, p["ln2_g"], p["ln2_b"])
+    return x + ffn.fused_ffn(h, p["w1"], p["b1"], p["w2"], p["b2"])
+
+
+def ffn_block_crossbar(cfg: ModelConfig, p, x):
+    """FF block through the bit-sliced crossbar kernels — the variant the
+    rust driver uses when it wants ReRAM quantization in the numerics."""
+    h = ref.layernorm_ref(x, p["ln2_g"], p["ln2_b"])
+    a = mvm.crossbar_mvm(h, p["w1"]) + p["b1"]
+    a = jax.nn.gelu(a, approximate=True)
+    return x + (mvm.crossbar_mvm(a, p["w2"]) + p["b2"])
+
+
+def encoder_layer(cfg: ModelConfig, p, x):
+    """One serial encoder block (paper Eq 8)."""
+    if cfg.variant == "parallel":
+        # GPT-J-style parallel MHA+FF (paper Eq 9)
+        a = attention_block(cfg, p, x) - x  # Attention(LN(x))·Wo term
+        f = ffn_block(cfg, p, x) - x
+        return x + a + f
+    x = attention_block(cfg, p, x)
+    return ffn_block(cfg, p, x)
+
+
+def encoder_layer_fn(cfg: ModelConfig):
+    """Entry point for AOT: (params..., x) flattened per aot.py."""
+
+    def fn(x, wq, wk, wv, wo, w1, b1, w2, b2, ln1_g, ln1_b, ln2_g, ln2_b):
+        p = dict(
+            wq=wq, wk=wk, wv=wv, wo=wo, w1=w1, b1=b1, w2=w2, b2=b2,
+            ln1_g=ln1_g, ln1_b=ln1_b, ln2_g=ln2_g, ln2_b=ln2_b,
+        )
+        return (encoder_layer(cfg, p, x),)
+
+    return fn
+
+
+def attention_fn(cfg: ModelConfig):
+    """AOT entry: fused attention only, the SM-chiplet artifact."""
+
+    def fn(q, k, v):
+        return (attention.multi_head_attention(q, k, v),)
+
+    return fn
+
+
+def ffn_fn(cfg: ModelConfig):
+    """AOT entry: fused FF only, the ReRAM-macro artifact."""
+
+    def fn(x, w1, b1, w2, b2):
+        return (ffn.fused_ffn(x, w1, b1, w2, b2),)
+
+    return fn
+
+
+def embed_fn(cfg: ModelConfig):
+    """AOT entry: input embedding (Eq 1), the one-time ReRAM step."""
+
+    def fn(emb, pos, token_ids):
+        return (emb[token_ids] + pos,)
+
+    return fn
+
+
+def forward(cfg: ModelConfig, params, token_ids, n_layers: int = 2):
+    """Full tiny-model forward used by tests and the oracle checksum."""
+    x = embed(cfg, params["emb"], params["pos"], token_ids)
+    for _ in range(n_layers):
+        x = encoder_layer(cfg, params, x)
+    return x

@@ -1,0 +1,206 @@
+"""Kernel vs pure-jnp oracle: the CORE correctness signal for L1.
+
+Hypothesis sweeps shapes/dtypes for every Pallas kernel and asserts
+allclose against compile.kernels.ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, ffn, mvm, ref
+
+jax.config.update("jax_enable_x64", False)
+
+DTYPES = [jnp.float32]  # interpret-mode pallas on CPU is f32-exact; bf16 covered below
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------- attention
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.integers(2, 96),
+    d=st.sampled_from([4, 8, 16, 32]),
+    bq=st.sampled_from([8, 16, 128]),
+    bk=st.sampled_from([8, 16, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_attention_matches_ref(n, d, bq, bk, seed):
+    q = rand(seed, (n, d))
+    k = rand(seed + 1, (n, d))
+    v = rand(seed + 2, (n, d))
+    out = attention.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    n=st.integers(4, 64),
+    d=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_mha_matches_ref(h, n, d, seed):
+    q = rand(seed, (h, n, d))
+    k = rand(seed + 1, (h, n, d))
+    v = rand(seed + 2, (h, n, d))
+    out = attention.multi_head_attention(q, k, v)
+    want = ref.mha_ref(q, k, v)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    n=st.integers(4, 64),
+    d=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_mqa_matches_ref(h, n, d, seed):
+    q = rand(seed, (h, n, d))
+    k = rand(seed + 1, (n, d))
+    v = rand(seed + 2, (n, d))
+    out = attention.multi_query_attention(q, k, v)
+    want = ref.mqa_ref(q, k, v)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_attention_ragged_tail():
+    """n not divisible by block sizes exercises the mask path."""
+    n, d = 50, 16
+    q, k, v = rand(1, (n, d)), rand(2, (n, d)), rand(3, (n, d))
+    out = attention.flash_attention(q, k, v, block_q=16, block_k=16)
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v), rtol=2e-5, atol=2e-5)
+
+
+def test_attention_single_token():
+    q, k, v = rand(1, (1, 8)), rand(2, (1, 8)), rand(3, (1, 8))
+    out = attention.flash_attention(q, k, v)
+    np.testing.assert_allclose(out, v, rtol=1e-5, atol=1e-5)  # softmax of 1 elem = 1
+
+
+def test_attention_softmax_rows_sum_to_one():
+    """Indirect invariant: uniform V ⇒ output equals V row."""
+    n, d = 32, 8
+    q, k = rand(1, (n, d)), rand(2, (n, d))
+    v = jnp.ones((n, d))
+    out = attention.flash_attention(q, k, v)
+    np.testing.assert_allclose(out, jnp.ones((n, d)), rtol=1e-5, atol=1e-5)
+
+
+def test_attention_large_logits_stable():
+    """Online softmax must not overflow with large-magnitude scores."""
+    n, d = 16, 8
+    q = 50.0 * rand(1, (n, d))
+    k = 50.0 * rand(2, (n, d))
+    v = rand(3, (n, d))
+    out = attention.flash_attention(q, k, v)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- crossbar MVM
+@settings(deadline=None, max_examples=15)
+@given(
+    m=st.integers(1, 64),
+    kdim=st.sampled_from([8, 16, 32, 128]),
+    n=st.sampled_from([8, 16, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_crossbar_mvm_matches_ref(m, kdim, n, seed):
+    x = rand(seed, (m, kdim))
+    w = rand(seed + 1, (kdim, n), scale=0.1)
+    out = mvm.crossbar_mvm(x, w)
+    want = ref.crossbar_mvm_ref(x, w)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    bits=st.sampled_from([1, 2, 4]),
+    slices=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_crossbar_cell_resolution_sweep(bits, slices, seed):
+    """Sweep the ReRAM cell resolution (Table 1: 2-bit/cell is the paper's).
+
+    The datapath is 16-bit (paper: fp16 operands), so bits*slices > 16 must
+    be rejected — covered by test_crossbar_rejects_over_16bit below.
+    """
+    if bits * slices > 16:
+        with pytest.raises(AssertionError):
+            ref.quantize_weights(rand(seed, (4, 4)), bits, slices)
+        return
+    x = rand(seed, (8, 16))
+    w = rand(seed + 1, (16, 8), scale=0.1)
+    out = mvm.crossbar_mvm(x, w, bits_per_cell=bits, n_slices=slices)
+    want = ref.crossbar_mvm_ref(x, w, bits_per_cell=bits, n_slices=slices)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+def test_crossbar_quantization_error_bounded():
+    """Total quantization ≈ 16-bit ⇒ relative error vs exact matmul small."""
+    x = rand(1, (16, 32))
+    w = rand(2, (32, 16), scale=0.1)
+    out = np.asarray(mvm.crossbar_mvm(x, w))
+    exact = np.asarray(x @ w)
+    denom = np.maximum(np.abs(exact), 1e-3)
+    assert np.median(np.abs(out - exact) / denom) < 1e-2
+
+
+def test_quantize_roundtrip():
+    w = rand(3, (16, 16), scale=0.05)
+    planes, scale, zero = ref.quantize_weights(w)
+    base = 4
+    recon = np.zeros(w.shape, np.float64)
+    for s in range(planes.shape[0]):
+        recon += np.asarray(planes[s], np.float64) * base ** (planes.shape[0] - 1 - s)
+    recon = (recon - zero) * float(scale)
+    np.testing.assert_allclose(recon, w, atol=2 * float(scale))
+
+
+def test_quantize_planes_in_range():
+    w = rand(4, (8, 8))
+    planes, _, _ = ref.quantize_weights(w, bits_per_cell=2, n_slices=8)
+    assert int(planes.min()) >= 0 and int(planes.max()) <= 3
+
+
+# ---------------------------------------------------------------- ffn
+@settings(deadline=None, max_examples=15)
+@given(
+    n=st.integers(1, 64),
+    d=st.sampled_from([8, 16, 32]),
+    dff=st.sampled_from([16, 64, 128]),
+    bm=st.sampled_from([8, 16, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_ffn_matches_ref(n, d, dff, bm, seed):
+    x = rand(seed, (n, d))
+    w1 = rand(seed + 1, (d, dff), scale=0.1)
+    b1 = rand(seed + 2, (dff,), scale=0.1)
+    w2 = rand(seed + 3, (dff, d), scale=0.1)
+    b2 = rand(seed + 4, (d,), scale=0.1)
+    out = ffn.fused_ffn(x, w1, b1, w2, b2, block_m=bm)
+    want = ref.ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_ffn_bf16_runs():
+    """bf16 path (paper uses 16-bit operands) — looser tolerance."""
+    x = rand(1, (16, 16)).astype(jnp.bfloat16)
+    w1 = rand(2, (16, 32), scale=0.1).astype(jnp.bfloat16)
+    b1 = jnp.zeros((32,), jnp.bfloat16)
+    w2 = rand(3, (32, 16), scale=0.1).astype(jnp.bfloat16)
+    b2 = jnp.zeros((16,), jnp.bfloat16)
+    out = ffn.fused_ffn(x, w1, b1, w2, b2)
+    want = ref.ffn_ref(
+        x.astype(jnp.float32), w1.astype(jnp.float32), b1.astype(jnp.float32),
+        w2.astype(jnp.float32), b2.astype(jnp.float32),
+    )
+    np.testing.assert_allclose(np.asarray(out, np.float32), want, rtol=0.1, atol=0.1)

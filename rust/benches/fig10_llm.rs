@@ -1,0 +1,45 @@
+//! Fig 10 reproduction: 100-chiplet LLMs (Llama2-7B MQA, GPT-J parallel
+//! MHA-FF) vs chiplet baselines AND original HAIMA/TransPIM. Paper
+//! shape: up to ~11.8x latency / ~2.36x energy vs chiplet baselines and
+//! up to ~38x vs the originals (thermally limited bank parallelism).
+
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::sim::{simulate, SimOptions};
+use chiplet_hi::util::bench::Table;
+
+fn main() {
+    let sys = SystemConfig::s100();
+    let opts = SimOptions::default();
+    let mut max_orig: f64 = 0.0;
+    for model in [ModelZoo::llama2_7b(), ModelZoo::gpt_j()] {
+        let mut t = Table::new(
+            &format!("Fig 10 - {} on 100 chiplets", model.name),
+            &["N", "HI ms", "TP_c", "HA_c", "TP orig", "HA orig", "gain(chiplet)", "gain(orig)", "E gain"],
+        );
+        for n in [64usize, 256, 1024] {
+            let hi = simulate(Arch::Hi25D, &sys, &model, n, &opts);
+            let tpc = simulate(Arch::TransPimChiplet, &sys, &model, n, &opts);
+            let hac = simulate(Arch::HaimaChiplet, &sys, &model, n, &opts);
+            let tpo = simulate(Arch::TransPimOriginal, &sys, &model, n, &opts);
+            let hao = simulate(Arch::HaimaOriginal, &sys, &model, n, &opts);
+            let g_c = tpc.latency_secs.max(hac.latency_secs) / hi.latency_secs;
+            let g_o = tpo.latency_secs.max(hao.latency_secs) / hi.latency_secs;
+            let g_e = tpc.energy_j.max(hac.energy_j) / hi.energy_j;
+            max_orig = max_orig.max(g_o);
+            t.row(vec![
+                n.to_string(),
+                format!("{:.2}", hi.latency_secs * 1e3),
+                format!("{:.1}", tpc.latency_secs * 1e3),
+                format!("{:.1}", hac.latency_secs * 1e3),
+                format!("{:.1}", tpo.latency_secs * 1e3),
+                format!("{:.1}", hao.latency_secs * 1e3),
+                format!("{g_c:.1}x"),
+                format!("{g_o:.1}x"),
+                format!("{g_e:.2}x"),
+            ]);
+        }
+        t.print();
+    }
+    println!("\nmax gain vs originals: {max_orig:.0}x (paper: up to ~38x)");
+}

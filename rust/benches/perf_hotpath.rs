@@ -1,0 +1,50 @@
+//! L3 hot-path microbenchmarks (EXPERIMENTS.md SSPerf): the inner loops
+//! the MOO and the system simulator spend their time in.
+
+use chiplet_hi::arch::{Placement, SfcKind};
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::model::kernels::Workload;
+use chiplet_hi::model::traffic::hi_traffic;
+use chiplet_hi::moo::{design::NoiDesign, Evaluator};
+use chiplet_hi::noi::{analytic, CycleSim, RoutingTable, Topology};
+use chiplet_hi::sim::engine::chiplets_for;
+use chiplet_hi::sim::{simulate, SimOptions};
+use chiplet_hi::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new("perf_hotpath");
+    let sys = SystemConfig::s100();
+    let chiplets = chiplets_for(&sys);
+    let w = Workload::build(&ModelZoo::gpt_j(), 256);
+    let phases = hi_traffic(&sys, &chiplets, &w);
+    let p = Placement::hi_seed(&chiplets, sys.grid.0, sys.grid.1, SfcKind::Boustrophedon);
+    let topo = Topology::mesh(&p);
+
+    println!("== L3 hot paths (100-chiplet GPT-J workload) ==");
+    b.bench("routing_table_build_100", || {
+        std::hint::black_box(RoutingTable::build(&topo));
+    });
+    let routes = RoutingTable::build(&topo);
+    b.bench("analytic_evaluate_4phase", || {
+        std::hint::black_box(analytic::evaluate(&topo, &routes, &phases));
+    });
+    let ev = Evaluator::new(&sys, &chiplets, &w);
+    let d = NoiDesign::hi_seed(&sys, &chiplets, SfcKind::Hilbert);
+    b.bench("moo_objective_eval", || {
+        std::hint::black_box(ev.objectives(&d));
+    });
+    b.bench("full_system_simulate_hi", || {
+        std::hint::black_box(simulate(Arch::Hi25D, &sys, &ModelZoo::gpt_j(), 256, &SimOptions::default()));
+    });
+    let sim = CycleSim::new(&topo, &routes, 8);
+    let flit = 32.0;
+    b.bench("cycle_sim_score_phase", || {
+        std::hint::black_box(sim.run_phase(&phases[2], flit));
+    });
+    // throughput metric for the cycle sim
+    let r = sim.run_phase(&phases[2], flit);
+    let (mean, _, _) = chiplet_hi::util::bench::time_it(|| { std::hint::black_box(sim.run_phase(&phases[2], flit)); }, 1, 3);
+    println!("\ncycle sim throughput: {:.2} Mflit-hops/s  ({} flits, {} cycles)",
+        (r.flits as f64 * 6.0) / mean / 1e6, r.flits, r.cycles);
+}

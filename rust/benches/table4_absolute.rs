@@ -1,0 +1,45 @@
+//! Table 4 reproduction: absolute execution times for (a) 36-chiplet
+//! BERT-Base n=64 and (b) 100-chiplet GPT-J n=64. Absolute numbers are
+//! substrate-dependent; the reproduced quantity is the relative column.
+
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::sim::{simulate, SimOptions};
+use chiplet_hi::util::bench::Table;
+
+fn main() {
+    let opts = SimOptions::default();
+    let cases = [
+        ("4a", SystemConfig::s36(), ModelZoo::bert_base(), [210.0, 340.0, 50.0]),
+        ("4b", SystemConfig::s100(), ModelZoo::gpt_j(), [1435.0, 975.0, 143.0]),
+    ];
+    for (tag, sys, model, paper) in cases {
+        let tp = simulate(Arch::TransPimChiplet, &sys, &model, 64, &opts);
+        let ha = simulate(Arch::HaimaChiplet, &sys, &model, 64, &opts);
+        let hi = simulate(Arch::Hi25D, &sys, &model, 64, &opts);
+        let mut t = Table::new(
+            &format!("Table {tag} - {} n=64, {} chiplets", model.name, sys.size.chiplets()),
+            &["arch", "paper ms", "ours ms", "paper rel", "ours rel"],
+        );
+        let ours = [tp.latency_secs * 1e3, ha.latency_secs * 1e3, hi.latency_secs * 1e3];
+        for (i, name) in ["TransPIM_chiplet", "HAIMA_chiplet", "2.5D-HI"].iter().enumerate() {
+            t.row(vec![
+                name.to_string(),
+                format!("{:.0}", paper[i]),
+                format!("{:.3}", ours[i]),
+                format!("{:.2}x", paper[i] / paper[2]),
+                format!("{:.2}x", ours[i] / ours[2]),
+            ]);
+        }
+        t.print();
+        let paper_order = paper[2] < paper[0] && paper[2] < paper[1];
+        let ours_order = ours[2] < ours[0] && ours[2] < ours[1];
+        let paper_tp_vs_ha = paper[0] < paper[1];
+        let ours_tp_vs_ha = ours[0] < ours[1];
+        println!(
+            "  ordering (HI fastest: {}, TP-vs-HA order matches paper: {})",
+            if paper_order == ours_order { "REPRODUCED" } else { "mismatch" },
+            if paper_tp_vs_ha == ours_tp_vs_ha { "REPRODUCED" } else { "mismatch" },
+        );
+    }
+}

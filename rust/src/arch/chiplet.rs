@@ -1,0 +1,119 @@
+//! Chiplet taxonomy.
+//!
+//! The heterogeneous system integrates four first-class chiplet classes
+//! (paper §4.1.1) plus the baseline-specific classes needed to rebuild
+//! HAIMA_chiplet (SRAM compute-in-memory + host) and TransPIM_chiplet
+//! (DRAM+ACU near-memory compute).
+
+/// Functional class of a chiplet on the interposer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ChipletClass {
+    /// Streaming multiprocessor (Volta-class, 10 tensor cores).
+    Sm,
+    /// Memory controller chiplet (L2 + HBM PHY/DFI interface).
+    Mc,
+    /// HBM2 DRAM stack chiplet.
+    Dram,
+    /// ReRAM PIM chiplet (ISAAC-style tiles).
+    ReRam,
+    /// SRAM compute-in-memory chiplet (HAIMA baseline).
+    Sram,
+    /// Auxiliary compute unit near DRAM (TransPIM baseline: vector
+    /// reduction + softmax).
+    Acu,
+    /// Host processor chiplet (HAIMA baseline arithmetic).
+    Host,
+}
+
+impl ChipletClass {
+    pub fn short(&self) -> &'static str {
+        match self {
+            ChipletClass::Sm => "SM",
+            ChipletClass::Mc => "MC",
+            ChipletClass::Dram => "DR",
+            ChipletClass::ReRam => "RR",
+            ChipletClass::Sram => "SR",
+            ChipletClass::Acu => "AC",
+            ChipletClass::Host => "HO",
+        }
+    }
+}
+
+/// One chiplet instance in a system.
+#[derive(Debug, Clone)]
+pub struct Chiplet {
+    /// Dense id, also the NoI router index the chiplet attaches to.
+    pub id: usize,
+    pub class: ChipletClass,
+    /// Index among chiplets of the same class (e.g. SM #3).
+    pub class_idx: usize,
+}
+
+/// Build the chiplet list for an allocation, ids assigned densely in
+/// class-major order: all SMs, then MCs, DRAMs, ReRAMs. The *placement*
+/// (which grid site each id sits on) is a separate, optimizable map —
+/// see [`crate::arch::Placement`].
+pub fn build_chiplets(
+    sm: usize,
+    mc: usize,
+    dram: usize,
+    reram: usize,
+) -> Vec<Chiplet> {
+    let mut out = Vec::with_capacity(sm + mc + dram + reram);
+    let mut id = 0;
+    for (count, class) in [
+        (sm, ChipletClass::Sm),
+        (mc, ChipletClass::Mc),
+        (dram, ChipletClass::Dram),
+        (reram, ChipletClass::ReRam),
+    ] {
+        for class_idx in 0..count {
+            out.push(Chiplet {
+                id,
+                class,
+                class_idx,
+            });
+            id += 1;
+        }
+    }
+    out
+}
+
+/// Ids of every chiplet of `class`.
+pub fn ids_of(chiplets: &[Chiplet], class: ChipletClass) -> Vec<usize> {
+    chiplets
+        .iter()
+        .filter(|c| c.class == class)
+        .map(|c| c.id)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_ids_class_major() {
+        let cs = build_chiplets(2, 1, 1, 2);
+        assert_eq!(cs.len(), 6);
+        assert_eq!(cs[0].class, ChipletClass::Sm);
+        assert_eq!(cs[2].class, ChipletClass::Mc);
+        assert_eq!(cs[3].class, ChipletClass::Dram);
+        assert_eq!(cs[4].class, ChipletClass::ReRam);
+        assert!(cs.iter().enumerate().all(|(i, c)| c.id == i));
+    }
+
+    #[test]
+    fn class_indices_restart() {
+        let cs = build_chiplets(3, 2, 2, 1);
+        assert_eq!(cs[3].class_idx, 0); // first MC
+        assert_eq!(cs[4].class_idx, 1);
+    }
+
+    #[test]
+    fn ids_of_filters() {
+        let cs = build_chiplets(2, 1, 1, 2);
+        assert_eq!(ids_of(&cs, ChipletClass::ReRam), vec![4, 5]);
+        assert_eq!(ids_of(&cs, ChipletClass::Host), Vec::<usize>::new());
+    }
+}

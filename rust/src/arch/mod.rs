@@ -1,0 +1,10 @@
+//! Chiplet architecture: chiplet taxonomy, interposer placement, and the
+//! space-filling curves used to chain the ReRAM macro (paper §3.2 step 1/5).
+
+pub mod chiplet;
+pub mod placement;
+pub mod sfc;
+
+pub use chiplet::{Chiplet, ChipletClass};
+pub use placement::Placement;
+pub use sfc::{SfcKind, space_filling_curve};

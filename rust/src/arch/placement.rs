@@ -1,0 +1,306 @@
+//! Chiplet placement on the interposer grid.
+//!
+//! A placement is a bijection chiplet-id -> grid site. The NoI design
+//! space λ = (λ_c, λ_l) of paper Eq 10 factors as this placement (λ_c)
+//! plus the link set (λ_l, owned by [`crate::noi::Topology`]).
+
+use crate::arch::chiplet::{Chiplet, ChipletClass};
+use crate::arch::sfc::{space_filling_curve, SfcKind};
+use crate::util::Rng;
+
+/// Bijective map between chiplet ids and `(row, col)` grid sites.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub rows: usize,
+    pub cols: usize,
+    /// site index (r*cols + c) of each chiplet id.
+    pub site_of: Vec<usize>,
+}
+
+impl Placement {
+    /// Identity placement: chiplet i at site i.
+    pub fn identity(n: usize, rows: usize, cols: usize) -> Placement {
+        assert!(rows * cols >= n, "grid too small: {rows}x{cols} < {n}");
+        Placement {
+            rows,
+            cols,
+            site_of: (0..n).collect(),
+        }
+    }
+
+    /// The dataflow-aware heterogeneous placement the paper's MOO converges
+    /// to structurally (§3.2): the ReRAM macro chained along an SFC from
+    /// one corner, MC-DRAM pairs adjacent, SM clusters packed around their
+    /// MC. Used as the MOO seed and as the "designed" reference point.
+    pub fn hi_seed(chiplets: &[Chiplet], rows: usize, cols: usize, sfc: SfcKind) -> Placement {
+        let n = chiplets.len();
+        let curve = space_filling_curve(sfc, rows, cols);
+        let site = |rc: (usize, usize)| rc.0 * cols + rc.1;
+
+        let rerams: Vec<usize> = ids(chiplets, ChipletClass::ReRam);
+        let mcs: Vec<usize> = ids(chiplets, ChipletClass::Mc);
+        let drams: Vec<usize> = ids(chiplets, ChipletClass::Dram);
+        let sms: Vec<usize> = ids(chiplets, ChipletClass::Sm);
+        let others: Vec<usize> = chiplets
+            .iter()
+            .filter(|c| {
+                !matches!(
+                    c.class,
+                    ChipletClass::ReRam | ChipletClass::Mc | ChipletClass::Dram | ChipletClass::Sm
+                )
+            })
+            .map(|c| c.id)
+            .collect();
+
+        let mut site_of = vec![usize::MAX; n];
+        let mut taken = vec![false; rows * cols];
+        let mut cursor = 0usize;
+        // 1) ReRAM macro along the SFC head: consecutive curve sites
+        for &id in &rerams {
+            let s = site(curve[cursor]);
+            site_of[id] = s;
+            taken[s] = true;
+            cursor += 1;
+        }
+        // 2) each MC anchors at the next free curve site; its DRAM and SM
+        //    cluster pack onto the *nearest* free sites around it (BFS
+        //    rings) so the many-to-few MC<->SM traffic fans out over all
+        //    the MC router's ports instead of funnelling down a line
+        let per_cluster = if mcs.is_empty() {
+            0
+        } else {
+            sms.len() / mcs.len()
+        };
+        let _ = cursor;
+        // partition the free region into one contiguous curve-chunk per
+        // MC cluster, so every cluster owns a compact neighborhood and no
+        // trailing cluster is left with scattered crumbs
+        let free: Vec<usize> = curve
+            .iter()
+            .map(|&rc| site(rc))
+            .filter(|&s| !taken[s])
+            .collect();
+        let k_clusters = mcs.len().max(1);
+        let free_neighbors = |s: usize, taken: &[bool]| -> usize {
+            let (r, c) = (s / cols, s % cols);
+            let mut n = 0;
+            if r > 0 && !taken[s - cols] {
+                n += 1;
+            }
+            if r + 1 < rows && !taken[s + cols] {
+                n += 1;
+            }
+            if c > 0 && !taken[s - 1] {
+                n += 1;
+            }
+            if c + 1 < cols && !taken[s + 1] {
+                n += 1;
+            }
+            n
+        };
+        let nearest_free = |anchor: usize, taken: &[bool]| -> usize {
+            let (ar, ac) = (anchor / cols, anchor % cols);
+            (0..rows * cols)
+                .filter(|&s| !taken[s])
+                .min_by_key(|&s| {
+                    let (r, c) = (s / cols, s % cols);
+                    (r.abs_diff(ar) + c.abs_diff(ac), s)
+                })
+                .expect("grid has free sites")
+        };
+        for (k, (&mc, &dr)) in mcs.iter().zip(drams.iter()).enumerate() {
+            let lo = k * free.len() / k_clusters;
+            let hi = (k + 1) * free.len() / k_clusters;
+            let chunk = &free[lo..hi.max(lo + 1)];
+            // anchor: chunk site with most free neighbors, tie broken by
+            // proximity to the chunk middle (deterministic)
+            let mid = chunk[chunk.len() / 2];
+            let (mr, mc_col) = (mid / cols, mid % cols);
+            let anchor = chunk
+                .iter()
+                .copied()
+                .filter(|&s| !taken[s])
+                .max_by_key(|&s| {
+                    let (r, c) = (s / cols, s % cols);
+                    let dist_mid = r.abs_diff(mr) + c.abs_diff(mc_col);
+                    (free_neighbors(s, &taken), usize::MAX - dist_mid, usize::MAX - s)
+                })
+                .expect("chunk nonempty");
+            site_of[mc] = anchor;
+            taken[anchor] = true;
+            // DRAM talks to its MC over the dedicated PHY, not the NoI —
+            // park it on the *least-connected* adjacent site so the
+            // well-connected ports stay available for the SM fan-out
+            let (ar, ac) = (anchor / cols, anchor % cols);
+            let adj: Vec<usize> = [
+                (ar > 0).then(|| anchor - cols),
+                (ar + 1 < rows).then(|| anchor + cols),
+                (ac > 0).then(|| anchor - 1),
+                (ac + 1 < cols).then(|| anchor + 1),
+            ]
+            .into_iter()
+            .flatten()
+            .filter(|&s| !taken[s])
+            .collect();
+            let ds = adj
+                .iter()
+                .copied()
+                .min_by_key(|&s| (free_neighbors(s, &taken), s))
+                .unwrap_or_else(|| nearest_free(anchor, &taken));
+            site_of[dr] = ds;
+            taken[ds] = true;
+            let slo = k * per_cluster;
+            let shi = if k + 1 == mcs.len() {
+                sms.len()
+            } else {
+                (k + 1) * per_cluster
+            };
+            for &sm in &sms[slo..shi] {
+                let s = nearest_free(anchor, &taken);
+                site_of[sm] = s;
+                taken[s] = true;
+            }
+        }
+        for &id in &others {
+            let s = nearest_free(0, &taken);
+            site_of[id] = s;
+            taken[s] = true;
+        }
+        debug_assert!(site_of.iter().all(|&s| s != usize::MAX));
+        Placement {
+            rows,
+            cols,
+            site_of,
+        }
+    }
+
+    /// Random permutation placement (MOO restart diversity).
+    pub fn random(n: usize, rows: usize, cols: usize, rng: &mut Rng) -> Placement {
+        let mut sites: Vec<usize> = (0..rows * cols).collect();
+        rng.shuffle(&mut sites);
+        sites.truncate(n);
+        Placement {
+            rows,
+            cols,
+            site_of: sites,
+        }
+    }
+
+    pub fn coords(&self, id: usize) -> (usize, usize) {
+        let s = self.site_of[id];
+        (s / self.cols, s % self.cols)
+    }
+
+    /// Manhattan distance between two chiplets in grid hops.
+    pub fn manhattan(&self, a: usize, b: usize) -> usize {
+        let (ra, ca) = self.coords(a);
+        let (rb, cb) = self.coords(b);
+        ra.abs_diff(rb) + ca.abs_diff(cb)
+    }
+
+    /// Physical distance in mm (hops * link pitch).
+    pub fn distance_mm(&self, a: usize, b: usize, link_mm: f64) -> f64 {
+        self.manhattan(a, b) as f64 * link_mm
+    }
+
+    /// Swap the sites of two chiplets (the MOO placement move).
+    pub fn swap(&mut self, a: usize, b: usize) {
+        self.site_of.swap(a, b);
+    }
+
+    /// Validity: all sites distinct and on the grid.
+    pub fn is_valid(&self) -> bool {
+        let mut seen = vec![false; self.rows * self.cols];
+        for &s in &self.site_of {
+            if s >= seen.len() || seen[s] {
+                return false;
+            }
+            seen[s] = true;
+        }
+        true
+    }
+}
+
+fn ids(chiplets: &[Chiplet], class: ChipletClass) -> Vec<usize> {
+    chiplets
+        .iter()
+        .filter(|c| c.class == class)
+        .map(|c| c.id)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::chiplet::build_chiplets;
+
+    fn table2_36() -> Vec<Chiplet> {
+        build_chiplets(20, 4, 4, 8)
+    }
+
+    #[test]
+    fn identity_valid() {
+        let p = Placement::identity(36, 6, 6);
+        assert!(p.is_valid());
+        assert_eq!(p.coords(7), (1, 1));
+    }
+
+    #[test]
+    fn hi_seed_valid_all_sizes() {
+        for (sm, mc, dr, rr, rows, cols) in
+            [(20, 4, 4, 8, 6, 6), (36, 6, 6, 16, 8, 8), (64, 8, 8, 20, 10, 10)]
+        {
+            let cs = build_chiplets(sm, mc, dr, rr);
+            let p = Placement::hi_seed(&cs, rows, cols, SfcKind::Boustrophedon);
+            assert!(p.is_valid(), "{sm}+{mc}+{dr}+{rr} on {rows}x{cols}");
+        }
+    }
+
+    #[test]
+    fn hi_seed_reram_contiguous() {
+        let cs = table2_36();
+        let p = Placement::hi_seed(&cs, 6, 6, SfcKind::Boustrophedon);
+        // consecutive ReRAM chiplets (ids 28..36) must be grid-adjacent
+        let rerams: Vec<usize> = (28..36).collect();
+        for w in rerams.windows(2) {
+            assert_eq!(p.manhattan(w[0], w[1]), 1, "macro step {w:?}");
+        }
+    }
+
+    #[test]
+    fn hi_seed_mc_dram_adjacent() {
+        let cs = table2_36();
+        let p = Placement::hi_seed(&cs, 6, 6, SfcKind::Boustrophedon);
+        // MC ids 20..24 pair with DRAM ids 24..28
+        for k in 0..4 {
+            assert_eq!(p.manhattan(20 + k, 24 + k), 1, "MC{k}-DRAM{k}");
+        }
+    }
+
+    #[test]
+    fn random_is_valid_permutation() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let p = Placement::random(36, 6, 6, &mut rng);
+            assert!(p.is_valid());
+        }
+    }
+
+    #[test]
+    fn swap_preserves_validity() {
+        let mut p = Placement::identity(36, 6, 6);
+        p.swap(0, 35);
+        assert!(p.is_valid());
+        assert_eq!(p.coords(0), (5, 5));
+    }
+
+    #[test]
+    fn manhattan_symmetric() {
+        let p = Placement::identity(36, 6, 6);
+        for a in 0..36 {
+            for b in 0..36 {
+                assert_eq!(p.manhattan(a, b), p.manhattan(b, a));
+            }
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! Space-filling curves (paper §3.2, refs [31]-[35]).
+//!
+//! An SFC linearizes the 2D interposer grid so consecutive pipeline
+//! stages (ReRAM chiplets carrying layer i and i+1) sit on physically
+//! adjacent sites — the Floret [31] trick the paper adopts for the ReRAM
+//! macro. We implement the classical families the paper cites: row-major,
+//! boustrophedon (serpentine), Hilbert, Morton/Z, and onion (spiral), and
+//! measure their locality so fig4 can ablate the choice.
+
+/// SFC families (paper cites Hilbert, Morton/Z and onion explicitly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SfcKind {
+    RowMajor,
+    /// Serpentine scan: row-major with alternate rows reversed — every
+    /// consecutive pair is grid-adjacent.
+    Boustrophedon,
+    Hilbert,
+    Morton,
+    /// Onion / spiral curve: peel the grid boundary inward.
+    Onion,
+}
+
+impl SfcKind {
+    pub fn all() -> [SfcKind; 5] {
+        [
+            SfcKind::RowMajor,
+            SfcKind::Boustrophedon,
+            SfcKind::Hilbert,
+            SfcKind::Morton,
+            SfcKind::Onion,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SfcKind::RowMajor => "row-major",
+            SfcKind::Boustrophedon => "boustrophedon",
+            SfcKind::Hilbert => "hilbert",
+            SfcKind::Morton => "morton",
+            SfcKind::Onion => "onion",
+        }
+    }
+}
+
+/// Visit order over an `rows x cols` grid: returns (row, col) sites in
+/// curve order. All curves visit every site exactly once (bijection —
+/// property-tested).
+pub fn space_filling_curve(kind: SfcKind, rows: usize, cols: usize) -> Vec<(usize, usize)> {
+    match kind {
+        SfcKind::RowMajor => row_major(rows, cols),
+        SfcKind::Boustrophedon => boustrophedon(rows, cols),
+        SfcKind::Hilbert => hilbert(rows, cols),
+        SfcKind::Morton => morton(rows, cols),
+        SfcKind::Onion => onion(rows, cols),
+    }
+}
+
+fn row_major(rows: usize, cols: usize) -> Vec<(usize, usize)> {
+    (0..rows)
+        .flat_map(|r| (0..cols).map(move |c| (r, c)))
+        .collect()
+}
+
+fn boustrophedon(rows: usize, cols: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        if r % 2 == 0 {
+            out.extend((0..cols).map(|c| (r, c)));
+        } else {
+            out.extend((0..cols).rev().map(|c| (r, c)));
+        }
+    }
+    out
+}
+
+/// Hilbert curve on the smallest covering power-of-two square, filtered to
+/// the actual grid (standard practice for non-square domains).
+fn hilbert(rows: usize, cols: usize) -> Vec<(usize, usize)> {
+    let side = rows.max(cols).next_power_of_two();
+    let n = side * side;
+    let mut out = Vec::with_capacity(rows * cols);
+    for d in 0..n {
+        let (x, y) = hilbert_d2xy(side, d);
+        if y < rows && x < cols {
+            out.push((y, x));
+        }
+    }
+    out
+}
+
+/// Classic d -> (x, y) Hilbert mapping (Wikipedia formulation).
+fn hilbert_d2xy(side: usize, mut d: usize) -> (usize, usize) {
+    let (mut x, mut y) = (0usize, 0usize);
+    let mut s = 1usize;
+    while s < side {
+        let rx = 1 & (d / 2);
+        let ry = 1 & (d ^ rx);
+        // rotate
+        if ry == 0 {
+            if rx == 1 {
+                x = s - 1 - x;
+                y = s - 1 - y;
+            }
+            std::mem::swap(&mut x, &mut y);
+        }
+        x += s * rx;
+        y += s * ry;
+        d /= 4;
+        s *= 2;
+    }
+    (x, y)
+}
+
+/// Morton (Z-order) on the covering power-of-two square, filtered.
+fn morton(rows: usize, cols: usize) -> Vec<(usize, usize)> {
+    let side = rows.max(cols).next_power_of_two();
+    let n = side * side;
+    let mut out = Vec::with_capacity(rows * cols);
+    for d in 0..n {
+        let (x, y) = morton_decode(d);
+        if y < rows && x < cols {
+            out.push((y, x));
+        }
+    }
+    out
+}
+
+fn morton_decode(d: usize) -> (usize, usize) {
+    let mut x = 0usize;
+    let mut y = 0usize;
+    for bit in 0..(usize::BITS as usize / 2) {
+        x |= ((d >> (2 * bit)) & 1) << bit;
+        y |= ((d >> (2 * bit + 1)) & 1) << bit;
+    }
+    (x, y)
+}
+
+/// Onion / spiral: boundary-first peel (Xu et al. [34] near-optimal
+/// clustering behaviour for range queries; here it keeps the macro head
+/// and tail near the same edge).
+fn onion(rows: usize, cols: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(rows * cols);
+    let (mut top, mut bot, mut left, mut right) = (0isize, rows as isize - 1, 0isize, cols as isize - 1);
+    while top <= bot && left <= right {
+        for c in left..=right {
+            out.push((top as usize, c as usize));
+        }
+        top += 1;
+        for r in top..=bot {
+            out.push((r as usize, right as usize));
+        }
+        right -= 1;
+        if top <= bot {
+            for c in (left..=right).rev() {
+                out.push((bot as usize, c as usize));
+            }
+            bot -= 1;
+        }
+        if left <= right {
+            for r in (top..=bot).rev() {
+                out.push((r as usize, left as usize));
+            }
+            left += 1;
+        }
+    }
+    out
+}
+
+/// Locality metric: mean Manhattan distance between consecutive sites —
+/// the quantity SFCs minimize (1.0 is optimal: every step is one hop).
+pub fn mean_step_distance(curve: &[(usize, usize)]) -> f64 {
+    if curve.len() < 2 {
+        return 0.0;
+    }
+    let total: usize = curve
+        .windows(2)
+        .map(|w| {
+            w[0].0.abs_diff(w[1].0) + w[0].1.abs_diff(w[1].1)
+        })
+        .sum();
+    total as f64 / (curve.len() - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn check_bijection(kind: SfcKind, rows: usize, cols: usize) {
+        let curve = space_filling_curve(kind, rows, cols);
+        assert_eq!(curve.len(), rows * cols, "{kind:?} {rows}x{cols} length");
+        let set: HashSet<_> = curve.iter().collect();
+        assert_eq!(set.len(), rows * cols, "{kind:?} {rows}x{cols} unique");
+        for &(r, c) in &curve {
+            assert!(r < rows && c < cols, "{kind:?} out of bounds ({r},{c})");
+        }
+    }
+
+    #[test]
+    fn all_curves_are_bijections() {
+        for kind in SfcKind::all() {
+            for (r, c) in [(1, 1), (2, 2), (4, 4), (6, 6), (8, 8), (10, 10), (3, 5), (7, 2)] {
+                check_bijection(kind, r, c);
+            }
+        }
+    }
+
+    #[test]
+    fn boustrophedon_unit_steps() {
+        let curve = space_filling_curve(SfcKind::Boustrophedon, 6, 6);
+        assert!((mean_step_distance(&curve) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hilbert_unit_steps_on_pow2() {
+        let curve = space_filling_curve(SfcKind::Hilbert, 8, 8);
+        assert!((mean_step_distance(&curve) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn onion_unit_steps() {
+        let curve = space_filling_curve(SfcKind::Onion, 6, 6);
+        assert!((mean_step_distance(&curve) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn locality_ordering_matches_theory() {
+        // row-major pays the carriage-return; morton pays long diagonal
+        // jumps; hilbert/boustrophedon/onion are unit-step on squares.
+        let rm = mean_step_distance(&space_filling_curve(SfcKind::RowMajor, 8, 8));
+        let hb = mean_step_distance(&space_filling_curve(SfcKind::Hilbert, 8, 8));
+        let mo = mean_step_distance(&space_filling_curve(SfcKind::Morton, 8, 8));
+        assert!(hb < rm, "hilbert {hb} < row-major {rm}");
+        assert!(hb < mo, "hilbert {hb} < morton {mo}");
+    }
+
+    #[test]
+    fn hilbert_d2xy_small() {
+        // first four points of the order-2 curve
+        let pts: Vec<_> = (0..4).map(|d| hilbert_d2xy(2, d)).collect();
+        assert_eq!(pts.len(), 4);
+        let set: HashSet<_> = pts.iter().collect();
+        assert_eq!(set.len(), 4);
+    }
+
+    #[test]
+    fn morton_decode_roundtrip() {
+        for d in 0..256 {
+            let (x, y) = morton_decode(d);
+            let mut enc = 0usize;
+            for bit in 0..8 {
+                enc |= ((x >> bit) & 1) << (2 * bit);
+                enc |= ((y >> bit) & 1) << (2 * bit + 1);
+            }
+            assert_eq!(enc, d);
+        }
+    }
+}

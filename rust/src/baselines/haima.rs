@@ -1,0 +1,270 @@
+//! HAIMA rebuilt on the chiplet substrate (HAIMA_chiplet, §4.1.1) and
+//! the original 3D HAIMA (§4.2 / Fig 10).
+//!
+//! HAIMA [3] is a hybrid SRAM+DRAM accelerator-in-memory: SRAM CIM
+//! arrays compute the score kernels (Eq 5-6), DRAM-PIM banks implement
+//! self-attention projections and the FF layers, and host chiplets do
+//! the remaining arithmetic (softmax/normalization) — forcing per-layer
+//! host round trips. On the chiplet substrate the SM slots of Table 2
+//! become SRAM CIM chiplets, the MC slots become hosts, and the banks
+//! disintegrate into DRAM chiplets, multiplying SRAM<->DRAM exchanges
+//! ("multiple contention paths", §4.2).
+
+use crate::arch::chiplet::{ids_of, Chiplet, ChipletClass};
+use crate::baselines::{calib, PhasePlan};
+use crate::config::SystemConfig;
+use crate::memory::HbmModel;
+use crate::model::kernels::{KernelKind, Workload};
+use crate::model::TrafficMatrix;
+
+/// Traffic for the HAIMA mapping: score partials SRAM->host->SRAM, KQV +
+/// FF inside DRAM-PIM with activations bounced via hosts, SRAM<->DRAM
+/// exchanges amplified by the disintegration factor.
+fn haima_traffic(
+    chiplets: &[Chiplet],
+    workload: &Workload,
+    phase_kind: KernelKind,
+    repeats: usize,
+) -> TrafficMatrix {
+    let nc = chiplets.len();
+    let mut m = TrafficMatrix::zeros(nc, phase_kind, repeats);
+    // role mapping on the Table 2 slots
+    let srams = ids_of(chiplets, ChipletClass::Sm); // SRAM CIM chiplets
+    let hosts = ids_of(chiplets, ChipletClass::Mc); // host chiplets
+    let drams = ids_of(chiplets, ChipletClass::Dram);
+    let extra = ids_of(chiplets, ChipletClass::ReRam); // extra DRAM-PIM banks
+    let act = workload.model.act_bytes(workload.seq_len);
+    let xf = calib::HAIMA_EXCHANGE_FACTOR;
+
+    let mut pim: Vec<usize> = drams.clone();
+    pim.extend(&extra);
+
+    match phase_kind {
+        KernelKind::Embedding => {
+            // embedding computed in DRAM-PIM, results scatter to SRAMs
+            for (i, &d) in pim.iter().enumerate() {
+                let dst = srams[i % srams.len()];
+                m.add(d, dst, act / pim.len() as f64);
+            }
+        }
+        KernelKind::KqvProj | KernelKind::CrossKqv => {
+            // projections in DRAM-PIM; K,Q,V partials exchange with the
+            // SRAM chiplets for the upcoming score step (amplified)
+            for (i, &s) in srams.iter().enumerate() {
+                let d = pim[i % pim.len()];
+                m.add(d, s, 3.0 * act * xf / srams.len() as f64);
+                m.add(s, d, act * xf / srams.len() as f64);
+            }
+        }
+        KernelKind::Score | KernelKind::CrossScore => {
+            // score in SRAM; the full n^2*h probability matrix bounces
+            // via the hosts for softmax, then returns (the §4.2
+            // "additional host access" that prevents online execution)
+            let n = workload.seq_len as f64;
+            let prob_bytes =
+                n * n * workload.model.heads as f64 * workload.model.bytes_per_elem as f64;
+            for (i, &s) in srams.iter().enumerate() {
+                let h = hosts[i % hosts.len()];
+                let vol = prob_bytes / srams.len() as f64;
+                m.add(s, h, vol);
+                m.add(h, s, vol);
+            }
+        }
+        KernelKind::FeedForward => {
+            // FF in DRAM-PIM; activations gather from SRAMs and scatter
+            // back (disintegrated banks)
+            for (i, &s) in srams.iter().enumerate() {
+                let d = pim[i % pim.len()];
+                m.add(s, d, act * xf / srams.len() as f64);
+                m.add(d, s, act * xf / srams.len() as f64);
+            }
+        }
+    }
+    m
+}
+
+pub fn plan(
+    sys: &SystemConfig,
+    chiplets: &[Chiplet],
+    workload: &Workload,
+    original: bool,
+) -> Vec<PhasePlan> {
+    let hw = &sys.hw;
+    let n_sram = sys.alloc.sm;
+    let n_host = sys.alloc.mc;
+    let n_pim_stacks = sys.alloc.dram + sys.alloc.reram;
+    let hbm = HbmModel::new(hw, sys.hbm_tiers);
+    let derate = if original {
+        calib::ORIGINAL_THERMAL_DERATE
+    } else {
+        1.0
+    };
+    let iface = if original {
+        calib::ORIGINAL_INTERFACE_FACTOR
+    } else {
+        1.0
+    };
+
+    let width = calib::width_derate(workload.model.d_model, calib::HAIMA_WIDTH_REF);
+    let (sram_pool, pim_pool) = if original {
+        // the original 3D system has 8 bank groups, thermally derated
+        let groups = calib::TRANSPIM_STACKS as f64;
+        (
+            groups * calib::HAIMA_SRAM_FLOPS * derate,
+            groups
+                * sys.hbm_tiers as f64
+                * calib::HAIMA_DRAM_PIM_FLOPS_PER_CHIPLET
+                * width
+                * derate
+                / 2.0,
+        )
+    } else {
+        (
+            n_sram as f64 * calib::HAIMA_SRAM_FLOPS,
+            n_pim_stacks as f64 * calib::HAIMA_DRAM_PIM_FLOPS_PER_CHIPLET * width,
+        )
+    };
+    let host_bw = n_host as f64 * calib::HAIMA_HOST_BW;
+    let act = workload.model.act_bytes(workload.seq_len);
+
+    let mut plans = Vec::new();
+    for phase in &workload.phases {
+        let tm = haima_traffic(chiplets, workload, phase.kind, phase.repeats);
+        let p = match phase.kind {
+            KernelKind::Embedding => {
+                // embedding-table gathers are random-access DRAM reads
+                let secs = phase.flops / pim_pool * iface;
+                let gather = hbm.transfer(act, 0.1);
+                PhasePlan {
+                    kind: phase.kind,
+                    compute_secs: secs,
+                    compute_energy_j: phase.flops * calib::HAIMA_PIM_PJ_PER_FLOP * 1e-12,
+                    dram_secs: gather.secs * iface,
+                    dram_energy_j: gather.energy_j,
+                    overhead_secs: 0.0,
+                    traffic: tm,
+                    repeats: phase.repeats,
+                    parallel_with_prev: false,
+                    power_w: pim_power(sys),
+                }
+            }
+            KernelKind::KqvProj | KernelKind::CrossKqv => {
+                // PIM projections read weights in-place; activations move
+                let secs = phase.flops / pim_pool * iface;
+                let stream = hbm.transfer(phase.act_in_bytes, 0.6);
+                PhasePlan {
+                    kind: phase.kind,
+                    compute_secs: secs,
+                    compute_energy_j: phase.flops * calib::HAIMA_PIM_PJ_PER_FLOP * 1e-12,
+                    dram_secs: stream.secs * iface,
+                    dram_energy_j: stream.energy_j,
+                    overhead_secs: 0.0,
+                    traffic: tm,
+                    repeats: phase.repeats,
+                    parallel_with_prev: false,
+                    power_w: pim_power(sys),
+                }
+            }
+            KernelKind::Score | KernelKind::CrossScore => {
+                // SRAM CIM score + host softmax round trips over the full
+                // n^2*h probability matrix (bandwidth-bound at the host)
+                let secs = phase.flops / sram_pool;
+                let n = workload.seq_len as f64;
+                let prob_bytes = n * n * workload.model.heads as f64
+                    * workload.model.bytes_per_elem as f64;
+                let host_secs = calib::HAIMA_HOST_TRIPS_PER_LAYER * prob_bytes / host_bw;
+                PhasePlan {
+                    kind: phase.kind,
+                    compute_secs: secs,
+                    compute_energy_j: phase.flops * 1.8e-12
+                        + prob_bytes * 8.0 * 1.2e-12, // host SRAM traffic energy
+                    dram_secs: 0.0,
+                    dram_energy_j: 0.0,
+                    overhead_secs: host_secs * iface,
+                    traffic: tm,
+                    repeats: phase.repeats,
+                    parallel_with_prev: false,
+                    power_w: 2.0 * n_sram as f64 + 6.0 * n_host as f64,
+                }
+            }
+            KernelKind::FeedForward => {
+                let secs = phase.flops / (pim_pool * calib::HAIMA_FF_EFFICIENCY) * iface;
+                let stream = hbm.transfer(2.0 * act, 0.6);
+                PhasePlan {
+                    kind: phase.kind,
+                    compute_secs: secs,
+                    compute_energy_j: phase.flops * calib::HAIMA_PIM_PJ_PER_FLOP * 1e-12,
+                    dram_secs: stream.secs * iface,
+                    dram_energy_j: stream.energy_j,
+                    overhead_secs: 0.0,
+                    traffic: tm,
+                    repeats: phase.repeats,
+                    parallel_with_prev: false,
+                    power_w: pim_power(sys),
+                }
+            }
+        };
+        plans.push(p);
+    }
+    plans
+}
+
+/// PIM bank power: compute units per bank per HAIMA config (§4.3:
+/// 3.138 W per CU, multiple CUs per bank).
+fn pim_power(sys: &SystemConfig) -> f64 {
+    let stacks = (sys.alloc.dram + sys.alloc.reram) as f64;
+    stacks * 2.0 * calib::HAIMA_CU_POWER_W + stacks * sys.hw.hbm_static_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::chiplet::build_chiplets;
+    use crate::config::ModelZoo;
+
+    fn setup(original: bool) -> Vec<PhasePlan> {
+        let sys = SystemConfig::s36();
+        let chips = build_chiplets(20, 4, 4, 8);
+        let w = Workload::build(&ModelZoo::bert_base(), 64);
+        plan(&sys, &chips, &w, original)
+    }
+
+    #[test]
+    fn host_round_trips_on_score() {
+        let plans = setup(false);
+        let score = plans.iter().find(|p| p.kind == KernelKind::Score).unwrap();
+        assert!(score.overhead_secs > 0.0, "HAIMA pays host softmax trips");
+    }
+
+    #[test]
+    fn original_slower_than_chiplet() {
+        let chiplet = setup(false);
+        let orig = setup(true);
+        let t = |ps: &[PhasePlan]| -> f64 {
+            ps.iter()
+                .map(|p| (p.compute_secs + p.dram_secs + p.overhead_secs) * p.repeats as f64)
+                .sum()
+        };
+        assert!(t(&orig) > 2.0 * t(&chiplet), "thermal derate bites");
+    }
+
+    #[test]
+    fn score_traffic_hits_hosts() {
+        let plans = setup(false);
+        let score = plans.iter().find(|p| p.kind == KernelKind::Score).unwrap();
+        // hosts are MC slot ids 20..24
+        let host_traffic: f64 = (20..24)
+            .map(|h| {
+                (0..36)
+                    .map(|j| score.traffic.get(j, h) + score.traffic.get(h, j))
+                    .sum::<f64>()
+            })
+            .sum();
+        assert!(host_traffic > 0.0);
+    }
+
+    #[test]
+    fn all_phases_planned() {
+        assert_eq!(setup(false).len(), 4);
+    }
+}

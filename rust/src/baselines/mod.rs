@@ -1,0 +1,145 @@
+//! Architecture planners: the proposed 2.5D-HI / 3D-HI mappings plus the
+//! rebuilt comparison systems (paper §4.1.1): HAIMA_chiplet,
+//! TransPIM_chiplet, and the *original* (3D, non-chiplet) HAIMA and
+//! TransPIM whose bank parallelism is thermally limited (§4.2/Fig 10).
+//!
+//! A planner turns an architecture + workload into per-phase execution
+//! plans (compute time/energy, DRAM time, fixed overheads, traffic
+//! matrix, phase power) that `sim::engine` composes into end-to-end
+//! latency/energy/temperature.
+
+pub mod calib;
+pub mod haima;
+pub mod hi;
+pub mod transpim;
+
+use crate::arch::chiplet::Chiplet;
+use crate::config::SystemConfig;
+use crate::model::kernels::{KernelKind, Workload};
+use crate::model::TrafficMatrix;
+
+/// Architectures under evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    /// Proposed 2.5D heterogeneous integration.
+    Hi25D,
+    /// Proposed 3D-HI (vertical tiers, §4.3).
+    Hi3D,
+    /// HAIMA rebuilt on chiplets (SRAM CIM + DRAM PIM + host).
+    HaimaChiplet,
+    /// TransPIM rebuilt on chiplets (DRAM PIM + ACUs, ring broadcast).
+    TransPimChiplet,
+    /// Original 3D HAIMA (thermally limited bank parallelism).
+    HaimaOriginal,
+    /// Original 3D TransPIM (thermally limited bank parallelism).
+    TransPimOriginal,
+}
+
+impl Arch {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::Hi25D => "2.5D-HI",
+            Arch::Hi3D => "3D-HI",
+            Arch::HaimaChiplet => "HAIMA_chiplet",
+            Arch::TransPimChiplet => "TransPIM_chiplet",
+            Arch::HaimaOriginal => "HAIMA",
+            Arch::TransPimOriginal => "TransPIM",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Arch> {
+        match s.to_ascii_lowercase().as_str() {
+            "hi" | "2.5d-hi" | "hi25d" => Some(Arch::Hi25D),
+            "hi3d" | "3d-hi" => Some(Arch::Hi3D),
+            "haima_chiplet" | "haima-chiplet" => Some(Arch::HaimaChiplet),
+            "transpim_chiplet" | "transpim-chiplet" => Some(Arch::TransPimChiplet),
+            "haima" | "haima_original" => Some(Arch::HaimaOriginal),
+            "transpim" | "transpim_original" => Some(Arch::TransPimOriginal),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Arch; 6] {
+        [
+            Arch::Hi25D,
+            Arch::Hi3D,
+            Arch::HaimaChiplet,
+            Arch::TransPimChiplet,
+            Arch::HaimaOriginal,
+            Arch::TransPimOriginal,
+        ]
+    }
+
+    /// The comparison set used in Figs 8-9 (chiplet-based only).
+    pub fn chiplet_set() -> [Arch; 3] {
+        [Arch::Hi25D, Arch::TransPimChiplet, Arch::HaimaChiplet]
+    }
+
+    pub fn is_3d_stacked(&self) -> bool {
+        matches!(
+            self,
+            Arch::Hi3D | Arch::HaimaOriginal | Arch::TransPimOriginal
+        )
+    }
+}
+
+/// Execution plan for one kernel phase on one architecture.
+#[derive(Debug, Clone)]
+pub struct PhasePlan {
+    pub kind: KernelKind,
+    /// Pure compute time of one invocation (s).
+    pub compute_secs: f64,
+    /// Compute energy of one invocation (J).
+    pub compute_energy_j: f64,
+    /// DRAM access time not overlapped with compute (s).
+    pub dram_secs: f64,
+    pub dram_energy_j: f64,
+    /// Fixed serial overheads: host round-trips, kernel launches, ring
+    /// broadcast setup (s).
+    pub overhead_secs: f64,
+    /// NoI traffic of one invocation.
+    pub traffic: TrafficMatrix,
+    pub repeats: usize,
+    /// Eq 9 pipelining: may overlap with the previous phase.
+    pub parallel_with_prev: bool,
+    /// Active power draw during the phase (W) — thermal input.
+    pub power_w: f64,
+}
+
+/// Planner entry point: dispatch on architecture.
+pub fn plan(
+    arch: Arch,
+    sys: &SystemConfig,
+    chiplets: &[Chiplet],
+    workload: &Workload,
+) -> Vec<PhasePlan> {
+    match arch {
+        Arch::Hi25D | Arch::Hi3D => hi::plan(sys, chiplets, workload, arch),
+        Arch::HaimaChiplet => haima::plan(sys, chiplets, workload, false),
+        Arch::HaimaOriginal => haima::plan(sys, chiplets, workload, true),
+        Arch::TransPimChiplet => transpim::plan(sys, chiplets, workload, false),
+        Arch::TransPimOriginal => transpim::plan(sys, chiplets, workload, true),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for a in Arch::all() {
+            assert_eq!(Arch::by_name(a.name()), Some(a));
+        }
+        assert_eq!(Arch::by_name("hi"), Some(Arch::Hi25D));
+        assert_eq!(Arch::by_name("nope"), None);
+    }
+
+    #[test]
+    fn stacked_flags() {
+        assert!(Arch::Hi3D.is_3d_stacked());
+        assert!(Arch::HaimaOriginal.is_3d_stacked());
+        assert!(!Arch::Hi25D.is_3d_stacked());
+        assert!(!Arch::TransPimChiplet.is_3d_stacked());
+    }
+}

@@ -1,0 +1,232 @@
+//! TransPIM rebuilt on the chiplet substrate (TransPIM_chiplet, §4.1.1)
+//! and the original 3D TransPIM (8 HBM stacks, §4.3).
+//!
+//! TransPIM [2] computes inside HBM banks with a bit-serial row-parallel
+//! scheme, token-sharding the sequence across banks so partial attention
+//! scores compute locally; a ring broadcast shares tokens among banks,
+//! and auxiliary compute units (ACUs) near the DRAM do vector reduction
+//! and softmax (avoiding a host, but adding a per-kernel latency
+//! overhead — §2). On the chiplet substrate the SM slots become DRAM-PIM
+//! chiplets on the ring and the MC slots become ACUs.
+
+use crate::arch::chiplet::{ids_of, Chiplet, ChipletClass};
+use crate::baselines::{calib, PhasePlan};
+use crate::config::SystemConfig;
+use crate::model::kernels::{KernelKind, Workload};
+use crate::model::TrafficMatrix;
+
+/// Ring order over the PIM chiplets (SM slots + DRAM slots + ReRAM slots
+/// all reinterpreted as DRAM-PIM banks on the ring).
+fn ring_members(chiplets: &[Chiplet]) -> Vec<usize> {
+    let mut ring = ids_of(chiplets, ChipletClass::Sm);
+    ring.extend(ids_of(chiplets, ChipletClass::Dram));
+    ring.extend(ids_of(chiplets, ChipletClass::ReRam));
+    ring
+}
+
+/// Token-sharded ring-broadcast traffic: every attention step circulates
+/// each shard's K/V tokens around the ring (paper: "token sharing in a
+/// ring broadcast among memory banks").
+fn transpim_traffic(
+    chiplets: &[Chiplet],
+    workload: &Workload,
+    phase_kind: KernelKind,
+    repeats: usize,
+) -> TrafficMatrix {
+    let nc = chiplets.len();
+    let mut m = TrafficMatrix::zeros(nc, phase_kind, repeats);
+    let ring = ring_members(chiplets);
+    let acus = ids_of(chiplets, ChipletClass::Mc);
+    let act = workload.model.act_bytes(workload.seq_len);
+
+    match phase_kind {
+        KernelKind::Embedding => {
+            // embeddings computed bank-locally; shard handoff around ring
+            for w in ring.windows(2) {
+                m.add(w[0], w[1], act / ring.len() as f64);
+            }
+        }
+        KernelKind::KqvProj | KernelKind::CrossKqv => {
+            // weights in-bank; activations shard around the ring once
+            let hop = act / ring.len() as f64;
+            for i in 0..ring.len() {
+                let j = (i + 1) % ring.len();
+                m.add(ring[i], ring[j], hop);
+            }
+        }
+        KernelKind::Score | KernelKind::CrossScore => {
+            // ring broadcast of K/V shards: each shard travels the whole
+            // ring (N-1 hops) so every bank sees every token
+            let shard = 2.0 * act / ring.len() as f64;
+            for i in 0..ring.len() {
+                let j = (i + 1) % ring.len();
+                m.add(ring[i], ring[j], shard * (ring.len() - 1) as f64);
+            }
+            // probability-shard reductions to the ACUs (n^2*h/ring each)
+            let n = workload.seq_len as f64;
+            let prob_bytes =
+                n * n * workload.model.heads as f64 * workload.model.bytes_per_elem as f64;
+            for (i, &r) in ring.iter().enumerate() {
+                let a = acus[i % acus.len()];
+                m.add(r, a, prob_bytes / ring.len() as f64);
+                m.add(a, r, act / ring.len() as f64);
+            }
+        }
+        KernelKind::FeedForward => {
+            // token-sharded FF is bank-local; only residual handoff
+            let hop = act / ring.len() as f64;
+            for i in 0..ring.len() {
+                let j = (i + 1) % ring.len();
+                m.add(ring[i], ring[j], hop);
+            }
+        }
+    }
+    m
+}
+
+pub fn plan(
+    sys: &SystemConfig,
+    chiplets: &[Chiplet],
+    workload: &Workload,
+    original: bool,
+) -> Vec<PhasePlan> {
+    let hw = &sys.hw;
+    let derate = if original {
+        calib::ORIGINAL_THERMAL_DERATE
+    } else {
+        1.0
+    };
+    let iface = if original {
+        calib::ORIGINAL_INTERFACE_FACTOR
+    } else {
+        1.0
+    };
+    // PIM pool: every ring member is a bank group backed by the stack
+    // tiers; originals have exactly 8 stacks regardless of system size
+    let ring_n = if original {
+        calib::TRANSPIM_STACKS
+    } else {
+        sys.alloc.sm + sys.alloc.dram + sys.alloc.reram
+    };
+    let width = calib::width_derate(workload.model.d_model, calib::TRANSPIM_WIDTH_REF);
+    let pim_pool = if original {
+        // full HBM stacks, but thermally limited bank activation
+        calib::TRANSPIM_STACKS as f64
+            * sys.hbm_tiers as f64
+            * calib::ORIGINAL_PIM_FLOPS_PER_TIER
+            * width
+            * derate
+    } else {
+        ring_n as f64 * calib::TRANSPIM_PIM_FLOPS_PER_CHIPLET * width
+    };
+    let acu_bw = sys.alloc.mc as f64 * calib::TRANSPIM_ACU_BW;
+    let act = workload.model.act_bytes(workload.seq_len);
+
+    let mut plans = Vec::new();
+    for phase in &workload.phases {
+        let tm = transpim_traffic(chiplets, workload, phase.kind, phase.repeats);
+        let (eff, extra_overhead) = match phase.kind {
+            KernelKind::Score | KernelKind::CrossScore => {
+                // softmax on ACUs: bandwidth-bound on the probability
+                // matrix the ACUs must stream through
+                let n = workload.seq_len as f64;
+                let prob_bytes = n * n * workload.model.heads as f64
+                    * workload.model.bytes_per_elem as f64;
+                (calib::TRANSPIM_ATTN_EFFICIENCY, prob_bytes / acu_bw)
+            }
+            KernelKind::KqvProj | KernelKind::CrossKqv => {
+                (calib::TRANSPIM_ATTN_EFFICIENCY, 0.0)
+            }
+            KernelKind::FeedForward => (calib::TRANSPIM_FF_EFFICIENCY, 0.0),
+            KernelKind::Embedding => (1.0, 0.0),
+        };
+        let compute = phase.flops / (pim_pool * eff) * iface;
+        // ring serialization: at score, shards circulate the whole ring
+        let ring_secs = if matches!(phase.kind, KernelKind::Score | KernelKind::CrossScore) {
+            let shard = 2.0 * act / ring_n as f64;
+            shard * (ring_n - 1) as f64 / hw.noi_link_bw()
+                + ring_n as f64 * hw.noi_hop_secs()
+        } else {
+            0.0
+        };
+        plans.push(PhasePlan {
+            kind: phase.kind,
+            compute_secs: compute,
+            compute_energy_j: phase.flops * calib::TRANSPIM_PIM_PJ_PER_FLOP * 1e-12,
+            dram_secs: ring_secs * iface,
+            dram_energy_j: act * 8.0 * hw.hbm_pj_per_bit * 1e-12,
+            overhead_secs: calib::TRANSPIM_KERNEL_OVERHEAD_S + extra_overhead,
+            traffic: tm,
+            repeats: phase.repeats,
+            parallel_with_prev: false,
+            power_w: ring_n as f64 * (calib::HAIMA_CU_POWER_W + hw.hbm_static_w),
+        });
+    }
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::chiplet::build_chiplets;
+    use crate::config::ModelZoo;
+
+    fn setup(original: bool) -> Vec<PhasePlan> {
+        let sys = SystemConfig::s36();
+        let chips = build_chiplets(20, 4, 4, 8);
+        let w = Workload::build(&ModelZoo::bert_base(), 64);
+        plan(&sys, &chips, &w, original)
+    }
+
+    #[test]
+    fn every_kernel_pays_launch_overhead() {
+        for p in setup(false) {
+            assert!(
+                p.overhead_secs >= calib::TRANSPIM_KERNEL_OVERHEAD_S,
+                "{:?}",
+                p.kind
+            );
+        }
+    }
+
+    #[test]
+    fn score_ring_broadcast_dominates_traffic() {
+        let plans = setup(false);
+        let score = plans.iter().find(|p| p.kind == KernelKind::Score).unwrap();
+        let kqv = plans.iter().find(|p| p.kind == KernelKind::KqvProj).unwrap();
+        assert!(score.traffic.total() > 5.0 * kqv.traffic.total());
+    }
+
+    #[test]
+    fn ff_more_efficient_than_attention() {
+        let plans = setup(false);
+        let w = Workload::build(&ModelZoo::bert_base(), 64);
+        let ff = plans.iter().find(|p| p.kind == KernelKind::FeedForward).unwrap();
+        let ffw = w.phases.iter().find(|p| p.kind == KernelKind::FeedForward).unwrap();
+        let kqv = plans.iter().find(|p| p.kind == KernelKind::KqvProj).unwrap();
+        let kqvw = w.phases.iter().find(|p| p.kind == KernelKind::KqvProj).unwrap();
+        // normalized rate (flops/sec) must be higher for FF
+        let rate_ff = ffw.flops / ff.compute_secs;
+        let rate_kqv = kqvw.flops / kqv.compute_secs;
+        assert!(rate_ff > 2.0 * rate_kqv);
+    }
+
+    #[test]
+    fn original_slower_and_size_independent_ring() {
+        let t = |ps: &[PhasePlan]| -> f64 {
+            ps.iter()
+                .map(|p| (p.compute_secs + p.dram_secs + p.overhead_secs) * p.repeats as f64)
+                .sum()
+        };
+        assert!(t(&setup(true)) > 2.0 * t(&setup(false)));
+    }
+
+    #[test]
+    fn ring_traffic_conserves_members() {
+        let plans = setup(false);
+        for p in &plans {
+            // ring topology: traffic flows only between declared chiplets
+            assert!(p.traffic.total() > 0.0);
+        }
+    }
+}

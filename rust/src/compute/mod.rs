@@ -1,0 +1,12 @@
+//! Compute chiplet timing + energy models.
+//!
+//! - [`sm`]: Volta-class streaming multiprocessor (tensor cores) — the
+//!   AccelWattch/nvidia-smi role in the paper's tool flow.
+//! - [`reram`]: ISAAC/NeuroSim-style ReRAM PIM chiplet (crossbar waves,
+//!   ADC columns, H-tree reduction) — the NeuroSim role.
+
+pub mod reram;
+pub mod sm;
+
+pub use reram::ReRamModel;
+pub use sm::SmModel;

@@ -1,0 +1,128 @@
+//! SM (streaming multiprocessor) chiplet model — Volta architecture per
+//! paper Table 1 (10 tensor cores, 64 KB register file, 96 KB L1,
+//! 1530 MHz). Plays the role AccelWattch + microbenchmark-derived Volta
+//! numbers [43] play in the paper's tool flow.
+//!
+//! Timing: FLOPs / (peak x utilization), where utilization reflects the
+//! FlashAttention tiling efficiency; small kernels pay a fixed launch +
+//! tile-fill overhead. Energy: pJ/FLOP plus static power x time.
+
+use crate::config::HwParams;
+
+/// Aggregate SM-pool compute model.
+#[derive(Debug, Clone)]
+pub struct SmModel {
+    pub hw: HwParams,
+    /// Number of SM chiplets ganged on the phase.
+    pub count: usize,
+    /// Kernel launch / pipeline-fill overhead per kernel (s).
+    pub launch_overhead_s: f64,
+}
+
+impl SmModel {
+    pub fn new(hw: &HwParams, count: usize) -> SmModel {
+        SmModel {
+            hw: hw.clone(),
+            count,
+            launch_overhead_s: 2.0e-6,
+        }
+    }
+
+    /// Utilization falls off when per-SM work is too small to fill the
+    /// tensor-core pipeline (tile quantization — AccelWatch models this
+    /// through tile shape/overlap; we use a smooth saturating curve).
+    pub fn effective_utilization(&self, flops_per_sm: f64) -> f64 {
+        // knee around 2 MFLOP per SM: half the fused-attention tile wave
+        let knee = 2.0e6;
+        let sat = flops_per_sm / (flops_per_sm + knee);
+        self.hw.sm_utilization * sat
+    }
+
+    /// Execution time of a kernel of `flops` spread over the SM pool.
+    pub fn exec_secs(&self, flops: f64) -> f64 {
+        if flops <= 0.0 {
+            return 0.0;
+        }
+        let per_sm = flops / self.count as f64;
+        let util = self.effective_utilization(per_sm).max(1e-3);
+        let rate = self.hw.sm_peak_flops() * util;
+        per_sm / rate + self.launch_overhead_s
+    }
+
+    /// Dynamic energy (J) of the kernel on the pool.
+    pub fn energy_j(&self, flops: f64) -> f64 {
+        flops * self.hw.sm_pj_per_flop * 1e-12
+            + self.static_power_w() * self.exec_secs(flops)
+    }
+
+    /// Pool static/leakage power (W).
+    pub fn static_power_w(&self) -> f64 {
+        0.25 * self.hw.sm_power_w * self.count as f64
+    }
+
+    /// Peak pool power when fully active (thermal model input).
+    pub fn active_power_w(&self) -> f64 {
+        self.hw.sm_power_w * self.count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(count: usize) -> SmModel {
+        SmModel::new(&HwParams::default(), count)
+    }
+
+    #[test]
+    fn more_sms_is_faster() {
+        let flops = 1.0e12;
+        let t20 = model(20).exec_secs(flops);
+        let t64 = model(64).exec_secs(flops);
+        assert!(t64 < t20);
+    }
+
+    #[test]
+    fn big_kernel_near_linear_scaling() {
+        let flops = 1.0e13;
+        let t1 = model(16).exec_secs(flops);
+        let t2 = model(32).exec_secs(flops);
+        let speedup = t1 / t2;
+        assert!(speedup > 1.8 && speedup <= 2.05, "speedup {speedup}");
+    }
+
+    #[test]
+    fn tiny_kernel_dominated_by_overhead() {
+        let m = model(64);
+        let t = m.exec_secs(1.0e3);
+        assert!(t >= m.launch_overhead_s);
+        assert!(t < 2.0 * m.launch_overhead_s + 1e-6);
+    }
+
+    #[test]
+    fn utilization_saturates() {
+        let m = model(1);
+        let lo = m.effective_utilization(1.0e5);
+        let hi = m.effective_utilization(1.0e9);
+        assert!(lo < hi);
+        assert!(hi <= m.hw.sm_utilization + 1e-12);
+        assert!(hi > 0.95 * m.hw.sm_utilization);
+    }
+
+    #[test]
+    fn energy_positive_and_scales() {
+        let m = model(20);
+        let e1 = m.energy_j(1.0e12);
+        let e2 = m.energy_j(2.0e12);
+        assert!(e1 > 0.0 && e2 > 1.5 * e1);
+    }
+
+    #[test]
+    fn bert_base_attention_timescale_sane() {
+        // BERT-Base layer attention at n=64 ≈ 0.5 GFLOP on 20 SMs: must be
+        // microseconds-scale, not seconds (sanity anchor for Table 4)
+        let m = model(20);
+        let t = m.exec_secs(0.5e9);
+        assert!(t > 1e-6 && t < 1e-3, "t {t}");
+    }
+}

@@ -1,0 +1,245 @@
+//! Hardware constants — paper Table 1 plus the handful of published
+//! numbers the paper's tool chain (NeuroSim / AccelWattch / VAMPIRE /
+//! BookSim-GRS) would have supplied. Each constant cites its provenance.
+
+/// All tunable hardware parameters for the 2.5D/3D-HI platform.
+#[derive(Debug, Clone)]
+pub struct HwParams {
+    // ---------------- SM chiplet (Table 1: Volta, 10 tensor cores, 1530 MHz)
+    /// Tensor cores per SM chiplet.
+    pub sm_tensor_cores: usize,
+    /// SM clock in Hz (Table 1: 1530 MHz).
+    pub sm_clock_hz: f64,
+    /// FLOPs per tensor core per cycle (Volta TC: 64 FMA = 128 FLOP/cyc, fp16).
+    pub tc_flops_per_cycle: f64,
+    /// Achievable MXU/TC utilization for large fused attention tiles
+    /// (FlashAttention-class kernels reach ~0.55-0.70 of peak on Volta).
+    pub sm_utilization: f64,
+    /// SM dynamic power (W) at full tilt — AccelWattch-class estimate for a
+    /// 1-SM + L1 chiplet at 12 nm.
+    pub sm_power_w: f64,
+    /// Energy per fp16 FLOP on tensor cores (pJ) — used for energy totals.
+    pub sm_pj_per_flop: f64,
+
+    // ---------------- MC chiplet (Table 1: 512 KB L2, 12 nm)
+    /// MC chiplet L2 capacity in bytes.
+    pub mc_l2_bytes: usize,
+    /// MC scheduler latency per request (cycles at NoI clock).
+    pub mc_sched_cycles: u64,
+    /// MC power (W).
+    pub mc_power_w: f64,
+
+    // ---------------- DRAM / HBM2 (Table 1: 2 ch/tier, 16 banks/ch, 2GB/ch)
+    /// Channels per DRAM tier.
+    pub hbm_channels_per_tier: usize,
+    /// Banks per channel.
+    pub hbm_banks_per_channel: usize,
+    /// Per-channel peak bandwidth bytes/s (HBM2: 128-bit @ 2 Gbps = 32 GB/s).
+    pub hbm_channel_bw: f64,
+    /// Row activate + CAS overhead per new row (ns).
+    pub hbm_row_latency_ns: f64,
+    /// Row buffer (page) size in bytes.
+    pub hbm_row_bytes: usize,
+    /// DRAM energy per bit moved (pJ/bit) — VAMPIRE-class HBM2 estimate.
+    pub hbm_pj_per_bit: f64,
+    /// DRAM static power per channel (W).
+    pub hbm_static_w: f64,
+
+    // ---------------- ReRAM chiplet (Table 1: ISAAC-style, 32 nm)
+    /// Tiles per ReRAM chiplet.
+    pub reram_tiles_per_chiplet: usize,
+    /// Crossbars per tile (Table 1: 96).
+    pub reram_xbars_per_tile: usize,
+    /// Crossbar dimension (128x128).
+    pub reram_xbar_dim: usize,
+    /// Bits stored per cell (2).
+    pub reram_bits_per_cell: usize,
+    /// Weight precision in bits (16-bit operands => 8 slices of 2 bits).
+    pub reram_weight_bits: usize,
+    /// ADC resolution bits (8).
+    pub reram_adc_bits: usize,
+    /// Crossbar read (one MVM wave) latency ns — ISAAC: ~100 ns per
+    /// 128-row analog MVM including ADC conversion.
+    pub reram_xbar_read_ns: f64,
+    /// Power per tile (Table 1: 0.34 W).
+    pub reram_tile_power_w: f64,
+    /// Energy per crossbar MVM wave (nJ) — 0.34W tile / 96 xbars over 100ns.
+    pub reram_xbar_nj_per_op: f64,
+    /// Write (programming) latency per cell ns — NVM program pulse.
+    pub reram_write_ns: f64,
+    /// Write endurance (acceptable program cycles per cell, ~1e8 for ReRAM
+    /// [28]).
+    pub reram_endurance: f64,
+
+    // ---------------- NoI / interposer (Table 1: 65 nm interposer, GRS links)
+    /// NoI clock Hz (paper: 1.2 GHz for link traversal timing).
+    pub noi_clock_hz: f64,
+    /// Link width in bits (GRS-class: 32 lanes x ... -> model 256 bit/cyc).
+    pub noi_link_bits: usize,
+    /// One hop link length mm (Table 1: 1.449mm; 1.55mm per cycle at 1.2GHz).
+    pub noi_link_mm: f64,
+    /// Link energy pJ/bit/mm (GRS: ~0.8-1.3 pJ/bit; per mm normalized).
+    pub noi_pj_per_bit_mm: f64,
+    /// Router traversal cycles (pipeline depth).
+    pub noi_router_cycles: u64,
+    /// Router energy pJ/bit.
+    pub noi_router_pj_per_bit: f64,
+    /// Flit payload bits.
+    pub noi_flit_bits: usize,
+    /// Per-router input buffer depth in flits (cycle sim).
+    pub noi_buffer_flits: usize,
+
+    // ---------------- 3D / TSV (Section 4.3)
+    /// TSV vertical hop latency cycles.
+    pub tsv_hop_cycles: u64,
+    /// TSV energy pJ/bit (much cheaper than planar mm-long links).
+    pub tsv_pj_per_bit: f64,
+
+    // ---------------- Thermal (Eq 16-18 constants)
+    /// Vertical thermal resistance per tier (K/W) [59].
+    pub theta_tier_k_per_w: f64,
+    /// Base-layer (heat-sink interface) thermal resistance (K/W).
+    pub theta_base_k_per_w: f64,
+    /// Ambient temperature (C).
+    pub t_ambient_c: f64,
+    /// Lateral spreading coefficient for the 2.5D interposer (K/W) —
+    /// effective resistance from one chiplet site to the sink.
+    pub theta_lateral_k_per_w: f64,
+    /// DRAM max safe temperature (C) — paper: 95 C.
+    pub dram_t_max_c: f64,
+}
+
+impl Default for HwParams {
+    fn default() -> Self {
+        HwParams {
+            sm_tensor_cores: 10,
+            sm_clock_hz: 1.530e9,
+            tc_flops_per_cycle: 128.0,
+            sm_utilization: 0.62,
+            sm_power_w: 4.5,
+            sm_pj_per_flop: 1.1,
+
+            mc_l2_bytes: 512 * 1024,
+            mc_sched_cycles: 4,
+            mc_power_w: 1.2,
+
+            hbm_channels_per_tier: 2,
+            hbm_banks_per_channel: 16,
+            hbm_channel_bw: 32.0e9,
+            hbm_row_latency_ns: 45.0,
+            hbm_row_bytes: 1024,
+            hbm_pj_per_bit: 3.5,
+            hbm_static_w: 0.4,
+
+            reram_tiles_per_chiplet: 16,
+            reram_xbars_per_tile: 96,
+            reram_xbar_dim: 128,
+            reram_bits_per_cell: 2,
+            reram_weight_bits: 16,
+            reram_adc_bits: 8,
+            reram_xbar_read_ns: 100.0,
+            reram_tile_power_w: 0.34,
+            reram_xbar_nj_per_op: 0.354, // 0.34W/96 xbars * 100ns
+            reram_write_ns: 50.0,
+            reram_endurance: 1.0e8,
+
+            noi_clock_hz: 1.2e9,
+            noi_link_bits: 256,
+            noi_link_mm: 1.449,
+            noi_pj_per_bit_mm: 1.0,
+            noi_router_cycles: 2,
+            noi_router_pj_per_bit: 0.6,
+            noi_flit_bits: 256,
+            noi_buffer_flits: 8,
+
+            tsv_hop_cycles: 1,
+            tsv_pj_per_bit: 0.05,
+
+            theta_tier_k_per_w: 2.4,
+            theta_base_k_per_w: 0.5,
+            t_ambient_c: 45.0,
+            theta_lateral_k_per_w: 1.4,
+            dram_t_max_c: 95.0,
+        }
+    }
+}
+
+impl HwParams {
+    /// Peak FLOP/s of one SM chiplet.
+    pub fn sm_peak_flops(&self) -> f64 {
+        self.sm_tensor_cores as f64 * self.tc_flops_per_cycle * self.sm_clock_hz
+    }
+
+    /// Sustained FLOP/s of one SM chiplet under the modeled utilization.
+    pub fn sm_sustained_flops(&self) -> f64 {
+        self.sm_peak_flops() * self.sm_utilization
+    }
+
+    /// Crossbars per ReRAM chiplet.
+    pub fn reram_xbars_per_chiplet(&self) -> usize {
+        self.reram_tiles_per_chiplet * self.reram_xbars_per_tile
+    }
+
+    /// 16-bit weights at 2 bits/cell => cells (columns) per weight.
+    pub fn reram_slices(&self) -> usize {
+        self.reram_weight_bits / self.reram_bits_per_cell
+    }
+
+    /// Weight capacity of one ReRAM chiplet in *weights* (not bytes):
+    /// each weight occupies `slices` cells in one crossbar row group.
+    pub fn reram_weights_per_chiplet(&self) -> f64 {
+        let cells =
+            self.reram_xbars_per_chiplet() * self.reram_xbar_dim * self.reram_xbar_dim;
+        cells as f64 / self.reram_slices() as f64
+    }
+
+    /// One NoI hop (router + link) in seconds.
+    pub fn noi_hop_secs(&self) -> f64 {
+        (self.noi_router_cycles + 1) as f64 / self.noi_clock_hz
+    }
+
+    /// NoI per-link bandwidth bytes/s.
+    pub fn noi_link_bw(&self) -> f64 {
+        self.noi_link_bits as f64 / 8.0 * self.noi_clock_hz
+    }
+
+    /// DRAM power per chiplet (tiers scaled by system config elsewhere).
+    pub fn hbm_tier_power(&self, tiers: usize) -> f64 {
+        self.hbm_static_w * (self.hbm_channels_per_tier * tiers) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sm_peak_matches_volta_scale() {
+        let hw = HwParams::default();
+        // 10 TC * 128 flop/cyc * 1.53 GHz ≈ 1.96 TFLOPs — one GV100 SM slice
+        let peak = hw.sm_peak_flops();
+        assert!((1.5e12..2.5e12).contains(&peak), "peak {peak}");
+    }
+
+    #[test]
+    fn reram_capacity_matches_isaac_math() {
+        let hw = HwParams::default();
+        // 16 tiles * 96 xbars * 128*128 cells / 8 slices = 3.1M weights
+        let w = hw.reram_weights_per_chiplet();
+        assert!((3.0e6..3.3e6).contains(&w), "weights {w}");
+        assert_eq!(hw.reram_slices(), 8);
+    }
+
+    #[test]
+    fn noi_link_bandwidth_sane() {
+        let hw = HwParams::default();
+        // 256 bit @ 1.2 GHz = 38.4 GB/s per link
+        assert!((hw.noi_link_bw() - 38.4e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn hop_latency_is_cycles() {
+        let hw = HwParams::default();
+        assert!((hw.noi_hop_secs() - 3.0 / 1.2e9).abs() < 1e-15);
+    }
+}

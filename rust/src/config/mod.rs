@@ -1,0 +1,14 @@
+//! Configuration: the paper's Table 1 (hardware constants), Table 2
+//! (chiplet allocation per system size) and Table 3 (transformer zoo).
+//!
+//! Everything downstream (traffic generation, compute models, NoI sizing,
+//! thermal) pulls its constants from here, so a single config edit sweeps
+//! the whole stack — the "real config system" requirement.
+
+pub mod hw;
+pub mod models;
+pub mod system;
+
+pub use hw::HwParams;
+pub use models::{AttentionKind, BlockKind, ModelConfig, ModelZoo};
+pub use system::{Allocation, SystemConfig, SystemSize};

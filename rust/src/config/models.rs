@@ -1,0 +1,272 @@
+//! Transformer model zoo — paper Table 3, plus the structural variants of
+//! §3.2 (encoder-only / encoder-decoder / decoder-only, MHA vs MQA,
+//! serial vs parallel MHA-FF).
+
+/// Attention structure (paper Fig 3 + §3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttentionKind {
+    /// Standard multi-head attention: per-head K/V.
+    Mha,
+    /// Multi-query attention: shared K/V across heads (Llama2-7B).
+    Mqa,
+}
+
+/// Block composition (paper Eq 8 vs Eq 9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockKind {
+    /// Serial: y = x + MLP(LN(x + Attn(LN(x)))).
+    Serial,
+    /// Parallel MHA-FF: y = x + MLP(LN(x)) + Attn(LN(x)) (GPT-J).
+    Parallel,
+}
+
+/// One transformer model (a row of Table 3).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub d_model: usize,
+    pub layers: usize,
+    /// Encoder layers out of `layers` (encoder-decoder models split them;
+    /// encoder-only => layers, decoder-only => 0).
+    pub encoder_layers: usize,
+    pub heads: usize,
+    pub params_millions: f64,
+    pub attention: AttentionKind,
+    pub block: BlockKind,
+    /// d_ff = ff_mult * d_model (4 for all Table 3 models).
+    pub ff_mult: usize,
+    /// Bytes per operand (paper: 16-bit floating point).
+    pub bytes_per_elem: usize,
+}
+
+impl ModelConfig {
+    pub fn d_ff(&self) -> usize {
+        self.ff_mult * self.d_model
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// Has a decoder stack (adds cross-attention per decoder block).
+    pub fn decoder_layers(&self) -> usize {
+        self.layers - self.encoder_layers
+    }
+
+    /// Weight parameters of one block's attention projections, in elements.
+    /// MHA: 4 * d^2 (Wq,Wk,Wv,Wo); MQA: (2 + 2/h) * d^2.
+    pub fn attn_weight_elems(&self) -> f64 {
+        let d = self.d_model as f64;
+        match self.attention {
+            AttentionKind::Mha => 4.0 * d * d,
+            AttentionKind::Mqa => (2.0 + 2.0 / self.heads as f64) * d * d,
+        }
+    }
+
+    /// Weight parameters of one block's FF network, in elements.
+    pub fn ff_weight_elems(&self) -> f64 {
+        2.0 * (self.d_model * self.d_ff()) as f64
+    }
+
+    /// FLOPs for one block's attention at sequence length n
+    /// (projections + QK^T + PV; 2 flops per MAC).
+    pub fn attn_flops(&self, n: usize) -> f64 {
+        let d = self.d_model as f64;
+        let nf = n as f64;
+        let proj = 2.0 * nf * self.attn_weight_elems();
+        let scores = 2.0 * nf * nf * d; // QK^T across all heads
+        let pv = 2.0 * nf * nf * d; // Score @ V
+        proj + scores + pv
+    }
+
+    /// FLOPs for one block's FF at sequence length n.
+    pub fn ff_flops(&self, n: usize) -> f64 {
+        2.0 * n as f64 * self.ff_weight_elems()
+    }
+
+    /// Activation bytes for one [n, d_model] tensor.
+    pub fn act_bytes(&self, n: usize) -> f64 {
+        (n * self.d_model * self.bytes_per_elem) as f64
+    }
+
+    /// KQV weight bytes streamed from DRAM per block (the paper's
+    /// "load W_K, W_Q, W_V" step). MQA streams ~half (Fig 3 discussion:
+    /// "reduced amount of data exchange from memory to computing chiplets").
+    pub fn kqv_weight_bytes(&self) -> f64 {
+        let d = self.d_model as f64;
+        let per_head_qkv = match self.attention {
+            AttentionKind::Mha => 3.0 * d * d,
+            AttentionKind::Mqa => (1.0 + 2.0 / self.heads as f64) * d * d,
+        };
+        per_head_qkv * self.bytes_per_elem as f64
+    }
+
+    /// Total parameter bytes (sanity vs Table 3 params_millions).
+    pub fn total_param_bytes(&self) -> f64 {
+        self.params_millions * 1.0e6 * self.bytes_per_elem as f64
+    }
+}
+
+/// The paper's Table 3 zoo.
+pub struct ModelZoo;
+
+impl ModelZoo {
+    pub fn bert_base() -> ModelConfig {
+        ModelConfig {
+            name: "BERT-Base",
+            d_model: 768,
+            layers: 12,
+            encoder_layers: 12,
+            heads: 12,
+            params_millions: 110.0,
+            attention: AttentionKind::Mha,
+            block: BlockKind::Serial,
+            ff_mult: 4,
+            bytes_per_elem: 2,
+        }
+    }
+
+    pub fn bert_large() -> ModelConfig {
+        ModelConfig {
+            name: "BERT-Large",
+            d_model: 1024,
+            layers: 24,
+            encoder_layers: 24,
+            heads: 16,
+            params_millions: 340.0,
+            attention: AttentionKind::Mha,
+            block: BlockKind::Serial,
+            ff_mult: 4,
+            bytes_per_elem: 2,
+        }
+    }
+
+    pub fn bart_base() -> ModelConfig {
+        ModelConfig {
+            name: "BART-Base",
+            d_model: 768,
+            layers: 12,
+            encoder_layers: 6,
+            heads: 12,
+            params_millions: 140.0,
+            attention: AttentionKind::Mha,
+            block: BlockKind::Serial,
+            ff_mult: 4,
+            bytes_per_elem: 2,
+        }
+    }
+
+    pub fn bart_large() -> ModelConfig {
+        ModelConfig {
+            name: "BART-Large",
+            d_model: 1024,
+            layers: 12,
+            encoder_layers: 6,
+            heads: 16,
+            params_millions: 400.0,
+            attention: AttentionKind::Mha,
+            block: BlockKind::Serial,
+            ff_mult: 4,
+            bytes_per_elem: 2,
+        }
+    }
+
+    pub fn gpt_j() -> ModelConfig {
+        ModelConfig {
+            name: "GPT-J",
+            d_model: 4096,
+            layers: 28,
+            encoder_layers: 0,
+            heads: 16,
+            params_millions: 6700.0,
+            attention: AttentionKind::Mha,
+            block: BlockKind::Parallel,
+            ff_mult: 4,
+            bytes_per_elem: 2,
+        }
+    }
+
+    pub fn llama2_7b() -> ModelConfig {
+        ModelConfig {
+            name: "Llama2-7B",
+            d_model: 4096,
+            layers: 32,
+            encoder_layers: 0,
+            heads: 32,
+            params_millions: 7000.0,
+            attention: AttentionKind::Mqa,
+            block: BlockKind::Serial,
+            ff_mult: 4,
+            bytes_per_elem: 2,
+        }
+    }
+
+    pub fn all() -> Vec<ModelConfig> {
+        vec![
+            Self::bert_base(),
+            Self::bert_large(),
+            Self::bart_base(),
+            Self::bart_large(),
+            Self::gpt_j(),
+            Self::llama2_7b(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelConfig> {
+        let key = name.to_ascii_lowercase().replace(['_', ' '], "-");
+        Self::all()
+            .into_iter()
+            .find(|m| m.name.to_ascii_lowercase() == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_matches_table3() {
+        let z = ModelZoo::all();
+        assert_eq!(z.len(), 6);
+        let bb = ModelZoo::bert_base();
+        assert_eq!((bb.d_model, bb.layers, bb.heads), (768, 12, 12));
+        let ll = ModelZoo::llama2_7b();
+        assert_eq!((ll.d_model, ll.layers, ll.heads), (4096, 32, 32));
+        assert_eq!(ll.attention, AttentionKind::Mqa);
+        assert_eq!(ModelZoo::gpt_j().block, BlockKind::Parallel);
+    }
+
+    #[test]
+    fn param_count_approximates_table3() {
+        // 12 * (4 d^2 + 8 d^2) ≈ 85M + embeddings ≈ 110M for BERT-Base;
+        // block weights alone should be within 30% below the headline.
+        let bb = ModelZoo::bert_base();
+        let block = bb.attn_weight_elems() + bb.ff_weight_elems();
+        let total = block * bb.layers as f64;
+        assert!(total > 0.6 * bb.params_millions * 1e6);
+        assert!(total < 1.1 * bb.params_millions * 1e6);
+    }
+
+    #[test]
+    fn mqa_streams_less_weight() {
+        let mha = ModelZoo::gpt_j();
+        let mut mqa = mha.clone();
+        mqa.attention = AttentionKind::Mqa;
+        assert!(mqa.kqv_weight_bytes() < 0.5 * mha.kqv_weight_bytes());
+    }
+
+    #[test]
+    fn by_name_variants() {
+        assert!(ModelZoo::by_name("bert-base").is_some());
+        assert!(ModelZoo::by_name("BERT_Base").is_some());
+        assert!(ModelZoo::by_name("Llama2-7B").is_some());
+        assert!(ModelZoo::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn ff_dominates_for_llms_short_seq() {
+        // §3.1: for LLMs O(N d^2) >> O(N^2 d) at N << d — check GPT-J n=64
+        let g = ModelZoo::gpt_j();
+        assert!(g.ff_flops(64) > 2.0 * (g.attn_flops(64) - 2.0 * 64.0_f64 * g.attn_weight_elems()));
+    }
+}

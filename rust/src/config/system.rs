@@ -1,0 +1,224 @@
+//! System sizes and chiplet allocation — paper Table 2 + §4.1.1.
+
+use crate::config::HwParams;
+
+/// The three evaluated system sizes (paper §4.1.1). `Custom` supports the
+/// scalability sweeps beyond the paper's three points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SystemSize {
+    S36,
+    S64,
+    S100,
+    Custom(usize),
+}
+
+impl SystemSize {
+    pub fn chiplets(&self) -> usize {
+        match self {
+            SystemSize::S36 => 36,
+            SystemSize::S64 => 64,
+            SystemSize::S100 => 100,
+            SystemSize::Custom(n) => *n,
+        }
+    }
+
+    pub fn from_chiplets(n: usize) -> SystemSize {
+        match n {
+            36 => SystemSize::S36,
+            64 => SystemSize::S64,
+            100 => SystemSize::S100,
+            other => SystemSize::Custom(other),
+        }
+    }
+}
+
+/// Chiplet allocation (paper Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Allocation {
+    pub sm: usize,
+    pub mc: usize,
+    pub dram: usize,
+    pub reram: usize,
+}
+
+impl Allocation {
+    pub fn total(&self) -> usize {
+        self.sm + self.mc + self.dram + self.reram
+    }
+}
+
+/// Full system configuration: size, allocation, HBM tiers, grid geometry.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub size: SystemSize,
+    pub alloc: Allocation,
+    /// HBM2 DRAM tiers per stack (paper: 2/3/4 for 36/64/100).
+    pub hbm_tiers: usize,
+    /// Interposer placement grid (rows, cols) — square for the paper sizes.
+    pub grid: (usize, usize),
+    pub hw: HwParams,
+}
+
+impl SystemConfig {
+    /// Paper Table 2 allocations.
+    pub fn new(size: SystemSize) -> SystemConfig {
+        let (alloc, tiers) = match size {
+            SystemSize::S36 => (
+                Allocation {
+                    sm: 20,
+                    mc: 4,
+                    dram: 4,
+                    reram: 8,
+                },
+                2,
+            ),
+            SystemSize::S64 => (
+                Allocation {
+                    sm: 36,
+                    mc: 6,
+                    dram: 6,
+                    reram: 16,
+                },
+                3,
+            ),
+            SystemSize::S100 => (
+                Allocation {
+                    sm: 64,
+                    mc: 8,
+                    dram: 8,
+                    reram: 20,
+                },
+                4,
+            ),
+            SystemSize::Custom(n) => {
+                // keep Table 2 proportions: ~60% SM, ~10% MC, ~10% DRAM, ~20% ReRAM,
+                // MC:DRAM strictly 1:1 (HBM point-to-point protocol, §4.1.1)
+                let mc = (n / 10).max(1);
+                let dram = mc;
+                let reram = (n / 5).max(2);
+                let sm = n - mc - dram - reram;
+                (
+                    Allocation {
+                        sm,
+                        mc,
+                        dram,
+                        reram,
+                    },
+                    2 + n / 50,
+                )
+            }
+        };
+        let n = size.chiplets();
+        let side = (n as f64).sqrt().ceil() as usize;
+        let rows = (n + side - 1) / side;
+        SystemConfig {
+            size,
+            alloc,
+            hbm_tiers: tiers,
+            grid: (rows, side),
+            hw: HwParams::default(),
+        }
+    }
+
+    pub fn s36() -> SystemConfig {
+        Self::new(SystemSize::S36)
+    }
+
+    pub fn s64() -> SystemConfig {
+        Self::new(SystemSize::S64)
+    }
+
+    pub fn s100() -> SystemConfig {
+        Self::new(SystemSize::S100)
+    }
+
+    /// Aggregate DRAM bandwidth (bytes/s): channels = tiers * 2 per stack,
+    /// one stack per DRAM chiplet.
+    pub fn total_dram_bw(&self) -> f64 {
+        self.alloc.dram as f64
+            * (self.hbm_tiers * self.hw.hbm_channels_per_tier) as f64
+            * self.hw.hbm_channel_bw
+    }
+
+    /// Aggregate sustained SM compute (FLOP/s).
+    pub fn total_sm_flops(&self) -> f64 {
+        self.alloc.sm as f64 * self.hw.sm_sustained_flops()
+    }
+
+    /// SMs per MC cluster (the paper's SM-cluster / many-to-few pattern).
+    pub fn sms_per_mc(&self) -> usize {
+        (self.alloc.sm + self.alloc.mc - 1) / self.alloc.mc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_allocations_exact() {
+        let c36 = SystemConfig::s36();
+        assert_eq!(
+            (c36.alloc.sm, c36.alloc.mc, c36.alloc.dram, c36.alloc.reram),
+            (20, 4, 4, 8)
+        );
+        assert_eq!(c36.alloc.total(), 36);
+
+        let c64 = SystemConfig::s64();
+        assert_eq!(
+            (c64.alloc.sm, c64.alloc.mc, c64.alloc.dram, c64.alloc.reram),
+            (36, 6, 6, 16)
+        );
+        assert_eq!(c64.alloc.total(), 64);
+
+        let c100 = SystemConfig::s100();
+        assert_eq!(
+            (c100.alloc.sm, c100.alloc.mc, c100.alloc.dram, c100.alloc.reram),
+            (64, 8, 8, 20)
+        );
+        assert_eq!(c100.alloc.total(), 100);
+    }
+
+    #[test]
+    fn hbm_tiers_per_paper() {
+        assert_eq!(SystemConfig::s36().hbm_tiers, 2);
+        assert_eq!(SystemConfig::s64().hbm_tiers, 3);
+        assert_eq!(SystemConfig::s100().hbm_tiers, 4);
+    }
+
+    #[test]
+    fn mc_dram_one_to_one() {
+        for c in [
+            SystemConfig::s36(),
+            SystemConfig::s64(),
+            SystemConfig::s100(),
+            SystemConfig::new(SystemSize::Custom(50)),
+        ] {
+            assert_eq!(c.alloc.mc, c.alloc.dram, "HBM protocol needs 1:1");
+        }
+    }
+
+    #[test]
+    fn custom_sums_to_n() {
+        for n in [16, 50, 144, 256] {
+            let c = SystemConfig::new(SystemSize::Custom(n));
+            assert_eq!(c.alloc.total(), n);
+        }
+    }
+
+    #[test]
+    fn grid_fits_chiplets() {
+        for c in [SystemConfig::s36(), SystemConfig::s64(), SystemConfig::s100()] {
+            assert!(c.grid.0 * c.grid.1 >= c.size.chiplets());
+        }
+        assert_eq!(SystemConfig::s36().grid, (6, 6));
+        assert_eq!(SystemConfig::s100().grid, (10, 10));
+    }
+
+    #[test]
+    fn bandwidth_scales_with_tiers() {
+        // 100-chiplet: 8 stacks * 8 ch * 32 GB/s = 2.05 TB/s
+        let c = SystemConfig::s100();
+        assert!((c.total_dram_bw() - 8.0 * 8.0 * 32.0e9).abs() < 1e6);
+    }
+}

@@ -1,0 +1,199 @@
+//! L3 coordinator: the end-to-end functional driver.
+//!
+//! Composes all three layers: the PJRT runtime executes the AOT-compiled
+//! JAX/Pallas artifacts (real numerics) while the system simulator
+//! schedules the same kernel sequence on the simulated 2.5D-HI platform
+//! (paper metrics). The driver also *validates* the artifact pipeline by
+//! running every layer twice — once through the fused `encoder_layer`
+//! artifact and once decomposed through the `attention` + `ffn` artifacts
+//! with the projections/layernorms recomputed in rust — and asserting the
+//! two paths agree. Agreement proves the L1 Pallas kernels, the L2 JAX
+//! composition, the AOT interchange and the rust runtime all line up.
+
+pub mod tensor;
+
+use crate::baselines::Arch;
+use crate::config::{AttentionKind, BlockKind, ModelConfig, SystemConfig};
+use crate::metrics::SimReport;
+use crate::runtime::Runtime;
+use crate::sim::{simulate, SimOptions};
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use tensor::{add, layernorm, matmul, merge_heads, split_heads};
+
+/// Deterministic parameters for the TINY artifact config (mirrors
+/// python/compile/model.py init semantics: small gaussian weights, unit
+/// layernorm). Values differ from the python init (different PRNG) — the
+/// validation is rust-vs-rust across two artifact paths, which is what
+/// exercises the numerics stack.
+pub struct TinyParams {
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub emb: Vec<f32>,
+    pub pos: Vec<f32>,
+}
+
+impl TinyParams {
+    pub fn generate(d: usize, d_ff: usize, vocab: usize, n: usize, seed: u64) -> TinyParams {
+        let mut rng = Rng::new(seed);
+        let mut gauss = |len: usize, scale: f32| -> Vec<f32> {
+            (0..len).map(|_| scale * rng.normal() as f32).collect()
+        };
+        TinyParams {
+            wq: gauss(d * d, 0.02),
+            wk: gauss(d * d, 0.02),
+            wv: gauss(d * d, 0.02),
+            wo: gauss(d * d, 0.02),
+            w1: gauss(d * d_ff, 0.02),
+            b1: vec![0.0; d_ff],
+            w2: gauss(d_ff * d, 0.02),
+            b2: vec![0.0; d],
+            ln1_g: vec![1.0; d],
+            ln1_b: vec![0.0; d],
+            ln2_g: vec![1.0; d],
+            ln2_b: vec![0.0; d],
+            emb: gauss(vocab * d, 0.02),
+            pos: gauss(n * d, 0.02),
+        }
+    }
+
+    fn layer_args(&self, x: Vec<f32>) -> Vec<Vec<f32>> {
+        vec![
+            x,
+            self.wq.clone(),
+            self.wk.clone(),
+            self.wv.clone(),
+            self.wo.clone(),
+            self.w1.clone(),
+            self.b1.clone(),
+            self.w2.clone(),
+            self.b2.clone(),
+            self.ln1_g.clone(),
+            self.ln1_b.clone(),
+            self.ln2_g.clone(),
+            self.ln2_b.clone(),
+        ]
+    }
+}
+
+/// Report of one functional end-to-end run.
+pub struct FunctionalReport {
+    /// Σ|y| over the final hidden state — the regression checksum.
+    pub checksum: f64,
+    /// max |fused - decomposed| across all layers.
+    pub max_deviation: f64,
+    pub layers: usize,
+    /// Simulated platform metrics for the same kernel schedule.
+    pub sim: SimReport,
+    /// Host wall-clock for the XLA executions (not a paper metric; shows
+    /// the runtime is real).
+    pub host_secs: f64,
+}
+
+/// The TINY model as a ModelConfig for the platform simulator.
+pub fn tiny_model(manifest_d: usize, heads: usize, layers: usize) -> ModelConfig {
+    ModelConfig {
+        name: "TINY",
+        d_model: manifest_d,
+        layers,
+        encoder_layers: layers,
+        heads,
+        params_millions: 0.4,
+        attention: AttentionKind::Mha,
+        block: BlockKind::Serial,
+        ff_mult: 4,
+        bytes_per_elem: 2,
+    }
+}
+
+/// Run the functional driver: real numerics through the artifacts +
+/// simulated platform timing for the same schedule.
+pub fn run_functional(
+    artifact_dir: &str,
+    layers: usize,
+    sys: &SystemConfig,
+    tolerance: f32,
+) -> Result<FunctionalReport> {
+    let rt = Runtime::new(artifact_dir)?;
+    let m = &rt.manifest;
+    let (d, h, n, dff, vocab) = (m.d_model, m.n_heads, m.seq_len, m.d_ff, m.vocab);
+    let dh = d / h;
+    let params = TinyParams::generate(d, dff, vocab, n, 0xC0DE);
+
+    let k_embed = rt.load("embed").context("loading embed artifact")?;
+    let k_layer = rt.load("encoder_layer")?;
+    let k_attn = rt.load("attention")?;
+    let k_ffn = rt.load("ffn")?;
+
+    let t0 = std::time::Instant::now();
+    // ① embedding (ReRAM macro step in the platform)
+    let ids: Vec<i32> = (0..n as i32).map(|i| (i * 7) % vocab as i32).collect();
+    let mut x = k_embed.run_f32_with_ids(
+        &[params.emb.clone(), params.pos.clone(), vec![]],
+        2,
+        &ids,
+    )?;
+
+    let mut max_dev = 0.0f32;
+    for _ in 0..layers {
+        // fused path: the whole encoder block as one artifact
+        let fused = k_layer.run_f32(&params.layer_args(x.clone()))?;
+
+        // decomposed path: rust-side projections + the attention and ffn
+        // artifacts (different HLO, same math)
+        let h1 = layernorm(&x, &params.ln1_g, &params.ln1_b, n, d);
+        let q = matmul(&h1, &params.wq, n, d, d);
+        let k = matmul(&h1, &params.wk, n, d, d);
+        let v = matmul(&h1, &params.wv, n, d, d);
+        let attn = k_attn.run_f32(&[
+            split_heads(&q, n, h, dh),
+            split_heads(&k, n, h, dh),
+            split_heads(&v, n, h, dh),
+        ])?;
+        let attn = merge_heads(&attn, n, h, dh);
+        let x2 = add(&x, &matmul(&attn, &params.wo, n, d, d));
+        let h2 = layernorm(&x2, &params.ln2_g, &params.ln2_b, n, d);
+        let ff = k_ffn.run_f32(&[
+            h2,
+            params.w1.clone(),
+            params.b1.clone(),
+            params.w2.clone(),
+            params.b2.clone(),
+        ])?;
+        let decomposed = add(&x2, &ff);
+
+        for (a, b) in fused.iter().zip(&decomposed) {
+            max_dev = max_dev.max((a - b).abs());
+        }
+        if max_dev > tolerance {
+            bail!(
+                "fused vs decomposed deviation {max_dev} exceeds tolerance {tolerance} — \
+                 artifact pipeline broken"
+            );
+        }
+        x = fused;
+    }
+    let host_secs = t0.elapsed().as_secs_f64();
+
+    let checksum: f64 = x.iter().map(|v| v.abs() as f64).sum();
+    let model = tiny_model(d, h, layers);
+    let sim = simulate(Arch::Hi25D, sys, &model, n, &SimOptions::default());
+
+    Ok(FunctionalReport {
+        checksum,
+        max_deviation: max_dev as f64,
+        layers,
+        sim,
+        host_secs,
+    })
+}

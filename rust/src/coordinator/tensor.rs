@@ -1,0 +1,124 @@
+//! Minimal host-side tensor ops for the coordinator's decomposed
+//! validation path (n, d are tiny — clarity over speed; the heavy math
+//! runs inside XLA).
+
+/// Row-major [m, k] @ [k, n] -> [m, n].
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Elementwise a + b.
+pub fn add(a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// LayerNorm over the last axis of [n, d] (eps matches jax ref 1e-5).
+pub fn layernorm(x: &[f32], gamma: &[f32], beta: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * d];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        let mu = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for j in 0..d {
+            out[i * d + j] = (row[j] - mu) * inv * gamma[j] + beta[j];
+        }
+    }
+    out
+}
+
+/// [n, h*dh] -> [h, n, dh].
+pub fn split_heads(x: &[f32], n: usize, h: usize, dh: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; h * n * dh];
+    for i in 0..n {
+        for hh in 0..h {
+            for k in 0..dh {
+                out[hh * n * dh + i * dh + k] = x[i * h * dh + hh * dh + k];
+            }
+        }
+    }
+    out
+}
+
+/// [h, n, dh] -> [n, h*dh].
+pub fn merge_heads(x: &[f32], n: usize, h: usize, dh: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * h * dh];
+    for hh in 0..h {
+        for i in 0..n {
+            for k in 0..dh {
+                out[i * h * dh + hh * dh + k] = x[hh * n * dh + i * dh + k];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // 2x2
+        let i = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &i, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [1,2;3,4] @ [5,6;7,8] = [19,22;43,50]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let y = layernorm(&x, &[1.0; 4], &[0.0; 4], 1, 4);
+        let mu: f32 = y.iter().sum::<f32>() / 4.0;
+        assert!(mu.abs() < 1e-6);
+        let var: f32 = y.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn split_merge_roundtrip() {
+        let n = 3;
+        let h = 2;
+        let dh = 4;
+        let x: Vec<f32> = (0..n * h * dh).map(|i| i as f32).collect();
+        let s = split_heads(&x, n, h, dh);
+        let m = merge_heads(&s, n, h, dh);
+        assert_eq!(m, x);
+    }
+
+    #[test]
+    fn split_heads_layout() {
+        // n=1, h=2, dh=2: [a b c d] -> head0 [a b], head1 [c d]
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let s = split_heads(&x, 1, 2, 2);
+        assert_eq!(s, vec![1.0, 2.0, 3.0, 4.0]);
+        // n=2 interleave
+        let x2 = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let s2 = split_heads(&x2, 2, 2, 2);
+        assert_eq!(s2, vec![1.0, 2.0, 5.0, 6.0, 3.0, 4.0, 7.0, 8.0]);
+    }
+}

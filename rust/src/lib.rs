@@ -1,0 +1,39 @@
+//! # chiplet-hi
+//!
+//! Production-quality reproduction of *"A Heterogeneous Chiplet
+//! Architecture for Accelerating End-to-End Transformer Models"*
+//! (Sharma, Dhingra, Doppa, Ogras, Pande — 2023).
+//!
+//! The crate implements the paper's full stack as a three-layer system:
+//!
+//! - **L3 (this crate)**: the 2.5D/3D heterogeneous chiplet platform —
+//!   chiplet models (SM / MC / HBM2 DRAM / ReRAM PIM), the
+//!   Network-on-Interposer with analytic (Eq 11-15) and flit-level cycle
+//!   evaluators, the MOO NoI design optimizer (MOO-STAGE / AMOSA /
+//!   NSGA-II), thermal + ReRAM-noise objectives (Eq 16-20), the
+//!   HAIMA/TransPIM baselines, and the end-to-end system simulator.
+//! - **L2/L1 (python/, build-time only)**: the transformer blocks in JAX
+//!   composed from Pallas kernels (FlashAttention, ReRAM bit-sliced MVM),
+//!   AOT-lowered to HLO text artifacts.
+//! - **runtime**: loads the artifacts via the PJRT C API (`xla` crate) so
+//!   the simulated platform executes *real numerics* on the host while
+//!   the timing/energy/thermal models produce the paper's metrics.
+//!
+//! See DESIGN.md for the system inventory and the per-figure experiment
+//! index, and EXPERIMENTS.md for the reproduced numbers.
+
+pub mod arch;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod compute;
+pub mod endurance;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod moo;
+pub mod noi;
+pub mod runtime;
+pub mod sim;
+pub mod thermal;
+pub mod util;

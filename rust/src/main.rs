@@ -1,0 +1,282 @@
+//! `repro` — CLI leader for the chiplet-hi platform.
+//!
+//! Commands:
+//!   simulate   --system 36|64|100 --model bert-base --seq 64 --arch hi
+//!              [--all-arch] [--cycle-accurate]
+//!   sweep      --system 64 --model bart-large        (Fig 9-style table)
+//!   optimize   --system 36 --model bert-base [--solver stage|amosa|nsga2]
+//!              [--3d]                                 (Fig 4 / Eq 10-20)
+//!   thermal    --system 100 [--seq 256]               (Fig 11 columns)
+//!   endurance  [--seq 4096]                           (§4.4 analysis)
+//!   functional [--layers 2] [--artifacts artifacts]   (end-to-end driver)
+//!   info                                              (Table 1-3 dump)
+
+use anyhow::{bail, Result};
+use chiplet_hi::arch::SfcKind;
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig, SystemSize};
+use chiplet_hi::coordinator;
+use chiplet_hi::endurance;
+use chiplet_hi::model::kernels::Workload;
+use chiplet_hi::moo::{amosa, design::NoiDesign, nsga2, stage, Evaluator};
+use chiplet_hi::sim::{self, SimOptions};
+use chiplet_hi::util::bench::Table;
+use chiplet_hi::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn system_from(args: &Args) -> SystemConfig {
+    SystemConfig::new(SystemSize::from_chiplets(args.get_usize("system", 36)))
+}
+
+fn model_from(args: &Args) -> Result<chiplet_hi::config::ModelConfig> {
+    let name = args.get_str("model", "bert-base");
+    ModelZoo::by_name(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown model '{name}' (have: {})",
+            ModelZoo::all()
+                .iter()
+                .map(|m| m.name.to_ascii_lowercase())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    })
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "simulate" => {
+            let sys = system_from(args);
+            let model = model_from(args)?;
+            let n = args.get_usize("seq", 64);
+            let opts = SimOptions {
+                cycle_accurate: args.has_flag("cycle-accurate"),
+                ..Default::default()
+            };
+            let arches: Vec<Arch> = if args.has_flag("all-arch") {
+                Arch::all().to_vec()
+            } else {
+                vec![Arch::by_name(args.get_str("arch", "hi"))
+                    .ok_or_else(|| anyhow::anyhow!("unknown arch"))?]
+            };
+            for arch in arches {
+                let r = sim::simulate(arch, &sys, &model, n, &opts);
+                println!("{}", r.summary_line());
+                if args.has_flag("kernels") {
+                    for k in &r.kernels {
+                        println!(
+                            "    {:<12} compute {:>9.2} us | comm {:>9.2} us | dram {:>9.2} us | ovh {:>9.2} us | x{}",
+                            k.kind.name(),
+                            k.compute_secs * 1e6,
+                            k.comm_secs * 1e6,
+                            k.dram_secs * 1e6,
+                            k.overhead_secs * 1e6,
+                            k.repeats
+                        );
+                    }
+                }
+            }
+            Ok(())
+        }
+        "sweep" => {
+            let sys = system_from(args);
+            let model = model_from(args)?;
+            let mut t = Table::new(
+                &format!("{}-chiplet sweep, {}", sys.size.chiplets(), model.name),
+                &["N", "2.5D-HI ms", "TransPIM ms", "HAIMA ms", "best-baseline gain"],
+            );
+            for n in [64usize, 256, 1024, 2056, 4096] {
+                let hi = sim::simulate(Arch::Hi25D, &sys, &model, n, &SimOptions::default());
+                let tp =
+                    sim::simulate(Arch::TransPimChiplet, &sys, &model, n, &SimOptions::default());
+                let ha =
+                    sim::simulate(Arch::HaimaChiplet, &sys, &model, n, &SimOptions::default());
+                let gain = tp.latency_secs.min(ha.latency_secs) / hi.latency_secs;
+                t.row(vec![
+                    n.to_string(),
+                    format!("{:.3}", hi.latency_secs * 1e3),
+                    format!("{:.3}", tp.latency_secs * 1e3),
+                    format!("{:.3}", ha.latency_secs * 1e3),
+                    format!("{gain:.2}x"),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        "optimize" => {
+            let sys = system_from(args);
+            let model = model_from(args)?;
+            let n = args.get_usize("seq", 64);
+            let chiplets = sim::engine::chiplets_for(&sys);
+            let w = Workload::build(&model, n);
+            let mut ev = Evaluator::new(&sys, &chiplets, &w);
+            if args.has_flag("3d") {
+                ev = ev.with_3d(2);
+            }
+            let seeds = vec![
+                NoiDesign::mesh_seed(&sys, chiplets.len()),
+                NoiDesign::hi_seed(&sys, &chiplets, SfcKind::Boustrophedon),
+                NoiDesign::hi_seed(&sys, &chiplets, SfcKind::Hilbert),
+            ];
+            let solver = args.get_str("solver", "stage");
+            println!("optimizing {} chiplets / {} / N={n} with {solver} ...", sys.size.chiplets(), model.name);
+            let (front, phv, evals) = match solver {
+                "stage" => {
+                    let r = stage::moo_stage(&ev, seeds, &stage::StageConfig::default());
+                    (r.archive.objectives(), r.phv, r.evaluations)
+                }
+                "amosa" => {
+                    let r = amosa::amosa(&ev, seeds[1].clone(), &amosa::AmosaConfig::default());
+                    (r.archive.objectives(), r.phv, r.evaluations)
+                }
+                "nsga2" => {
+                    let r = nsga2::nsga2(&ev, seeds, &nsga2::Nsga2Config::default());
+                    (r.archive.objectives(), r.phv, r.evaluations)
+                }
+                other => bail!("unknown solver '{other}'"),
+            };
+            let mut t = Table::new(
+                "Pareto front (mesh-normalized, minimize)",
+                &["mu", "sigma", "extra objectives"],
+            );
+            let mut front = front;
+            front.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+            for o in &front {
+                t.row(vec![
+                    format!("{:.4}", o[0]),
+                    format!("{:.4}", o[1]),
+                    o[2..].iter().map(|x| format!("{x:.3}")).collect::<Vec<_>>().join(", "),
+                ]);
+            }
+            t.print();
+            println!("PHV = {phv:.4}  ({evals} evaluations)");
+            Ok(())
+        }
+        "thermal" => {
+            let sys = system_from(args);
+            let n = args.get_usize("seq", 256);
+            let mut t = Table::new(
+                "steady-state peak temperature (C)",
+                &["arch", "model", "T (C)", "feasible(<95C)"],
+            );
+            for model in [ModelZoo::bert_large(), ModelZoo::gpt_j()] {
+                for arch in [Arch::Hi3D, Arch::HaimaOriginal, Arch::TransPimOriginal] {
+                    let r = sim::simulate(arch, &sys, &model, n, &SimOptions::default());
+                    t.row(vec![
+                        r.arch.clone(),
+                        model.name.to_string(),
+                        format!("{:.1}", r.temp_c),
+                        if r.temp_c < sys.hw.dram_t_max_c { "yes" } else { "NO" }.into(),
+                    ]);
+                }
+            }
+            t.print();
+            Ok(())
+        }
+        "generate" => {
+            // autoregressive decode serving: prefill + per-token latency
+            let sys = system_from(args);
+            let model = model_from(args)?;
+            let prompt = args.get_usize("prompt", 128);
+            let tokens = args.get_usize("tokens", 64);
+            let mut t = Table::new(
+                &format!(
+                    "autoregressive serving: {} on {} chiplets (prompt {prompt}, gen {tokens})",
+                    model.name,
+                    sys.size.chiplets()
+                ),
+                &["arch", "prefill ms", "ms/tok @start", "ms/tok @end", "tokens/s", "energy mJ"],
+            );
+            for arch in Arch::chiplet_set() {
+                let r = chiplet_hi::sim::generate(
+                    arch,
+                    &sys,
+                    &model,
+                    prompt,
+                    tokens,
+                    &chiplet_hi::sim::SimOptions::default(),
+                );
+                t.row(vec![
+                    r.arch.clone(),
+                    format!("{:.3}", r.prefill_secs * 1e3),
+                    format!("{:.4}", r.tok_secs_start * 1e3),
+                    format!("{:.4}", r.tok_secs_end * 1e3),
+                    format!("{:.0}", r.tokens_per_sec),
+                    format!("{:.1}", r.energy_j * 1e3),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        "endurance" => {
+            let n = args.get_usize("seq", 4096);
+            let hw = chiplet_hi::config::HwParams::default();
+            let mut m = ModelZoo::bert_base();
+            m.heads = 8;
+            let r = endurance::attention_in_reram(&hw, &m, n);
+            println!("ReRAM-only attention (ReTransformer-style), BERT h=8, N={n}:");
+            println!("  writes/cell/token: {:.2e}", r.writes_per_cell_per_token);
+            println!("  writes/cell/seq:   {:.2e}", r.writes_per_cell_per_seq);
+            println!("  sequences to endurance failure (1e8 cycles): {:.2}", r.seqs_to_failure);
+            println!("  2.5D-HI ReRAM writes per model load: {}", endurance::hi_reram_writes_per_load());
+            Ok(())
+        }
+        "functional" => {
+            let layers = args.get_usize("layers", 2);
+            let dir = args.get_str("artifacts", "artifacts");
+            let sys = system_from(args);
+            let r = coordinator::run_functional(dir, layers, &sys, 5e-4)?;
+            println!("functional run: {} layers via PJRT artifacts", r.layers);
+            println!("  checksum Σ|y|        = {:.6}", r.checksum);
+            println!("  fused-vs-decomposed  = {:.3e} max |Δ| (validated)", r.max_deviation);
+            println!("  host XLA wall time   = {:.1} ms", r.host_secs * 1e3);
+            println!("  simulated platform   : {}", r.sim.summary_line());
+            Ok(())
+        }
+        "info" => {
+            for sys in [SystemConfig::s36(), SystemConfig::s64(), SystemConfig::s100()] {
+                println!(
+                    "{:>3} chiplets: {} SM, {} MC, {} DRAM ({}-tier HBM2), {} ReRAM | grid {}x{} | {:.1} TFLOP/s SM pool | {:.0} GB/s DRAM",
+                    sys.size.chiplets(),
+                    sys.alloc.sm,
+                    sys.alloc.mc,
+                    sys.alloc.dram,
+                    sys.hbm_tiers,
+                    sys.alloc.reram,
+                    sys.grid.0,
+                    sys.grid.1,
+                    sys.total_sm_flops() / 1e12,
+                    sys.total_dram_bw() / 1e9
+                );
+            }
+            for m in ModelZoo::all() {
+                println!(
+                    "{:<11} d={:<5} layers={:<3} heads={:<3} {}M params ({:?}, {:?})",
+                    m.name, m.d_model, m.layers, m.heads, m.params_millions, m.attention, m.block
+                );
+            }
+            Ok(())
+        }
+        _ => {
+            println!("repro — heterogeneous chiplet platform for end-to-end transformers");
+            println!("commands: simulate | sweep | optimize | thermal | endurance | functional | info");
+            println!("see README.md for usage");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! DFI/PHY FIFO interface between the HBM-MC (base logic die) and the MC
+//! chiplet's scheduler — paper Fig 6: the interface is "partitioned into
+//! distinct FIFOs, allocated for logical address, write, and read data",
+//! with the PHY generating the handshake signals.
+//!
+//! This is a queueing model of that protocol: requests enter the address
+//! FIFO, the HBM-MC drains them at the channel command rate, and data
+//! returns through the read FIFO at channel bandwidth. It exposes the
+//! latency the point-to-point interface adds on top of raw DRAM timing
+//! (used by `HbmModel::phy_latency_s`) and, more importantly, detects
+//! *backpressure*: when a burst of requests exceeds the FIFO depth the
+//! scheduler stalls — the effect the paper's 1:1 MC:DRAM constraint
+//! exists to bound.
+
+/// FIFO-partitioned DFI interface of one HBM channel.
+#[derive(Debug, Clone)]
+pub struct DfiInterface {
+    /// address FIFO depth (requests).
+    pub addr_depth: usize,
+    /// read/write data FIFO depth (bursts).
+    pub data_depth: usize,
+    /// command issue rate of the HBM-MC (requests/s).
+    pub cmd_rate: f64,
+    /// data drain rate (bytes/s) — the channel bandwidth.
+    pub data_rate: f64,
+    /// PHY handshake latency per request (s).
+    pub handshake_s: f64,
+    /// burst size (bytes).
+    pub burst_bytes: f64,
+}
+
+impl Default for DfiInterface {
+    fn default() -> Self {
+        DfiInterface {
+            addr_depth: 16,
+            data_depth: 32,
+            cmd_rate: 500.0e6,   // 500 M requests/s at the 500 MHz config
+            data_rate: 32.0e9,   // one HBM2 channel
+            handshake_s: 20.0e-9,
+            burst_bytes: 256.0,
+        }
+    }
+}
+
+/// Outcome of pushing a request burst through the interface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DfiStats {
+    pub secs: f64,
+    /// time the scheduler spent stalled on a full FIFO.
+    pub stall_secs: f64,
+    pub requests: f64,
+}
+
+impl DfiInterface {
+    /// Time to move `bytes` through the interface when requests arrive
+    /// at `offered_rate` (requests/s). Little's-law queueing: if the
+    /// offered rate exceeds the service rate the FIFO fills and the
+    /// producer stalls for the excess.
+    pub fn transfer(&self, bytes: f64, offered_rate: f64) -> DfiStats {
+        if bytes <= 0.0 {
+            return DfiStats {
+                secs: 0.0,
+                stall_secs: 0.0,
+                requests: 0.0,
+            };
+        }
+        let requests = (bytes / self.burst_bytes).ceil();
+        // service rate is the slower of command issue and data drain
+        let service = self
+            .cmd_rate
+            .min(self.data_rate / self.burst_bytes)
+            .max(1.0);
+        let service_secs = requests / service;
+        // arrival faster than service: the FIFO absorbs `addr_depth`
+        // requests, everything beyond stalls the producer
+        let stall_secs = if offered_rate > service {
+            let backlog = (requests - self.addr_depth as f64).max(0.0);
+            backlog * (1.0 / service - 1.0 / offered_rate)
+        } else {
+            0.0
+        };
+        DfiStats {
+            secs: service_secs + self.handshake_s,
+            stall_secs,
+            requests,
+        }
+    }
+
+    /// Effective bandwidth under an offered load (bytes/s).
+    pub fn effective_bw(&self, bytes: f64, offered_rate: f64) -> f64 {
+        let s = self.transfer(bytes, offered_rate);
+        if s.secs + s.stall_secs > 0.0 {
+            bytes / (s.secs + s.stall_secs)
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bytes_free() {
+        let d = DfiInterface::default();
+        assert_eq!(d.transfer(0.0, 1e9).stall_secs, 0.0);
+    }
+
+    #[test]
+    fn slow_offered_rate_never_stalls() {
+        let d = DfiInterface::default();
+        let s = d.transfer(1.0e6, 1.0e6); // 1 M req/s << service
+        assert_eq!(s.stall_secs, 0.0);
+        assert!(s.secs > 0.0);
+    }
+
+    #[test]
+    fn overload_stalls() {
+        let d = DfiInterface::default();
+        let s = d.transfer(64.0e6, 1.0e12); // firehose
+        assert!(s.stall_secs > 0.0, "{s:?}");
+    }
+
+    #[test]
+    fn effective_bw_bounded_by_channel() {
+        let d = DfiInterface::default();
+        let bw = d.effective_bw(1.0e9, 1.0e9);
+        assert!(bw <= d.data_rate * 1.001);
+        assert!(bw > 0.5 * d.data_rate, "bw {bw}");
+    }
+
+    #[test]
+    fn command_rate_can_bottleneck_small_bursts() {
+        let mut d = DfiInterface::default();
+        d.burst_bytes = 32.0; // tiny bursts: cmd-rate bound
+        let bw = d.effective_bw(1.0e8, 1.0e12);
+        // 500M req/s * 32 B = 16 GB/s < 32 GB/s channel
+        assert!(bw < 17.0e9, "bw {bw}");
+    }
+
+    #[test]
+    fn deeper_fifo_reduces_stall() {
+        let shallow = DfiInterface {
+            addr_depth: 4,
+            ..Default::default()
+        };
+        let deep = DfiInterface {
+            addr_depth: 64,
+            ..Default::default()
+        };
+        let burst = 1.0e5;
+        let s1 = shallow.transfer(burst, 1.0e12).stall_secs;
+        let s2 = deep.transfer(burst, 1.0e12).stall_secs;
+        assert!(s2 <= s1);
+    }
+}

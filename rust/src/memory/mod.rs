@@ -1,0 +1,9 @@
+//! DRAM subsystem — HBM2 stacks behind MC chiplets (paper §4.1.1 DRAM
+//! microarchitecture + Fig 6 FIFO protocol). Plays the VAMPIRE/Ramulator
+//! role in the paper's tool flow.
+
+pub mod dfi;
+pub mod hbm;
+
+pub use dfi::{DfiInterface, DfiStats};
+pub use hbm::{HbmModel, HbmStats};

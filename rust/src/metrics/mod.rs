@@ -1,0 +1,118 @@
+//! Result types + report formatting for the system simulator.
+
+use crate::model::kernels::KernelKind;
+
+/// Per-kernel timing/energy breakdown (one entry per phase kind).
+#[derive(Debug, Clone)]
+pub struct KernelMetrics {
+    pub kind: KernelKind,
+    pub compute_secs: f64,
+    pub comm_secs: f64,
+    pub dram_secs: f64,
+    /// host/ACU round-trip or per-kernel fixed overheads
+    pub overhead_secs: f64,
+    pub energy_j: f64,
+    pub repeats: usize,
+}
+
+impl KernelMetrics {
+    /// Wall time of one invocation of this kernel. Communication overlaps
+    /// compute (double-buffered tiles), matching the engine's composition
+    /// rule; DRAM exposure and host/ACU overheads are serial.
+    pub fn secs_once(&self) -> f64 {
+        self.compute_secs.max(self.comm_secs) + self.dram_secs + self.overhead_secs
+    }
+
+    /// Total wall time across repeats.
+    pub fn secs_total(&self) -> f64 {
+        self.secs_once() * self.repeats as f64
+    }
+}
+
+/// Full-system simulation result for one (arch, model, n, system) point.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub arch: String,
+    pub model: String,
+    pub seq_len: usize,
+    pub system_chiplets: usize,
+    pub kernels: Vec<KernelMetrics>,
+    /// End-to-end latency (s) after pipelining/overlap rules.
+    pub latency_secs: f64,
+    pub energy_j: f64,
+    /// Steady-state peak temperature (C).
+    pub temp_c: f64,
+}
+
+impl SimReport {
+    pub fn edp(&self) -> f64 {
+        self.latency_secs * self.energy_j
+    }
+
+    pub fn kernel(&self, kind: KernelKind) -> Option<&KernelMetrics> {
+        self.kernels.iter().find(|k| k.kind == kind)
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:<18} {:<11} n={:<5} {:>4} chiplets | latency {:>10.3} ms | energy {:>9.3} mJ | EDP {:>10.3e} | T {:>5.1} C",
+            self.arch,
+            self.model,
+            self.seq_len,
+            self.system_chiplets,
+            self.latency_secs * 1e3,
+            self.energy_j * 1e3,
+            self.edp(),
+            self.temp_c
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn km(kind: KernelKind, c: f64, reps: usize) -> KernelMetrics {
+        KernelMetrics {
+            kind,
+            compute_secs: c,
+            comm_secs: 0.1 * c,
+            dram_secs: 0.0,
+            overhead_secs: 0.0,
+            energy_j: c,
+            repeats: reps,
+        }
+    }
+
+    #[test]
+    fn totals_multiply_repeats() {
+        // comm (0.1) hides behind compute (1.0)
+        let k = km(KernelKind::Score, 1.0, 12);
+        assert!((k.secs_once() - 1.0).abs() < 1e-12);
+        assert!((k.secs_total() - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_bound_kernel_exposes_comm() {
+        let mut k = km(KernelKind::Score, 1.0, 1);
+        k.comm_secs = 2.0;
+        k.overhead_secs = 0.5;
+        assert!((k.secs_once() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edp_product() {
+        let r = SimReport {
+            arch: "hi".into(),
+            model: "BERT-Base".into(),
+            seq_len: 64,
+            system_chiplets: 36,
+            kernels: vec![],
+            latency_secs: 0.05,
+            energy_j: 2.0,
+            temp_c: 60.0,
+        };
+        assert!((r.edp() - 0.1).abs() < 1e-12);
+        assert!(r.summary_line().contains("BERT-Base"));
+    }
+}

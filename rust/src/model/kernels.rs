@@ -1,0 +1,250 @@
+//! Transformer computational kernels (paper Fig 1/2: steps ①-⑤) and the
+//! per-kernel work accounting derived from the model config.
+//!
+//! The paper's dataflow decomposes one encoder/decoder block into:
+//!   ① Input embedding        (one-time, ReRAM macro, SFC-chained)
+//!   ②③ KQV load + compute    (DRAM→MC→SM many-to-few, FlashAttention tiling)
+//!   ④ Score computation      (SM fused score/softmax/PV)
+//!   ⑤ Feed-forward           (ReRAM macro, SFC-chained, pipelined)
+//! plus layer-norm/residual folded into ④/⑤ (paper §3.1).
+
+use crate::config::{BlockKind, ModelConfig};
+
+/// Kernel taxonomy — one variant per paper dataflow step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// ① tokenization / input embedding (one-time per inference).
+    Embedding,
+    /// ②③ K,Q,V projection: weight streaming + token MVMs.
+    KqvProj,
+    /// ④ attention score + softmax + PV (fused on SMs in 2.5D-HI).
+    Score,
+    /// ⑤ feed-forward network (two FC layers + GeLU).
+    FeedForward,
+    /// decoder-only: cross-attention KQV against encoder output.
+    CrossKqv,
+    /// decoder-only: cross-attention score.
+    CrossScore,
+}
+
+impl KernelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Embedding => "embedding",
+            KernelKind::KqvProj => "kqv",
+            KernelKind::Score => "score",
+            KernelKind::FeedForward => "ff",
+            KernelKind::CrossKqv => "cross-kqv",
+            KernelKind::CrossScore => "cross-score",
+        }
+    }
+}
+
+/// Abstract (architecture-independent) work of one kernel invocation.
+#[derive(Debug, Clone)]
+pub struct PhaseWork {
+    pub kind: KernelKind,
+    /// Total floating-point operations.
+    pub flops: f64,
+    /// Weight bytes that must be streamed from DRAM (0 for weights
+    /// resident in PIM chiplets).
+    pub weight_bytes: f64,
+    /// Activation bytes entering the kernel.
+    pub act_in_bytes: f64,
+    /// Activation bytes leaving the kernel.
+    pub act_out_bytes: f64,
+    /// How many times this phase repeats across the whole model
+    /// (= number of blocks of this kind).
+    pub repeats: usize,
+    /// Whether this phase may run concurrently with the previous one
+    /// (paper Eq 9 parallel MHA-FF).
+    pub parallel_with_prev: bool,
+}
+
+/// The full inference workload of one model at one sequence length:
+/// ordered phases of a representative block + repeat counts.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub model: ModelConfig,
+    pub seq_len: usize,
+    pub phases: Vec<PhaseWork>,
+}
+
+impl Workload {
+    /// Build the phase list for `model` at sequence length `n`
+    /// (paper §3.1-3.2 volumes; 2 FLOPs per MAC, 16-bit operands).
+    pub fn build(model: &ModelConfig, n: usize) -> Workload {
+        let d = model.d_model as f64;
+        let nf = n as f64;
+        let be = model.bytes_per_elem as f64;
+        let act = model.act_bytes(n);
+        let parallel = model.block == BlockKind::Parallel;
+
+        let mut phases = Vec::new();
+
+        // ① embedding: one-time, MVM over the token sequence
+        phases.push(PhaseWork {
+            kind: KernelKind::Embedding,
+            flops: 2.0 * nf * d, // lookup+add of positional encodings (Eq 1)
+            weight_bytes: 0.0,   // embedding table resident in ReRAM
+            act_in_bytes: nf * 4.0, // token ids
+            act_out_bytes: act,
+            repeats: 1,
+            parallel_with_prev: false,
+        });
+
+        // ②③ KQV projection per block
+        let proj_flops = 2.0 * nf * model.attn_weight_elems() * 0.75; // wq..wv (wo in score)
+        phases.push(PhaseWork {
+            kind: KernelKind::KqvProj,
+            flops: proj_flops,
+            weight_bytes: model.kqv_weight_bytes(),
+            act_in_bytes: act,
+            act_out_bytes: 3.0 * act, // K, Q, V (MQA shrinks below in traffic)
+            repeats: model.layers,
+            parallel_with_prev: false,
+        });
+
+        // ④ score: QK^T + softmax + PV + output projection
+        let score_flops = 2.0 * nf * nf * d * 2.0 + 2.0 * nf * d * d;
+        phases.push(PhaseWork {
+            kind: KernelKind::Score,
+            flops: score_flops,
+            weight_bytes: d * d * be, // Wo streamed
+            act_in_bytes: 3.0 * act,
+            act_out_bytes: act,
+            repeats: model.layers,
+            parallel_with_prev: false,
+        });
+
+        // ⑤ feed-forward
+        phases.push(PhaseWork {
+            kind: KernelKind::FeedForward,
+            flops: model.ff_flops(n),
+            weight_bytes: 0.0, // resident in the ReRAM macro
+            act_in_bytes: act,
+            act_out_bytes: act,
+            repeats: model.layers,
+            parallel_with_prev: parallel,
+        });
+
+        // decoder cross-attention (encoder-decoder models only)
+        let dec = model.decoder_layers();
+        if dec > 0 && model.encoder_layers > 0 {
+            phases.push(PhaseWork {
+                kind: KernelKind::CrossKqv,
+                flops: proj_flops,
+                weight_bytes: model.kqv_weight_bytes(),
+                act_in_bytes: 2.0 * act,
+                act_out_bytes: 3.0 * act,
+                repeats: dec,
+                parallel_with_prev: false,
+            });
+            phases.push(PhaseWork {
+                kind: KernelKind::CrossScore,
+                flops: score_flops,
+                weight_bytes: d * d * be,
+                act_in_bytes: 3.0 * act,
+                act_out_bytes: act,
+                repeats: dec,
+                parallel_with_prev: false,
+            });
+        }
+
+        Workload {
+            model: model.clone(),
+            seq_len: n,
+            phases,
+        }
+    }
+
+    /// Total FLOPs of the full inference.
+    pub fn total_flops(&self) -> f64 {
+        self.phases
+            .iter()
+            .map(|p| p.flops * p.repeats as f64)
+            .sum()
+    }
+
+    /// Total DRAM weight traffic of the full inference.
+    pub fn total_weight_bytes(&self) -> f64 {
+        self.phases
+            .iter()
+            .map(|p| p.weight_bytes * p.repeats as f64)
+            .sum()
+    }
+
+    pub fn phase(&self, kind: KernelKind) -> Option<&PhaseWork> {
+        self.phases.iter().find(|p| p.kind == kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelZoo;
+
+    #[test]
+    fn phases_cover_paper_steps() {
+        let w = Workload::build(&ModelZoo::bert_base(), 64);
+        let kinds: Vec<_> = w.phases.iter().map(|p| p.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                KernelKind::Embedding,
+                KernelKind::KqvProj,
+                KernelKind::Score,
+                KernelKind::FeedForward
+            ]
+        );
+    }
+
+    #[test]
+    fn encoder_decoder_adds_cross_attention() {
+        let w = Workload::build(&ModelZoo::bart_large(), 64);
+        assert!(w.phase(KernelKind::CrossKqv).is_some());
+        assert_eq!(w.phase(KernelKind::CrossKqv).unwrap().repeats, 6);
+    }
+
+    #[test]
+    fn embedding_is_one_time() {
+        let w = Workload::build(&ModelZoo::bert_base(), 64);
+        assert_eq!(w.phase(KernelKind::Embedding).unwrap().repeats, 1);
+        assert_eq!(w.phase(KernelKind::KqvProj).unwrap().repeats, 12);
+    }
+
+    #[test]
+    fn score_scales_quadratically() {
+        let m = ModelZoo::bert_base();
+        let s64 = Workload::build(&m, 64).phase(KernelKind::Score).unwrap().flops;
+        let s256 = Workload::build(&m, 256).phase(KernelKind::Score).unwrap().flops;
+        // N^2 term dominates at 256: ratio should exceed linear 4x
+        assert!(s256 / s64 > 4.0, "ratio {}", s256 / s64);
+    }
+
+    #[test]
+    fn parallel_flag_for_gptj() {
+        let w = Workload::build(&ModelZoo::gpt_j(), 64);
+        assert!(w.phase(KernelKind::FeedForward).unwrap().parallel_with_prev);
+        let w2 = Workload::build(&ModelZoo::bert_base(), 64);
+        assert!(!w2.phase(KernelKind::FeedForward).unwrap().parallel_with_prev);
+    }
+
+    #[test]
+    fn ff_dominates_gptj_total() {
+        // §3.1: >99% of GPT-3 MVMs in FC layers; GPT-J at n=64 similar scale
+        let w = Workload::build(&ModelZoo::gpt_j(), 64);
+        let ff = w.phase(KernelKind::FeedForward).unwrap();
+        let total = w.total_flops();
+        assert!(ff.flops * ff.repeats as f64 / total > 0.6);
+    }
+
+    #[test]
+    fn mqa_reduces_weight_stream() {
+        let llama = Workload::build(&ModelZoo::llama2_7b(), 64);
+        let mut mha_model = ModelZoo::llama2_7b();
+        mha_model.attention = crate::config::AttentionKind::Mha;
+        let mha = Workload::build(&mha_model, 64);
+        assert!(llama.total_weight_bytes() < mha.total_weight_bytes());
+    }
+}

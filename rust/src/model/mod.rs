@@ -1,0 +1,10 @@
+//! Transformer workload model: the computational kernels of §3.1, their
+//! per-phase compute/memory volumes, and the inter-chiplet traffic
+//! matrices F_ij(t) of Eq 11 that drive both the NoI simulator and the
+//! MOO objectives.
+
+pub mod kernels;
+pub mod traffic;
+
+pub use kernels::{KernelKind, PhaseWork, Workload};
+pub use traffic::TrafficMatrix;

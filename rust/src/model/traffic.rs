@@ -1,0 +1,315 @@
+//! Inter-chiplet traffic matrices — the F_ij(t) of paper Eq 11.
+//!
+//! One matrix per kernel phase ("timestamp" t in Eq 14-15). The 2.5D-HI
+//! mapping follows §3.2: embedding/FF flow chiplet-to-chiplet along the
+//! ReRAM macro, KQV is DRAM→MC→SM many-to-few, score is SM↔MC exchange.
+//! Baseline mappings (HAIMA_chiplet / TransPIM_chiplet) are built in
+//! `crate::baselines`.
+
+use crate::arch::chiplet::{ids_of, Chiplet, ChipletClass};
+use crate::config::{AttentionKind, SystemConfig};
+use crate::model::kernels::{KernelKind, Workload};
+
+/// Dense bytes-between-chiplets matrix for one phase.
+#[derive(Debug, Clone)]
+pub struct TrafficMatrix {
+    pub n: usize,
+    pub bytes: Vec<f64>, // n*n row-major
+    pub kind: KernelKind,
+    /// Phase weight when time-averaging (Eq 14): number of repeats.
+    pub repeats: usize,
+}
+
+impl TrafficMatrix {
+    pub fn zeros(n: usize, kind: KernelKind, repeats: usize) -> TrafficMatrix {
+        TrafficMatrix {
+            n,
+            bytes: vec![0.0; n * n],
+            kind,
+            repeats,
+        }
+    }
+
+    #[inline]
+    pub fn add(&mut self, src: usize, dst: usize, bytes: f64) {
+        if src != dst {
+            self.bytes[src * self.n + dst] += bytes;
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, src: usize, dst: usize) -> f64 {
+        self.bytes[src * self.n + dst]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.bytes.iter().sum()
+    }
+
+    /// Nonzero (src, dst, bytes) triples.
+    pub fn flows(&self) -> Vec<(usize, usize, f64)> {
+        let mut out = Vec::new();
+        for s in 0..self.n {
+            for d in 0..self.n {
+                let b = self.get(s, d);
+                if b > 0.0 {
+                    out.push((s, d, b));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Traffic for the proposed 2.5D-HI mapping, one matrix per phase.
+pub fn hi_traffic(
+    sys: &SystemConfig,
+    chiplets: &[Chiplet],
+    workload: &Workload,
+) -> Vec<TrafficMatrix> {
+    let n = chiplets.len();
+    let sms = ids_of(chiplets, ChipletClass::Sm);
+    let mcs = ids_of(chiplets, ChipletClass::Mc);
+    let drams = ids_of(chiplets, ChipletClass::Dram);
+    let rerams = ids_of(chiplets, ChipletClass::ReRam);
+    let act = workload.model.act_bytes(workload.seq_len);
+    let mut out = Vec::new();
+
+    for phase in &workload.phases {
+        let mut m = TrafficMatrix::zeros(n, phase.kind, phase.repeats);
+        match phase.kind {
+            KernelKind::Embedding => {
+                // ①: sequential MVM chained i -> i+1 across the ReRAM
+                // macro; the token stream is sharded across the chain so
+                // each hop carries its pipeline slice, not the full tensor
+                let hop = act / rerams.len().max(1) as f64;
+                for w in rerams.windows(2) {
+                    m.add(w[0], w[1], hop);
+                }
+                // the macro output is sharded along the chain, so the
+                // last k ReRAM chiplets hand their shards to the MCs in
+                // parallel (no single-tail funnel)
+                add_macro_handoff(&mut m, &rerams, &mcs, act, false);
+            }
+            KernelKind::KqvProj | KernelKind::CrossKqv => {
+                // ②: W_K/Q/V stream DRAM -> paired MC -> the MC's SM
+                // cluster. The DRAM->MC hop is the dedicated DFI/PHY
+                // point-to-point interface (Fig 6) — its timing lives in
+                // the HBM model, not the shared NoI; only the MC->SM
+                // distribution rides the NoI.
+                let w_share = phase.weight_bytes / mcs.len() as f64;
+                for (k, (&mc, _dr)) in mcs.iter().zip(drams.iter()).enumerate() {
+                    let cluster = sm_cluster(&sms, k, mcs.len());
+                    let per_sm = w_share / cluster.len() as f64;
+                    let act_per_sm = phase.act_in_bytes / sms.len() as f64;
+                    for &sm in cluster {
+                        m.add(mc, sm, per_sm + act_per_sm);
+                        // ③: computed K,Q,V partials return (many-to-few)
+                        let kqv_out = match workload.model.attention {
+                            AttentionKind::Mha => phase.act_out_bytes,
+                            // MQA: K/V shared across heads — 1/h of K,V + Q
+                            AttentionKind::Mqa => {
+                                let h = workload.model.heads as f64;
+                                phase.act_out_bytes * (1.0 + 2.0 / h) / 3.0
+                            }
+                        };
+                        m.add(sm, mc, kqv_out / sms.len() as f64);
+                    }
+                }
+            }
+            KernelKind::Score | KernelKind::CrossScore => {
+                // ④: fused score+softmax+PV on SMs; K/V tiles redistribute
+                // among the cluster, outputs collect at the MCs
+                let kv_bytes = 2.0 * act / sms.len() as f64;
+                for (k, &mc) in mcs.iter().enumerate() {
+                    let cluster = sm_cluster(&sms, k, mcs.len());
+                    for &sm in cluster {
+                        m.add(mc, sm, kv_bytes);
+                        m.add(sm, mc, phase.act_out_bytes / sms.len() as f64);
+                    }
+                }
+            }
+            KernelKind::FeedForward => {
+                // ⑤: MHA output enters the macro over the first k ReRAMs
+                // (row-sharded), flows along the SFC chain (intermediate
+                // d_ff tensors stay inside the macro), and the output
+                // shards exit over the last k ReRAMs back toward the MCs
+                add_macro_handoff(&mut m, &rerams, &mcs, act, true);
+                // chain: first half holds FC1 slices, second half FC2;
+                // inter-stage tensor is d_ff/d_model times wider but also
+                // sharded across the boundary chiplet pairs
+                let widen = workload.model.ff_mult as f64;
+                let half = rerams.len() / 2;
+                for (i, w) in rerams.windows(2).enumerate() {
+                    let vol = if i + 1 == half { act * widen } else { act };
+                    m.add(w[0], w[1], vol);
+                }
+                add_macro_handoff(&mut m, &rerams, &mcs, act, false);
+            }
+        }
+        out.push(m);
+    }
+    let _ = sys;
+    out
+}
+
+/// Sharded handoff between the ReRAM macro and the MCs: MC i exchanges
+/// its activation shard with one of the last (or first, `into_macro`) k
+/// ReRAM chiplets, spreading the boundary traffic over k routers.
+fn add_macro_handoff(
+    m: &mut TrafficMatrix,
+    rerams: &[usize],
+    mcs: &[usize],
+    act: f64,
+    into_macro: bool,
+) {
+    if rerams.is_empty() || mcs.is_empty() {
+        return;
+    }
+    let k = mcs.len().min(rerams.len());
+    let share = act / mcs.len() as f64;
+    for (i, &mc) in mcs.iter().enumerate() {
+        let rr = if into_macro {
+            rerams[i % k]
+        } else {
+            rerams[rerams.len() - 1 - (i % k)]
+        };
+        if into_macro {
+            m.add(mc, rr, share);
+        } else {
+            m.add(rr, mc, share);
+        }
+    }
+}
+
+/// SMs belonging to MC cluster k of `n_clusters` (contiguous split).
+pub fn sm_cluster(sms: &[usize], k: usize, n_clusters: usize) -> &[usize] {
+    let per = sms.len() / n_clusters;
+    let lo = k * per;
+    let hi = if k + 1 == n_clusters {
+        sms.len()
+    } else {
+        (k + 1) * per
+    };
+    &sms[lo..hi]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::chiplet::build_chiplets;
+    use crate::config::ModelZoo;
+    use crate::model::kernels::Workload;
+
+    fn setup() -> (SystemConfig, Vec<Chiplet>, Vec<TrafficMatrix>) {
+        let sys = SystemConfig::s36();
+        let chips = build_chiplets(20, 4, 4, 8);
+        let w = Workload::build(&ModelZoo::bert_base(), 64);
+        let t = hi_traffic(&sys, &chips, &w);
+        (sys, chips, t)
+    }
+
+    #[test]
+    fn one_matrix_per_phase() {
+        let (_, _, t) = setup();
+        assert_eq!(t.len(), 4); // emb, kqv, score, ff
+    }
+
+    #[test]
+    fn no_self_traffic() {
+        let (_, _, t) = setup();
+        for m in &t {
+            for i in 0..m.n {
+                assert_eq!(m.get(i, i), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn embedding_flows_along_macro_only() {
+        let (_, chips, t) = setup();
+        let emb = &t[0];
+        let rerams = ids_of(&chips, ChipletClass::ReRam);
+        // every ReRAM->ReRAM consecutive link carries the activation
+        for w in rerams.windows(2) {
+            assert!(emb.get(w[0], w[1]) > 0.0);
+        }
+        // SMs neither send nor receive during embedding
+        for &sm in &ids_of(&chips, ChipletClass::Sm) {
+            for j in 0..emb.n {
+                assert_eq!(emb.get(sm, j), 0.0);
+                assert_eq!(emb.get(j, sm), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn kqv_is_many_to_few() {
+        let (_, chips, t) = setup();
+        let kqv = &t[1];
+        let mcs = ids_of(&chips, ChipletClass::Mc);
+        let sms = ids_of(&chips, ChipletClass::Sm);
+        // every SM exchanges with exactly one MC
+        for &sm in &sms {
+            let partners: Vec<usize> = mcs
+                .iter()
+                .copied()
+                .filter(|&mc| kqv.get(mc, sm) > 0.0 || kqv.get(sm, mc) > 0.0)
+                .collect();
+            assert_eq!(partners.len(), 1, "SM {sm} partners {partners:?}");
+        }
+    }
+
+    #[test]
+    fn dram_mc_rides_phy_not_noi() {
+        // the DRAM->MC hop is the dedicated DFI/PHY interface (Fig 6) and
+        // must NOT appear as NoI traffic; the MC->SM fan-out must.
+        let (_, chips, t) = setup();
+        let kqv = &t[1];
+        let mcs = ids_of(&chips, ChipletClass::Mc);
+        let drams = ids_of(&chips, ChipletClass::Dram);
+        let sms = ids_of(&chips, ChipletClass::Sm);
+        for &dr in &drams {
+            for &mc in &mcs {
+                assert_eq!(kqv.get(dr, mc), 0.0, "PHY traffic leaked onto NoI");
+            }
+        }
+        let fan_out: f64 = mcs
+            .iter()
+            .map(|&mc| sms.iter().map(|&sm| kqv.get(mc, sm)).sum::<f64>())
+            .sum();
+        assert!(fan_out > 0.0);
+    }
+
+    #[test]
+    fn mqa_reduces_kqv_return_traffic() {
+        let sys = SystemConfig::s100();
+        let chips = build_chiplets(64, 8, 8, 20);
+        let llama = Workload::build(&ModelZoo::llama2_7b(), 64);
+        let mut mha_model = ModelZoo::llama2_7b();
+        mha_model.attention = AttentionKind::Mha;
+        let mha = Workload::build(&mha_model, 64);
+        let t_mqa = hi_traffic(&sys, &chips, &llama);
+        let t_mha = hi_traffic(&sys, &chips, &mha);
+        assert!(t_mqa[1].total() < t_mha[1].total());
+    }
+
+    #[test]
+    fn ff_widens_mid_chain() {
+        let (_, chips, t) = setup();
+        let ff = &t[3];
+        let rerams = ids_of(&chips, ChipletClass::ReRam);
+        let half = rerams.len() / 2;
+        let mid = ff.get(rerams[half - 1], rerams[half]);
+        let first = ff.get(rerams[0], rerams[1]);
+        assert!(mid > 3.0 * first, "mid {mid} vs first {first}");
+    }
+
+    #[test]
+    fn totals_positive_and_finite() {
+        let (_, _, t) = setup();
+        for m in &t {
+            assert!(m.total() > 0.0 && m.total().is_finite(), "{:?}", m.kind);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! AMOSA — archived multi-objective simulated annealing (paper §3.3
+//! ref [40]; the solver MOO-STAGE is shown to outperform).
+//!
+//! Standard formulation: maintain a bounded non-dominated archive; accept
+//! dominating moves always, dominated moves with a temperature-scaled
+//! probability based on the average domination amount.
+
+use crate::moo::design::{Evaluator, NoiDesign};
+use crate::moo::local::ref_point;
+use crate::moo::pareto::{dominates, ParetoArchive};
+use crate::moo::phv::hypervolume;
+use crate::util::Rng;
+
+pub struct AmosaConfig {
+    pub t_init: f64,
+    pub t_min: f64,
+    pub cooling: f64,
+    pub iters_per_temp: usize,
+    pub archive_cap: usize,
+    pub seed: u64,
+}
+
+impl Default for AmosaConfig {
+    fn default() -> Self {
+        AmosaConfig {
+            t_init: 1.0,
+            t_min: 1e-3,
+            cooling: 0.85,
+            iters_per_temp: 20,
+            archive_cap: 64,
+            seed: 0xA405A,
+        }
+    }
+}
+
+pub struct AmosaResult {
+    pub archive: ParetoArchive<NoiDesign>,
+    pub phv: f64,
+    pub evaluations: usize,
+}
+
+/// Average per-objective domination amount of `a` over `b` (>=0).
+fn domination_amount(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (y - x).max(0.0))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+pub fn amosa(ev: &Evaluator, start: NoiDesign, cfg: &AmosaConfig) -> AmosaResult {
+    let mut rng = Rng::new(cfg.seed);
+    let mut archive = ParetoArchive::with_capacity(cfg.archive_cap);
+    let mut evaluations = 0usize;
+
+    let mut cur = start;
+    let mut cur_obj = ev.objectives(&cur);
+    evaluations += 1;
+    archive.insert(cur_obj.clone(), cur.clone());
+
+    let mut temp = cfg.t_init;
+    while temp > cfg.t_min {
+        for _ in 0..cfg.iters_per_temp {
+            let mut cand = cur.clone();
+            cand.random_move(&mut rng);
+            let cand_obj = ev.objectives(&cand);
+            evaluations += 1;
+
+            let accept = if dominates(&cand_obj, &cur_obj) || cand_obj == cur_obj {
+                true
+            } else if dominates(&cur_obj, &cand_obj) {
+                // candidate dominated by current: anneal
+                let amt = domination_amount(&cur_obj, &cand_obj);
+                rng.chance((-amt / temp).exp())
+            } else {
+                // mutually non-dominated: accept with probability from
+                // archive domination pressure
+                let dominated_by_archive = archive
+                    .entries
+                    .iter()
+                    .filter(|(o, _)| dominates(o, &cand_obj))
+                    .count();
+                if dominated_by_archive == 0 {
+                    true
+                } else {
+                    let amt: f64 = archive
+                        .entries
+                        .iter()
+                        .map(|(o, _)| domination_amount(o, &cand_obj))
+                        .sum::<f64>()
+                        / archive.len() as f64;
+                    rng.chance((-amt * dominated_by_archive as f64 / temp).exp())
+                }
+            };
+
+            if accept {
+                archive.insert(cand_obj.clone(), cand.clone());
+                cur = cand;
+                cur_obj = cand_obj;
+            }
+        }
+        temp *= cfg.cooling;
+    }
+
+    AmosaResult {
+        phv: hypervolume(&archive.objectives(), &ref_point(ev.n_objectives())),
+        archive,
+        evaluations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::chiplet::build_chiplets;
+    use crate::config::{ModelZoo, SystemConfig};
+    use crate::model::kernels::Workload;
+
+    fn evaluator() -> Evaluator {
+        let sys = SystemConfig::s36();
+        let chips = build_chiplets(20, 4, 4, 8);
+        let w = Workload::build(&ModelZoo::bert_base(), 64);
+        Evaluator::new(&sys, &chips, &w)
+    }
+
+    fn fast_cfg() -> AmosaConfig {
+        AmosaConfig {
+            t_init: 0.5,
+            t_min: 0.05,
+            cooling: 0.7,
+            iters_per_temp: 10,
+            archive_cap: 32,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn finds_sub_mesh_designs() {
+        let ev = evaluator();
+        let res = amosa(&ev, NoiDesign::mesh_seed(&ev.sys, 36), &fast_cfg());
+        assert!(res.phv > 0.0);
+        assert!(res.evaluations > 50);
+        let best_mu = res
+            .archive
+            .objectives()
+            .iter()
+            .map(|o| o[0])
+            .fold(f64::MAX, f64::min);
+        assert!(best_mu <= 1.0);
+    }
+
+    #[test]
+    fn archive_respects_cap() {
+        let ev = evaluator();
+        let res = amosa(&ev, NoiDesign::mesh_seed(&ev.sys, 36), &fast_cfg());
+        assert!(res.archive.len() <= 32);
+    }
+
+    #[test]
+    fn domination_amount_math() {
+        assert_eq!(domination_amount(&[1.0, 1.0], &[2.0, 3.0]), 1.5);
+        assert_eq!(domination_amount(&[2.0, 2.0], &[1.0, 1.0]), 0.0);
+    }
+}

@@ -1,0 +1,357 @@
+//! NoI design encoding λ = (λ_c, λ_l) and the multi-objective evaluator.
+//!
+//! Objectives (minimize):
+//!   2.5D (Eq 10): [μ(λ), σ(λ)] of link utilization, normalized to the
+//!   2D-mesh baseline so Fig 4's axes reproduce directly.
+//!   3D  (Eq 20): [μ, σ, T(λ), Noise(λ)] adding the Eq 16-19 thermal and
+//!   ReRAM-noise terms.
+//!
+//! Constraints (§3.3): connected, link count ≤ 2D mesh. Moves keep both
+//! invariant: placement swaps never touch links; link rewires are
+//! connectivity-checked and count-preserving.
+
+use crate::arch::chiplet::{ids_of, Chiplet, ChipletClass};
+use crate::arch::{Placement, SfcKind};
+use crate::config::SystemConfig;
+use crate::model::{kernels::Workload, traffic, TrafficMatrix};
+use crate::noi::{analytic, RoutingTable, Topology};
+use crate::thermal;
+use crate::util::Rng;
+
+/// One candidate NoI design.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NoiDesign {
+    pub placement: Placement,
+    pub topo: Topology,
+}
+
+impl NoiDesign {
+    /// Mesh-everything seed: identity placement, mesh links.
+    pub fn mesh_seed(sys: &SystemConfig, n: usize) -> NoiDesign {
+        let placement = Placement::identity(n, sys.grid.0, sys.grid.1);
+        let topo = Topology::mesh(&placement);
+        NoiDesign { placement, topo }
+    }
+
+    /// The dataflow-aware seed: hi placement + mesh links (the optimizer
+    /// prunes/rewires from here).
+    pub fn hi_seed(sys: &SystemConfig, chiplets: &[Chiplet], sfc: SfcKind) -> NoiDesign {
+        let placement = Placement::hi_seed(chiplets, sys.grid.0, sys.grid.1, sfc);
+        let topo = Topology::mesh(&placement);
+        NoiDesign { placement, topo }
+    }
+
+    /// Random neighbor move: placement swap (50%) or link rewire (50%).
+    /// Rewires are placement-aware: the replacement edge connects
+    /// physically nearby chiplets (stage count ≤ 2), matching the
+    /// interposer's preference for short links — long random shortcuts
+    /// are dominated under the stage-weighted objectives anyway.
+    pub fn random_move(&mut self, rng: &mut Rng) {
+        if rng.chance(0.5) {
+            let n = self.placement.site_of.len();
+            let a = rng.below(n);
+            let mut b = rng.below(n);
+            while b == a {
+                b = rng.below(n);
+            }
+            self.placement.swap(a, b);
+        } else {
+            self.rewire_local(rng);
+        }
+    }
+
+    /// Remove one link (connectivity-checked) and add a short one.
+    pub fn rewire_local(&mut self, rng: &mut Rng) -> bool {
+        if self.topo.links.is_empty() {
+            return false;
+        }
+        let n = self.topo.n;
+        for _ in 0..8 {
+            let idx = rng.below(self.topo.links.len());
+            let (a, b) = self.topo.links[idx];
+            if !self.topo.remove_link_checked(a, b) {
+                continue;
+            }
+            for _ in 0..24 {
+                let x = rng.below(n);
+                let y = rng.below(n);
+                if x != y && !self.topo.has_link(x, y) && self.placement.manhattan(x, y) <= 2 {
+                    self.topo.add_link(x, y);
+                    return true;
+                }
+            }
+            self.topo.add_link(a, b); // no short edge found: restore
+            return false;
+        }
+        false
+    }
+
+    /// Feature vector for the MOO-STAGE learned evaluation function.
+    /// Cheap structural descriptors — no routing required.
+    pub fn features(&self, chiplets: &[Chiplet]) -> Vec<f64> {
+        let p = &self.placement;
+        let rerams = ids_of(chiplets, ChipletClass::ReRam);
+        let mcs = ids_of(chiplets, ChipletClass::Mc);
+        let drams = ids_of(chiplets, ChipletClass::Dram);
+        let sms = ids_of(chiplets, ChipletClass::Sm);
+
+        // 1) ReRAM macro contiguity (mean step distance along id order)
+        let macro_step = if rerams.len() > 1 {
+            rerams
+                .windows(2)
+                .map(|w| p.manhattan(w[0], w[1]) as f64)
+                .sum::<f64>()
+                / (rerams.len() - 1) as f64
+        } else {
+            0.0
+        };
+        // 2) MC-DRAM pairing distance
+        let mc_dram = if !mcs.is_empty() {
+            mcs.iter()
+                .zip(&drams)
+                .map(|(&m, &d)| p.manhattan(m, d) as f64)
+                .sum::<f64>()
+                / mcs.len() as f64
+        } else {
+            0.0
+        };
+        // 3) SM-cluster radius around its MC
+        let sm_mc = if !mcs.is_empty() && !sms.is_empty() {
+            let mut acc = 0.0;
+            for (k, &mc) in mcs.iter().enumerate() {
+                for &sm in traffic::sm_cluster(&sms, k, mcs.len()) {
+                    acc += p.manhattan(sm, mc) as f64;
+                }
+            }
+            acc / sms.len() as f64
+        } else {
+            0.0
+        };
+        // 4) link stats
+        let n_links = self.topo.link_count() as f64;
+        let mean_len = if n_links > 0.0 {
+            self.topo
+                .links
+                .iter()
+                .map(|&(a, b)| p.manhattan(a, b) as f64)
+                .sum::<f64>()
+                / n_links
+        } else {
+            0.0
+        };
+        // 5) degree variance (router cost balance)
+        let degs: Vec<f64> = (0..self.topo.n)
+            .map(|v| self.topo.degree(v) as f64)
+            .collect();
+        let deg_var = crate::util::std_dev(&degs);
+        vec![macro_step, mc_dram, sm_mc, n_links, mean_len, deg_var]
+    }
+}
+
+/// Evaluation context shared across a MOO run.
+pub struct Evaluator {
+    pub sys: SystemConfig,
+    pub chiplets: Vec<Chiplet>,
+    pub phases: Vec<TrafficMatrix>,
+    /// Baseline (mesh, identity placement) stats for normalization.
+    pub mesh_mu: f64,
+    pub mesh_sigma: f64,
+    /// 3D mode: adds thermal + noise objectives (Eq 20).
+    pub three_d: bool,
+    /// Tiers used when folding the 2.5D placement into a 3D stack.
+    pub tiers: usize,
+}
+
+impl Evaluator {
+    pub fn new(sys: &SystemConfig, chiplets: &[Chiplet], workload: &Workload) -> Evaluator {
+        let phases = traffic::hi_traffic(sys, chiplets, workload);
+        let mesh = NoiDesign::mesh_seed(sys, chiplets.len());
+        let routes = RoutingTable::build(&mesh.topo);
+        let stats = analytic::evaluate(&mesh.topo, &routes, &phases);
+        Evaluator {
+            sys: sys.clone(),
+            chiplets: chiplets.to_vec(),
+            phases,
+            mesh_mu: stats.mu.max(1e-9),
+            mesh_sigma: stats.sigma.max(1e-9),
+            three_d: false,
+            tiers: 1,
+        }
+    }
+
+    /// Enable the Eq 20 objective set (3D-HI).
+    pub fn with_3d(mut self, tiers: usize) -> Evaluator {
+        self.three_d = true;
+        self.tiers = tiers.max(1);
+        self
+    }
+
+    pub fn n_objectives(&self) -> usize {
+        if self.three_d {
+            4
+        } else {
+            2
+        }
+    }
+
+    /// Pipeline-stage count per undirected link for a design's placement
+    /// (Table 1: a link spans one stage per 1.55 mm grid hop).
+    pub fn link_stages(&self, d: &NoiDesign) -> Vec<f64> {
+        d.topo
+            .links
+            .iter()
+            .map(|&(a, b)| d.placement.manhattan(a, b).max(1) as f64)
+            .collect()
+    }
+
+    /// Objective vector of a design (all minimized, mesh-normalized μ/σ).
+    /// Link utilization is weighted by the placement-derived stage count,
+    /// so both halves of λ = (λ_c, λ_l) shape the objectives.
+    pub fn objectives(&self, d: &NoiDesign) -> Vec<f64> {
+        let routes = RoutingTable::build(&d.topo);
+        let stages = self.link_stages(d);
+        let stats = analytic::evaluate_weighted(&d.topo, &routes, &self.phases, Some(&stages));
+        let mut obj = vec![stats.mu / self.mesh_mu, stats.sigma / self.mesh_sigma];
+        if self.three_d {
+            let (t_obj, noise) = self.thermal_objectives(d);
+            obj.push(t_obj);
+            obj.push(noise);
+        }
+        obj
+    }
+
+    /// Fold the placement into `tiers` vertical tiers (row-blocks become
+    /// tiers) and evaluate Eq 16-19.
+    pub fn thermal_objectives(&self, d: &NoiDesign) -> (f64, f64) {
+        let hw = &self.sys.hw;
+        let p = &d.placement;
+        let rows_per_tier = (p.rows + self.tiers - 1) / self.tiers;
+        let columns = p.cols * rows_per_tier;
+        let mut stack = thermal::StackPower::new(self.tiers, columns);
+        let mut reram_cols: Vec<(usize, usize)> = Vec::new();
+        for c in &self.chiplets {
+            let (r, col) = p.coords(c.id);
+            let tier = (r / rows_per_tier).min(self.tiers - 1);
+            let col_idx = (r % rows_per_tier) * p.cols + col;
+            let w = match c.class {
+                ChipletClass::Sm => hw.sm_power_w,
+                ChipletClass::Mc => hw.mc_power_w,
+                ChipletClass::Dram => hw.hbm_tier_power(self.sys.hbm_tiers),
+                ChipletClass::ReRam => {
+                    hw.reram_tiles_per_chiplet as f64 * hw.reram_tile_power_w
+                }
+                ChipletClass::Sram => 2.0,
+                ChipletClass::Acu => 3.138, // HAIMA/TransPIM CU power (§4.3)
+                ChipletClass::Host => 6.0,
+            };
+            stack.power[tier][col_idx] += w;
+            if c.class == ChipletClass::ReRam {
+                reram_cols.push((tier, col_idx));
+            }
+        }
+        let rep = thermal::evaluate_stack(hw, &stack);
+        let reram_temps: Vec<f64> = reram_cols
+            .iter()
+            .map(|&(t, c)| rep.t[t][c])
+            .collect();
+        let noise = thermal::noise_objective(hw, &reram_temps);
+        (rep.objective, noise)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::chiplet::build_chiplets;
+    use crate::config::ModelZoo;
+
+    fn ctx() -> (SystemConfig, Vec<Chiplet>, Evaluator) {
+        let sys = SystemConfig::s36();
+        let chips = build_chiplets(20, 4, 4, 8);
+        let w = Workload::build(&ModelZoo::bert_base(), 64);
+        let ev = Evaluator::new(&sys, &chips, &w);
+        (sys, chips, ev)
+    }
+
+    #[test]
+    fn mesh_normalizes_to_unity() {
+        let (sys, chips, ev) = ctx();
+        let _ = chips;
+        let mesh = NoiDesign::mesh_seed(&sys, 36);
+        let obj = ev.objectives(&mesh);
+        assert!((obj[0] - 1.0).abs() < 1e-9);
+        assert!((obj[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hi_seed_beats_mesh_on_mu() {
+        let (sys, chips, ev) = ctx();
+        let hi = NoiDesign::hi_seed(&sys, &chips, SfcKind::Boustrophedon);
+        let obj = ev.objectives(&hi);
+        assert!(obj[0] < 1.0, "dataflow placement lowers mean load: {obj:?}");
+    }
+
+    #[test]
+    fn moves_preserve_constraints() {
+        let (sys, chips, _) = ctx();
+        let mesh_links = Topology::mesh(&Placement::identity(36, 6, 6)).link_count();
+        let mut d = NoiDesign::hi_seed(&sys, &chips, SfcKind::Hilbert);
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            d.random_move(&mut rng);
+            assert!(d.placement.is_valid());
+            assert!(d.topo.is_connected());
+            assert!(d.topo.link_count() <= mesh_links);
+        }
+    }
+
+    #[test]
+    fn features_are_finite_and_sized() {
+        let (sys, chips, _) = ctx();
+        let d = NoiDesign::hi_seed(&sys, &chips, SfcKind::Hilbert);
+        let f = d.features(&chips);
+        assert_eq!(f.len(), 6);
+        assert!(f.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn hi_seed_macro_feature_is_unit() {
+        let (sys, chips, _) = ctx();
+        let d = NoiDesign::hi_seed(&sys, &chips, SfcKind::Boustrophedon);
+        let f = d.features(&chips);
+        assert!((f[0] - 1.0).abs() < 1e-9, "macro contiguity {}", f[0]);
+    }
+
+    #[test]
+    fn three_d_adds_objectives() {
+        let sys = SystemConfig::s36();
+        let chips = build_chiplets(20, 4, 4, 8);
+        let w = Workload::build(&ModelZoo::bert_base(), 64);
+        let ev = Evaluator::new(&sys, &chips, &w).with_3d(3);
+        let d = NoiDesign::mesh_seed(&sys, 36);
+        let obj = ev.objectives(&d);
+        assert_eq!(obj.len(), 4);
+        assert!(obj[2] > 0.0, "thermal objective {obj:?}");
+        assert!(obj[3] > 0.0, "noise objective {obj:?}");
+    }
+
+    #[test]
+    fn thermal_prefers_spread_power() {
+        // two placements: SMs clumped in one tier column vs spread — Eq 18
+        // must penalize the clump
+        let sys = SystemConfig::s36();
+        let chips = build_chiplets(20, 4, 4, 8);
+        let w = Workload::build(&ModelZoo::bert_base(), 64);
+        let ev = Evaluator::new(&sys, &chips, &w).with_3d(3);
+        let clumped = NoiDesign::mesh_seed(&sys, 36); // SM ids 0..20 contiguous
+        let mut spread = clumped.clone();
+        // interleave SMs with ReRAMs across the grid
+        for k in 0..8 {
+            spread.placement.swap(k, 28 + k);
+            spread.placement.swap(k + 8, 20 + (k % 8));
+        }
+        let (t_clump, _) = ev.thermal_objectives(&clumped);
+        let (t_spread, _) = ev.thermal_objectives(&spread);
+        assert!(t_spread <= t_clump * 1.5, "spread {t_spread} clump {t_clump}");
+    }
+}

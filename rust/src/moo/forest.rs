@@ -1,0 +1,198 @@
+//! Random-forest regression — the learned evaluation function of
+//! MOO-STAGE (paper §3.3: "we give the aggregate set of regression
+//! examples to the random forest algorithm").
+//!
+//! Bagged CART trees with variance-reduction splits on f64 feature
+//! vectors. Small (the training sets are hundreds of designs), fully
+//! deterministic given the seed.
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf(f64),
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: Box<Node>,
+        right: Box<Node>,
+    },
+}
+
+#[derive(Debug, Clone)]
+pub struct Tree {
+    root: Node,
+}
+
+impl Tree {
+    fn fit(xs: &[Vec<f64>], ys: &[f64], idx: &[usize], depth: usize, min_leaf: usize, rng: &mut Rng) -> Node {
+        let mean = idx.iter().map(|&i| ys[i]).sum::<f64>() / idx.len() as f64;
+        if depth == 0 || idx.len() < 2 * min_leaf {
+            return Node::Leaf(mean);
+        }
+        let n_feat = xs[0].len();
+        // feature subsampling: sqrt(d) features per split
+        let k = ((n_feat as f64).sqrt().ceil() as usize).max(1);
+        let mut feats: Vec<usize> = (0..n_feat).collect();
+        rng.shuffle(&mut feats);
+        feats.truncate(k);
+
+        let total_var = variance(ys, idx);
+        let mut best: Option<(usize, f64, f64)> = None; // (feat, thr, score)
+        for &f in &feats {
+            let mut vals: Vec<f64> = idx.iter().map(|&i| xs[i][f]).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup();
+            if vals.len() < 2 {
+                continue;
+            }
+            // candidate thresholds: midpoints of up to 16 quantiles
+            let steps = vals.len().min(16);
+            for s in 1..steps {
+                let thr = 0.5
+                    * (vals[s * vals.len() / steps - 1]
+                        + vals[(s * vals.len() / steps).min(vals.len() - 1)]);
+                let (l, r): (Vec<usize>, Vec<usize>) =
+                    idx.iter().partition(|&&i| xs[i][f] <= thr);
+                if l.len() < min_leaf || r.len() < min_leaf {
+                    continue;
+                }
+                let score = total_var
+                    - (l.len() as f64 * variance(ys, &l) + r.len() as f64 * variance(ys, &r))
+                        / idx.len() as f64;
+                if best.map(|(_, _, b)| score > b).unwrap_or(score > 1e-12) {
+                    best = Some((f, thr, score));
+                }
+            }
+        }
+        match best {
+            None => Node::Leaf(mean),
+            Some((feature, threshold, _)) => {
+                let (l, r): (Vec<usize>, Vec<usize>) =
+                    idx.iter().partition(|&&i| xs[i][feature] <= threshold);
+                Node::Split {
+                    feature,
+                    threshold,
+                    left: Box::new(Tree::fit(xs, ys, &l, depth - 1, min_leaf, rng)),
+                    right: Box::new(Tree::fit(xs, ys, &r, depth - 1, min_leaf, rng)),
+                }
+            }
+        }
+    }
+
+    fn predict(&self, x: &[f64]) -> f64 {
+        let mut node = &self.root;
+        loop {
+            match node {
+                Node::Leaf(v) => return *v,
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    node = if x[*feature] <= *threshold { left } else { right };
+                }
+            }
+        }
+    }
+}
+
+/// Bagged regression forest.
+#[derive(Debug, Clone)]
+pub struct RandomForest {
+    pub trees: Vec<Tree>,
+}
+
+impl RandomForest {
+    /// Fit `n_trees` on bootstrap samples. Deterministic for a seed.
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], n_trees: usize, max_depth: usize, seed: u64) -> RandomForest {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let mut rng = Rng::new(seed);
+        let n = xs.len();
+        let trees = (0..n_trees)
+            .map(|_| {
+                let idx: Vec<usize> = (0..n).map(|_| rng.below(n)).collect();
+                Tree {
+                    root: Tree::fit(xs, ys, &idx, max_depth, 2, &mut rng),
+                }
+            })
+            .collect();
+        RandomForest { trees }
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        self.trees.iter().map(|t| t.predict(x)).sum::<f64>() / self.trees.len() as f64
+    }
+}
+
+fn variance(ys: &[f64], idx: &[usize]) -> f64 {
+    if idx.is_empty() {
+        return 0.0;
+    }
+    let m = idx.iter().map(|&i| ys[i]).sum::<f64>() / idx.len() as f64;
+    idx.iter().map(|&i| (ys[i] - m) * (ys[i] - m)).sum::<f64>() / idx.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_data(n: usize, f: impl Fn(&[f64]) -> f64, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let xs: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..4).map(|_| rng.f64() * 10.0).collect())
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| f(x)).collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn fits_axis_aligned_step() {
+        let (xs, ys) = make_data(400, |x| if x[1] > 5.0 { 10.0 } else { 0.0 }, 1);
+        let rf = RandomForest::fit(&xs, &ys, 20, 6, 42);
+        assert!(rf.predict(&[1.0, 9.0, 1.0, 1.0]) > 7.0);
+        assert!(rf.predict(&[1.0, 1.0, 1.0, 1.0]) < 3.0);
+    }
+
+    #[test]
+    fn fits_linear_trend() {
+        let (xs, ys) = make_data(500, |x| 2.0 * x[0] + x[2], 2);
+        let rf = RandomForest::fit(&xs, &ys, 30, 8, 42);
+        // R^2-ish check on fresh points
+        let (tx, ty) = make_data(100, |x| 2.0 * x[0] + x[2], 3);
+        let mut sse = 0.0;
+        let mut sst = 0.0;
+        let mean_y = ty.iter().sum::<f64>() / ty.len() as f64;
+        for (x, y) in tx.iter().zip(&ty) {
+            let p = rf.predict(x);
+            sse += (p - y) * (p - y);
+            sst += (y - mean_y) * (y - mean_y);
+        }
+        let r2 = 1.0 - sse / sst;
+        assert!(r2 > 0.7, "r2 {r2}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (xs, ys) = make_data(200, |x| x[0] * x[1], 4);
+        let a = RandomForest::fit(&xs, &ys, 10, 6, 7).predict(&[5.0, 5.0, 5.0, 5.0]);
+        let b = RandomForest::fit(&xs, &ys, 10, 6, 7).predict(&[5.0, 5.0, 5.0, 5.0]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn constant_target_predicts_constant() {
+        let (xs, _) = make_data(100, |_| 0.0, 5);
+        let ys = vec![3.5; 100];
+        let rf = RandomForest::fit(&xs, &ys, 5, 4, 1);
+        assert!((rf.predict(&[1.0, 2.0, 3.0, 4.0]) - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample_is_leaf() {
+        let rf = RandomForest::fit(&[vec![1.0, 2.0]], &[7.0], 3, 4, 1);
+        assert!((rf.predict(&[0.0, 0.0]) - 7.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,26 @@
+//! Multi-objective NoI design optimization (paper §3.3 + §4.3).
+//!
+//! Design space λ = (λ_c placement, λ_l links); objectives = (μ, σ) of
+//! link utilization (Eq 10) — extended to (μ, σ, T, Noise) for 3D-HI
+//! (Eq 20). Solvers:
+//!
+//! - [`stage`]: MOO-STAGE — learned evaluation function (random forest,
+//!   [`forest`]) selects starting designs for greedy local search, trained
+//!   on (design features → resulting Pareto hypervolume) from past runs.
+//! - [`amosa`]: archived multi-objective simulated annealing (the prior
+//!   art the paper compares MOO-STAGE against).
+//! - [`nsga2`]: NSGA-II elitist GA (second comparison baseline).
+//! - [`pareto`] / [`phv`]: non-dominated archive + hypervolume metric.
+
+pub mod amosa;
+pub mod design;
+pub mod forest;
+pub mod local;
+pub mod nsga2;
+pub mod pareto;
+pub mod phv;
+pub mod stage;
+
+pub use design::{Evaluator, NoiDesign};
+pub use pareto::ParetoArchive;
+pub use phv::hypervolume;

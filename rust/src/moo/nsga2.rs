@@ -1,0 +1,294 @@
+//! NSGA-II (paper §3.3 ref [42]) — elitist genetic MOO baseline.
+//!
+//! Fast non-dominated sorting + crowding distance; variation operators
+//! are domain moves (placement swap / link rewire) applied as mutation,
+//! plus a placement-crossover that splices two parents' site assignments
+//! (cycle-crossover style to stay a valid permutation).
+
+use crate::moo::design::{Evaluator, NoiDesign};
+use crate::moo::local::ref_point;
+use crate::moo::pareto::{dominates, ParetoArchive};
+use crate::moo::phv::hypervolume;
+use crate::util::Rng;
+
+pub struct Nsga2Config {
+    pub pop: usize,
+    pub generations: usize,
+    pub mutation_moves: usize,
+    pub seed: u64,
+}
+
+impl Default for Nsga2Config {
+    fn default() -> Self {
+        Nsga2Config {
+            pop: 24,
+            generations: 12,
+            mutation_moves: 2,
+            seed: 0x2652,
+        }
+    }
+}
+
+pub struct Nsga2Result {
+    pub archive: ParetoArchive<NoiDesign>,
+    pub phv: f64,
+    pub evaluations: usize,
+}
+
+/// Fast non-dominated sort: returns front index per individual.
+pub fn nondominated_sort(objs: &[Vec<f64>]) -> Vec<usize> {
+    let n = objs.len();
+    let mut dominated_by = vec![0usize; n];
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && dominates(&objs[i], &objs[j]) {
+                dominates_list[i].push(j);
+            }
+        }
+    }
+    for i in 0..n {
+        for &j in &dominates_list[i] {
+            dominated_by[j] += 1;
+        }
+    }
+    let mut front = vec![usize::MAX; n];
+    let mut current: Vec<usize> = (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut level = 0;
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            front[i] = level;
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        current = next;
+        level += 1;
+    }
+    front
+}
+
+/// Crowding distance within one front.
+pub fn crowding(objs: &[Vec<f64>], idx: &[usize]) -> Vec<f64> {
+    let mut dist = vec![0.0f64; idx.len()];
+    if idx.is_empty() {
+        return dist;
+    }
+    let dim = objs[idx[0]].len();
+    for d in 0..dim {
+        let mut order: Vec<usize> = (0..idx.len()).collect();
+        order.sort_by(|&a, &b| objs[idx[a]][d].partial_cmp(&objs[idx[b]][d]).unwrap());
+        let lo = objs[idx[order[0]]][d];
+        let hi = objs[idx[*order.last().unwrap()]][d];
+        let span = (hi - lo).max(1e-12);
+        dist[order[0]] = f64::INFINITY;
+        dist[*order.last().unwrap()] = f64::INFINITY;
+        for w in 1..order.len().saturating_sub(1) {
+            dist[order[w]] +=
+                (objs[idx[order[w + 1]]][d] - objs[idx[order[w - 1]]][d]) / span;
+        }
+    }
+    dist
+}
+
+fn crossover(a: &NoiDesign, b: &NoiDesign, rng: &mut Rng) -> NoiDesign {
+    let mut child = a.clone();
+    // splice placement: take b's site for a random subset of chiplets,
+    // repairing collisions by swapping (keeps a permutation)
+    let n = child.placement.site_of.len();
+    let cut = rng.below(n);
+    for id in 0..cut {
+        let want = b.placement.site_of[id];
+        if child.placement.site_of[id] != want {
+            // find who currently owns `want` and swap
+            if let Some(owner) = child.placement.site_of.iter().position(|&s| s == want) {
+                child.placement.site_of.swap(id, owner);
+            }
+        }
+    }
+    // link set: union sampled down to a's link count (keeps budget)
+    let mut pool = a.topo.links.clone();
+    for &l in &b.topo.links {
+        if !pool.contains(&l) {
+            pool.push(l);
+        }
+    }
+    rng.shuffle(&mut pool);
+    let budget = a.topo.link_count();
+    let mut links: Vec<(usize, usize)> = pool.into_iter().take(budget).collect();
+    let cand = crate::noi::Topology::new(a.topo.n, links.clone());
+    if cand.is_connected() {
+        child.topo = cand;
+    } else {
+        // fall back to a's links (always valid)
+        links = a.topo.links.clone();
+        child.topo = crate::noi::Topology::new(a.topo.n, links);
+    }
+    child
+}
+
+pub fn nsga2(ev: &Evaluator, seeds: Vec<NoiDesign>, cfg: &Nsga2Config) -> Nsga2Result {
+    let mut rng = Rng::new(cfg.seed);
+    assert!(!seeds.is_empty());
+    let mut evaluations = 0usize;
+
+    // init population from seeds + mutations
+    let mut pop: Vec<NoiDesign> = Vec::with_capacity(cfg.pop);
+    for i in 0..cfg.pop {
+        let mut d = seeds[i % seeds.len()].clone();
+        for _ in 0..(i / seeds.len()) {
+            d.random_move(&mut rng);
+        }
+        pop.push(d);
+    }
+    let mut objs: Vec<Vec<f64>> = pop
+        .iter()
+        .map(|d| {
+            evaluations += 1;
+            ev.objectives(d)
+        })
+        .collect();
+
+    for _ in 0..cfg.generations {
+        // offspring by binary tournament + crossover + mutation
+        let fronts = nondominated_sort(&objs);
+        let mut children = Vec::with_capacity(cfg.pop);
+        while children.len() < cfg.pop {
+            let pick = |rng: &mut Rng| {
+                let a = rng.below(pop.len());
+                let b = rng.below(pop.len());
+                if fronts[a] <= fronts[b] {
+                    a
+                } else {
+                    b
+                }
+            };
+            let pa = pick(&mut rng);
+            let pb = pick(&mut rng);
+            let mut child = crossover(&pop[pa], &pop[pb], &mut rng);
+            for _ in 0..cfg.mutation_moves {
+                child.random_move(&mut rng);
+            }
+            children.push(child);
+        }
+        let child_objs: Vec<Vec<f64>> = children
+            .iter()
+            .map(|d| {
+                evaluations += 1;
+                ev.objectives(d)
+            })
+            .collect();
+
+        // environmental selection over pop + children
+        let mut all = pop;
+        all.extend(children);
+        let mut all_objs = objs;
+        all_objs.extend(child_objs);
+        let fronts = nondominated_sort(&all_objs);
+        let mut order: Vec<usize> = (0..all.len()).collect();
+        // sort by (front, -crowding)
+        let max_front = fronts.iter().max().copied().unwrap_or(0);
+        let mut crowd = vec![0.0f64; all.len()];
+        for f in 0..=max_front {
+            let members: Vec<usize> = (0..all.len()).filter(|&i| fronts[i] == f).collect();
+            let c = crowding(&all_objs, &members);
+            for (k, &i) in members.iter().enumerate() {
+                crowd[i] = c[k];
+            }
+        }
+        order.sort_by(|&a, &b| {
+            fronts[a]
+                .cmp(&fronts[b])
+                .then(crowd[b].partial_cmp(&crowd[a]).unwrap())
+        });
+        order.truncate(cfg.pop);
+        pop = order.iter().map(|&i| all[i].clone()).collect();
+        objs = order.iter().map(|&i| all_objs[i].clone()).collect();
+    }
+
+    let mut archive = ParetoArchive::with_capacity(64);
+    for (d, o) in pop.iter().zip(&objs) {
+        archive.insert(o.clone(), d.clone());
+    }
+    Nsga2Result {
+        phv: hypervolume(&archive.objectives(), &ref_point(ev.n_objectives())),
+        archive,
+        evaluations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::chiplet::build_chiplets;
+    use crate::arch::SfcKind;
+    use crate::config::{ModelZoo, SystemConfig};
+    use crate::model::kernels::Workload;
+
+    fn evaluator() -> Evaluator {
+        let sys = SystemConfig::s36();
+        let chips = build_chiplets(20, 4, 4, 8);
+        let w = Workload::build(&ModelZoo::bert_base(), 64);
+        Evaluator::new(&sys, &chips, &w)
+    }
+
+    #[test]
+    fn sort_fronts_correct() {
+        let objs = vec![
+            vec![1.0, 1.0], // front 0
+            vec![2.0, 2.0], // front 1 (dominated by 0)
+            vec![0.5, 3.0], // front 0
+            vec![3.0, 3.0], // front 2
+        ];
+        let f = nondominated_sort(&objs);
+        assert_eq!(f, vec![0, 1, 0, 2]);
+    }
+
+    #[test]
+    fn crowding_boundary_infinite() {
+        let objs = vec![vec![1.0, 3.0], vec![2.0, 2.0], vec![3.0, 1.0]];
+        let idx = [0, 1, 2];
+        let c = crowding(&objs, &idx);
+        assert!(c[0].is_infinite() && c[2].is_infinite());
+        assert!(c[1].is_finite() && c[1] > 0.0);
+    }
+
+    #[test]
+    fn crossover_yields_valid_design() {
+        let ev = evaluator();
+        let a = NoiDesign::mesh_seed(&ev.sys, 36);
+        let b = NoiDesign::hi_seed(&ev.sys, &ev.chiplets, SfcKind::Hilbert);
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            let c = crossover(&a, &b, &mut rng);
+            assert!(c.placement.is_valid());
+            assert!(c.topo.is_connected());
+            assert!(c.topo.link_count() <= a.topo.link_count());
+        }
+    }
+
+    #[test]
+    fn nsga2_improves_over_seeds() {
+        let ev = evaluator();
+        let seeds = vec![NoiDesign::mesh_seed(&ev.sys, 36)];
+        let cfg = Nsga2Config {
+            pop: 8,
+            generations: 4,
+            mutation_moves: 2,
+            seed: 9,
+        };
+        let res = nsga2(&ev, seeds, &cfg);
+        assert!(res.phv > 0.0);
+        let best_mu = res
+            .archive
+            .objectives()
+            .iter()
+            .map(|o| o[0])
+            .fold(f64::MAX, f64::min);
+        assert!(best_mu <= 1.0);
+    }
+}

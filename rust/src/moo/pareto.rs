@@ -1,0 +1,202 @@
+//! Non-dominated (Pareto) archive over minimization objectives.
+
+/// `a` dominates `b` iff a <= b componentwise and a < b somewhere.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Archive of mutually non-dominated (objectives, payload) pairs.
+#[derive(Debug, Clone)]
+pub struct ParetoArchive<T: Clone> {
+    pub entries: Vec<(Vec<f64>, T)>,
+    /// Optional cap; when exceeded the most crowded entry is dropped.
+    pub capacity: Option<usize>,
+}
+
+impl<T: Clone> ParetoArchive<T> {
+    pub fn new() -> Self {
+        ParetoArchive {
+            entries: Vec::new(),
+            capacity: None,
+        }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        ParetoArchive {
+            entries: Vec::new(),
+            capacity: Some(cap),
+        }
+    }
+
+    /// Insert if non-dominated; evicts dominated incumbents.
+    /// Returns true if the candidate entered the archive.
+    pub fn insert(&mut self, obj: Vec<f64>, payload: T) -> bool {
+        for (o, _) in &self.entries {
+            if dominates(o, &obj) || o == &obj {
+                return false;
+            }
+        }
+        self.entries.retain(|(o, _)| !dominates(&obj, o));
+        self.entries.push((obj, payload));
+        if let Some(cap) = self.capacity {
+            while self.entries.len() > cap {
+                self.drop_most_crowded();
+            }
+        }
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn objectives(&self) -> Vec<Vec<f64>> {
+        self.entries.iter().map(|(o, _)| o.clone()).collect()
+    }
+
+    /// Entry with the best (lowest) value of a scalarization Σ obj.
+    pub fn best_scalar(&self) -> Option<&(Vec<f64>, T)> {
+        self.entries.iter().min_by(|a, b| {
+            let sa: f64 = a.0.iter().sum();
+            let sb: f64 = b.0.iter().sum();
+            sa.partial_cmp(&sb).unwrap()
+        })
+    }
+
+    fn drop_most_crowded(&mut self) {
+        if self.entries.len() < 3 {
+            self.entries.pop();
+            return;
+        }
+        // crowding = min distance to another entry (normalized L1)
+        let objs = self.objectives();
+        let dim = objs[0].len();
+        let mut lo = vec![f64::MAX; dim];
+        let mut hi = vec![f64::MIN; dim];
+        for o in &objs {
+            for d in 0..dim {
+                lo[d] = lo[d].min(o[d]);
+                hi[d] = hi[d].max(o[d]);
+            }
+        }
+        let span: Vec<f64> = lo
+            .iter()
+            .zip(&hi)
+            .map(|(l, h)| (h - l).max(1e-12))
+            .collect();
+        let mut worst = 0usize;
+        let mut worst_d = f64::MAX;
+        for i in 0..objs.len() {
+            let mut min_d = f64::MAX;
+            for j in 0..objs.len() {
+                if i != j {
+                    let d: f64 = (0..dim)
+                        .map(|k| ((objs[i][k] - objs[j][k]) / span[k]).abs())
+                        .sum();
+                    min_d = min_d.min(d);
+                }
+            }
+            if min_d < worst_d {
+                worst_d = min_d;
+                worst = i;
+            }
+        }
+        self.entries.remove(worst);
+    }
+}
+
+impl<T: Clone> Default for ParetoArchive<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominates_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "equal is not strict");
+    }
+
+    #[test]
+    fn archive_keeps_front_only() {
+        let mut a = ParetoArchive::new();
+        assert!(a.insert(vec![2.0, 2.0], "b"));
+        assert!(a.insert(vec![1.0, 3.0], "a"));
+        assert!(a.insert(vec![3.0, 1.0], "c"));
+        assert_eq!(a.len(), 3);
+        // dominator evicts (2,2)
+        assert!(a.insert(vec![1.5, 1.5], "d"));
+        assert_eq!(a.len(), 3);
+        assert!(!a.entries.iter().any(|(o, _)| o == &vec![2.0, 2.0]));
+    }
+
+    #[test]
+    fn dominated_candidate_rejected() {
+        let mut a = ParetoArchive::new();
+        a.insert(vec![1.0, 1.0], 0);
+        assert!(!a.insert(vec![2.0, 2.0], 1));
+        assert!(!a.insert(vec![1.0, 1.0], 2), "duplicate rejected");
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn archive_invariant_random_stream() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(17);
+        let mut a = ParetoArchive::new();
+        for _ in 0..500 {
+            a.insert(vec![rng.f64(), rng.f64(), rng.f64()], ());
+        }
+        // mutual non-domination
+        let objs = a.objectives();
+        for i in 0..objs.len() {
+            for j in 0..objs.len() {
+                if i != j {
+                    assert!(!dominates(&objs[i], &objs[j]), "violation {i} {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(23);
+        let mut a = ParetoArchive::with_capacity(10);
+        for _ in 0..300 {
+            let x = rng.f64();
+            a.insert(vec![x, 1.0 - x], ());
+        }
+        assert!(a.len() <= 10);
+        assert!(a.len() >= 5, "archive kept a spread");
+    }
+
+    #[test]
+    fn best_scalar_picks_knee() {
+        let mut a = ParetoArchive::new();
+        a.insert(vec![0.1, 5.0], "edge1");
+        a.insert(vec![5.0, 0.1], "edge2");
+        a.insert(vec![1.0, 1.0], "knee");
+        assert_eq!(a.best_scalar().unwrap().1, "knee");
+    }
+}

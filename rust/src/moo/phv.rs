@@ -1,0 +1,128 @@
+//! Pareto hypervolume (PHV) — the quality metric MOO-STAGE regresses
+//! (paper §3.3 "quality of the corresponding Pareto set in terms of
+//! Pareto-hyper volume").
+//!
+//! Exact sweep for 2 objectives; deterministic Monte-Carlo estimate for
+//! 3+ (fixed PRNG seed so PHV is reproducible run-to-run).
+
+use crate::moo::pareto::dominates;
+use crate::util::Rng;
+
+/// Hypervolume of a minimization front w.r.t. reference point `ref_pt`
+/// (every front point must weakly dominate ref_pt to contribute).
+pub fn hypervolume(front: &[Vec<f64>], ref_pt: &[f64]) -> f64 {
+    let pts: Vec<&Vec<f64>> = front
+        .iter()
+        .filter(|p| p.iter().zip(ref_pt).all(|(x, r)| x <= r))
+        .collect();
+    if pts.is_empty() {
+        return 0.0;
+    }
+    match ref_pt.len() {
+        1 => {
+            let best = pts
+                .iter()
+                .map(|p| p[0])
+                .fold(f64::MAX, f64::min);
+            ref_pt[0] - best
+        }
+        2 => hv2d(&pts, ref_pt),
+        _ => hv_mc(&pts, ref_pt, 100_000),
+    }
+}
+
+fn hv2d(pts: &[&Vec<f64>], ref_pt: &[f64]) -> f64 {
+    let mut sorted: Vec<&Vec<f64>> = pts.to_vec();
+    sorted.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+    let mut hv = 0.0;
+    let mut prev_y = ref_pt[1];
+    for p in sorted {
+        if p[1] < prev_y {
+            hv += (ref_pt[0] - p[0]) * (prev_y - p[1]);
+            prev_y = p[1];
+        }
+    }
+    hv
+}
+
+/// Monte-Carlo estimate over the box [min(front), ref_pt].
+fn hv_mc(pts: &[&Vec<f64>], ref_pt: &[f64], samples: usize) -> f64 {
+    let dim = ref_pt.len();
+    let mut lo = vec![f64::MAX; dim];
+    for p in pts {
+        for d in 0..dim {
+            lo[d] = lo[d].min(p[d]);
+        }
+    }
+    let vol: f64 = (0..dim).map(|d| (ref_pt[d] - lo[d]).max(0.0)).product();
+    if vol == 0.0 {
+        return 0.0;
+    }
+    let mut rng = Rng::new(0x9E37_79B9_7F4A_7C15);
+    let mut hit = 0usize;
+    let mut x = vec![0.0; dim];
+    for _ in 0..samples {
+        for d in 0..dim {
+            x[d] = lo[d] + rng.f64() * (ref_pt[d] - lo[d]);
+        }
+        if pts.iter().any(|p| dominates(p, &x) || p.as_slice() == x.as_slice()) {
+            hit += 1;
+        }
+    }
+    vol * hit as f64 / samples as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_point_2d() {
+        let hv = hypervolume(&[vec![1.0, 1.0]], &[2.0, 2.0]);
+        assert!((hv - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn staircase_2d() {
+        let front = vec![vec![1.0, 3.0], vec![2.0, 2.0], vec![3.0, 1.0]];
+        // ref (4,4): 3x1 + 2x1 + 1x... sweep: (4-1)(4-3)=3 + (4-2)(3-2)=2 + (4-3)(2-1)=1 => 6
+        let hv = hypervolume(&front, &[4.0, 4.0]);
+        assert!((hv - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dominated_point_adds_nothing() {
+        let base = hypervolume(&[vec![1.0, 1.0]], &[3.0, 3.0]);
+        let more = hypervolume(&[vec![1.0, 1.0], vec![2.0, 2.0]], &[3.0, 3.0]);
+        assert!((base - more).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outside_ref_ignored() {
+        let hv = hypervolume(&[vec![5.0, 5.0]], &[2.0, 2.0]);
+        assert_eq!(hv, 0.0);
+    }
+
+    #[test]
+    fn better_front_higher_phv() {
+        let weak = vec![vec![2.0, 2.0]];
+        let strong = vec![vec![1.0, 1.0]];
+        let r = [3.0, 3.0];
+        assert!(hypervolume(&strong, &r) > hypervolume(&weak, &r));
+    }
+
+    #[test]
+    fn mc_matches_exact_on_box() {
+        // 3D single point: exact volume (ref-pt)^3
+        let hv = hypervolume(&[vec![1.0, 1.0, 1.0]], &[2.0, 2.0, 2.0]);
+        assert!((hv - 1.0).abs() < 0.05, "mc {hv}");
+    }
+
+    #[test]
+    fn mc_deterministic() {
+        let front = vec![vec![1.0, 2.0, 1.5], vec![2.0, 1.0, 1.2]];
+        let a = hypervolume(&front, &[3.0, 3.0, 3.0]);
+        let b = hypervolume(&front, &[3.0, 3.0, 3.0]);
+        assert_eq!(a, b);
+    }
+}

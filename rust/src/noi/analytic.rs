@@ -1,0 +1,217 @@
+//! Analytic NoI evaluator — paper Eq 11-15.
+//!
+//! For each phase t: route every flow F_ij(t) along the deterministic
+//! shortest path and accumulate per-directed-link utilization u_k
+//! (Eq 11). Phase statistics are the mean (Eq 12) and population σ
+//! (Eq 13) over links; design statistics time-average over phases
+//! weighted by their repeat counts (Eq 14-15).
+//!
+//! This is the fast evaluation inside the MOO loop (thousands of designs
+//! per second); the cycle simulator (`noi::sim`) validates the Pareto set.
+
+use crate::model::TrafficMatrix;
+use crate::noi::linkmap::LinkMap;
+use crate::noi::routing::RoutingTable;
+use crate::noi::topology::Topology;
+use crate::util::stats;
+
+/// Per-design link-utilization statistics.
+#[derive(Debug, Clone)]
+pub struct LinkStats {
+    /// Eq 14: time-averaged mean link utilization (bytes per link).
+    pub mu: f64,
+    /// Eq 15: time-averaged σ of link utilization.
+    pub sigma: f64,
+    /// Max single-link load over all phases (hotspot indicator).
+    pub max_link: f64,
+    /// Total byte-hops (Σ F_ij * hops) — the energy-proportional volume.
+    pub byte_hops: f64,
+    /// Per-phase (mu, sigma) before time averaging.
+    pub per_phase: Vec<(f64, f64)>,
+}
+
+/// Evaluate a (topology, traffic) pair. Directed links are the unit of
+/// accounting (one physical link = 2 directed channels, as in BookSim).
+pub fn evaluate(topo: &Topology, routes: &RoutingTable, phases: &[TrafficMatrix]) -> LinkStats {
+    evaluate_weighted(topo, routes, phases, None)
+}
+
+/// Placement-aware variant: `stages[i]` is the pipeline-stage count of
+/// undirected link i (Table 1: links longer than 1.55 mm are divided
+/// into multiple stages, so a long link costs proportionally more
+/// utilization-cycles). This is what makes the λ_c placement half of the
+/// design space visible to the Eq 10 objectives.
+pub fn evaluate_weighted(
+    topo: &Topology,
+    routes: &RoutingTable,
+    phases: &[TrafficMatrix],
+    stages: Option<&[f64]>,
+) -> LinkStats {
+    let lm = LinkMap::build(topo);
+    let n_links = lm.n_links();
+    // expand undirected stage weights to the directed link order
+    let weights: Vec<f64> = match stages {
+        Some(s) => {
+            debug_assert_eq!(s.len(), topo.links.len());
+            s.iter().flat_map(|&w| [w, w]).collect()
+        }
+        None => vec![1.0; n_links],
+    };
+
+    let mut per_phase = Vec::with_capacity(phases.len());
+    let mut max_link: f64 = 0.0;
+    let mut byte_hops = 0.0;
+    let mut mu_acc = 0.0;
+    let mut sg_acc = 0.0;
+    let mut weight_acc = 0.0;
+
+    let mut u = vec![0.0f64; n_links];
+    for m in phases {
+        u.iter_mut().for_each(|x| *x = 0.0);
+        for (src, dst, bytes) in m.flows() {
+            let mut cur = src;
+            while cur != dst {
+                let Some(nh) = routes.next_hop(cur, dst) else {
+                    break;
+                };
+                let k = lm.link(cur, nh).expect("route uses existing link");
+                u[k] += bytes * weights[k];
+                byte_hops += bytes * m.repeats as f64 * weights[k];
+                cur = nh;
+            }
+        }
+        let mu = stats::mean(&u);
+        let sg = stats::std_dev(&u);
+        max_link = max_link.max(u.iter().cloned().fold(0.0, f64::max));
+        per_phase.push((mu, sg));
+        let w = m.repeats as f64;
+        mu_acc += mu * w;
+        sg_acc += sg * w;
+        weight_acc += w;
+    }
+
+    LinkStats {
+        mu: if weight_acc > 0.0 { mu_acc / weight_acc } else { 0.0 },
+        sigma: if weight_acc > 0.0 { sg_acc / weight_acc } else { 0.0 },
+        max_link,
+        byte_hops,
+        per_phase,
+    }
+}
+
+/// Communication latency estimate for one phase under this topology:
+/// serialization of the max-loaded link plus mean path latency. Used by
+/// the system simulator for phase timing (the cycle sim refines it).
+pub fn phase_comm_secs(
+    topo: &Topology,
+    routes: &RoutingTable,
+    m: &TrafficMatrix,
+    link_bw: f64,
+    hop_secs: f64,
+) -> f64 {
+    let lm = LinkMap::build(topo);
+    let mut u = vec![0.0f64; lm.n_links()];
+    let mut max_path_hops = 0usize;
+    for (src, dst, bytes) in m.flows() {
+        let mut cur = src;
+        let mut hops = 0;
+        while cur != dst {
+            let Some(nh) = routes.next_hop(cur, dst) else {
+                break;
+            };
+            u[lm.link(cur, nh).expect("route uses existing link")] += bytes;
+            cur = nh;
+            hops += 1;
+        }
+        max_path_hops = max_path_hops.max(hops);
+    }
+    let bottleneck = u.iter().cloned().fold(0.0, f64::max);
+    bottleneck / link_bw + max_path_hops as f64 * hop_secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Placement;
+    use crate::model::kernels::KernelKind;
+
+    fn line4() -> (Topology, RoutingTable) {
+        let t = Topology::chain(4, &[0, 1, 2, 3]);
+        let r = RoutingTable::build(&t);
+        (t, r)
+    }
+
+    #[test]
+    fn single_flow_loads_path_links() {
+        let (t, r) = line4();
+        let mut m = TrafficMatrix::zeros(4, KernelKind::Embedding, 1);
+        m.add(0, 3, 100.0);
+        let s = evaluate(&t, &r, &[m]);
+        // 3 directed links loaded with 100, 3 idle reverse channels
+        assert!((s.byte_hops - 300.0).abs() < 1e-9);
+        assert!((s.mu - 300.0 / 6.0).abs() < 1e-9);
+        assert!((s.max_link - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn balanced_traffic_has_lower_sigma() {
+        let (t, r) = line4();
+        // hot: 600B one-way loads only the 3 forward channels;
+        // flat: 300B each way loads all 6 directed channels evenly.
+        // Same byte-hops => same mu (Eq 12), but flat has sigma = 0.
+        let mut hot = TrafficMatrix::zeros(4, KernelKind::Score, 1);
+        hot.add(0, 3, 600.0);
+        let mut flat = TrafficMatrix::zeros(4, KernelKind::Score, 1);
+        flat.add(0, 3, 300.0);
+        flat.add(3, 0, 300.0);
+        let sh = evaluate(&t, &r, &[hot]);
+        let sf = evaluate(&t, &r, &[flat]);
+        assert!((sh.mu - sf.mu).abs() < 1e-9, "same byte-hops same mu");
+        assert!(sf.sigma < 1e-9, "balanced load has zero sigma");
+        assert!(sh.sigma > sf.sigma);
+    }
+
+    #[test]
+    fn repeats_weight_time_average() {
+        let (t, r) = line4();
+        let mut a = TrafficMatrix::zeros(4, KernelKind::Embedding, 1);
+        a.add(0, 1, 60.0);
+        let mut b = TrafficMatrix::zeros(4, KernelKind::FeedForward, 11);
+        b.add(0, 1, 600.0);
+        let s = evaluate(&t, &r, &[a, b]);
+        // mu = (mu_a*1 + mu_b*11)/12
+        let mu_a = 60.0 / 6.0;
+        let mu_b = 600.0 / 6.0;
+        assert!((s.mu - (mu_a + 11.0 * mu_b) / 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mesh_beats_chain_for_random_traffic() {
+        let p = Placement::identity(16, 4, 4);
+        let mesh = Topology::mesh(&p);
+        let chain = Topology::chain(16, &(0..16).collect::<Vec<_>>());
+        let rm = RoutingTable::build(&mesh);
+        let rc = RoutingTable::build(&chain);
+        let mut m = TrafficMatrix::zeros(16, KernelKind::Score, 1);
+        for s in 0..16 {
+            for d in 0..16 {
+                if s != d {
+                    m.add(s, d, 10.0);
+                }
+            }
+        }
+        let sm = evaluate(&mesh, &rm, &[m.clone()]);
+        let sc = evaluate(&chain, &rc, &[m]);
+        assert!(sm.byte_hops < sc.byte_hops, "mesh shortcuts reduce byte-hops");
+    }
+
+    #[test]
+    fn phase_comm_scales_with_bottleneck() {
+        let (t, r) = line4();
+        let mut m = TrafficMatrix::zeros(4, KernelKind::Score, 1);
+        m.add(0, 3, 1000.0);
+        let fast = phase_comm_secs(&t, &r, &m, 1e9, 1e-9);
+        let slow = phase_comm_secs(&t, &r, &m, 1e8, 1e-9);
+        assert!(slow > 9.0 * fast);
+    }
+}

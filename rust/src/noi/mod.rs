@@ -1,0 +1,22 @@
+//! Network-on-Interposer: the λ_l half of the design space plus its two
+//! evaluators.
+//!
+//! - [`topology`]: router/link graph, mesh constructor, link-set moves
+//!   under the paper's constraints (connected, ≤ mesh link count).
+//! - [`routing`]: BFS all-pairs shortest-path tables (deterministic,
+//!   minimal — the BookSim2 configuration the paper uses).
+//! - [`analytic`]: Eq 11-15 link-utilization statistics (μ, σ) — the fast
+//!   evaluator inside the MOO loop.
+//! - [`sim`]: flit-level, credit-flow cycle simulator — the
+//!   "cycle-accurate simulation of each design in λ*" (§3.3).
+
+pub mod analytic;
+pub mod linkmap;
+pub mod routing;
+pub mod sim;
+pub mod topology;
+
+pub use analytic::{evaluate, LinkStats};
+pub use routing::RoutingTable;
+pub use sim::{CycleSim, SimResult};
+pub use topology::Topology;

@@ -1,0 +1,219 @@
+//! Deterministic minimal routing: BFS all-pairs shortest paths with a
+//! next-hop table per (src, dst) — table-based routing over the arbitrary
+//! (irregular) topologies the MOO produces, matching the BookSim2 setup
+//! the paper feeds "the connectivity between NoI routers".
+//!
+//! Tie-breaking is by smallest next-hop id, so routes are reproducible
+//! across runs and the analytic and cycle evaluators agree on paths.
+
+use crate::noi::topology::Topology;
+use std::collections::VecDeque;
+
+/// All-pairs next-hop + distance tables.
+#[derive(Debug, Clone)]
+pub struct RoutingTable {
+    pub n: usize,
+    /// next[src*n + dst] = next router on the path src->dst (usize::MAX on src==dst).
+    pub next: Vec<u32>,
+    /// dist[src*n + dst] in hops; u32::MAX if unreachable.
+    pub dist: Vec<u32>,
+}
+
+impl RoutingTable {
+    /// Build by running BFS from every destination (so `next` points
+    /// toward the destination, one table pass per dst).
+    pub fn build(topo: &Topology) -> RoutingTable {
+        let n = topo.n;
+        let adj = {
+            // sorted adjacency for deterministic tie-breaks
+            let mut a = topo.adjacency();
+            for l in a.iter_mut() {
+                l.sort_unstable();
+            }
+            a
+        };
+        // write directly in [src][dst] layout: BFS from dst fills the
+        // dst-th column (next hop of v toward dst = BFS parent of v) —
+        // avoids a full n^2 re-index pass (§Perf iteration 3)
+        let mut next = vec![u32::MAX; n * n];
+        let mut dist = vec![u32::MAX; n * n];
+        let mut q = VecDeque::new();
+        for dst in 0..n {
+            dist[dst * n + dst] = 0;
+            q.clear();
+            q.push_back(dst);
+            while let Some(v) = q.pop_front() {
+                let dv = dist[v * n + dst];
+                for &w in &adj[v] {
+                    let slot = w * n + dst;
+                    if dist[slot] == u32::MAX {
+                        dist[slot] = dv + 1;
+                        next[slot] = v as u32;
+                        q.push_back(w);
+                    }
+                }
+            }
+        }
+        RoutingTable { n, next, dist }
+    }
+
+    #[inline]
+    pub fn next_hop(&self, src: usize, dst: usize) -> Option<usize> {
+        let v = self.next[src * self.n + dst];
+        if v == u32::MAX {
+            None
+        } else {
+            Some(v as usize)
+        }
+    }
+
+    #[inline]
+    pub fn hops(&self, src: usize, dst: usize) -> Option<usize> {
+        let d = self.dist[src * self.n + dst];
+        if d == u32::MAX {
+            None
+        } else {
+            Some(d as usize)
+        }
+    }
+
+    /// Full path src -> dst as router sequence (inclusive of both ends).
+    pub fn path(&self, src: usize, dst: usize) -> Option<Vec<usize>> {
+        if src == dst {
+            return Some(vec![src]);
+        }
+        let mut out = vec![src];
+        let mut cur = src;
+        let max = self.n + 1;
+        while cur != dst {
+            cur = self.next_hop(cur, dst)?;
+            out.push(cur);
+            if out.len() > max {
+                return None; // corrupt table guard
+            }
+        }
+        Some(out)
+    }
+
+    /// Directed links (a, b) traversed by the path src -> dst.
+    pub fn links_on_path(&self, src: usize, dst: usize) -> Vec<(usize, usize)> {
+        match self.path(src, dst) {
+            Some(p) => p.windows(2).map(|w| (w[0], w[1])).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Network diameter in hops (max over reachable pairs).
+    pub fn diameter(&self) -> usize {
+        self.dist
+            .iter()
+            .filter(|&&d| d != u32::MAX)
+            .map(|&d| d as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Mean hop count over all ordered pairs (src != dst).
+    pub fn mean_hops(&self) -> f64 {
+        let mut total = 0usize;
+        let mut count = 0usize;
+        for s in 0..self.n {
+            for d in 0..self.n {
+                if s != d {
+                    if let Some(h) = self.hops(s, d) {
+                        total += h;
+                        count += 1;
+                    }
+                }
+            }
+        }
+        if count == 0 {
+            0.0
+        } else {
+            total as f64 / count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Placement;
+    use crate::noi::topology::Topology;
+
+    fn mesh(n: usize, side: usize) -> (Topology, RoutingTable) {
+        let p = Placement::identity(n, side, side);
+        let t = Topology::mesh(&p);
+        let r = RoutingTable::build(&t);
+        (t, r)
+    }
+
+    #[test]
+    fn mesh_distances_are_manhattan() {
+        let (_, r) = mesh(36, 6);
+        let p = Placement::identity(36, 6, 6);
+        for a in 0..36 {
+            for b in 0..36 {
+                assert_eq!(r.hops(a, b).unwrap(), p.manhattan(a, b), "({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn paths_are_consistent_with_dist() {
+        let (_, r) = mesh(36, 6);
+        for a in 0..36 {
+            for b in 0..36 {
+                let path = r.path(a, b).unwrap();
+                assert_eq!(path.len() - 1, r.hops(a, b).unwrap());
+                assert_eq!(*path.first().unwrap(), a);
+                assert_eq!(*path.last().unwrap(), b);
+            }
+        }
+    }
+
+    #[test]
+    fn paths_traverse_existing_links() {
+        let (t, r) = mesh(16, 4);
+        for a in 0..16 {
+            for b in 0..16 {
+                for (x, y) in r.links_on_path(a, b) {
+                    assert!(t.has_link(x, y), "({a},{b}) uses phantom link ({x},{y})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_diameter() {
+        let t = Topology::chain(8, &(0..8).collect::<Vec<_>>());
+        let r = RoutingTable::build(&t);
+        assert_eq!(r.diameter(), 7);
+        assert_eq!(r.hops(0, 7), Some(7));
+    }
+
+    #[test]
+    fn deterministic_rebuild() {
+        let (t, r1) = mesh(36, 6);
+        let r2 = RoutingTable::build(&t);
+        assert_eq!(r1.next, r2.next);
+    }
+
+    #[test]
+    fn mean_hops_equals_mean_manhattan() {
+        let (_, r) = mesh(36, 6);
+        let p = Placement::identity(36, 6, 6);
+        let mut total = 0usize;
+        let mut cnt = 0usize;
+        for a in 0..36 {
+            for b in 0..36 {
+                if a != b {
+                    total += p.manhattan(a, b);
+                    cnt += 1;
+                }
+            }
+        }
+        let want = total as f64 / cnt as f64;
+        assert!((r.mean_hops() - want).abs() < 1e-12, "{} vs {want}", r.mean_hops());
+    }
+}

@@ -1,0 +1,389 @@
+//! Flit-level cycle simulator — the "cycle-accurate simulations for each
+//! design in λ*" of §3.3 (BookSim2's role in the paper's tool flow).
+//!
+//! Model: table-routed virtual cut-through. Every directed link moves one
+//! flit per cycle; every router input holds a bounded FIFO (credit-based
+//! backpressure); arbitration is round-robin across contending inputs.
+//! Packets complete when their tail flit reaches the destination router.
+//!
+//! Large phases are volume-sampled (`max_flits`) — the simulator keeps
+//! the *distributional* behaviour (contention, hotspots) while bounding
+//! runtime; the scale factor is reported so callers can de-normalize.
+
+use crate::model::TrafficMatrix;
+use crate::noi::linkmap::{LinkMap, NO_LINK};
+use crate::noi::routing::RoutingTable;
+use crate::noi::topology::Topology;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone, Copy)]
+struct Flit {
+    packet: u32,
+    dst: u32,
+    /// packet-boundary marker (kept for tracing/debug dumps)
+    #[allow(dead_code)]
+    is_tail: bool,
+}
+
+/// Result of simulating one phase to drain.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub cycles: u64,
+    pub packets: usize,
+    pub flits: usize,
+    pub mean_packet_latency: f64,
+    pub max_packet_latency: u64,
+    /// Fraction of (link, cycle) slots that carried a flit.
+    pub link_utilization: f64,
+    /// bytes-per-flit scale if the phase was sampled (1.0 = exact).
+    pub scale: f64,
+}
+
+/// Flit-level simulator for one topology.
+pub struct CycleSim<'a> {
+    topo: &'a Topology,
+    routes: &'a RoutingTable,
+    /// flit capacity of each router input FIFO
+    buffer_flits: usize,
+    /// sampling bound on total injected flits per phase
+    pub max_flits: usize,
+}
+
+impl<'a> CycleSim<'a> {
+    pub fn new(topo: &'a Topology, routes: &'a RoutingTable, buffer_flits: usize) -> Self {
+        CycleSim {
+            topo,
+            routes,
+            buffer_flits,
+            max_flits: 200_000,
+        }
+    }
+
+    /// Simulate one traffic phase until all packets drain.
+    /// `flit_bytes`: payload bytes per flit (HwParams::noi_flit_bits / 8).
+    pub fn run_phase(&self, m: &TrafficMatrix, flit_bytes: f64) -> SimResult {
+        // --- build packet list from the traffic matrix
+        let flows = m.flows();
+        let total_flits_exact: f64 = flows
+            .iter()
+            .map(|&(_, _, b)| (b / flit_bytes).ceil())
+            .sum();
+        let scale = if total_flits_exact > self.max_flits as f64 {
+            total_flits_exact / self.max_flits as f64
+        } else {
+            1.0
+        };
+
+        // packet size capped so big flows split into pipeline-able packets
+        const PKT_FLITS: usize = 16;
+        struct Packet {
+            flits: usize,
+            injected: usize,
+            t_inject: u64,
+            t_done: u64,
+        }
+        let mut packets: Vec<Packet> = Vec::new();
+        // per-source injection queues of (packet id, dst)
+        let mut inject: Vec<VecDeque<(u32, u32)>> = vec![VecDeque::new(); self.topo.n];
+        for &(src, dst, bytes) in &flows {
+            let mut flits = ((bytes / scale) / flit_bytes).ceil() as usize;
+            if flits == 0 {
+                flits = 1;
+            }
+            while flits > 0 {
+                let take = flits.min(PKT_FLITS);
+                let id = packets.len() as u32;
+                packets.push(Packet {
+                    flits: take,
+                    injected: 0,
+                    t_inject: 0,
+                    t_done: 0,
+                });
+                inject[src].push_back((id, dst as u32));
+                flits -= take;
+            }
+        }
+        let n_packets = packets.len();
+        let total_flits: usize = packets.iter().map(|p| p.flits).sum();
+
+        // --- directed link structures (dense; see §Perf)
+        let lm = LinkMap::build(self.topo);
+        let n_links = lm.n_links();
+        let nr = self.topo.n;
+        // FIFO of flits queued at the *receiving* router of each link
+        let mut queues: Vec<VecDeque<Flit>> = vec![VecDeque::new(); n_links];
+        // round-robin arbitration state per router
+        let mut rr: Vec<usize> = vec![0; nr];
+        // input links per router
+        let mut in_links: Vec<Vec<usize>> = vec![Vec::new(); nr];
+        for l in 0..n_links {
+            in_links[lm.to[l] as usize].push(l);
+        }
+        // precomputed out-link table: out[at*nr + dst] = directed link id
+        // toward dst (NO_LINK when at == dst or unreachable)
+        let mut out_table = vec![NO_LINK; nr * nr];
+        for at in 0..nr {
+            for dst in 0..nr {
+                if at != dst {
+                    if let Some(nh) = self.routes.next_hop(at, dst) {
+                        if let Some(l) = lm.link(at, nh) {
+                            out_table[at * nr + dst] = l as u32;
+                        }
+                    }
+                }
+            }
+        }
+        let out_link = |at: usize, dst: usize| -> Option<usize> {
+            let v = out_table[at * nr + dst];
+            if v == NO_LINK {
+                None
+            } else {
+                Some(v as usize)
+            }
+        };
+
+        let mut cycle: u64 = 0;
+        let mut done_packets = 0usize;
+        let mut flit_slots_used: u64 = 0;
+        let mut remaining = vec![0usize; n_packets]; // flits not yet at dst
+        for (i, p) in packets.iter().enumerate() {
+            remaining[i] = p.flits;
+        }
+
+        // safety bound: generous — drain must happen way earlier
+        let max_cycles = (total_flits as u64 + 1) * (self.routes.diameter() as u64 + 4) * 4 + 10_000;
+
+        // hoisted per-cycle buffers (allocation-free inner loop, §Perf)
+        let mut out_taken = vec![false; n_links];
+        let mut moves: Vec<(usize, usize)> = Vec::with_capacity(n_links);
+        let mut arrivals: Vec<usize> = Vec::with_capacity(n_links);
+        // flits queued at each router's inputs — idle routers skip
+        // arbitration entirely (§Perf iteration 2)
+        let mut router_load = vec![0u32; nr];
+
+        while done_packets < n_packets && cycle < max_cycles {
+            cycle += 1;
+            // 1) link traversal: each router forwards up to one flit per
+            //    *output* link per cycle, arbitrating round-robin over its
+            //    input queues (+ injection queue).
+            out_taken.iter_mut().for_each(|x| *x = false);
+            moves.clear();
+            arrivals.clear();
+
+            for router in 0..nr {
+                if router_load[router] == 0 {
+                    continue;
+                }
+                let inputs = &in_links[router];
+                if inputs.is_empty() {
+                    continue;
+                }
+                let start = rr[router] % inputs.len();
+                for k in 0..inputs.len() {
+                    let l = inputs[(start + k) % inputs.len()];
+                    let Some(&flit) = queues[l].front() else {
+                        continue;
+                    };
+                    let dst = flit.dst as usize;
+                    if dst == router {
+                        arrivals.push(l);
+                        continue;
+                    }
+                    if let Some(ol) = out_link(router, dst) {
+                        if !out_taken[ol] && queues[ol].len() < self.buffer_flits {
+                            out_taken[ol] = true;
+                            moves.push((l, ol));
+                        }
+                    }
+                }
+                rr[router] = rr[router].wrapping_add(1);
+            }
+
+            for &l in &arrivals {
+                let flit = queues[l].pop_front().unwrap();
+                router_load[lm.to[l] as usize] -= 1;
+                let pid = flit.packet as usize;
+                remaining[pid] -= 1;
+                if remaining[pid] == 0 {
+                    packets[pid].t_done = cycle;
+                    done_packets += 1;
+                }
+                flit_slots_used += 1;
+            }
+            for &(from, to) in &moves {
+                let flit = queues[from].pop_front().unwrap();
+                router_load[lm.to[from] as usize] -= 1;
+                queues[to].push_back(flit);
+                router_load[lm.to[to] as usize] += 1;
+                flit_slots_used += 1;
+            }
+
+            // 2) injection: one flit per source router per cycle
+            for src in 0..self.topo.n {
+                let Some(&(pid, dst)) = inject[src].front() else {
+                    continue;
+                };
+                let p = &mut packets[pid as usize];
+                if p.injected == 0 {
+                    p.t_inject = cycle;
+                }
+                // local delivery without entering the network
+                if dst as usize == src {
+                    unreachable!("flows exclude self-traffic");
+                }
+                if let Some(ol) = out_link(src, dst as usize) {
+                    if queues[ol].len() < self.buffer_flits {
+                        let is_tail = p.injected + 1 == p.flits;
+                        queues[ol].push_back(Flit {
+                            packet: pid,
+                            dst,
+                            is_tail,
+                        });
+                        router_load[lm.to[ol] as usize] += 1;
+                        p.injected += 1;
+                        if is_tail {
+                            inject[src].pop_front();
+                        }
+                    }
+                }
+            }
+        }
+
+        let latencies: Vec<f64> = packets
+            .iter()
+            .filter(|p| p.t_done > 0)
+            .map(|p| (p.t_done - p.t_inject) as f64)
+            .collect();
+        let mean_lat = if latencies.is_empty() {
+            0.0
+        } else {
+            latencies.iter().sum::<f64>() / latencies.len() as f64
+        };
+        let max_lat = packets.iter().map(|p| p.t_done.saturating_sub(p.t_inject)).max().unwrap_or(0);
+
+        SimResult {
+            cycles: cycle,
+            packets: n_packets,
+            flits: total_flits,
+            mean_packet_latency: mean_lat,
+            max_packet_latency: max_lat,
+            link_utilization: if cycle == 0 || n_links == 0 {
+                0.0
+            } else {
+                flit_slots_used as f64 / (cycle as f64 * n_links as f64)
+            },
+            scale,
+        }
+    }
+
+    /// Wall-clock seconds for a phase: drained cycles at the NoI clock,
+    /// scaled back up if the phase was volume-sampled.
+    pub fn phase_secs(&self, m: &TrafficMatrix, flit_bytes: f64, clock_hz: f64) -> f64 {
+        let r = self.run_phase(m, flit_bytes);
+        r.cycles as f64 * r.scale / clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Placement;
+    use crate::model::kernels::KernelKind;
+
+    fn mesh4() -> (Topology, RoutingTable) {
+        let p = Placement::identity(16, 4, 4);
+        let t = Topology::mesh(&p);
+        let r = RoutingTable::build(&t);
+        (t, r)
+    }
+
+    #[test]
+    fn single_packet_latency_close_to_hops() {
+        let (t, r) = mesh4();
+        let sim = CycleSim::new(&t, &r, 8);
+        let mut m = TrafficMatrix::zeros(16, KernelKind::Score, 1);
+        m.add(0, 15, 32.0); // 1 flit at 32B flits
+        let res = sim.run_phase(&m, 32.0);
+        assert_eq!(res.packets, 1);
+        // 6 hops; store-and-forward latency ≈ hops + O(1)
+        assert!(res.mean_packet_latency >= 6.0);
+        assert!(res.mean_packet_latency <= 10.0, "{}", res.mean_packet_latency);
+    }
+
+    #[test]
+    fn all_packets_drain() {
+        let (t, r) = mesh4();
+        let sim = CycleSim::new(&t, &r, 8);
+        let mut m = TrafficMatrix::zeros(16, KernelKind::Score, 1);
+        for s in 0..16 {
+            for d in 0..16 {
+                if s != d {
+                    m.add(s, d, 64.0);
+                }
+            }
+        }
+        let res = sim.run_phase(&m, 32.0);
+        assert_eq!(res.packets, 16 * 15);
+        assert!(res.cycles > 0);
+        assert!(res.link_utilization > 0.0 && res.link_utilization <= 1.0);
+    }
+
+    #[test]
+    fn contention_increases_latency() {
+        let (t, r) = mesh4();
+        let sim = CycleSim::new(&t, &r, 8);
+        let mut solo = TrafficMatrix::zeros(16, KernelKind::Score, 1);
+        solo.add(0, 3, 512.0);
+        let mut contended = TrafficMatrix::zeros(16, KernelKind::Score, 1);
+        // many sources hammering one destination (many-to-few pattern)
+        for s in [0usize, 4, 8, 12, 1, 5, 9, 13] {
+            contended.add(s, 3, 512.0);
+        }
+        let rs = sim.run_phase(&solo, 32.0);
+        let rc = sim.run_phase(&contended, 32.0);
+        assert!(
+            rc.mean_packet_latency > rs.mean_packet_latency,
+            "contended {} vs solo {}",
+            rc.mean_packet_latency,
+            rs.mean_packet_latency
+        );
+    }
+
+    #[test]
+    fn sampling_kicks_in_and_scales() {
+        let (t, r) = mesh4();
+        let mut sim = CycleSim::new(&t, &r, 8);
+        sim.max_flits = 1000;
+        let mut m = TrafficMatrix::zeros(16, KernelKind::FeedForward, 1);
+        m.add(0, 15, 1.0e9);
+        let res = sim.run_phase(&m, 32.0);
+        assert!(res.scale > 1.0);
+        assert!(res.flits <= 1100);
+    }
+
+    #[test]
+    fn chain_slower_than_mesh_under_load() {
+        let p = Placement::identity(16, 4, 4);
+        let mesh = Topology::mesh(&p);
+        let rm = RoutingTable::build(&mesh);
+        let chain = Topology::chain(16, &(0..16).collect::<Vec<_>>());
+        let rc = RoutingTable::build(&chain);
+        let mut m = TrafficMatrix::zeros(16, KernelKind::Score, 1);
+        for s in 0..8 {
+            m.add(s, 15 - s, 640.0);
+        }
+        let sm = CycleSim::new(&mesh, &rm, 8).run_phase(&m, 32.0);
+        let sc = CycleSim::new(&chain, &rc, 8).run_phase(&m, 32.0);
+        assert!(sc.cycles > sm.cycles);
+    }
+
+    #[test]
+    fn empty_phase_is_trivial() {
+        let (t, r) = mesh4();
+        let sim = CycleSim::new(&t, &r, 8);
+        let m = TrafficMatrix::zeros(16, KernelKind::Score, 1);
+        let res = sim.run_phase(&m, 32.0);
+        assert_eq!(res.packets, 0);
+        assert_eq!(res.cycles, 0);
+    }
+}

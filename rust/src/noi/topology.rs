@@ -1,0 +1,265 @@
+//! NoI topology: one router per chiplet site, undirected link set.
+//!
+//! Constraints (paper §3.3): the graph must be connected (no islands) and
+//! must not use more links than the 2D mesh on the same grid.
+
+use crate::arch::Placement;
+use crate::util::Rng;
+use std::collections::{HashSet, VecDeque};
+
+/// Undirected router graph. Router i is colocated with chiplet id i
+/// (routers move with their chiplet when the placement changes — the NoI
+/// link set is expressed chiplet-to-chiplet).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    pub n: usize,
+    /// Canonical (a < b) undirected edges.
+    pub links: Vec<(usize, usize)>,
+}
+
+impl Topology {
+    pub fn new(n: usize, mut links: Vec<(usize, usize)>) -> Topology {
+        for l in links.iter_mut() {
+            if l.0 > l.1 {
+                *l = (l.1, l.0);
+            }
+        }
+        links.sort_unstable();
+        links.dedup();
+        Topology { n, links }
+    }
+
+    /// 2D mesh over the placement's grid: link chiplets on adjacent sites.
+    /// This is the reference topology whose link count upper-bounds every
+    /// candidate design (constraint 2 of §3.3).
+    pub fn mesh(p: &Placement) -> Topology {
+        let mut site_to_chiplet = vec![usize::MAX; p.rows * p.cols];
+        for (id, &s) in p.site_of.iter().enumerate() {
+            site_to_chiplet[s] = id;
+        }
+        let mut links = Vec::new();
+        for r in 0..p.rows {
+            for c in 0..p.cols {
+                let here = site_to_chiplet[r * p.cols + c];
+                if here == usize::MAX {
+                    continue;
+                }
+                if c + 1 < p.cols {
+                    let right = site_to_chiplet[r * p.cols + c + 1];
+                    if right != usize::MAX {
+                        links.push((here, right));
+                    }
+                }
+                if r + 1 < p.rows {
+                    let down = site_to_chiplet[(r + 1) * p.cols + c];
+                    if down != usize::MAX {
+                        links.push((here, down));
+                    }
+                }
+            }
+        }
+        Topology::new(p.site_of.len(), links)
+    }
+
+    /// Chain topology along an explicit chiplet order (the SFC macro).
+    pub fn chain(n: usize, order: &[usize]) -> Topology {
+        let links = order.windows(2).map(|w| (w[0], w[1])).collect();
+        Topology::new(n, links)
+    }
+
+    pub fn link_count(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.links
+            .iter()
+            .filter(|&&(a, b)| a == v || b == v)
+            .count()
+    }
+
+    pub fn adjacency(&self) -> Vec<Vec<usize>> {
+        let mut adj = vec![Vec::new(); self.n];
+        for &(a, b) in &self.links {
+            adj[a].push(b);
+            adj[b].push(a);
+        }
+        adj
+    }
+
+    /// Constraint 1 of §3.3: every chiplet pair reachable.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let adj = self.adjacency();
+        let mut seen = vec![false; self.n];
+        let mut q = VecDeque::from([0usize]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = q.pop_front() {
+            for &w in &adj[v] {
+                if !seen[w] {
+                    seen[w] = true;
+                    count += 1;
+                    q.push_back(w);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    pub fn has_link(&self, a: usize, b: usize) -> bool {
+        let key = (a.min(b), a.max(b));
+        self.links.binary_search(&key).is_ok()
+    }
+
+    /// Add a link; returns false if it already exists or is a self-loop.
+    pub fn add_link(&mut self, a: usize, b: usize) -> bool {
+        if a == b || self.has_link(a, b) {
+            return false;
+        }
+        let key = (a.min(b), a.max(b));
+        let pos = self.links.binary_search(&key).unwrap_err();
+        self.links.insert(pos, key);
+        true
+    }
+
+    /// Remove a link; returns false if absent or if removal disconnects.
+    pub fn remove_link_checked(&mut self, a: usize, b: usize) -> bool {
+        let key = (a.min(b), a.max(b));
+        let Ok(pos) = self.links.binary_search(&key) else {
+            return false;
+        };
+        self.links.remove(pos);
+        if self.is_connected() {
+            true
+        } else {
+            self.links.insert(pos, key);
+            false
+        }
+    }
+
+    /// Random rewire move for the MOO local search: remove one link (if
+    /// connectivity survives) and add another, keeping link count fixed
+    /// and ≤ the mesh budget. Returns true if the move applied.
+    pub fn rewire(&mut self, rng: &mut Rng) -> bool {
+        if self.links.is_empty() {
+            return false;
+        }
+        for _ in 0..8 {
+            let idx = rng.below(self.links.len());
+            let (a, b) = self.links[idx];
+            if !self.remove_link_checked(a, b) {
+                continue;
+            }
+            // add a random absent edge
+            for _ in 0..16 {
+                let x = rng.below(self.n);
+                let y = rng.below(self.n);
+                if x != y && !self.has_link(x, y) {
+                    self.add_link(x, y);
+                    return true;
+                }
+            }
+            // couldn't place a new edge: restore
+            self.add_link(a, b);
+            return false;
+        }
+        false
+    }
+
+    /// All candidate neighbor designs obtained by moving one endpoint of
+    /// one link (used by the greedy base search for determinism).
+    pub fn neighbor_rewires(&self, limit: usize, rng: &mut Rng) -> Vec<Topology> {
+        let mut out = Vec::new();
+        let mut tried = HashSet::new();
+        let mut attempts = 0;
+        while out.len() < limit && attempts < limit * 10 {
+            attempts += 1;
+            let mut cand = self.clone();
+            if cand.rewire(rng) && tried.insert(cand.links.clone()) {
+                out.push(cand);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Placement;
+
+    #[test]
+    fn mesh_6x6_link_count() {
+        let p = Placement::identity(36, 6, 6);
+        let t = Topology::mesh(&p);
+        // full 6x6 mesh: 2*6*5 = 60 links
+        assert_eq!(t.link_count(), 60);
+        assert!(t.is_connected());
+    }
+
+    #[test]
+    fn mesh_with_unplaced_sites() {
+        // 10 chiplets on a 4x4 grid: mesh still connected over used sites?
+        // identity fills sites 0..10 = rows 0,1 full + half row 2 — connected.
+        let p = Placement::identity(10, 4, 4);
+        let t = Topology::mesh(&p);
+        assert!(t.is_connected());
+    }
+
+    #[test]
+    fn chain_is_connected_line() {
+        let order: Vec<usize> = (0..8).collect();
+        let t = Topology::chain(8, &order);
+        assert_eq!(t.link_count(), 7);
+        assert!(t.is_connected());
+        assert_eq!(t.degree(0), 1);
+        assert_eq!(t.degree(3), 2);
+    }
+
+    #[test]
+    fn add_remove_roundtrip() {
+        let p = Placement::identity(16, 4, 4);
+        let mut t = Topology::mesh(&p);
+        let n0 = t.link_count();
+        assert!(t.add_link(0, 15));
+        assert!(!t.add_link(0, 15), "duplicate rejected");
+        assert!(t.remove_link_checked(0, 15));
+        assert_eq!(t.link_count(), n0);
+    }
+
+    #[test]
+    fn remove_refuses_disconnect() {
+        let t0 = Topology::chain(4, &[0, 1, 2, 3]);
+        let mut t = t0.clone();
+        assert!(!t.remove_link_checked(1, 2), "cut link must be refused");
+        assert_eq!(t, t0);
+    }
+
+    #[test]
+    fn rewire_preserves_invariants() {
+        let p = Placement::identity(36, 6, 6);
+        let mesh = Topology::mesh(&p);
+        let mut t = mesh.clone();
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            t.rewire(&mut rng);
+            assert!(t.is_connected());
+            assert!(t.link_count() <= mesh.link_count());
+        }
+    }
+
+    #[test]
+    fn neighbor_rewires_are_distinct() {
+        let p = Placement::identity(16, 4, 4);
+        let t = Topology::mesh(&p);
+        let mut rng = Rng::new(9);
+        let nb = t.neighbor_rewires(10, &mut rng);
+        assert!(!nb.is_empty());
+        for x in &nb {
+            assert!(x.is_connected());
+        }
+    }
+}

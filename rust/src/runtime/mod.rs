@@ -1,0 +1,258 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the XLA CPU client.
+//!
+//! Interchange is HLO *text* (not serialized HloModuleProto): jax >= 0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids. Lowering uses
+//! `return_tuple=True`, so results unwrap with `to_tuple1()`.
+//!
+//! Python never runs on this path — the rust binary is self-contained
+//! once `artifacts/` exists.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape+dtype of one entry argument (from manifest.json).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Artifact manifest (python/compile/aot.py output).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub entries: BTreeMap<String, (String, Vec<ArgSpec>)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!(
+                "reading {}/manifest.json — run `make artifacts`",
+                dir.display()
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let cfg = j.get("config").context("manifest missing config")?;
+        let get = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("config.{k}"))
+        };
+        let mut entries = BTreeMap::new();
+        for (name, meta) in j
+            .get("entries")
+            .and_then(Json::as_obj)
+            .context("manifest missing entries")?
+        {
+            let file = meta
+                .get("file")
+                .and_then(Json::as_str)
+                .context("entry.file")?
+                .to_string();
+            let args = meta
+                .get("args")
+                .and_then(Json::as_arr)
+                .context("entry.args")?
+                .iter()
+                .map(|a| -> Result<ArgSpec> {
+                    Ok(ArgSpec {
+                        shape: a
+                            .get("shape")
+                            .and_then(Json::as_arr)
+                            .context("arg.shape")?
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect(),
+                        dtype: a
+                            .get("dtype")
+                            .and_then(Json::as_str)
+                            .context("arg.dtype")?
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(name.clone(), (file, args));
+        }
+        Ok(Manifest {
+            d_model: get("d_model")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            seq_len: get("seq_len")?,
+            vocab: get("vocab")?,
+            entries,
+        })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct LoadedKernel {
+    pub name: String,
+    pub args: Vec<ArgSpec>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedKernel {
+    /// Execute with f32 buffers (one `Vec<f32>` per argument, row-major).
+    /// Returns the flattened f32 output of the 1-tuple result.
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let literals = self.literals(inputs, None)?;
+        self.execute(&literals)
+    }
+
+    /// Execute where one argument (at `int_arg`) is int32 (token ids).
+    pub fn run_f32_with_ids(
+        &self,
+        inputs: &[Vec<f32>],
+        int_arg: usize,
+        ids: &[i32],
+    ) -> Result<Vec<f32>> {
+        let mut literals = self.literals(inputs, Some(int_arg))?;
+        let spec = &self.args[int_arg];
+        if ids.len() != spec.elem_count() {
+            bail!("ids len {} != {:?}", ids.len(), spec.shape);
+        }
+        let shape: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(ids);
+        let lit = if shape.len() <= 1 {
+            lit
+        } else {
+            lit.reshape(&shape)?
+        };
+        literals[int_arg] = lit;
+        self.execute(&literals)
+    }
+
+    fn literals(&self, inputs: &[Vec<f32>], skip: Option<usize>) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.args.len() {
+            bail!(
+                "{}: got {} inputs, artifact wants {}",
+                self.name,
+                inputs.len(),
+                self.args.len()
+            );
+        }
+        let mut out = Vec::with_capacity(inputs.len());
+        for (i, (buf, spec)) in inputs.iter().zip(&self.args).enumerate() {
+            if Some(i) == skip {
+                out.push(xla::Literal::vec1(&[0f32])); // placeholder, replaced by caller
+                continue;
+            }
+            if buf.len() != spec.elem_count() {
+                bail!(
+                    "{} arg {i}: got {} elems, want {:?}",
+                    self.name,
+                    buf.len(),
+                    spec.shape
+                );
+            }
+            let lit = xla::Literal::vec1(buf.as_slice());
+            let shape: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = if shape.len() <= 1 {
+                lit
+            } else {
+                lit.reshape(&shape)?
+            };
+            out.push(lit);
+        }
+        Ok(out)
+    }
+
+    fn execute(&self, literals: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = self.exe.execute::<xla::Literal>(literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple1()?;
+        Ok(tuple.to_vec::<f32>()?)
+    }
+}
+
+/// PJRT-backed artifact runtime.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// CPU client + manifest from the artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+        })
+    }
+
+    /// Compile one artifact by manifest entry name.
+    pub fn load(&self, name: &str) -> Result<LoadedKernel> {
+        let (file, args) = self
+            .manifest
+            .entries
+            .get(name)
+            .with_context(|| format!("no artifact entry '{name}'"))?;
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(LoadedKernel {
+            name: name.to_string(),
+            args: args.clone(),
+            exe,
+        })
+    }
+
+    pub fn entry_names(&self) -> Vec<String> {
+        self.manifest.entries.keys().cloned().collect()
+    }
+}
+
+// Execution tests live in rust/tests/runtime_e2e.rs (they need built
+// artifacts); unit tests here cover the manifest parser only.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_synthetic() {
+        let dir = std::env::temp_dir().join("chiplet_hi_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"config": {"d_model": 128, "n_heads": 4, "d_ff": 512,
+                           "seq_len": 64, "vocab": 512},
+                "entries": {"ffn": {"file": "ffn.hlo.txt",
+                  "args": [{"shape": [64, 128], "dtype": "float32"}]}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.d_model, 128);
+        let (file, args) = &m.entries["ffn"];
+        assert_eq!(file, "ffn.hlo.txt");
+        assert_eq!(args[0].shape, vec![64, 128]);
+        assert_eq!(args[0].elem_count(), 64 * 128);
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        let err = Manifest::load(Path::new("/nonexistent/nope")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

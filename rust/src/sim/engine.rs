@@ -1,0 +1,307 @@
+//! End-to-end composition engine.
+//!
+//! For each phase plan: NoI communication time comes from the analytic
+//! evaluator (bottleneck-link serialization + path latency) or, when
+//! `cycle_accurate` is set, the flit-level simulator. Phase wall time =
+//! max(compute, comm) + dram + overhead (compute/communication overlap
+//! via double buffering; DRAM exposure and host trips are serial).
+//! Eq 9 parallel MHA-FF merges a phase with its predecessor by taking
+//! the max. Energy adds compute + DRAM + NoI link/router energy from
+//! byte-hops. Temperature evaluates the phase-power map on the 2.5D
+//! interposer or the 3D stack (Eq 16-18).
+
+use crate::arch::chiplet::{build_chiplets, Chiplet};
+use crate::arch::{Placement, SfcKind};
+use crate::baselines::{plan, Arch};
+use crate::config::{ModelConfig, SystemConfig};
+use crate::metrics::{KernelMetrics, SimReport};
+use crate::model::kernels::Workload;
+use crate::noi::{analytic, CycleSim, RoutingTable, Topology};
+use crate::thermal;
+
+/// Simulation options.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Use the flit-level cycle simulator for phase comm (slower, used to
+    /// validate the Pareto set and in the e2e examples).
+    pub cycle_accurate: bool,
+    /// SFC used for the ReRAM macro placement seed.
+    pub sfc: SfcKind,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            cycle_accurate: false,
+            sfc: SfcKind::Boustrophedon,
+        }
+    }
+}
+
+/// Build the chiplet list for an architecture on a system config.
+pub fn chiplets_for(sys: &SystemConfig) -> Vec<Chiplet> {
+    build_chiplets(sys.alloc.sm, sys.alloc.mc, sys.alloc.dram, sys.alloc.reram)
+}
+
+/// Simulate one (arch, model, seq_len) point on a system.
+pub fn simulate(
+    arch: Arch,
+    sys: &SystemConfig,
+    model: &ModelConfig,
+    seq_len: usize,
+    opts: &SimOptions,
+) -> SimReport {
+    let chiplets = chiplets_for(sys);
+    let workload = Workload::build(model, seq_len);
+    let plans = plan(arch, sys, &chiplets, &workload);
+
+    // NoI design: HI gets the dataflow-aware placement; the baselines get
+    // the same MOO treatment per §4.1.1 ("we implement the same MOO
+    // algorithm ... to suitably place the chiplets") — structurally this
+    // converges to clustered placements, which the hi_seed also models.
+    let placement = Placement::hi_seed(&chiplets, sys.grid.0, sys.grid.1, opts.sfc);
+    let topo = Topology::mesh(&placement);
+    let routes = RoutingTable::build(&topo);
+    let hw = &sys.hw;
+    let flit_bytes = hw.noi_flit_bits as f64 / 8.0;
+
+    // 3D architectures shorten effective paths via TSVs: model as a comm
+    // discount (vertical hop replaces ~2 planar hops at lower latency).
+    let comm_scale = if arch.is_3d_stacked() { 0.6 } else { 1.0 };
+
+    let mut kernels = Vec::new();
+    let mut latency = 0.0f64;
+    let mut energy = 0.0f64;
+    // running wall-time of the current serial group (phases since the
+    // last pipeline merge) — a parallel_with_prev phase overlaps with the
+    // whole group, not just its immediate predecessor (Eq 9 / §4.2: the
+    // ReRAM macro computes FF while the SMs run the next block's MHA)
+    let mut group_secs = 0.0f64;
+    let mut peak_power_map: Vec<f64> = vec![0.0; chiplets.len()];
+    let mut peak_power = 0.0f64;
+
+    for p in &plans {
+        let comm = if opts.cycle_accurate {
+            let sim = CycleSim::new(&topo, &routes, hw.noi_buffer_flits);
+            sim.phase_secs(&p.traffic, flit_bytes, hw.noi_clock_hz)
+        } else {
+            analytic::phase_comm_secs(&topo, &routes, &p.traffic, hw.noi_link_bw(), hw.noi_hop_secs())
+        } * comm_scale;
+
+        // NoI energy from byte-hops
+        let stats = analytic::evaluate(&topo, &routes, std::slice::from_ref(&p.traffic));
+        let link_pj = hw.noi_pj_per_bit_mm * hw.noi_link_mm + hw.noi_router_pj_per_bit;
+        let noi_energy = stats.byte_hops * 8.0 * link_pj * 1e-12;
+
+        let once = (p.compute_secs.max(comm)) + p.dram_secs + p.overhead_secs;
+        let phase_total = once * p.repeats as f64;
+        let phase_energy =
+            (p.compute_energy_j + p.dram_energy_j) * p.repeats as f64 + noi_energy;
+
+        if p.parallel_with_prev {
+            // pipelined with the preceding serial group: total time is
+            // max(group, phase) instead of the sum
+            latency = latency - group_secs + group_secs.max(phase_total);
+            group_secs = group_secs.max(phase_total);
+        } else {
+            latency += phase_total;
+            group_secs += phase_total;
+        }
+        energy += phase_energy;
+
+        kernels.push(KernelMetrics {
+            kind: p.kind,
+            compute_secs: p.compute_secs,
+            comm_secs: comm,
+            dram_secs: p.dram_secs,
+            overhead_secs: p.overhead_secs,
+            energy_j: phase_energy,
+            repeats: p.repeats,
+        });
+
+        if p.power_w > peak_power {
+            peak_power = p.power_w;
+            // distribute phase power uniformly over the active chiplets
+            for w in peak_power_map.iter_mut() {
+                *w = p.power_w / chiplets.len() as f64;
+            }
+        }
+    }
+
+    // temperature at the peak-power phase
+    let temp_c = match arch {
+        Arch::HaimaOriginal | Arch::TransPimOriginal => {
+            // §4.3: PIM compute units live *inside* the HBM dies — the 8
+            // stacks form 4-tier columns with concentrated power far from
+            // the sink (calibrated to the Fig 11 infeasibility band).
+            use crate::baselines::calib;
+            let col_w = if matches!(arch, Arch::HaimaOriginal) {
+                calib::ORIGINAL_COLUMN_W_HAIMA
+            } else {
+                calib::ORIGINAL_COLUMN_W_TRANSPIM
+            };
+            // mild workload dependence: bigger activations keep more
+            // banks active simultaneously
+            let act_mb = model.act_bytes(seq_len) / 1.0e6;
+            let col_w = col_w + 0.5 * (1.0 + act_mb).ln();
+            let tiers = 4;
+            let cols = crate::baselines::calib::TRANSPIM_STACKS;
+            let mut stack = thermal::StackPower::new(tiers, cols);
+            for c in 0..cols {
+                for t in 0..tiers {
+                    stack.power[t][c] = col_w / tiers as f64;
+                }
+            }
+            thermal::evaluate_stack(hw, &stack).t_peak
+        }
+        Arch::Hi3D => {
+            // two planar tiers (SM-MC tier / ReRAM tier, §4.3) — thermal-
+            // aware MOO keeps columns balanced
+            let tiers = 2;
+            let cols = chiplets.len().div_ceil(tiers);
+            let mut stack = thermal::StackPower::new(tiers, cols);
+            for (i, &w) in peak_power_map.iter().enumerate() {
+                stack.power[i % tiers][(i / tiers) % cols] += w;
+            }
+            thermal::evaluate_stack(hw, &stack).t_peak
+        }
+        _ => thermal::evaluate_2_5d(hw, &peak_power_map),
+    };
+
+    SimReport {
+        arch: arch.name().to_string(),
+        model: model.name.to_string(),
+        seq_len,
+        system_chiplets: sys.size.chiplets(),
+        kernels,
+        latency_secs: latency,
+        energy_j: energy,
+        temp_c,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelZoo, SystemSize};
+    use crate::model::kernels::KernelKind;
+
+    fn sim(arch: Arch, sys: &SystemConfig, model: &ModelConfig, n: usize) -> SimReport {
+        simulate(arch, sys, model, n, &SimOptions::default())
+    }
+
+    #[test]
+    fn hi_beats_both_baselines_36_bert() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let hi = sim(Arch::Hi25D, &sys, &m, 64);
+        let tp = sim(Arch::TransPimChiplet, &sys, &m, 64);
+        let ha = sim(Arch::HaimaChiplet, &sys, &m, 64);
+        assert!(hi.latency_secs < tp.latency_secs, "hi {} tp {}", hi.latency_secs, tp.latency_secs);
+        assert!(hi.latency_secs < ha.latency_secs, "hi {} ha {}", hi.latency_secs, ha.latency_secs);
+        assert!(hi.energy_j < tp.energy_j);
+        assert!(hi.energy_j < ha.energy_j);
+    }
+
+    #[test]
+    fn hi_wins_every_kernel_fig8() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let hi = sim(Arch::Hi25D, &sys, &m, 64);
+        let tp = sim(Arch::TransPimChiplet, &sys, &m, 64);
+        let ha = sim(Arch::HaimaChiplet, &sys, &m, 64);
+        for kind in [
+            KernelKind::Embedding,
+            KernelKind::KqvProj,
+            KernelKind::Score,
+            KernelKind::FeedForward,
+        ] {
+            let t_hi = hi.kernel(kind).unwrap().secs_once();
+            let t_tp = tp.kernel(kind).unwrap().secs_once();
+            let t_ha = ha.kernel(kind).unwrap().secs_once();
+            assert!(t_hi < t_tp, "{kind:?}: hi {t_hi} tp {t_tp}");
+            assert!(t_hi < t_ha, "{kind:?}: hi {t_hi} ha {t_ha}");
+        }
+    }
+
+    #[test]
+    fn haima_beats_transpim_on_score_and_loses_ff() {
+        // paper Fig 8 internal ordering
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let tp = sim(Arch::TransPimChiplet, &sys, &m, 64);
+        let ha = sim(Arch::HaimaChiplet, &sys, &m, 64);
+        let tp_score = tp.kernel(KernelKind::Score).unwrap().secs_once();
+        let ha_score = ha.kernel(KernelKind::Score).unwrap().secs_once();
+        assert!(ha_score < tp_score, "HAIMA wins score: {ha_score} vs {tp_score}");
+        let tp_ff = tp.kernel(KernelKind::FeedForward).unwrap().secs_once();
+        let ha_ff = ha.kernel(KernelKind::FeedForward).unwrap().secs_once();
+        assert!(tp_ff < ha_ff, "TransPIM wins FF: {tp_ff} vs {ha_ff}");
+    }
+
+    #[test]
+    fn originals_slower_than_chiplet_versions() {
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let tp = sim(Arch::TransPimChiplet, &sys, &m, 64);
+        let tpo = sim(Arch::TransPimOriginal, &sys, &m, 64);
+        let ha = sim(Arch::HaimaChiplet, &sys, &m, 64);
+        let hao = sim(Arch::HaimaOriginal, &sys, &m, 64);
+        assert!(tpo.latency_secs > 2.0 * tp.latency_secs);
+        assert!(hao.latency_secs > 2.0 * ha.latency_secs);
+    }
+
+    #[test]
+    fn gain_grows_with_sequence_length_fig9() {
+        let sys = SystemConfig::s64();
+        let m = ModelZoo::bart_large();
+        let gain = |n: usize| {
+            let hi = sim(Arch::Hi25D, &sys, &m, n);
+            let ha = sim(Arch::HaimaChiplet, &sys, &m, n);
+            let tp = sim(Arch::TransPimChiplet, &sys, &m, n);
+            ha.latency_secs.min(tp.latency_secs) / hi.latency_secs
+        };
+        let g64 = gain(64);
+        let g4096 = gain(4096);
+        assert!(g4096 > g64, "gain grows: {g64} -> {g4096}");
+    }
+
+    #[test]
+    fn originals_thermally_infeasible_fig11() {
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::bert_large();
+        let hao = sim(Arch::HaimaOriginal, &sys, &m, 256);
+        let tpo = sim(Arch::TransPimOriginal, &sys, &m, 256);
+        let hi3d = sim(Arch::Hi3D, &sys, &m, 256);
+        assert!(hao.temp_c > sys.hw.dram_t_max_c, "HAIMA {}", hao.temp_c);
+        assert!(tpo.temp_c > sys.hw.dram_t_max_c, "TransPIM {}", tpo.temp_c);
+        assert!(hi3d.temp_c < sys.hw.dram_t_max_c, "3D-HI {}", hi3d.temp_c);
+    }
+
+    #[test]
+    fn cycle_accurate_close_to_analytic() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let fast = sim(Arch::Hi25D, &sys, &m, 64);
+        let slow = simulate(
+            Arch::Hi25D,
+            &sys,
+            &m,
+            64,
+            &SimOptions {
+                cycle_accurate: true,
+                ..Default::default()
+            },
+        );
+        let ratio = slow.latency_secs / fast.latency_secs;
+        assert!(ratio > 0.3 && ratio < 3.5, "cycle/analytic ratio {ratio}");
+    }
+
+    #[test]
+    fn custom_system_sizes_work() {
+        let sys = SystemConfig::new(SystemSize::Custom(49));
+        let m = ModelZoo::bert_base();
+        let r = sim(Arch::Hi25D, &sys, &m, 64);
+        assert!(r.latency_secs > 0.0 && r.latency_secs.is_finite());
+    }
+}

@@ -1,0 +1,9 @@
+//! Full-system simulator: composes architecture phase plans with the NoI
+//! evaluators and the thermal model into end-to-end latency / energy /
+//! temperature reports (the numbers behind Figs 8-11 and Table 4).
+
+pub mod decode;
+pub mod engine;
+
+pub use decode::{generate, DecodeReport};
+pub use engine::{simulate, SimOptions};

@@ -1,0 +1,223 @@
+//! Thermal model and ReRAM thermal-noise objective (paper §4.3,
+//! Eq 16-19). Plays the HotSpot-6.0 role in the tool flow at the
+//! abstraction level the paper's own MOO consumes.
+//!
+//! Vertical heat flow (Eq 16): the system is divided into vertical
+//! columns; the temperature of the core at layer k from the sink is
+//!   T(n,k) = Σ_{i=1..k} ( P_{n,i} Σ_{j=1..i} R_j ) + R_b Σ_{i=1..k} P_{n,i}
+//! Horizontal flow (Eq 17): ΔT(k) = max_n T(n,k) − min_n T(n,k).
+//! Combined objective (Eq 18): T(λ) = max_{n,k} T(n,k) · max_k ΔT(k).
+//! ReRAM noise (Eq 19): N(0, sqrt(4 G k_B T F) / V).
+
+use crate::config::HwParams;
+
+/// Power map of a 3D-stacked system: `power[tier][column]` in W, tier 0
+/// closest to the heat sink.
+#[derive(Debug, Clone)]
+pub struct StackPower {
+    pub tiers: usize,
+    pub columns: usize,
+    pub power: Vec<Vec<f64>>,
+}
+
+impl StackPower {
+    pub fn new(tiers: usize, columns: usize) -> StackPower {
+        StackPower {
+            tiers,
+            columns,
+            power: vec![vec![0.0; columns]; tiers],
+        }
+    }
+
+    pub fn set(&mut self, tier: usize, col: usize, watts: f64) {
+        self.power[tier][col] = watts;
+    }
+}
+
+/// Per-column, per-tier temperatures and the Eq 16-18 aggregates.
+#[derive(Debug, Clone)]
+pub struct ThermalReport {
+    /// T[tier][column] in °C (ambient + rise).
+    pub t: Vec<Vec<f64>>,
+    /// Eq 17 per tier.
+    pub delta_t: Vec<f64>,
+    /// max_{n,k} T(n,k) in °C.
+    pub t_peak: f64,
+    /// Eq 18 combined objective (K * K, on the rise above ambient).
+    pub objective: f64,
+}
+
+/// Evaluate Eq 16-18 for a stack power map.
+pub fn evaluate_stack(hw: &HwParams, p: &StackPower) -> ThermalReport {
+    let mut t = vec![vec![0.0; p.columns]; p.tiers];
+    for n in 0..p.columns {
+        // Eq 16: resistive ladder from the sink upward
+        for k in 0..p.tiers {
+            let mut rise = 0.0;
+            // heat from layers 1..=k passes through resistances below them
+            for i in 0..=k {
+                // Σ_{j=1..i} R_j — uniform per-tier resistance
+                let r_below = hw.theta_tier_k_per_w * (i + 1) as f64;
+                rise += p.power[i][n] * r_below;
+            }
+            let total_power: f64 = (0..=k).map(|i| p.power[i][n]).sum();
+            rise += hw.theta_base_k_per_w * total_power;
+            t[k][n] = hw.t_ambient_c + rise;
+        }
+    }
+    // lateral smoothing between neighbor columns (first-order spreading):
+    // each column exchanges with its neighbors through theta_lateral
+    let alpha = 0.25; // spreading weight
+    for k in 0..p.tiers {
+        let row = t[k].clone();
+        for n in 0..p.columns {
+            let left = if n > 0 { row[n - 1] } else { row[n] };
+            let right = if n + 1 < p.columns { row[n + 1] } else { row[n] };
+            t[k][n] = (1.0 - alpha) * row[n] + alpha * 0.5 * (left + right);
+        }
+    }
+    let mut delta_t = Vec::with_capacity(p.tiers);
+    let mut t_peak = f64::MIN;
+    for k in 0..p.tiers {
+        let max = t[k].iter().cloned().fold(f64::MIN, f64::max);
+        let min = t[k].iter().cloned().fold(f64::MAX, f64::min);
+        delta_t.push(max - min);
+        t_peak = t_peak.max(max);
+    }
+    let max_delta = delta_t.iter().cloned().fold(0.0, f64::max);
+    ThermalReport {
+        objective: (t_peak - hw.t_ambient_c) * max_delta.max(1e-9),
+        t,
+        delta_t,
+        t_peak,
+    }
+}
+
+/// 2.5D steady-state estimate: single tier, per-site power through the
+/// lateral+base resistance (the interposer spreads heat well; hotspots
+/// come from power density).
+pub fn evaluate_2_5d(hw: &HwParams, site_power_w: &[f64]) -> f64 {
+    let peak = site_power_w.iter().cloned().fold(0.0, f64::max);
+    let total: f64 = site_power_w.iter().sum();
+    hw.t_ambient_c
+        + peak * hw.theta_lateral_k_per_w
+        + total * hw.theta_base_k_per_w / (site_power_w.len().max(1) as f64).sqrt()
+}
+
+/// Eq 19: thermal-noise σ of a ReRAM cell conductance read.
+/// G: cell conductance (S), t_celsius: cell temperature, f: operating
+/// frequency (Hz), v: read voltage (V).
+pub fn reram_noise_sigma(g: f64, t_celsius: f64, f: f64, v: f64) -> f64 {
+    const K_B: f64 = 1.380_649e-23;
+    let t_kelvin = t_celsius + 273.15;
+    (4.0 * g * K_B * t_kelvin * f).sqrt() / v
+}
+
+/// MOO noise objective: noise σ of the hottest ReRAM chiplet, normalized
+/// by the cell on-conductance — a dimensionless design penalty.
+pub fn noise_objective(hw: &HwParams, reram_temps_c: &[f64]) -> f64 {
+    let t_hot = reram_temps_c
+        .iter()
+        .cloned()
+        .fold(hw.t_ambient_c, f64::max);
+    // ISAAC-class cell: G_on ≈ 1/25kΩ, read at 0.2 V, F at NoI clock
+    let g_on = 1.0 / 25_000.0;
+    reram_noise_sigma(g_on, t_hot, hw.noi_clock_hz, 0.2) / g_on
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw() -> HwParams {
+        HwParams::default()
+    }
+
+    #[test]
+    fn no_power_is_ambient() {
+        let p = StackPower::new(3, 4);
+        let r = evaluate_stack(&hw(), &p);
+        assert!((r.t_peak - hw().t_ambient_c).abs() < 1e-9);
+        assert!(r.objective < 1e-6);
+    }
+
+    #[test]
+    fn higher_tier_hotter_same_power() {
+        // Eq 16: power far from the sink sees more resistance
+        let mut p1 = StackPower::new(3, 1);
+        p1.set(0, 0, 5.0);
+        let mut p2 = StackPower::new(3, 1);
+        p2.set(2, 0, 5.0);
+        let r1 = evaluate_stack(&hw(), &p1);
+        let r2 = evaluate_stack(&hw(), &p2);
+        assert!(
+            r2.t[2][0] > r1.t[2][0],
+            "top-tier heater {} vs bottom {}",
+            r2.t[2][0],
+            r1.t[2][0]
+        );
+    }
+
+    #[test]
+    fn heat_accumulates_up_the_column() {
+        let mut p = StackPower::new(4, 1);
+        for k in 0..4 {
+            p.set(k, 0, 3.0);
+        }
+        let r = evaluate_stack(&hw(), &p);
+        for k in 1..4 {
+            assert!(r.t[k][0] >= r.t[k - 1][0], "monotone up the stack");
+        }
+    }
+
+    #[test]
+    fn delta_t_detects_imbalance() {
+        let mut p = StackPower::new(1, 4);
+        p.set(0, 0, 10.0);
+        let r = evaluate_stack(&hw(), &p);
+        assert!(r.delta_t[0] > 1.0);
+        let mut q = StackPower::new(1, 4);
+        for c in 0..4 {
+            q.set(0, c, 2.5);
+        }
+        let rq = evaluate_stack(&hw(), &q);
+        assert!(rq.delta_t[0] < r.delta_t[0]);
+    }
+
+    #[test]
+    fn noise_grows_with_temperature_and_freq() {
+        let n_cool = reram_noise_sigma(4e-5, 45.0, 1.2e9, 0.2);
+        let n_hot = reram_noise_sigma(4e-5, 120.0, 1.2e9, 0.2);
+        assert!(n_hot > n_cool);
+        let n_slow = reram_noise_sigma(4e-5, 45.0, 0.6e9, 0.2);
+        assert!(n_cool > n_slow);
+    }
+
+    #[test]
+    fn pim_in_dram_overheats() {
+        // HAIMA-style: 8 compute units/bank * 3.138 W in a stack tier far
+        // from the sink → must cross the 95 C DRAM limit (paper fig 11:
+        // 120-131 C)
+        let h = hw();
+        let mut p = StackPower::new(4, 4);
+        for c in 0..4 {
+            p.set(3, c, 8.0 * 3.138 / 4.0 + 2.0); // compute + DRAM activity
+            p.set(2, c, 4.0);
+            p.set(1, c, 3.0);
+            p.set(0, c, 2.0);
+        }
+        let r = evaluate_stack(&h, &p);
+        assert!(r.t_peak > h.dram_t_max_c, "peak {}", r.t_peak);
+    }
+
+    #[test]
+    fn interposer_2_5d_stays_cool() {
+        // 36 chiplets, ~4.5 W SMs: the 2.5D spread must stay far below
+        // the DRAM limit (the paper's feasibility argument for 2.5D-HI)
+        let h = hw();
+        let power: Vec<f64> = (0..36).map(|i| if i < 20 { 4.5 } else { 1.0 }).collect();
+        let t = evaluate_2_5d(&h, &power);
+        assert!(t < h.dram_t_max_c, "t {t}");
+        assert!(t > h.t_ambient_c);
+    }
+}

@@ -1,0 +1,147 @@
+//! In-crate bench harness (criterion is not in the offline registry).
+//!
+//! Bench targets are declared with `harness = false` in Cargo.toml; each
+//! bench binary builds a [`Table`] of rows mirroring the corresponding
+//! paper table/figure series, and uses [`time_it`]/[`Bencher`] for
+//! wall-clock measurement of hot paths with warmup + repeated samples.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Measure a closure: warmup runs, then `samples` timed runs.
+/// Returns (mean_secs, std_secs, min_secs).
+pub fn time_it<F: FnMut()>(mut f: F, warmup: usize, samples: usize) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    (stats::mean(&times), stats::std_dev(&times), min)
+}
+
+/// Convenience wrapper with throughput reporting.
+pub struct Bencher {
+    pub name: String,
+    pub results: Vec<(String, f64, f64)>, // (label, mean_s, std_s)
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Self {
+        Bencher {
+            name: name.to_string(),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, label: &str, f: F) {
+        let (mean, std, min) = time_it(f, 2, 5);
+        // report min too: on shared containers the mean is noisy, the
+        // minimum is the reproducible number (EXPERIMENTS.md §Perf)
+        println!(
+            "  {label:<44} {:>12.3} ms ± {:>8.3} ms (min {:>10.3} ms)",
+            mean * 1e3,
+            std * 1e3,
+            min * 1e3
+        );
+        self.results.push((label.to_string(), min, std));
+    }
+}
+
+/// Markdown-ish table printer used by every paper-table bench.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Format seconds as engineering-friendly ms string.
+pub fn ms(secs: f64) -> String {
+    format!("{:.2}", secs * 1e3)
+}
+
+/// Format a ratio like "4.6x".
+pub fn ratio(r: f64) -> String {
+    format!("{r:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_monotone() {
+        let (mean, _, min) = time_it(
+            || {
+                std::hint::black_box((0..1000).sum::<u64>());
+            },
+            1,
+            3,
+        );
+        assert!(mean >= 0.0 && min >= 0.0 && min <= mean + 1e-9);
+    }
+
+    #[test]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_panics_on_mismatch() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(ms(0.05), "50.00");
+        assert_eq!(ratio(4.6), "4.60x");
+    }
+}

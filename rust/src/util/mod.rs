@@ -1,0 +1,14 @@
+//! Small in-crate utilities.
+//!
+//! The offline registry only carries the `xla` crate closure, so the PRNG,
+//! JSON parser, CLI parser, bench harness and property-test helper that a
+//! normal project would pull from crates.io live here instead.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;
+
+pub use prng::Rng;
+pub use stats::{mean, percentile, std_dev};

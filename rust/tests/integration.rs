@@ -1,0 +1,213 @@
+//! Cross-module integration tests: full pipelines from config to report,
+//! paper-shape assertions across architectures, MOO on real workloads.
+
+use chiplet_hi::arch::chiplet::build_chiplets;
+use chiplet_hi::arch::SfcKind;
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig, SystemSize};
+use chiplet_hi::model::kernels::{KernelKind, Workload};
+use chiplet_hi::moo::{design::NoiDesign, stage, Evaluator};
+use chiplet_hi::sim::{simulate, SimOptions};
+
+fn opts() -> SimOptions {
+    SimOptions::default()
+}
+
+#[test]
+fn all_archs_all_systems_finite() {
+    for sys in [SystemConfig::s36(), SystemConfig::s64(), SystemConfig::s100()] {
+        for arch in Arch::all() {
+            let r = simulate(arch, &sys, &ModelZoo::bert_base(), 64, &opts());
+            assert!(r.latency_secs > 0.0 && r.latency_secs.is_finite(), "{arch:?}");
+            assert!(r.energy_j > 0.0 && r.energy_j.is_finite(), "{arch:?}");
+            assert!(r.temp_c > 40.0 && r.temp_c < 300.0, "{arch:?} T={}", r.temp_c);
+        }
+    }
+}
+
+#[test]
+fn all_models_run_on_matching_systems() {
+    // paper's pairing: 36->BERT-Base, 64->BERT/BART-Large, 100->LLMs
+    let pairs = [
+        (SystemConfig::s36(), ModelZoo::bert_base()),
+        (SystemConfig::s64(), ModelZoo::bert_large()),
+        (SystemConfig::s64(), ModelZoo::bart_base()),
+        (SystemConfig::s64(), ModelZoo::bart_large()),
+        (SystemConfig::s100(), ModelZoo::gpt_j()),
+        (SystemConfig::s100(), ModelZoo::llama2_7b()),
+    ];
+    for (sys, m) in pairs {
+        let r = simulate(Arch::Hi25D, &sys, &m, 64, &opts());
+        assert!(r.latency_secs > 0.0, "{}", m.name);
+    }
+}
+
+#[test]
+fn table4_orderings_reproduced() {
+    // 4a: 36 chiplets, BERT-Base: HI < TransPIM < HAIMA
+    let sys = SystemConfig::s36();
+    let m = ModelZoo::bert_base();
+    let hi = simulate(Arch::Hi25D, &sys, &m, 64, &opts());
+    let tp = simulate(Arch::TransPimChiplet, &sys, &m, 64, &opts());
+    let ha = simulate(Arch::HaimaChiplet, &sys, &m, 64, &opts());
+    assert!(hi.latency_secs < tp.latency_secs && tp.latency_secs < ha.latency_secs);
+
+    // 4b: 100 chiplets, GPT-J: HI < HAIMA < TransPIM (crossover!)
+    let sys = SystemConfig::s100();
+    let m = ModelZoo::gpt_j();
+    let hi = simulate(Arch::Hi25D, &sys, &m, 64, &opts());
+    let tp = simulate(Arch::TransPimChiplet, &sys, &m, 64, &opts());
+    let ha = simulate(Arch::HaimaChiplet, &sys, &m, 64, &opts());
+    assert!(hi.latency_secs < ha.latency_secs && ha.latency_secs < tp.latency_secs);
+}
+
+#[test]
+fn headline_gains_in_band() {
+    // paper: up to 11.8x latency, 2.36x energy vs chiplet baselines at 100
+    let sys = SystemConfig::s100();
+    let mut max_lat: f64 = 0.0;
+    let mut max_e: f64 = 0.0;
+    for m in [ModelZoo::gpt_j(), ModelZoo::llama2_7b()] {
+        for n in [64usize, 256] {
+            let hi = simulate(Arch::Hi25D, &sys, &m, n, &opts());
+            for arch in [Arch::TransPimChiplet, Arch::HaimaChiplet] {
+                let b = simulate(arch, &sys, &m, n, &opts());
+                max_lat = max_lat.max(b.latency_secs / hi.latency_secs);
+                max_e = max_e.max(b.energy_j / hi.energy_j);
+            }
+        }
+    }
+    assert!(max_lat > 6.0 && max_lat < 40.0, "latency gain {max_lat}");
+    assert!(max_e > 1.8 && max_e < 4.5, "energy gain {max_e}");
+}
+
+#[test]
+fn gain_monotone_band_fig9() {
+    let sys = SystemConfig::s64();
+    let m = ModelZoo::bart_large();
+    let gain = |n: usize| {
+        let hi = simulate(Arch::Hi25D, &sys, &m, n, &opts());
+        let tp = simulate(Arch::TransPimChiplet, &sys, &m, n, &opts());
+        let ha = simulate(Arch::HaimaChiplet, &sys, &m, n, &opts());
+        tp.latency_secs.min(ha.latency_secs) / hi.latency_secs
+    };
+    assert!(gain(4096) > gain(64), "gain grows with sequence length");
+}
+
+#[test]
+fn moo_improves_hi_seed_end_to_end() {
+    // optimize a 36-chiplet design and verify the knee beats the mesh on
+    // both objectives
+    let sys = SystemConfig::s36();
+    let chiplets = build_chiplets(20, 4, 4, 8);
+    let w = Workload::build(&ModelZoo::bert_base(), 64);
+    let ev = Evaluator::new(&sys, &chiplets, &w);
+    let seeds = vec![
+        NoiDesign::mesh_seed(&sys, 36),
+        NoiDesign::hi_seed(&sys, &chiplets, SfcKind::Boustrophedon),
+    ];
+    let cfg = stage::StageConfig {
+        iterations: 3,
+        max_steps: 15,
+        ..Default::default()
+    };
+    let r = stage::moo_stage(&ev, seeds, &cfg);
+    let best = r.archive.best_scalar().unwrap();
+    assert!(best.0[0] < 1.0, "knee mu {} < mesh", best.0[0]);
+}
+
+#[test]
+fn thermal_feasibility_split() {
+    let sys = SystemConfig::s100();
+    for m in [ModelZoo::bert_large(), ModelZoo::gpt_j()] {
+        let hi3d = simulate(Arch::Hi3D, &sys, &m, 256, &opts());
+        let hao = simulate(Arch::HaimaOriginal, &sys, &m, 256, &opts());
+        let tpo = simulate(Arch::TransPimOriginal, &sys, &m, 256, &opts());
+        assert!(hi3d.temp_c < 95.0, "{}: 3D-HI {}", m.name, hi3d.temp_c);
+        assert!(hao.temp_c > 95.0, "{}: HAIMA {}", m.name, hao.temp_c);
+        assert!(tpo.temp_c > 95.0, "{}: TransPIM {}", m.name, tpo.temp_c);
+        // paper band: 120-131 C
+        for t in [hao.temp_c, tpo.temp_c] {
+            assert!(t > 110.0 && t < 145.0, "{}: T={} outside paper band", m.name, t);
+        }
+    }
+}
+
+#[test]
+fn cycle_accurate_consistent_with_analytic() {
+    let sys = SystemConfig::s36();
+    let m = ModelZoo::bert_base();
+    let fast = simulate(Arch::Hi25D, &sys, &m, 64, &opts());
+    let slow = simulate(
+        Arch::Hi25D,
+        &sys,
+        &m,
+        64,
+        &SimOptions {
+            cycle_accurate: true,
+            ..Default::default()
+        },
+    );
+    let ratio = slow.latency_secs / fast.latency_secs;
+    assert!(ratio > 0.3 && ratio < 4.0, "ratio {ratio}");
+}
+
+#[test]
+fn sequence_scaling_superlinear_for_attention() {
+    let sys = SystemConfig::s64();
+    let m = ModelZoo::bert_large();
+    let r64 = simulate(Arch::Hi25D, &sys, &m, 64, &opts());
+    let r1024 = simulate(Arch::Hi25D, &sys, &m, 1024, &opts());
+    let scale = r1024.latency_secs / r64.latency_secs;
+    assert!(scale > 4.0, "16x tokens should scale >4x: {scale}");
+}
+
+#[test]
+fn mqa_cheaper_than_mha_at_same_size() {
+    let sys = SystemConfig::s100();
+    let llama = simulate(Arch::Hi25D, &sys, &ModelZoo::llama2_7b(), 256, &opts());
+    let mut mha = ModelZoo::llama2_7b();
+    mha.attention = chiplet_hi::config::AttentionKind::Mha;
+    let mha_r = simulate(Arch::Hi25D, &sys, &mha, 256, &opts());
+    assert!(llama.latency_secs <= mha_r.latency_secs);
+}
+
+#[test]
+fn parallel_block_faster_than_serial() {
+    let sys = SystemConfig::s100();
+    let gptj = simulate(Arch::Hi25D, &sys, &ModelZoo::gpt_j(), 256, &opts());
+    let mut serial = ModelZoo::gpt_j();
+    serial.block = chiplet_hi::config::BlockKind::Serial;
+    let serial_r = simulate(Arch::Hi25D, &sys, &serial, 256, &opts());
+    assert!(gptj.latency_secs <= serial_r.latency_secs * 1.001);
+}
+
+#[test]
+fn custom_system_scaling_monotone() {
+    let m = ModelZoo::bert_large();
+    let lat = |n: usize| {
+        let sys = SystemConfig::new(SystemSize::Custom(n));
+        simulate(Arch::Hi25D, &sys, &m, 256, &opts()).latency_secs
+    };
+    // more chiplets => faster (or equal), across a sweep
+    let l36 = lat(36);
+    let l144 = lat(144);
+    assert!(l144 < l36, "scaling: 36 -> {l36}, 144 -> {l144}");
+}
+
+#[test]
+fn per_kernel_fig8_internal_ordering() {
+    let sys = SystemConfig::s36();
+    let m = ModelZoo::bert_base();
+    let tp = simulate(Arch::TransPimChiplet, &sys, &m, 64, &opts());
+    let ha = simulate(Arch::HaimaChiplet, &sys, &m, 64, &opts());
+    // HAIMA wins score, TransPIM wins FF (paper Fig 8 discussion)
+    assert!(
+        ha.kernel(KernelKind::Score).unwrap().secs_once()
+            < tp.kernel(KernelKind::Score).unwrap().secs_once()
+    );
+    assert!(
+        tp.kernel(KernelKind::FeedForward).unwrap().secs_once()
+            < ha.kernel(KernelKind::FeedForward).unwrap().secs_once()
+    );
+}

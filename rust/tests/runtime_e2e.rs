@@ -1,0 +1,134 @@
+//! Runtime + coordinator end-to-end tests. These REQUIRE artifacts/
+//! (run `make artifacts` first); they are skipped gracefully when the
+//! artifacts are missing so `cargo test` works on a fresh checkout.
+
+use chiplet_hi::config::SystemConfig;
+use chiplet_hi::coordinator::{run_functional, TinyParams};
+use chiplet_hi::runtime::Runtime;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn manifest_covers_all_entries() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new("artifacts").unwrap();
+    let names = rt.entry_names();
+    for want in [
+        "encoder_layer",
+        "encoder_layer_parallel",
+        "attention",
+        "attention_mqa",
+        "ffn",
+        "embed",
+    ] {
+        assert!(names.iter().any(|n| n == want), "missing artifact {want}");
+    }
+}
+
+#[test]
+fn ffn_artifact_executes_and_matches_host_math() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new("artifacts").unwrap();
+    let m = &rt.manifest;
+    let k = rt.load("ffn").unwrap();
+    // zero weights => GeLU(0)@0 + b2 broadcast
+    let n = m.seq_len;
+    let d = m.d_model;
+    let dff = m.d_ff;
+    let x = vec![0.5f32; n * d];
+    let w1 = vec![0.0f32; d * dff];
+    let b1 = vec![0.0f32; dff];
+    let w2 = vec![0.0f32; dff * d];
+    let b2 = vec![1.25f32; d];
+    let out = k.run_f32(&[x, w1, b1, w2, b2]).unwrap();
+    assert_eq!(out.len(), n * d);
+    for v in out {
+        assert!((v - 1.25).abs() < 1e-6, "got {v}");
+    }
+}
+
+#[test]
+fn attention_artifact_uniform_v_property() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new("artifacts").unwrap();
+    let m = &rt.manifest;
+    let k = rt.load("attention").unwrap();
+    let (h, n, dh) = (m.n_heads, m.seq_len, m.d_model / m.n_heads);
+    // V = const => attention output = const (softmax rows sum to 1)
+    let q: Vec<f32> = (0..h * n * dh).map(|i| ((i % 13) as f32) * 0.1).collect();
+    let kk: Vec<f32> = (0..h * n * dh).map(|i| ((i % 7) as f32) * 0.1).collect();
+    let v = vec![3.0f32; h * n * dh];
+    let out = k.run_f32(&[q, kk, v]).unwrap();
+    for x in out {
+        assert!((x - 3.0).abs() < 1e-4, "softmax-weighted const V must be const: {x}");
+    }
+}
+
+#[test]
+fn embed_artifact_gathers_rows() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new("artifacts").unwrap();
+    let m = &rt.manifest;
+    let k = rt.load("embed").unwrap();
+    let (v, n, d) = (m.vocab, m.seq_len, m.d_model);
+    // emb[t] = t, pos = 0 => out row i = ids[i]
+    let emb: Vec<f32> = (0..v).flat_map(|t| std::iter::repeat(t as f32).take(d)).collect();
+    let pos = vec![0.0f32; n * d];
+    let ids: Vec<i32> = (0..n as i32).map(|i| (i * 3) % v as i32).collect();
+    let out = k.run_f32_with_ids(&[emb, pos, vec![]], 2, &ids).unwrap();
+    for (i, row) in out.chunks(d).enumerate() {
+        for x in row {
+            assert!((x - ids[i] as f32).abs() < 1e-6);
+        }
+    }
+}
+
+#[test]
+fn functional_driver_validates_and_is_deterministic() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let sys = SystemConfig::s36();
+    let a = run_functional("artifacts", 2, &sys, 5e-4).unwrap();
+    let b = run_functional("artifacts", 2, &sys, 5e-4).unwrap();
+    assert!(a.max_deviation < 5e-4);
+    assert_eq!(a.checksum, b.checksum, "bitwise deterministic");
+    assert!(a.checksum > 0.0);
+}
+
+#[test]
+fn tiny_params_deterministic() {
+    let a = TinyParams::generate(32, 64, 128, 16, 42);
+    let b = TinyParams::generate(32, 64, 128, 16, 42);
+    assert_eq!(a.wq, b.wq);
+    assert_eq!(a.emb, b.emb);
+    let c = TinyParams::generate(32, 64, 128, 16, 43);
+    assert_ne!(a.wq, c.wq);
+}
+
+#[test]
+fn wrong_input_shapes_rejected() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new("artifacts").unwrap();
+    let k = rt.load("ffn").unwrap();
+    let err = k.run_f32(&[vec![0.0; 3]]).unwrap_err();
+    assert!(err.to_string().contains("inputs"), "{err}");
+}
