@@ -14,7 +14,7 @@ use chiplet_hi::coordinator::run_functional;
 use chiplet_hi::sim::{simulate, SimOptions};
 use chiplet_hi::util::bench::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> chiplet_hi::util::error::Result<()> {
     let sys = SystemConfig::s36();
 
     // ---- 1. functional pass: real numerics through all three layers

@@ -73,7 +73,7 @@ fn main() {
     // cycle-accurate validation of the knee design (SS3.3 last step)
     if let Some(d) = best_design {
         let routes = RoutingTable::build(&d.topo);
-        let sim = CycleSim::new(&d.topo, &routes, sys.hw.noi_buffer_flits);
+        let mut sim = CycleSim::new(&d.topo, &routes, sys.hw.noi_buffer_flits);
         let phases = chiplet_hi::model::traffic::hi_traffic(&sys, &chiplets, &workload);
         let mut total_cycles = 0u64;
         for p in &phases {

@@ -1,0 +1,86 @@
+//! Request-level serving under load: HI vs HAIMA vs TransPIM on GPT-J
+//! (100 chiplets), continuous batching with Poisson arrivals.
+//!
+//! Sweeps the offered load and prints throughput, TTFT/TPOT tails and
+//! energy per request for each architecture, plus the effect of
+//! prefill/decode disaggregation at the highest load — the ROADMAP
+//! "serve heavy traffic" scenario on top of the build-once Platform.
+//!
+//! Run: `cargo run --release --example serving_load`
+
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::sim::{ArrivalProcess, Platform, ServingConfig, ServingSim, SimOptions};
+use chiplet_hi::util::bench::Table;
+
+fn main() {
+    let sys = SystemConfig::s100();
+    let model = ModelZoo::gpt_j();
+    let opts = SimOptions::default();
+    let arches = [Arch::Hi25D, Arch::TransPimChiplet, Arch::HaimaChiplet];
+    let platforms: Vec<Platform> = arches
+        .iter()
+        .map(|&a| Platform::new(a, &sys, &opts))
+        .collect();
+
+    println!(
+        "serving {} on {} chiplets: 64 requests, prompt 128, gen 64, batch 16\n",
+        model.name,
+        sys.size.chiplets()
+    );
+
+    for rate in [16.0, 64.0, 256.0] {
+        let mut t = Table::new(
+            &format!("offered load {rate:.0} req/s (Poisson)"),
+            &[
+                "arch", "tok/s", "TTFT p50 ms", "TTFT p99 ms", "TPOT p50 ms", "TPOT p99 ms",
+                "mJ/req", "batch",
+            ],
+        );
+        for p in &platforms {
+            let cfg = ServingConfig {
+                arrivals: ArrivalProcess::Poisson {
+                    rate_per_sec: rate,
+                    num_requests: 64,
+                },
+                ..Default::default()
+            };
+            let r = ServingSim::new(p, &model, cfg).run();
+            t.row(vec![
+                r.arch.clone(),
+                format!("{:.1}", r.throughput_tok_s),
+                format!("{:.3}", r.ttft_p50_secs * 1e3),
+                format!("{:.3}", r.ttft_p99_secs * 1e3),
+                format!("{:.4}", r.tpot_p50_secs * 1e3),
+                format!("{:.4}", r.tpot_p99_secs * 1e3),
+                format!("{:.2}", r.energy_per_req_j * 1e3),
+                format!("{:.1}", r.mean_batch),
+            ]);
+        }
+        t.print();
+    }
+
+    // prefill/decode disaggregation at the highest load (2.5D-HI)
+    let mut t = Table::new(
+        "prefill/decode disaggregation, 2.5D-HI @ 256 req/s",
+        &["mode", "tok/s", "TTFT p99 ms", "TPOT p99 ms"],
+    );
+    for disagg in [false, true] {
+        let cfg = ServingConfig {
+            arrivals: ArrivalProcess::Poisson {
+                rate_per_sec: 256.0,
+                num_requests: 64,
+            },
+            disaggregate_prefill: disagg,
+            ..Default::default()
+        };
+        let r = ServingSim::new(&platforms[0], &model, cfg).run();
+        t.row(vec![
+            if disagg { "disaggregated" } else { "aggregated" }.into(),
+            format!("{:.1}", r.throughput_tok_s),
+            format!("{:.3}", r.ttft_p99_secs * 1e3),
+            format!("{:.4}", r.tpot_p99_secs * 1e3),
+        ]);
+    }
+    t.print();
+}

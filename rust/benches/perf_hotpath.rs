@@ -1,5 +1,6 @@
 //! L3 hot-path microbenchmarks (EXPERIMENTS.md SSPerf): the inner loops
-//! the MOO and the system simulator spend their time in.
+//! the MOO and the system simulator spend their time in, plus the
+//! build-once Platform payoff (amortized setup vs per-call rebuild).
 
 use chiplet_hi::arch::{Placement, SfcKind};
 use chiplet_hi::baselines::Arch;
@@ -9,7 +10,7 @@ use chiplet_hi::model::traffic::hi_traffic;
 use chiplet_hi::moo::{design::NoiDesign, Evaluator};
 use chiplet_hi::noi::{analytic, CycleSim, RoutingTable, Topology};
 use chiplet_hi::sim::engine::chiplets_for;
-use chiplet_hi::sim::{simulate, SimOptions};
+use chiplet_hi::sim::{simulate, Platform, SimOptions};
 use chiplet_hi::util::bench::Bencher;
 
 fn main() {
@@ -34,17 +35,52 @@ fn main() {
     b.bench("moo_objective_eval", || {
         std::hint::black_box(ev.objectives(&d));
     });
+
+    // build-once Platform vs per-call rebuild: simulate() reconstructs
+    // chiplets + placement + topology + routing tables + cycle-sim
+    // tables on every call; Platform::run amortizes all of it
+    let opts = SimOptions::default();
     b.bench("full_system_simulate_hi", || {
-        std::hint::black_box(simulate(Arch::Hi25D, &sys, &ModelZoo::gpt_j(), 256, &SimOptions::default()));
+        std::hint::black_box(simulate(Arch::Hi25D, &sys, &ModelZoo::gpt_j(), 256, &opts));
     });
-    let sim = CycleSim::new(&topo, &routes, 8);
+    let platform = Platform::new(Arch::Hi25D, &sys, &opts);
+    b.bench("platform_reuse_simulate", || {
+        std::hint::black_box(platform.run(&ModelZoo::gpt_j(), 256, &opts));
+    });
+    let min_of = |b: &Bencher, label: &str| {
+        b.results
+            .iter()
+            .find(|(l, _, _)| l == label)
+            .map(|&(_, min, _)| min)
+            .unwrap_or(f64::NAN)
+    };
+    let rebuild = min_of(&b, "full_system_simulate_hi");
+    let reuse = min_of(&b, "platform_reuse_simulate");
+    println!(
+        "\nplatform reuse speedup: {:.2}x (rebuild {:.3} ms -> reuse {:.3} ms per evaluation)",
+        rebuild / reuse,
+        rebuild * 1e3,
+        reuse * 1e3
+    );
+
+    let mut sim = CycleSim::new(&topo, &routes, 8);
     let flit = 32.0;
     b.bench("cycle_sim_score_phase", || {
         std::hint::black_box(sim.run_phase(&phases[2], flit));
     });
     // throughput metric for the cycle sim
     let r = sim.run_phase(&phases[2], flit);
-    let (mean, _, _) = chiplet_hi::util::bench::time_it(|| { std::hint::black_box(sim.run_phase(&phases[2], flit)); }, 1, 3);
-    println!("\ncycle sim throughput: {:.2} Mflit-hops/s  ({} flits, {} cycles)",
-        (r.flits as f64 * 6.0) / mean / 1e6, r.flits, r.cycles);
+    let (mean, _, _) = chiplet_hi::util::bench::time_it(
+        || {
+            std::hint::black_box(sim.run_phase(&phases[2], flit));
+        },
+        1,
+        3,
+    );
+    println!(
+        "\ncycle sim throughput: {:.2} Mflit-hops/s  ({} flits, {} cycles)",
+        (r.flits as f64 * 6.0) / mean / 1e6,
+        r.flits,
+        r.cycles
+    );
 }

@@ -12,13 +12,20 @@
 
 pub mod tensor;
 
-use crate::baselines::Arch;
+use crate::bail;
 use crate::config::{AttentionKind, BlockKind, ModelConfig, SystemConfig};
 use crate::metrics::SimReport;
-use crate::runtime::Runtime;
-use crate::sim::{simulate, SimOptions};
+use crate::util::error::Result;
 use crate::util::Rng;
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use crate::baselines::Arch;
+#[cfg(feature = "pjrt")]
+use crate::runtime::Runtime;
+#[cfg(feature = "pjrt")]
+use crate::sim::{simulate, SimOptions};
+#[cfg(feature = "pjrt")]
+use crate::util::error::Context;
+#[cfg(feature = "pjrt")]
 use tensor::{add, layernorm, matmul, merge_heads, split_heads};
 
 /// Deterministic parameters for the TINY artifact config (mirrors
@@ -118,6 +125,26 @@ pub fn tiny_model(manifest_d: usize, heads: usize, layers: usize) -> ModelConfig
 
 /// Run the functional driver: real numerics through the artifacts +
 /// simulated platform timing for the same schedule.
+///
+/// Without the `pjrt` feature (the default offline build) this reports
+/// a descriptive error instead — the rest of the crate never touches
+/// the artifact runtime.
+#[cfg(not(feature = "pjrt"))]
+pub fn run_functional(
+    _artifact_dir: &str,
+    _layers: usize,
+    _sys: &SystemConfig,
+    _tolerance: f32,
+) -> Result<FunctionalReport> {
+    bail!(
+        "the functional driver executes PJRT artifacts — rebuild with \
+         `--features pjrt` (needs the vendored `xla` crate, see src/runtime/mod.rs)"
+    )
+}
+
+/// Run the functional driver: real numerics through the artifacts +
+/// simulated platform timing for the same schedule.
+#[cfg(feature = "pjrt")]
 pub fn run_functional(
     artifact_dir: &str,
     layers: usize,

@@ -11,13 +11,19 @@
 //!   Network-on-Interposer with analytic (Eq 11-15) and flit-level cycle
 //!   evaluators, the MOO NoI design optimizer (MOO-STAGE / AMOSA /
 //!   NSGA-II), thermal + ReRAM-noise objectives (Eq 16-20), the
-//!   HAIMA/TransPIM baselines, and the end-to-end system simulator.
+//!   HAIMA/TransPIM baselines, and the end-to-end system simulator,
+//!   layered around a build-once [`sim::Platform`] (platform → engine →
+//!   decode → serving; see `sim/mod.rs`). MOO designs plug through to
+//!   end-to-end runs via the JSON interchange on
+//!   [`moo::design::NoiDesign`].
 //! - **L2/L1 (python/, build-time only)**: the transformer blocks in JAX
 //!   composed from Pallas kernels (FlashAttention, ReRAM bit-sliced MVM),
 //!   AOT-lowered to HLO text artifacts.
-//! - **runtime**: loads the artifacts via the PJRT C API (`xla` crate) so
-//!   the simulated platform executes *real numerics* on the host while
-//!   the timing/energy/thermal models produce the paper's metrics.
+//! - **runtime** (`pjrt` cargo feature): loads the artifacts via the
+//!   PJRT C API (`xla` crate) so the simulated platform executes *real
+//!   numerics* on the host while the timing/energy/thermal models
+//!   produce the paper's metrics. The default build is dependency-free;
+//!   see `src/runtime/mod.rs` for the vendoring requirement.
 //!
 //! See DESIGN.md for the system inventory and the per-figure experiment
 //! index, and EXPERIMENTS.md for the reproduced numbers.

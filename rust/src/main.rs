@@ -2,26 +2,33 @@
 //!
 //! Commands:
 //!   simulate   --system 36|64|100 --model bert-base --seq 64 --arch hi
-//!              [--all-arch] [--cycle-accurate]
+//!              [--all-arch] [--cycle-accurate] [--design file.json]
 //!   sweep      --system 64 --model bart-large        (Fig 9-style table)
 //!   optimize   --system 36 --model bert-base [--solver stage|amosa|nsga2]
-//!              [--3d]                                 (Fig 4 / Eq 10-20)
+//!              [--3d] [--export design.json]          (Fig 4 / Eq 10-20)
 //!   thermal    --system 100 [--seq 256]               (Fig 11 columns)
+//!   generate   --model gpt-j [--prompt 128] [--tokens 64] [--design file]
+//!   serve      --system 100 --model gpt-j [--rate 64] [--requests 64]
+//!              [--prompt 128] [--tokens 64] [--batch 16] [--seed N]
+//!              [--disaggregate] [--design file] [--all-arch]
 //!   endurance  [--seq 4096]                           (§4.4 analysis)
 //!   functional [--layers 2] [--artifacts artifacts]   (end-to-end driver)
 //!   info                                              (Table 1-3 dump)
 
-use anyhow::{bail, Result};
 use chiplet_hi::arch::SfcKind;
 use chiplet_hi::baselines::Arch;
 use chiplet_hi::config::{ModelZoo, SystemConfig, SystemSize};
 use chiplet_hi::coordinator;
 use chiplet_hi::endurance;
 use chiplet_hi::model::kernels::Workload;
-use chiplet_hi::moo::{amosa, design::NoiDesign, nsga2, stage, Evaluator};
-use chiplet_hi::sim::{self, SimOptions};
+use chiplet_hi::moo::{amosa, design::NoiDesign, nsga2, stage, Evaluator, ParetoArchive};
+use chiplet_hi::sim::{
+    self, ArrivalProcess, Platform, ServingConfig, ServingSim, SimOptions,
+};
 use chiplet_hi::util::bench::Table;
 use chiplet_hi::util::cli::Args;
+use chiplet_hi::util::error::{Context, Result};
+use chiplet_hi::{anyhow, bail};
 
 fn main() {
     let args = Args::from_env();
@@ -44,10 +51,10 @@ fn system_from(args: &Args) -> SystemConfig {
     SystemConfig::new(SystemSize::from_chiplets(args.get_usize("system", 36)))
 }
 
-fn model_from(args: &Args) -> Result<chiplet_hi::config::ModelConfig> {
-    let name = args.get_str("model", "bert-base");
+fn model_from(args: &Args, default: &str) -> Result<chiplet_hi::config::ModelConfig> {
+    let name = args.get_str("model", default);
     ModelZoo::by_name(name).ok_or_else(|| {
-        anyhow::anyhow!(
+        anyhow!(
             "unknown model '{name}' (have: {})",
             ModelZoo::all()
                 .iter()
@@ -58,24 +65,47 @@ fn model_from(args: &Args) -> Result<chiplet_hi::config::ModelConfig> {
     })
 }
 
+/// `--design file.json` → validated NoI design, if given.
+fn design_from(args: &Args) -> Result<Option<NoiDesign>> {
+    match args.get("design") {
+        Some(path) => Ok(Some(NoiDesign::load(path)?)),
+        None => Ok(None),
+    }
+}
+
+/// Platform for `arch`: the default hi-seed mesh, or the `--design` file.
+fn platform_for(
+    arch: Arch,
+    sys: &SystemConfig,
+    design: &Option<NoiDesign>,
+    opts: &SimOptions,
+) -> Result<Platform> {
+    match design {
+        Some(d) => Platform::with_design(arch, sys, d.clone()),
+        None => Ok(Platform::new(arch, sys, opts)),
+    }
+}
+
 fn run(cmd: &str, args: &Args) -> Result<()> {
     match cmd {
         "simulate" => {
             let sys = system_from(args);
-            let model = model_from(args)?;
+            let model = model_from(args, "bert-base")?;
             let n = args.get_usize("seq", 64);
             let opts = SimOptions {
                 cycle_accurate: args.has_flag("cycle-accurate"),
                 ..Default::default()
             };
+            let design = design_from(args)?;
             let arches: Vec<Arch> = if args.has_flag("all-arch") {
                 Arch::all().to_vec()
             } else {
                 vec![Arch::by_name(args.get_str("arch", "hi"))
-                    .ok_or_else(|| anyhow::anyhow!("unknown arch"))?]
+                    .ok_or_else(|| anyhow!("unknown arch"))?]
             };
             for arch in arches {
-                let r = sim::simulate(arch, &sys, &model, n, &opts);
+                let platform = platform_for(arch, &sys, &design, &opts)?;
+                let r = platform.run(&model, n, &opts);
                 println!("{}", r.summary_line());
                 if args.has_flag("kernels") {
                     for k in &r.kernels {
@@ -95,17 +125,20 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         }
         "sweep" => {
             let sys = system_from(args);
-            let model = model_from(args)?;
+            let model = model_from(args, "bert-base")?;
+            let opts = SimOptions::default();
+            // one platform per arch, reused across the whole sweep
+            let hi_p = Platform::new(Arch::Hi25D, &sys, &opts);
+            let tp_p = Platform::new(Arch::TransPimChiplet, &sys, &opts);
+            let ha_p = Platform::new(Arch::HaimaChiplet, &sys, &opts);
             let mut t = Table::new(
                 &format!("{}-chiplet sweep, {}", sys.size.chiplets(), model.name),
                 &["N", "2.5D-HI ms", "TransPIM ms", "HAIMA ms", "best-baseline gain"],
             );
             for n in [64usize, 256, 1024, 2056, 4096] {
-                let hi = sim::simulate(Arch::Hi25D, &sys, &model, n, &SimOptions::default());
-                let tp =
-                    sim::simulate(Arch::TransPimChiplet, &sys, &model, n, &SimOptions::default());
-                let ha =
-                    sim::simulate(Arch::HaimaChiplet, &sys, &model, n, &SimOptions::default());
+                let hi = hi_p.run(&model, n, &opts);
+                let tp = tp_p.run(&model, n, &opts);
+                let ha = ha_p.run(&model, n, &opts);
                 let gain = tp.latency_secs.min(ha.latency_secs) / hi.latency_secs;
                 t.row(vec![
                     n.to_string(),
@@ -120,7 +153,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         }
         "optimize" => {
             let sys = system_from(args);
-            let model = model_from(args)?;
+            let model = model_from(args, "bert-base")?;
             let n = args.get_usize("seq", 64);
             let chiplets = sim::engine::chiplets_for(&sys);
             let w = Workload::build(&model, n);
@@ -134,19 +167,23 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 NoiDesign::hi_seed(&sys, &chiplets, SfcKind::Hilbert),
             ];
             let solver = args.get_str("solver", "stage");
-            println!("optimizing {} chiplets / {} / N={n} with {solver} ...", sys.size.chiplets(), model.name);
-            let (front, phv, evals) = match solver {
+            println!(
+                "optimizing {} chiplets / {} / N={n} with {solver} ...",
+                sys.size.chiplets(),
+                model.name
+            );
+            let (archive, phv, evals): (ParetoArchive<NoiDesign>, f64, usize) = match solver {
                 "stage" => {
                     let r = stage::moo_stage(&ev, seeds, &stage::StageConfig::default());
-                    (r.archive.objectives(), r.phv, r.evaluations)
+                    (r.archive, r.phv, r.evaluations)
                 }
                 "amosa" => {
                     let r = amosa::amosa(&ev, seeds[1].clone(), &amosa::AmosaConfig::default());
-                    (r.archive.objectives(), r.phv, r.evaluations)
+                    (r.archive, r.phv, r.evaluations)
                 }
                 "nsga2" => {
                     let r = nsga2::nsga2(&ev, seeds, &nsga2::Nsga2Config::default());
-                    (r.archive.objectives(), r.phv, r.evaluations)
+                    (r.archive, r.phv, r.evaluations)
                 }
                 other => bail!("unknown solver '{other}'"),
             };
@@ -154,7 +191,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 "Pareto front (mesh-normalized, minimize)",
                 &["mu", "sigma", "extra objectives"],
             );
-            let mut front = front;
+            let mut front = archive.objectives();
             front.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
             for o in &front {
                 t.row(vec![
@@ -165,6 +202,19 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             }
             t.print();
             println!("PHV = {phv:.4}  ({evals} evaluations)");
+            if let Some(path) = args.get("export") {
+                let (obj, d) = archive
+                    .best_scalar()
+                    .context("empty Pareto archive — nothing to export")?;
+                d.save(path)?;
+                println!(
+                    "exported knee design (objectives [{}]) to {path}",
+                    obj.iter()
+                        .map(|x| format!("{x:.4}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
             Ok(())
         }
         "thermal" => {
@@ -191,9 +241,11 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "generate" => {
             // autoregressive decode serving: prefill + per-token latency
             let sys = system_from(args);
-            let model = model_from(args)?;
+            let model = model_from(args, "gpt-j")?;
             let prompt = args.get_usize("prompt", 128);
             let tokens = args.get_usize("tokens", 64);
+            let opts = SimOptions::default();
+            let design = design_from(args)?;
             let mut t = Table::new(
                 &format!(
                     "autoregressive serving: {} on {} chiplets (prompt {prompt}, gen {tokens})",
@@ -203,14 +255,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 &["arch", "prefill ms", "ms/tok @start", "ms/tok @end", "tokens/s", "energy mJ"],
             );
             for arch in Arch::chiplet_set() {
-                let r = chiplet_hi::sim::generate(
-                    arch,
-                    &sys,
-                    &model,
-                    prompt,
-                    tokens,
-                    &chiplet_hi::sim::SimOptions::default(),
-                );
+                let platform = platform_for(arch, &sys, &design, &opts)?;
+                let r = sim::generate_on(&platform, &model, prompt, tokens, &opts);
                 t.row(vec![
                     r.arch.clone(),
                     format!("{:.3}", r.prefill_secs * 1e3),
@@ -218,6 +264,68 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     format!("{:.4}", r.tok_secs_end * 1e3),
                     format!("{:.0}", r.tokens_per_sec),
                     format!("{:.1}", r.energy_j * 1e3),
+                ]);
+            }
+            t.print();
+            Ok(())
+        }
+        "serve" => {
+            // request-level continuous-batching serving under load
+            let sys = system_from(args);
+            let model = model_from(args, "gpt-j")?;
+            let opts = SimOptions::default();
+            let design = design_from(args)?;
+            let cfg = ServingConfig {
+                arrivals: ArrivalProcess::Poisson {
+                    rate_per_sec: args.get_f64("rate", 64.0),
+                    num_requests: args.get_usize("requests", 64),
+                },
+                prompt_len: args.get_usize("prompt", 128),
+                gen_tokens: args.get_usize("tokens", 64),
+                max_batch: args.get_usize("batch", 16),
+                disaggregate_prefill: args.has_flag("disaggregate"),
+                seed: args.get_u64("seed", 0x5EED),
+                ..Default::default()
+            };
+            let arches: Vec<Arch> = if args.has_flag("all-arch") || args.get("arch").is_none() {
+                Arch::chiplet_set().to_vec()
+            } else {
+                vec![Arch::by_name(args.get_str("arch", "hi"))
+                    .ok_or_else(|| anyhow!("unknown arch"))?]
+            };
+            println!(
+                "serving {} on {} chiplets: {} req @ {:.1} req/s, prompt {}, gen {}, batch {}{}{}",
+                model.name,
+                sys.size.chiplets(),
+                args.get_usize("requests", 64),
+                args.get_f64("rate", 64.0),
+                cfg.prompt_len,
+                cfg.gen_tokens,
+                cfg.max_batch,
+                if cfg.disaggregate_prefill { ", disaggregated prefill" } else { "" },
+                if design.is_some() { ", custom design" } else { "" },
+            );
+            let mut t = Table::new(
+                "request-level serving",
+                &[
+                    "arch", "tok/s", "TTFT p50 ms", "TTFT p95 ms", "TTFT p99 ms",
+                    "TPOT p50 ms", "TPOT p99 ms", "mJ/req", "batch", "peak KV MB",
+                ],
+            );
+            for arch in arches {
+                let platform = platform_for(arch, &sys, &design, &opts)?;
+                let r = ServingSim::new(&platform, &model, cfg.clone()).run();
+                t.row(vec![
+                    r.arch.clone(),
+                    format!("{:.1}", r.throughput_tok_s),
+                    format!("{:.3}", r.ttft_p50_secs * 1e3),
+                    format!("{:.3}", r.ttft_p95_secs * 1e3),
+                    format!("{:.3}", r.ttft_p99_secs * 1e3),
+                    format!("{:.4}", r.tpot_p50_secs * 1e3),
+                    format!("{:.4}", r.tpot_p99_secs * 1e3),
+                    format!("{:.2}", r.energy_per_req_j * 1e3),
+                    format!("{:.1}", r.mean_batch),
+                    format!("{:.1}", r.peak_kv_bytes / 1e6),
                 ]);
             }
             t.print();
@@ -274,7 +382,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         }
         _ => {
             println!("repro — heterogeneous chiplet platform for end-to-end transformers");
-            println!("commands: simulate | sweep | optimize | thermal | endurance | functional | info");
+            println!("commands: simulate | sweep | optimize | thermal | generate | serve | endurance | functional | info");
+            println!("NoI design plug-through: `optimize --export d.json` then `simulate|generate|serve --design d.json`");
             println!("see README.md for usage");
             Ok(())
         }

@@ -9,6 +9,24 @@
 //! Constraints (§3.3): connected, link count ≤ 2D mesh. Moves keep both
 //! invariant: placement swaps never touch links; link rewires are
 //! connectivity-checked and count-preserving.
+//!
+//! ## Design-interchange format
+//!
+//! `optimize --export` and `simulate/generate/serve --design` exchange
+//! designs as JSON (λ* plug-through — a MOO result runs end-to-end via
+//! [`crate::sim::Platform::with_design`]):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "rows": 6, "cols": 6,
+//!   "placement": [0, 1, 5, ...],        // site index per chiplet id
+//!   "links": [[0, 1], [1, 2], ...]      // undirected router pairs
+//! }
+//! ```
+//!
+//! Load-time validation enforces the §3.3 invariants (bijective
+//! placement, connected topology).
 
 use crate::arch::chiplet::{ids_of, Chiplet, ChipletClass};
 use crate::arch::{Placement, SfcKind};
@@ -16,7 +34,12 @@ use crate::config::SystemConfig;
 use crate::model::{kernels::Workload, traffic, TrafficMatrix};
 use crate::noi::{analytic, RoutingTable, Topology};
 use crate::thermal;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
 use crate::util::Rng;
+use crate::{anyhow, bail};
+use std::fmt::Write as _;
+use std::path::Path;
 
 /// One candidate NoI design.
 #[derive(Debug, Clone, PartialEq)]
@@ -84,6 +107,121 @@ impl NoiDesign {
             return false;
         }
         false
+    }
+
+    /// Serialize to the design-interchange JSON (module docs).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        let p = &self.placement;
+        let _ = write!(
+            out,
+            "{{\n  \"version\": 1,\n  \"rows\": {},\n  \"cols\": {},\n  \"placement\": [",
+            p.rows, p.cols
+        );
+        for (i, &s) in p.site_of.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "{s}");
+        }
+        out.push_str("],\n  \"links\": [");
+        for (i, &(a, b)) in self.topo.links.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "[{a}, {b}]");
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+
+    /// Validate the §3.3 structural invariants (the single source of
+    /// truth — both the JSON loader and `Platform::with_design` call
+    /// this): bijective placement, placement/topology size agreement,
+    /// connected topology, link count within the 2D-mesh budget.
+    pub fn validate(&self) -> Result<()> {
+        if !self.placement.is_valid() {
+            bail!("placement is not a bijection onto grid sites");
+        }
+        if self.topo.n != self.placement.site_of.len() {
+            bail!(
+                "topology has {} routers but placement has {} chiplets",
+                self.topo.n,
+                self.placement.site_of.len()
+            );
+        }
+        if !self.topo.is_connected() {
+            bail!("design topology is not connected (§3.3 constraint 1)");
+        }
+        let mesh_links = Topology::mesh(&self.placement).link_count();
+        if self.topo.link_count() > mesh_links {
+            bail!(
+                "design uses {} links, over the 2D-mesh budget of {mesh_links} (§3.3 constraint 2)",
+                self.topo.link_count()
+            );
+        }
+        Ok(())
+    }
+
+    /// Parse + validate the design-interchange JSON: in-range link
+    /// endpoints plus the [`NoiDesign::validate`] invariants a
+    /// hand-edited file could break.
+    pub fn from_json(src: &str) -> Result<NoiDesign> {
+        let j = Json::parse(src).map_err(|e| anyhow!("design parse: {e}"))?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_usize)
+            .context("design.version")?;
+        if version != 1 {
+            bail!("unsupported design version {version}");
+        }
+        let rows = j.get("rows").and_then(Json::as_usize).context("design.rows")?;
+        let cols = j.get("cols").and_then(Json::as_usize).context("design.cols")?;
+        let site_of: Vec<usize> = j
+            .get("placement")
+            .and_then(Json::as_arr)
+            .context("design.placement")?
+            .iter()
+            .map(|v| v.as_usize().context("placement entry"))
+            .collect::<Result<_>>()?;
+        let n = site_of.len();
+        if n == 0 || rows * cols < n {
+            bail!("placement of {n} chiplets does not fit a {rows}x{cols} grid");
+        }
+        let placement = Placement { rows, cols, site_of };
+        let mut links = Vec::new();
+        for l in j.get("links").and_then(Json::as_arr).context("design.links")? {
+            let pair = l.as_arr().context("link entry")?;
+            if pair.len() != 2 {
+                bail!("link entry must be a [a, b] pair");
+            }
+            let a = pair[0].as_usize().context("link endpoint")?;
+            let b = pair[1].as_usize().context("link endpoint")?;
+            if a >= n || b >= n || a == b {
+                bail!("link ({a}, {b}) out of range for {n} routers");
+            }
+            links.push((a, b));
+        }
+        let topo = Topology::new(n, links);
+        let design = NoiDesign { placement, topo };
+        design.validate()?;
+        Ok(design)
+    }
+
+    /// Write the design JSON to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing design to {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load + validate a design JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<NoiDesign> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading design file {}", path.display()))?;
+        NoiDesign::from_json(&text)
     }
 
     /// Feature vector for the MOO-STAGE learned evaluation function.
@@ -320,6 +458,56 @@ mod tests {
         let d = NoiDesign::hi_seed(&sys, &chips, SfcKind::Boustrophedon);
         let f = d.features(&chips);
         assert!((f[0] - 1.0).abs() < 1e-9, "macro contiguity {}", f[0]);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_design() {
+        let (sys, chips, _) = ctx();
+        let mut d = NoiDesign::hi_seed(&sys, &chips, SfcKind::Hilbert);
+        let mut rng = Rng::new(41);
+        for _ in 0..30 {
+            d.random_move(&mut rng);
+        }
+        let j = d.to_json();
+        let back = NoiDesign::from_json(&j).unwrap();
+        assert_eq!(back, d, "save → load must be lossless");
+    }
+
+    #[test]
+    fn json_rejects_invalid_designs() {
+        // duplicate placement site
+        let bad_placement = r#"{"version": 1, "rows": 2, "cols": 2,
+            "placement": [0, 0, 1], "links": [[0, 1], [1, 2]]}"#;
+        assert!(NoiDesign::from_json(bad_placement).is_err());
+        // disconnected topology
+        let disconnected = r#"{"version": 1, "rows": 2, "cols": 2,
+            "placement": [0, 1, 2, 3], "links": [[0, 1], [2, 3]]}"#;
+        assert!(NoiDesign::from_json(disconnected).is_err());
+        // out-of-range link
+        let bad_link = r#"{"version": 1, "rows": 2, "cols": 2,
+            "placement": [0, 1, 2, 3], "links": [[0, 9]]}"#;
+        assert!(NoiDesign::from_json(bad_link).is_err());
+        // wrong version
+        let bad_version = r#"{"version": 2, "rows": 2, "cols": 2,
+            "placement": [0, 1], "links": [[0, 1]]}"#;
+        assert!(NoiDesign::from_json(bad_version).is_err());
+        // over the 2D-mesh link budget (§3.3 constraint 2): a 2x2 grid
+        // mesh has 4 links; the two diagonals push it to 6
+        let over_budget = r#"{"version": 1, "rows": 2, "cols": 2,
+            "placement": [0, 1, 2, 3],
+            "links": [[0, 1], [0, 2], [1, 3], [2, 3], [0, 3], [1, 2]]}"#;
+        assert!(NoiDesign::from_json(over_budget).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let (sys, chips, _) = ctx();
+        let d = NoiDesign::hi_seed(&sys, &chips, SfcKind::Boustrophedon);
+        let path = std::env::temp_dir().join("chiplet_hi_design_test.json");
+        d.save(&path).unwrap();
+        let back = NoiDesign::load(&path).unwrap();
+        assert_eq!(back, d);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

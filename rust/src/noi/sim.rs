@@ -9,6 +9,12 @@
 //! Large phases are volume-sampled (`max_flits`) — the simulator keeps
 //! the *distributional* behaviour (contention, hotspots) while bounding
 //! runtime; the scale factor is reported so callers can de-normalize.
+//!
+//! The simulator is built once per (topology, routing table) and reused
+//! across phases: the link map, the precomputed out-link table and all
+//! per-cycle scratch buffers live in the struct, so `run_phase` performs
+//! no per-phase rebuild of derived structures (§Perf iteration 4 — this
+//! is what makes `sim::Platform` reuse pay off in the MOO/serving loops).
 
 use crate::model::TrafficMatrix;
 use crate::noi::linkmap::{LinkMap, NO_LINK};
@@ -30,38 +36,125 @@ struct Flit {
 pub struct SimResult {
     pub cycles: u64,
     pub packets: usize,
+    /// Packets whose tail flit reached its destination.
+    pub delivered: usize,
     pub flits: usize,
+    /// Mean latency over *delivered* packets only.
     pub mean_packet_latency: f64,
+    /// Max latency over *delivered* packets only.
     pub max_packet_latency: u64,
     /// Fraction of (link, cycle) slots that carried a flit.
     pub link_utilization: f64,
     /// bytes-per-flit scale if the phase was sampled (1.0 = exact).
     pub scale: f64,
+    /// True iff every packet drained before the `max_cycles` safety
+    /// bound. When false the latency/utilization stats cover only the
+    /// delivered subset — callers must not silently mix them with
+    /// drained phases.
+    pub drained: bool,
 }
 
-/// Flit-level simulator for one topology.
-pub struct CycleSim<'a> {
-    topo: &'a Topology,
-    routes: &'a RoutingTable,
+/// Flit-level simulator for one (topology, routing table) pair.
+///
+/// Construction precomputes the dense link map, the per-router input
+/// lists and the out-link table; `run_phase` reuses internal buffers so
+/// the inner loop is allocation-free across phases.
+pub struct CycleSim {
+    /// router count
+    n: usize,
     /// flit capacity of each router input FIFO
     buffer_flits: usize,
     /// sampling bound on total injected flits per phase
     pub max_flits: usize,
+    lm: LinkMap,
+    /// input links per router
+    in_links: Vec<Vec<usize>>,
+    /// out_table[at*n + dst] = directed link id toward dst
+    /// (NO_LINK when at == dst or unreachable)
+    out_table: Vec<u32>,
+    diameter: usize,
+    // --- reusable per-phase state (cleared at the top of run_phase) ---
+    /// FIFO of flits queued at the *receiving* router of each link
+    queues: Vec<VecDeque<Flit>>,
+    /// per-source injection queues of (packet id, dst)
+    inject: Vec<VecDeque<(u32, u32)>>,
+    /// round-robin arbitration state per router
+    rr: Vec<usize>,
+    out_taken: Vec<bool>,
+    moves: Vec<(usize, usize)>,
+    arrivals: Vec<usize>,
+    /// flits queued at each router's inputs — idle routers skip
+    /// arbitration entirely (§Perf iteration 2)
+    router_load: Vec<u32>,
 }
 
-impl<'a> CycleSim<'a> {
-    pub fn new(topo: &'a Topology, routes: &'a RoutingTable, buffer_flits: usize) -> Self {
+impl CycleSim {
+    pub fn new(topo: &Topology, routes: &RoutingTable, buffer_flits: usize) -> CycleSim {
+        let n = topo.n;
+        let lm = LinkMap::build(topo);
+        let n_links = lm.n_links();
+        let mut in_links: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for l in 0..n_links {
+            in_links[lm.to[l] as usize].push(l);
+        }
+        let mut out_table = vec![NO_LINK; n * n];
+        for at in 0..n {
+            for dst in 0..n {
+                if at != dst {
+                    if let Some(nh) = routes.next_hop(at, dst) {
+                        if let Some(l) = lm.link(at, nh) {
+                            out_table[at * n + dst] = l as u32;
+                        }
+                    }
+                }
+            }
+        }
         CycleSim {
-            topo,
-            routes,
+            n,
             buffer_flits,
             max_flits: 200_000,
+            lm,
+            in_links,
+            out_table,
+            diameter: routes.diameter(),
+            queues: vec![VecDeque::new(); n_links],
+            inject: vec![VecDeque::new(); n],
+            rr: vec![0; n],
+            out_taken: vec![false; n_links],
+            moves: Vec::with_capacity(n_links),
+            arrivals: Vec::with_capacity(n_links),
+            router_load: vec![0u32; n],
         }
+    }
+
+    #[inline]
+    fn out_link(&self, at: usize, dst: usize) -> Option<usize> {
+        let v = self.out_table[at * self.n + dst];
+        if v == NO_LINK {
+            None
+        } else {
+            Some(v as usize)
+        }
+    }
+
+    /// Reset the reusable per-phase state (queues may hold leftovers if
+    /// a previous phase hit the safety bound undrained).
+    fn reset(&mut self) {
+        for q in &mut self.queues {
+            q.clear();
+        }
+        for q in &mut self.inject {
+            q.clear();
+        }
+        self.rr.iter_mut().for_each(|x| *x = 0);
+        self.router_load.iter_mut().for_each(|x| *x = 0);
     }
 
     /// Simulate one traffic phase until all packets drain.
     /// `flit_bytes`: payload bytes per flit (HwParams::noi_flit_bits / 8).
-    pub fn run_phase(&self, m: &TrafficMatrix, flit_bytes: f64) -> SimResult {
+    pub fn run_phase(&mut self, m: &TrafficMatrix, flit_bytes: f64) -> SimResult {
+        self.reset();
+
         // --- build packet list from the traffic matrix
         let flows = m.flows();
         let total_flits_exact: f64 = flows
@@ -83,8 +176,6 @@ impl<'a> CycleSim<'a> {
             t_done: u64,
         }
         let mut packets: Vec<Packet> = Vec::new();
-        // per-source injection queues of (packet id, dst)
-        let mut inject: Vec<VecDeque<(u32, u32)>> = vec![VecDeque::new(); self.topo.n];
         for &(src, dst, bytes) in &flows {
             let mut flits = ((bytes / scale) / flit_bytes).ceil() as usize;
             if flits == 0 {
@@ -99,48 +190,13 @@ impl<'a> CycleSim<'a> {
                     t_inject: 0,
                     t_done: 0,
                 });
-                inject[src].push_back((id, dst as u32));
+                self.inject[src].push_back((id, dst as u32));
                 flits -= take;
             }
         }
         let n_packets = packets.len();
         let total_flits: usize = packets.iter().map(|p| p.flits).sum();
-
-        // --- directed link structures (dense; see §Perf)
-        let lm = LinkMap::build(self.topo);
-        let n_links = lm.n_links();
-        let nr = self.topo.n;
-        // FIFO of flits queued at the *receiving* router of each link
-        let mut queues: Vec<VecDeque<Flit>> = vec![VecDeque::new(); n_links];
-        // round-robin arbitration state per router
-        let mut rr: Vec<usize> = vec![0; nr];
-        // input links per router
-        let mut in_links: Vec<Vec<usize>> = vec![Vec::new(); nr];
-        for l in 0..n_links {
-            in_links[lm.to[l] as usize].push(l);
-        }
-        // precomputed out-link table: out[at*nr + dst] = directed link id
-        // toward dst (NO_LINK when at == dst or unreachable)
-        let mut out_table = vec![NO_LINK; nr * nr];
-        for at in 0..nr {
-            for dst in 0..nr {
-                if at != dst {
-                    if let Some(nh) = self.routes.next_hop(at, dst) {
-                        if let Some(l) = lm.link(at, nh) {
-                            out_table[at * nr + dst] = l as u32;
-                        }
-                    }
-                }
-            }
-        }
-        let out_link = |at: usize, dst: usize| -> Option<usize> {
-            let v = out_table[at * nr + dst];
-            if v == NO_LINK {
-                None
-            } else {
-                Some(v as usize)
-            }
-        };
+        let n_links = self.lm.n_links();
 
         let mut cycle: u64 = 0;
         let mut done_packets = 0usize;
@@ -151,57 +207,49 @@ impl<'a> CycleSim<'a> {
         }
 
         // safety bound: generous — drain must happen way earlier
-        let max_cycles = (total_flits as u64 + 1) * (self.routes.diameter() as u64 + 4) * 4 + 10_000;
-
-        // hoisted per-cycle buffers (allocation-free inner loop, §Perf)
-        let mut out_taken = vec![false; n_links];
-        let mut moves: Vec<(usize, usize)> = Vec::with_capacity(n_links);
-        let mut arrivals: Vec<usize> = Vec::with_capacity(n_links);
-        // flits queued at each router's inputs — idle routers skip
-        // arbitration entirely (§Perf iteration 2)
-        let mut router_load = vec![0u32; nr];
+        let max_cycles = (total_flits as u64 + 1) * (self.diameter as u64 + 4) * 4 + 10_000;
 
         while done_packets < n_packets && cycle < max_cycles {
             cycle += 1;
             // 1) link traversal: each router forwards up to one flit per
             //    *output* link per cycle, arbitrating round-robin over its
             //    input queues (+ injection queue).
-            out_taken.iter_mut().for_each(|x| *x = false);
-            moves.clear();
-            arrivals.clear();
+            self.out_taken.iter_mut().for_each(|x| *x = false);
+            self.moves.clear();
+            self.arrivals.clear();
 
-            for router in 0..nr {
-                if router_load[router] == 0 {
+            for router in 0..self.n {
+                if self.router_load[router] == 0 {
                     continue;
                 }
-                let inputs = &in_links[router];
+                let inputs = &self.in_links[router];
                 if inputs.is_empty() {
                     continue;
                 }
-                let start = rr[router] % inputs.len();
+                let start = self.rr[router] % inputs.len();
                 for k in 0..inputs.len() {
                     let l = inputs[(start + k) % inputs.len()];
-                    let Some(&flit) = queues[l].front() else {
+                    let Some(&flit) = self.queues[l].front() else {
                         continue;
                     };
                     let dst = flit.dst as usize;
                     if dst == router {
-                        arrivals.push(l);
+                        self.arrivals.push(l);
                         continue;
                     }
-                    if let Some(ol) = out_link(router, dst) {
-                        if !out_taken[ol] && queues[ol].len() < self.buffer_flits {
-                            out_taken[ol] = true;
-                            moves.push((l, ol));
+                    if let Some(ol) = self.out_link(router, dst) {
+                        if !self.out_taken[ol] && self.queues[ol].len() < self.buffer_flits {
+                            self.out_taken[ol] = true;
+                            self.moves.push((l, ol));
                         }
                     }
                 }
-                rr[router] = rr[router].wrapping_add(1);
+                self.rr[router] = self.rr[router].wrapping_add(1);
             }
 
-            for &l in &arrivals {
-                let flit = queues[l].pop_front().unwrap();
-                router_load[lm.to[l] as usize] -= 1;
+            for &l in &self.arrivals {
+                let flit = self.queues[l].pop_front().unwrap();
+                self.router_load[self.lm.to[l] as usize] -= 1;
                 let pid = flit.packet as usize;
                 remaining[pid] -= 1;
                 if remaining[pid] == 0 {
@@ -210,17 +258,17 @@ impl<'a> CycleSim<'a> {
                 }
                 flit_slots_used += 1;
             }
-            for &(from, to) in &moves {
-                let flit = queues[from].pop_front().unwrap();
-                router_load[lm.to[from] as usize] -= 1;
-                queues[to].push_back(flit);
-                router_load[lm.to[to] as usize] += 1;
+            for &(from, to) in &self.moves {
+                let flit = self.queues[from].pop_front().unwrap();
+                self.router_load[self.lm.to[from] as usize] -= 1;
+                self.queues[to].push_back(flit);
+                self.router_load[self.lm.to[to] as usize] += 1;
                 flit_slots_used += 1;
             }
 
             // 2) injection: one flit per source router per cycle
-            for src in 0..self.topo.n {
-                let Some(&(pid, dst)) = inject[src].front() else {
+            for src in 0..self.n {
+                let Some(&(pid, dst)) = self.inject[src].front() else {
                     continue;
                 };
                 let p = &mut packets[pid as usize];
@@ -231,39 +279,46 @@ impl<'a> CycleSim<'a> {
                 if dst as usize == src {
                     unreachable!("flows exclude self-traffic");
                 }
-                if let Some(ol) = out_link(src, dst as usize) {
-                    if queues[ol].len() < self.buffer_flits {
+                if let Some(ol) = self.out_link(src, dst as usize) {
+                    if self.queues[ol].len() < self.buffer_flits {
                         let is_tail = p.injected + 1 == p.flits;
-                        queues[ol].push_back(Flit {
+                        self.queues[ol].push_back(Flit {
                             packet: pid,
                             dst,
                             is_tail,
                         });
-                        router_load[lm.to[ol] as usize] += 1;
+                        self.router_load[self.lm.to[ol] as usize] += 1;
                         p.injected += 1;
                         if is_tail {
-                            inject[src].pop_front();
+                            self.inject[src].pop_front();
                         }
                     }
                 }
             }
         }
 
-        let latencies: Vec<f64> = packets
-            .iter()
-            .filter(|p| p.t_done > 0)
-            .map(|p| (p.t_done - p.t_inject) as f64)
-            .collect();
-        let mean_lat = if latencies.is_empty() {
+        // stats over delivered packets only: undelivered packets (safety
+        // bound hit) keep t_done == 0 and must not skew latency
+        let mut lat_sum = 0.0f64;
+        let mut max_lat = 0u64;
+        let mut delivered = 0usize;
+        for p in &packets {
+            if p.t_done > 0 {
+                delivered += 1;
+                lat_sum += (p.t_done - p.t_inject) as f64;
+                max_lat = max_lat.max(p.t_done - p.t_inject);
+            }
+        }
+        let mean_lat = if delivered == 0 {
             0.0
         } else {
-            latencies.iter().sum::<f64>() / latencies.len() as f64
+            lat_sum / delivered as f64
         };
-        let max_lat = packets.iter().map(|p| p.t_done.saturating_sub(p.t_inject)).max().unwrap_or(0);
 
         SimResult {
             cycles: cycle,
             packets: n_packets,
+            delivered,
             flits: total_flits,
             mean_packet_latency: mean_lat,
             max_packet_latency: max_lat,
@@ -273,12 +328,13 @@ impl<'a> CycleSim<'a> {
                 flit_slots_used as f64 / (cycle as f64 * n_links as f64)
             },
             scale,
+            drained: done_packets == n_packets,
         }
     }
 
     /// Wall-clock seconds for a phase: drained cycles at the NoI clock,
     /// scaled back up if the phase was volume-sampled.
-    pub fn phase_secs(&self, m: &TrafficMatrix, flit_bytes: f64, clock_hz: f64) -> f64 {
+    pub fn phase_secs(&mut self, m: &TrafficMatrix, flit_bytes: f64, clock_hz: f64) -> f64 {
         let r = self.run_phase(m, flit_bytes);
         r.cycles as f64 * r.scale / clock_hz
     }
@@ -300,11 +356,13 @@ mod tests {
     #[test]
     fn single_packet_latency_close_to_hops() {
         let (t, r) = mesh4();
-        let sim = CycleSim::new(&t, &r, 8);
+        let mut sim = CycleSim::new(&t, &r, 8);
         let mut m = TrafficMatrix::zeros(16, KernelKind::Score, 1);
         m.add(0, 15, 32.0); // 1 flit at 32B flits
         let res = sim.run_phase(&m, 32.0);
         assert_eq!(res.packets, 1);
+        assert!(res.drained);
+        assert_eq!(res.delivered, 1);
         // 6 hops; store-and-forward latency ≈ hops + O(1)
         assert!(res.mean_packet_latency >= 6.0);
         assert!(res.mean_packet_latency <= 10.0, "{}", res.mean_packet_latency);
@@ -313,7 +371,7 @@ mod tests {
     #[test]
     fn all_packets_drain() {
         let (t, r) = mesh4();
-        let sim = CycleSim::new(&t, &r, 8);
+        let mut sim = CycleSim::new(&t, &r, 8);
         let mut m = TrafficMatrix::zeros(16, KernelKind::Score, 1);
         for s in 0..16 {
             for d in 0..16 {
@@ -324,6 +382,8 @@ mod tests {
         }
         let res = sim.run_phase(&m, 32.0);
         assert_eq!(res.packets, 16 * 15);
+        assert!(res.drained, "all packets must drain");
+        assert_eq!(res.delivered, res.packets);
         assert!(res.cycles > 0);
         assert!(res.link_utilization > 0.0 && res.link_utilization <= 1.0);
     }
@@ -331,7 +391,7 @@ mod tests {
     #[test]
     fn contention_increases_latency() {
         let (t, r) = mesh4();
-        let sim = CycleSim::new(&t, &r, 8);
+        let mut sim = CycleSim::new(&t, &r, 8);
         let mut solo = TrafficMatrix::zeros(16, KernelKind::Score, 1);
         solo.add(0, 3, 512.0);
         let mut contended = TrafficMatrix::zeros(16, KernelKind::Score, 1);
@@ -341,6 +401,7 @@ mod tests {
         }
         let rs = sim.run_phase(&solo, 32.0);
         let rc = sim.run_phase(&contended, 32.0);
+        assert!(rs.drained && rc.drained);
         assert!(
             rc.mean_packet_latency > rs.mean_packet_latency,
             "contended {} vs solo {}",
@@ -359,6 +420,7 @@ mod tests {
         let res = sim.run_phase(&m, 32.0);
         assert!(res.scale > 1.0);
         assert!(res.flits <= 1100);
+        assert!(res.drained);
     }
 
     #[test]
@@ -374,16 +436,42 @@ mod tests {
         }
         let sm = CycleSim::new(&mesh, &rm, 8).run_phase(&m, 32.0);
         let sc = CycleSim::new(&chain, &rc, 8).run_phase(&m, 32.0);
+        assert!(sm.drained && sc.drained);
         assert!(sc.cycles > sm.cycles);
     }
 
     #[test]
     fn empty_phase_is_trivial() {
         let (t, r) = mesh4();
-        let sim = CycleSim::new(&t, &r, 8);
+        let mut sim = CycleSim::new(&t, &r, 8);
         let m = TrafficMatrix::zeros(16, KernelKind::Score, 1);
         let res = sim.run_phase(&m, 32.0);
         assert_eq!(res.packets, 0);
         assert_eq!(res.cycles, 0);
+        assert!(res.drained, "vacuously drained");
+    }
+
+    #[test]
+    fn reuse_matches_fresh_construction() {
+        // a reused simulator (scratch buffers carried across phases) must
+        // produce bit-identical results to a freshly built one
+        let (t, r) = mesh4();
+        let mut reused = CycleSim::new(&t, &r, 8);
+        let mut phases = Vec::new();
+        for seed in 0..3u64 {
+            let mut m = TrafficMatrix::zeros(16, KernelKind::Score, 1);
+            for s in 0..16 {
+                m.add(s, (s + 1 + seed as usize) % 16, 96.0 + seed as f64);
+            }
+            phases.push(m);
+        }
+        for m in &phases {
+            let a = reused.run_phase(m, 32.0);
+            let b = CycleSim::new(&t, &r, 8).run_phase(m, 32.0);
+            assert_eq!(a.cycles, b.cycles);
+            assert_eq!(a.delivered, b.delivered);
+            assert_eq!(a.mean_packet_latency, b.mean_packet_latency);
+            assert_eq!(a.link_utilization, b.link_utilization);
+        }
     }
 }

@@ -8,11 +8,24 @@
 //!
 //! Python never runs on this path — the rust binary is self-contained
 //! once `artifacts/` exists.
+//!
+//! The executable half of this module (everything touching the `xla`
+//! crate) is gated behind the `pjrt` cargo feature: the default build
+//! environment has no crates registry, so the `xla` dependency must be
+//! vendored before enabling the feature. The manifest parser below is
+//! dependency-free and always compiled, keeping the artifact interchange
+//! format under test.
+
+use crate::anyhow;
+use crate::util::error::{Context, Result};
+#[cfg(feature = "pjrt")]
+use crate::bail;
+use std::collections::BTreeMap;
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
 
 /// Shape+dtype of one entry argument (from manifest.json).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -99,13 +112,22 @@ impl Manifest {
     }
 }
 
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for crate::util::error::Error {
+    fn from(e: xla::Error) -> Self {
+        crate::util::error::Error::msg(e)
+    }
+}
+
 /// A compiled artifact ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct LoadedKernel {
     pub name: String,
     pub args: Vec<ArgSpec>,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl LoadedKernel {
     /// Execute with f32 buffers (one `Vec<f32>` per argument, row-major).
     /// Returns the flattened f32 output of the 1-tuple result.
@@ -180,12 +202,14 @@ impl LoadedKernel {
 }
 
 /// PJRT-backed artifact runtime.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
     dir: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// CPU client + manifest from the artifact directory.
     pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {

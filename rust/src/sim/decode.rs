@@ -13,10 +13,15 @@
 //! The simulator prices a *representative* step at context length t and
 //! integrates over the generation to report prefill latency, per-token
 //! latency at several context depths, and end-to-end tokens/s.
+//!
+//! The `*_on` variants run against a prebuilt [`Platform`] so loops
+//! (sweeps, the request-level serving simulator) amortize the platform
+//! setup; the positional wrappers keep the original one-shot API.
 
 use crate::baselines::Arch;
 use crate::config::{AttentionKind, ModelConfig, SystemConfig};
-use crate::sim::engine::{simulate, SimOptions};
+use crate::sim::engine::SimOptions;
+use crate::sim::platform::Platform;
 
 /// Result of simulating prefill + `gen_tokens` of decode.
 #[derive(Debug, Clone)]
@@ -45,7 +50,8 @@ pub fn kv_cache_bytes(model: &ModelConfig, t: usize) -> f64 {
     t as f64 * per_tok * model.bytes_per_elem as f64 * model.layers as f64
 }
 
-/// Latency+energy of ONE decode step at context length `t`.
+/// Latency+energy of ONE decode step at context length `t` on a
+/// prebuilt platform.
 ///
 /// Implemented by differencing the batch simulator: a decode step at
 /// context t does the work of extending a length-t sequence by one
@@ -54,9 +60,13 @@ pub fn kv_cache_bytes(model: &ModelConfig, t: usize) -> f64 {
 /// already captures well at small deltas; to stay robust we evaluate
 /// the engine at a *representative* short window rather than literal
 /// n=1 (the phase models assume n >= 8 for tiling).
-pub fn decode_step(
-    arch: Arch,
-    sys: &SystemConfig,
+///
+/// The result is exactly affine in `t`: every kernel except score is
+/// t-independent and the score term scales linearly — the serving
+/// simulator exploits this to decompose batch steps into a shared
+/// weight-stream part and a per-request KV part.
+pub fn decode_step_on(
+    platform: &Platform,
     model: &ModelConfig,
     t: usize,
     opts: &SimOptions,
@@ -64,7 +74,7 @@ pub fn decode_step(
     // window of w tokens at context t: per-token cost = cost(w)/w with
     // the score term rescaled from O(w^2) to the true O(w*t)
     let w = 16usize;
-    let r = simulate(arch, sys, model, w.max(8), opts);
+    let r = platform.run(model, w.max(8), opts);
     let mut secs = 0.0;
     let mut energy = 0.0;
     for k in &r.kernels {
@@ -84,27 +94,50 @@ pub fn decode_step(
     (secs / w as f64, energy / w as f64)
 }
 
-/// Simulate prefill + generation.
-pub fn generate(
+/// One-shot wrapper over [`decode_step_on`] (builds a default platform).
+pub fn decode_step(
     arch: Arch,
     sys: &SystemConfig,
+    model: &ModelConfig,
+    t: usize,
+    opts: &SimOptions,
+) -> (f64, f64) {
+    decode_step_on(&Platform::new(arch, sys, opts), model, t, opts)
+}
+
+/// Simulate prefill + generation on a prebuilt platform.
+pub fn generate_on(
+    platform: &Platform,
     model: &ModelConfig,
     prompt_len: usize,
     gen_tokens: usize,
     opts: &SimOptions,
 ) -> DecodeReport {
-    let prefill = simulate(arch, sys, model, prompt_len.max(8), opts);
-    let (tok_start, e_start) = decode_step(arch, sys, model, prompt_len.max(1), opts);
+    let prefill = platform.run(model, prompt_len.max(8), opts);
+    let (tok_start, e_start) = decode_step_on(platform, model, prompt_len.max(1), opts);
     let mid_ctx = prompt_len + gen_tokens / 2;
-    let (tok_mid, e_mid) = decode_step(arch, sys, model, mid_ctx.max(1), opts);
+    let (tok_mid, e_mid) = decode_step_on(platform, model, mid_ctx.max(1), opts);
     let end_ctx = prompt_len + gen_tokens;
-    let (tok_end, e_end) = decode_step(arch, sys, model, end_ctx.max(1), opts);
-    // trapezoid over the generation (per-token cost is affine in t)
-    let decode_secs = gen_tokens as f64 * (tok_start + 2.0 * tok_mid + tok_end) / 4.0;
-    let decode_energy = gen_tokens as f64 * (e_start + 2.0 * e_mid + e_end) / 4.0;
+    let (tok_end, e_end) = decode_step_on(platform, model, end_ctx.max(1), opts);
+    // trapezoid over the generation (per-token cost is affine in t);
+    // zero generation is well-defined: no decode time, no decode energy,
+    // and a 0.0 rate (there is no token to rate).
+    let (decode_secs, decode_energy) = if gen_tokens == 0 {
+        (0.0, 0.0)
+    } else {
+        (
+            gen_tokens as f64 * (tok_start + 2.0 * tok_mid + tok_end) / 4.0,
+            gen_tokens as f64 * (e_start + 2.0 * e_mid + e_end) / 4.0,
+        )
+    };
     let total = prefill.latency_secs + decode_secs;
+    let tokens_per_sec = if gen_tokens == 0 || decode_secs <= 0.0 {
+        0.0
+    } else {
+        gen_tokens as f64 / decode_secs
+    };
     DecodeReport {
-        arch: arch.name().to_string(),
+        arch: platform.arch.name().to_string(),
         model: model.name.to_string(),
         prompt_len,
         gen_tokens,
@@ -113,13 +146,27 @@ pub fn generate(
         tok_secs_mid: tok_mid,
         tok_secs_end: tok_end,
         total_secs: total,
-        tokens_per_sec: if total > 0.0 {
-            gen_tokens as f64 / decode_secs.max(1e-12)
-        } else {
-            0.0
-        },
+        tokens_per_sec,
         energy_j: prefill.energy_j + decode_energy,
     }
+}
+
+/// One-shot wrapper over [`generate_on`] (builds a default platform).
+pub fn generate(
+    arch: Arch,
+    sys: &SystemConfig,
+    model: &ModelConfig,
+    prompt_len: usize,
+    gen_tokens: usize,
+    opts: &SimOptions,
+) -> DecodeReport {
+    generate_on(
+        &Platform::new(arch, sys, opts),
+        model,
+        prompt_len,
+        gen_tokens,
+        opts,
+    )
 }
 
 #[cfg(test)]
@@ -159,6 +206,29 @@ mod tests {
         assert!(r.total_secs > r.prefill_secs);
         assert!(r.tokens_per_sec > 0.0);
         assert!(r.energy_j > 0.0);
+    }
+
+    #[test]
+    fn zero_generation_is_well_defined() {
+        let s = sys();
+        let m = ModelZoo::gpt_j();
+        let r = generate(Arch::Hi25D, &s, &m, 128, 0, &SimOptions::default());
+        assert_eq!(r.gen_tokens, 0);
+        assert_eq!(r.tokens_per_sec, 0.0, "no tokens → no rate");
+        assert_eq!(r.total_secs, r.prefill_secs, "no decode time");
+        assert!(r.energy_j > 0.0 && r.energy_j.is_finite());
+    }
+
+    #[test]
+    fn platform_reuse_matches_one_shot() {
+        let s = sys();
+        let m = ModelZoo::gpt_j();
+        let opts = SimOptions::default();
+        let p = Platform::new(Arch::Hi25D, &s, &opts);
+        let a = generate_on(&p, &m, 128, 32, &opts);
+        let b = generate(Arch::Hi25D, &s, &m, 128, 32, &opts);
+        assert_eq!(a.total_secs, b.total_secs);
+        assert_eq!(a.energy_j, b.energy_j);
     }
 
     #[test]

@@ -1,23 +1,19 @@
-//! End-to-end composition engine.
+//! End-to-end composition engine — the `simulate` entry point.
 //!
-//! For each phase plan: NoI communication time comes from the analytic
-//! evaluator (bottleneck-link serialization + path latency) or, when
-//! `cycle_accurate` is set, the flit-level simulator. Phase wall time =
-//! max(compute, comm) + dram + overhead (compute/communication overlap
-//! via double buffering; DRAM exposure and host trips are serial).
-//! Eq 9 parallel MHA-FF merges a phase with its predecessor by taking
-//! the max. Energy adds compute + DRAM + NoI link/router energy from
-//! byte-hops. Temperature evaluates the phase-power map on the 2.5D
-//! interposer or the 3D stack (Eq 16-18).
+//! Since the Platform refactor this module is a thin façade: the phase
+//! composition loop (max(compute, comm) + dram + overhead, Eq 9
+//! pipelining, NoI energy from byte-hops, Eq 16-18 temperature) lives in
+//! [`crate::sim::platform::Platform::run`]; `simulate` builds a
+//! throwaway default platform and runs one point. Loops that evaluate
+//! many points on one system (MOO, sweeps, decode, serving) should build
+//! the [`Platform`] once instead.
 
 use crate::arch::chiplet::{build_chiplets, Chiplet};
-use crate::arch::{Placement, SfcKind};
-use crate::baselines::{plan, Arch};
+use crate::arch::SfcKind;
+use crate::baselines::Arch;
 use crate::config::{ModelConfig, SystemConfig};
-use crate::metrics::{KernelMetrics, SimReport};
-use crate::model::kernels::Workload;
-use crate::noi::{analytic, CycleSim, RoutingTable, Topology};
-use crate::thermal;
+use crate::metrics::SimReport;
+use crate::sim::platform::Platform;
 
 /// Simulation options.
 #[derive(Debug, Clone)]
@@ -44,6 +40,11 @@ pub fn chiplets_for(sys: &SystemConfig) -> Vec<Chiplet> {
 }
 
 /// Simulate one (arch, model, seq_len) point on a system.
+///
+/// Thin wrapper: builds the default [`Platform`] (hi-seed placement +
+/// mesh, §4.1.1) and runs the point. Callers evaluating many points on
+/// one system should hold a `Platform` and call [`Platform::run`]
+/// directly to amortize the setup.
 pub fn simulate(
     arch: Arch,
     sys: &SystemConfig,
@@ -51,133 +52,7 @@ pub fn simulate(
     seq_len: usize,
     opts: &SimOptions,
 ) -> SimReport {
-    let chiplets = chiplets_for(sys);
-    let workload = Workload::build(model, seq_len);
-    let plans = plan(arch, sys, &chiplets, &workload);
-
-    // NoI design: HI gets the dataflow-aware placement; the baselines get
-    // the same MOO treatment per §4.1.1 ("we implement the same MOO
-    // algorithm ... to suitably place the chiplets") — structurally this
-    // converges to clustered placements, which the hi_seed also models.
-    let placement = Placement::hi_seed(&chiplets, sys.grid.0, sys.grid.1, opts.sfc);
-    let topo = Topology::mesh(&placement);
-    let routes = RoutingTable::build(&topo);
-    let hw = &sys.hw;
-    let flit_bytes = hw.noi_flit_bits as f64 / 8.0;
-
-    // 3D architectures shorten effective paths via TSVs: model as a comm
-    // discount (vertical hop replaces ~2 planar hops at lower latency).
-    let comm_scale = if arch.is_3d_stacked() { 0.6 } else { 1.0 };
-
-    let mut kernels = Vec::new();
-    let mut latency = 0.0f64;
-    let mut energy = 0.0f64;
-    // running wall-time of the current serial group (phases since the
-    // last pipeline merge) — a parallel_with_prev phase overlaps with the
-    // whole group, not just its immediate predecessor (Eq 9 / §4.2: the
-    // ReRAM macro computes FF while the SMs run the next block's MHA)
-    let mut group_secs = 0.0f64;
-    let mut peak_power_map: Vec<f64> = vec![0.0; chiplets.len()];
-    let mut peak_power = 0.0f64;
-
-    for p in &plans {
-        let comm = if opts.cycle_accurate {
-            let sim = CycleSim::new(&topo, &routes, hw.noi_buffer_flits);
-            sim.phase_secs(&p.traffic, flit_bytes, hw.noi_clock_hz)
-        } else {
-            analytic::phase_comm_secs(&topo, &routes, &p.traffic, hw.noi_link_bw(), hw.noi_hop_secs())
-        } * comm_scale;
-
-        // NoI energy from byte-hops
-        let stats = analytic::evaluate(&topo, &routes, std::slice::from_ref(&p.traffic));
-        let link_pj = hw.noi_pj_per_bit_mm * hw.noi_link_mm + hw.noi_router_pj_per_bit;
-        let noi_energy = stats.byte_hops * 8.0 * link_pj * 1e-12;
-
-        let once = (p.compute_secs.max(comm)) + p.dram_secs + p.overhead_secs;
-        let phase_total = once * p.repeats as f64;
-        let phase_energy =
-            (p.compute_energy_j + p.dram_energy_j) * p.repeats as f64 + noi_energy;
-
-        if p.parallel_with_prev {
-            // pipelined with the preceding serial group: total time is
-            // max(group, phase) instead of the sum
-            latency = latency - group_secs + group_secs.max(phase_total);
-            group_secs = group_secs.max(phase_total);
-        } else {
-            latency += phase_total;
-            group_secs += phase_total;
-        }
-        energy += phase_energy;
-
-        kernels.push(KernelMetrics {
-            kind: p.kind,
-            compute_secs: p.compute_secs,
-            comm_secs: comm,
-            dram_secs: p.dram_secs,
-            overhead_secs: p.overhead_secs,
-            energy_j: phase_energy,
-            repeats: p.repeats,
-        });
-
-        if p.power_w > peak_power {
-            peak_power = p.power_w;
-            // distribute phase power uniformly over the active chiplets
-            for w in peak_power_map.iter_mut() {
-                *w = p.power_w / chiplets.len() as f64;
-            }
-        }
-    }
-
-    // temperature at the peak-power phase
-    let temp_c = match arch {
-        Arch::HaimaOriginal | Arch::TransPimOriginal => {
-            // §4.3: PIM compute units live *inside* the HBM dies — the 8
-            // stacks form 4-tier columns with concentrated power far from
-            // the sink (calibrated to the Fig 11 infeasibility band).
-            use crate::baselines::calib;
-            let col_w = if matches!(arch, Arch::HaimaOriginal) {
-                calib::ORIGINAL_COLUMN_W_HAIMA
-            } else {
-                calib::ORIGINAL_COLUMN_W_TRANSPIM
-            };
-            // mild workload dependence: bigger activations keep more
-            // banks active simultaneously
-            let act_mb = model.act_bytes(seq_len) / 1.0e6;
-            let col_w = col_w + 0.5 * (1.0 + act_mb).ln();
-            let tiers = 4;
-            let cols = crate::baselines::calib::TRANSPIM_STACKS;
-            let mut stack = thermal::StackPower::new(tiers, cols);
-            for c in 0..cols {
-                for t in 0..tiers {
-                    stack.power[t][c] = col_w / tiers as f64;
-                }
-            }
-            thermal::evaluate_stack(hw, &stack).t_peak
-        }
-        Arch::Hi3D => {
-            // two planar tiers (SM-MC tier / ReRAM tier, §4.3) — thermal-
-            // aware MOO keeps columns balanced
-            let tiers = 2;
-            let cols = chiplets.len().div_ceil(tiers);
-            let mut stack = thermal::StackPower::new(tiers, cols);
-            for (i, &w) in peak_power_map.iter().enumerate() {
-                stack.power[i % tiers][(i / tiers) % cols] += w;
-            }
-            thermal::evaluate_stack(hw, &stack).t_peak
-        }
-        _ => thermal::evaluate_2_5d(hw, &peak_power_map),
-    };
-
-    SimReport {
-        arch: arch.name().to_string(),
-        model: model.name.to_string(),
-        seq_len,
-        system_chiplets: sys.size.chiplets(),
-        kernels,
-        latency_secs: latency,
-        energy_j: energy,
-        temp_c,
-    }
+    Platform::new(arch, sys, opts).run(model, seq_len, opts)
 }
 
 #[cfg(test)]

@@ -1,9 +1,27 @@
-//! Full-system simulator: composes architecture phase plans with the NoI
-//! evaluators and the thermal model into end-to-end latency / energy /
-//! temperature reports (the numbers behind Figs 8-11 and Table 4).
+//! Full-system simulator — layered around a build-once [`Platform`]:
+//!
+//! - [`platform`]: owns everything derivable from `(arch, sys,
+//!   NoiDesign)` — chiplets, placement, topology, routing table, the
+//!   reusable flit-level simulator, comm scale. Built once, reused
+//!   across evaluations; accepts arbitrary MOO designs (λ*) via
+//!   [`Platform::with_design`] / the `--design <file>` CLI flag (JSON
+//!   interchange documented on [`crate::moo::design::NoiDesign`]).
+//! - [`engine`]: the thin `simulate(arch, sys, model, n)` entry point —
+//!   one throwaway platform, one point (the numbers behind Figs 8-11
+//!   and Table 4).
+//! - [`decode`]: autoregressive prefill + KV-cache decode costs on a
+//!   platform (`decode_step_on` / `generate_on`).
+//! - [`serving`]: request-level continuous-batching serving simulator
+//!   (Poisson/trace arrivals, KV-capacity admission, optional
+//!   prefill/decode disaggregation) reporting throughput, TTFT/TPOT
+//!   tails and energy per request.
 
 pub mod decode;
 pub mod engine;
+pub mod platform;
+pub mod serving;
 
-pub use decode::{generate, DecodeReport};
+pub use decode::{decode_step, decode_step_on, generate, generate_on, DecodeReport};
 pub use engine::{simulate, SimOptions};
+pub use platform::Platform;
+pub use serving::{ArrivalProcess, ServingConfig, ServingReport, ServingSim};

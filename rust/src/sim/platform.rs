@@ -1,0 +1,334 @@
+//! Build-once simulation platform.
+//!
+//! [`Platform`] owns everything derivable from `(arch, sys, NoiDesign)`:
+//! the chiplet list, the placement + topology (an arbitrary
+//! [`NoiDesign`], not just the hardwired hi-seed mesh), the routing
+//! table, the flit-level simulator with its precomputed link map /
+//! out-link tables, and the 3D comm discount. All of it is built once
+//! and reused across evaluations — `sim::simulate` is now a thin
+//! `Platform::new(..).run(..)` wrapper, and the MOO / sweep / decode /
+//! serving loops amortize the setup instead of rebuilding it per call
+//! (see `benches/perf_hotpath.rs::platform_reuse_simulate`).
+//!
+//! This is also the λ* plug-through of §3.3: a design exported by
+//! `optimize --export` loads via [`NoiDesign::load`] and runs end-to-end
+//! with [`Platform::with_design`] — the optimize → simulate loop the
+//! paper's tool flow describes.
+
+use std::cell::RefCell;
+
+use crate::arch::chiplet::Chiplet;
+use crate::baselines::{plan, Arch};
+use crate::config::{ModelConfig, SystemConfig};
+use crate::metrics::{KernelMetrics, SimReport};
+use crate::model::kernels::Workload;
+use crate::moo::design::NoiDesign;
+use crate::noi::{analytic, CycleSim, RoutingTable};
+use crate::sim::engine::{chiplets_for, SimOptions};
+use crate::thermal;
+use crate::bail;
+use crate::util::error::Result;
+
+/// A fully-built simulation platform: reusable across any number of
+/// `(model, seq_len)` evaluations.
+pub struct Platform {
+    pub arch: Arch,
+    pub sys: SystemConfig,
+    pub chiplets: Vec<Chiplet>,
+    /// λ = (λ_c placement, λ_l links) the platform routes over.
+    pub design: NoiDesign,
+    pub routes: RoutingTable,
+    /// payload bytes per flit (HwParams::noi_flit_bits / 8)
+    flit_bytes: f64,
+    /// 3D architectures shorten effective paths via TSVs: modeled as a
+    /// comm discount (vertical hop replaces ~2 planar hops at lower
+    /// latency).
+    comm_scale: f64,
+    /// Reusable flit-level simulator (interior mutability: its scratch
+    /// buffers are written during `run` but the platform is logically
+    /// immutable).
+    cycle: RefCell<CycleSim>,
+}
+
+impl Platform {
+    /// Default platform: the dataflow-aware hi-seed placement on a mesh
+    /// (what `simulate` always used). HI gets the dataflow-aware
+    /// placement; the baselines get the same MOO treatment per §4.1.1
+    /// ("we implement the same MOO algorithm ... to suitably place the
+    /// chiplets") — structurally this converges to clustered placements,
+    /// which the hi_seed also models.
+    pub fn new(arch: Arch, sys: &SystemConfig, opts: &SimOptions) -> Platform {
+        let chiplets = chiplets_for(sys);
+        let design = NoiDesign::hi_seed(sys, &chiplets, opts.sfc);
+        Platform::build(arch, sys, chiplets, design)
+    }
+
+    /// Platform over an arbitrary NoI design (e.g. a λ* point exported
+    /// by the MOO). Validates the design against the system config.
+    pub fn with_design(arch: Arch, sys: &SystemConfig, design: NoiDesign) -> Result<Platform> {
+        let chiplets = chiplets_for(sys);
+        if design.placement.site_of.len() != chiplets.len() || design.topo.n != chiplets.len() {
+            bail!(
+                "design is for {} chiplets, system has {}",
+                design.placement.site_of.len(),
+                chiplets.len()
+            );
+        }
+        if (design.placement.rows, design.placement.cols) != sys.grid {
+            bail!(
+                "design grid {}x{} != system grid {}x{}",
+                design.placement.rows,
+                design.placement.cols,
+                sys.grid.0,
+                sys.grid.1
+            );
+        }
+        design.validate()?;
+        Ok(Platform::build(arch, sys, chiplets, design))
+    }
+
+    fn build(arch: Arch, sys: &SystemConfig, chiplets: Vec<Chiplet>, design: NoiDesign) -> Platform {
+        let routes = RoutingTable::build(&design.topo);
+        let cycle = CycleSim::new(&design.topo, &routes, sys.hw.noi_buffer_flits);
+        Platform {
+            arch,
+            sys: sys.clone(),
+            chiplets,
+            flit_bytes: sys.hw.noi_flit_bits as f64 / 8.0,
+            comm_scale: if arch.is_3d_stacked() { 0.6 } else { 1.0 },
+            design,
+            routes,
+            cycle: RefCell::new(cycle),
+        }
+    }
+
+    /// Simulate one (model, seq_len) point. Identical numbers to the
+    /// pre-Platform `simulate` for the default design (parity-tested in
+    /// tests/platform_parity.rs); only `opts.cycle_accurate` is read
+    /// here — the SFC was consumed when the platform was built.
+    pub fn run(&self, model: &ModelConfig, seq_len: usize, opts: &SimOptions) -> SimReport {
+        let workload = Workload::build(model, seq_len);
+        let plans = plan(self.arch, &self.sys, &self.chiplets, &workload);
+        let hw = &self.sys.hw;
+        let topo = &self.design.topo;
+        let n = self.chiplets.len();
+
+        let mut kernels = Vec::new();
+        let mut latency = 0.0f64;
+        let mut energy = 0.0f64;
+        // running wall-time of the current serial group (phases since the
+        // last pipeline merge) — a parallel_with_prev phase overlaps with
+        // the whole group, not just its immediate predecessor (Eq 9 /
+        // §4.2: the ReRAM macro computes FF while the SMs run the next
+        // block's MHA)
+        let mut group_secs = 0.0f64;
+        let mut peak_power_map: Vec<f64> = vec![0.0; n];
+        let mut peak_power = 0.0f64;
+
+        for p in &plans {
+            let comm = if opts.cycle_accurate {
+                self.cycle
+                    .borrow_mut()
+                    .phase_secs(&p.traffic, self.flit_bytes, hw.noi_clock_hz)
+            } else {
+                analytic::phase_comm_secs(
+                    topo,
+                    &self.routes,
+                    &p.traffic,
+                    hw.noi_link_bw(),
+                    hw.noi_hop_secs(),
+                )
+            } * self.comm_scale;
+
+            // NoI energy from byte-hops
+            let stats = analytic::evaluate(topo, &self.routes, std::slice::from_ref(&p.traffic));
+            let link_pj = hw.noi_pj_per_bit_mm * hw.noi_link_mm + hw.noi_router_pj_per_bit;
+            let noi_energy = stats.byte_hops * 8.0 * link_pj * 1e-12;
+
+            let once = (p.compute_secs.max(comm)) + p.dram_secs + p.overhead_secs;
+            let phase_total = once * p.repeats as f64;
+            let phase_energy =
+                (p.compute_energy_j + p.dram_energy_j) * p.repeats as f64 + noi_energy;
+
+            if p.parallel_with_prev {
+                // pipelined with the preceding serial group: total time is
+                // max(group, phase) instead of the sum
+                latency = latency - group_secs + group_secs.max(phase_total);
+                group_secs = group_secs.max(phase_total);
+            } else {
+                latency += phase_total;
+                group_secs += phase_total;
+            }
+            energy += phase_energy;
+
+            kernels.push(KernelMetrics {
+                kind: p.kind,
+                compute_secs: p.compute_secs,
+                comm_secs: comm,
+                dram_secs: p.dram_secs,
+                overhead_secs: p.overhead_secs,
+                energy_j: phase_energy,
+                repeats: p.repeats,
+            });
+
+            if p.power_w > peak_power {
+                peak_power = p.power_w;
+                // §4.3: only chiplets *active* in the phase draw its
+                // power — derive the active set from the phase's traffic
+                // matrix (any endpoint of a nonzero flow); idle chiplets
+                // contribute ~0 to the thermal map. Phases with no NoI
+                // traffic fall back to a uniform spread.
+                let mut active = vec![false; n];
+                let mut n_active = 0usize;
+                for &(s, d, _) in &p.traffic.flows() {
+                    for e in [s, d] {
+                        if !active[e] {
+                            active[e] = true;
+                            n_active += 1;
+                        }
+                    }
+                }
+                if n_active == 0 {
+                    active.iter_mut().for_each(|a| *a = true);
+                    n_active = n;
+                }
+                let share = p.power_w / n_active as f64;
+                for (i, w) in peak_power_map.iter_mut().enumerate() {
+                    *w = if active[i] { share } else { 0.0 };
+                }
+            }
+        }
+
+        // temperature at the peak-power phase
+        let temp_c = match self.arch {
+            Arch::HaimaOriginal | Arch::TransPimOriginal => {
+                // §4.3: PIM compute units live *inside* the HBM dies — the
+                // 8 stacks form 4-tier columns with concentrated power far
+                // from the sink (calibrated to the Fig 11 infeasibility
+                // band).
+                use crate::baselines::calib;
+                let col_w = if matches!(self.arch, Arch::HaimaOriginal) {
+                    calib::ORIGINAL_COLUMN_W_HAIMA
+                } else {
+                    calib::ORIGINAL_COLUMN_W_TRANSPIM
+                };
+                // mild workload dependence: bigger activations keep more
+                // banks active simultaneously
+                let act_mb = model.act_bytes(seq_len) / 1.0e6;
+                let col_w = col_w + 0.5 * (1.0 + act_mb).ln();
+                let tiers = 4;
+                let cols = calib::TRANSPIM_STACKS;
+                let mut stack = thermal::StackPower::new(tiers, cols);
+                for c in 0..cols {
+                    for t in 0..tiers {
+                        stack.power[t][c] = col_w / tiers as f64;
+                    }
+                }
+                thermal::evaluate_stack(hw, &stack).t_peak
+            }
+            Arch::Hi3D => {
+                // two planar tiers (SM-MC tier / ReRAM tier, §4.3) —
+                // thermal-aware MOO keeps columns balanced
+                let tiers = 2;
+                let cols = n.div_ceil(tiers);
+                let mut stack = thermal::StackPower::new(tiers, cols);
+                for (i, &w) in peak_power_map.iter().enumerate() {
+                    stack.power[i % tiers][(i / tiers) % cols] += w;
+                }
+                thermal::evaluate_stack(hw, &stack).t_peak
+            }
+            _ => thermal::evaluate_2_5d(hw, &peak_power_map),
+        };
+
+        SimReport {
+            arch: self.arch.name().to_string(),
+            model: model.name.to_string(),
+            seq_len,
+            system_chiplets: self.sys.size.chiplets(),
+            kernels,
+            latency_secs: latency,
+            energy_j: energy,
+            temp_c,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::SfcKind;
+    use crate::config::ModelZoo;
+    use crate::util::Rng;
+
+    #[test]
+    fn default_platform_matches_simulate() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let opts = SimOptions::default();
+        let p = Platform::new(Arch::Hi25D, &sys, &opts);
+        let a = p.run(&m, 64, &opts);
+        let b = crate::sim::engine::simulate(Arch::Hi25D, &sys, &m, 64, &opts);
+        assert_eq!(a.latency_secs, b.latency_secs);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.temp_c, b.temp_c);
+    }
+
+    #[test]
+    fn reuse_is_deterministic() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let opts = SimOptions {
+            cycle_accurate: true,
+            ..Default::default()
+        };
+        let p = Platform::new(Arch::Hi25D, &sys, &opts);
+        let a = p.run(&m, 64, &opts);
+        let b = p.run(&m, 64, &opts);
+        assert_eq!(a.latency_secs, b.latency_secs, "reused cycle sim drifted");
+        assert_eq!(a.energy_j, b.energy_j);
+    }
+
+    #[test]
+    fn custom_design_runs_and_differs_from_mesh_seed() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let opts = SimOptions::default();
+        let chiplets = chiplets_for(&sys);
+        let mut d = NoiDesign::hi_seed(&sys, &chiplets, SfcKind::Boustrophedon);
+        let mut rng = Rng::new(11);
+        for _ in 0..40 {
+            d.random_move(&mut rng);
+        }
+        let p = Platform::with_design(Arch::Hi25D, &sys, d).unwrap();
+        let r = p.run(&m, 64, &opts);
+        assert!(r.latency_secs > 0.0 && r.latency_secs.is_finite());
+        assert!(r.energy_j > 0.0 && r.energy_j.is_finite());
+        assert!(r.temp_c > 40.0 && r.temp_c < 300.0);
+    }
+
+    #[test]
+    fn mismatched_design_rejected() {
+        let sys36 = SystemConfig::s36();
+        let sys64 = SystemConfig::s64();
+        let chips64 = chiplets_for(&sys64);
+        let d = NoiDesign::hi_seed(&sys64, &chips64, SfcKind::Boustrophedon);
+        assert!(Platform::with_design(Arch::Hi25D, &sys36, d).is_err());
+    }
+
+    #[test]
+    fn peak_power_concentrates_on_active_chiplets() {
+        // HI on 36 chiplets: the FF phase runs on the ReRAM macro + MCs;
+        // the peak phase (KQV/score) runs on SMs + MCs. Either way the
+        // active set is a strict subset, so temperature must come out at
+        // or above the old uniform spread but stay feasible (Fig 11).
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::bert_large();
+        let opts = SimOptions::default();
+        let hi3d = Platform::new(Arch::Hi3D, &sys, &opts).run(&m, 256, &opts);
+        assert!(
+            hi3d.temp_c < sys.hw.dram_t_max_c,
+            "3D-HI must stay feasible: {}",
+            hi3d.temp_c
+        );
+    }
+}

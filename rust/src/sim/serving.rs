@@ -1,0 +1,573 @@
+//! Request-level serving simulator: continuous batching on top of a
+//! prebuilt [`Platform`] — the ROADMAP "serve heavy traffic" scenario
+//! (vLLM-style scheduling, cf. the CIM LLM-serving surveys in PAPERS.md).
+//!
+//! Model:
+//!   - Requests arrive by a Poisson process (seeded, deterministic) or
+//!     an explicit trace; each carries a prompt and a generation budget.
+//!   - Prefill either runs on the serving engine between decode steps
+//!     (aggregated, the classic stall) or on a disaggregated prefill
+//!     instance that never blocks decode (`disaggregate_prefill`).
+//!   - Decode advances in engine steps over the active batch. Per-token
+//!     cost at context t comes from [`decode_step_on`], memoized per
+//!     context bucket; the cost is exactly affine in t (only the score
+//!     kernel scales with context), so each step decomposes into a
+//!     weight-stream part — shared across the batch, continuous
+//!     batching's win — and a per-request KV-read part:
+//!       t_step = ω·a + Σ_i (cost(ctx_i) − ω·a),   ω = weight_stream_frac
+//!     With batch size 1 this degenerates to exactly the one-shot
+//!     decode cost.
+//!   - KV capacity gates admission (full prompt+gen reservation, so no
+//!     mid-flight preemption is needed); per-step KV usage is tracked
+//!     for the peak report.
+//!
+//! Reported: throughput (tokens/s), p50/p95/p99 TTFT and per-token
+//! latency, energy per request, mean batch occupancy, peak KV bytes.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::ModelConfig;
+use crate::sim::decode::{decode_step_on, kv_cache_bytes};
+use crate::sim::engine::SimOptions;
+use crate::sim::platform::Platform;
+use crate::util::stats::percentile;
+use crate::util::Rng;
+
+/// How requests arrive.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Poisson process at `rate_per_sec`, `num_requests` total.
+    Poisson { rate_per_sec: f64, num_requests: usize },
+    /// Explicit arrival times in seconds (sorted internally).
+    Trace(Vec<f64>),
+}
+
+/// Serving-scenario knobs.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    pub arrivals: ArrivalProcess,
+    pub prompt_len: usize,
+    pub gen_tokens: usize,
+    /// Max concurrent decode requests (continuous-batching slot count).
+    pub max_batch: usize,
+    /// KV-cache capacity in bytes; admission reserves the full
+    /// prompt+gen footprint.
+    pub kv_capacity_bytes: f64,
+    /// Fraction of the context-free per-token cost that is weight
+    /// streaming, shared across the batch (decode is
+    /// weight-bandwidth-bound; §motivation / Fig 3).
+    pub weight_stream_frac: f64,
+    /// Prefill on a disaggregated instance (never blocks decode).
+    pub disaggregate_prefill: bool,
+    /// Context-bucket granularity for decode-step memoization.
+    pub ctx_bucket: usize,
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            arrivals: ArrivalProcess::Poisson {
+                rate_per_sec: 64.0,
+                num_requests: 64,
+            },
+            prompt_len: 128,
+            gen_tokens: 64,
+            max_batch: 16,
+            kv_capacity_bytes: 8.0 * (1u64 << 30) as f64,
+            weight_stream_frac: 0.7,
+            disaggregate_prefill: false,
+            ctx_bucket: 128,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Aggregate result of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    pub arch: String,
+    pub model: String,
+    pub requests: usize,
+    pub completed: usize,
+    /// first arrival → last completion (s).
+    pub makespan_secs: f64,
+    /// decoded tokens per second over the makespan.
+    pub throughput_tok_s: f64,
+    pub ttft_p50_secs: f64,
+    pub ttft_p95_secs: f64,
+    pub ttft_p99_secs: f64,
+    pub tpot_p50_secs: f64,
+    pub tpot_p95_secs: f64,
+    pub tpot_p99_secs: f64,
+    pub energy_per_req_j: f64,
+    pub mean_batch: f64,
+    pub peak_kv_bytes: f64,
+}
+
+impl ServingReport {
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:<18} {:<11} {:>4} req | {:>8.1} tok/s | TTFT p50/p99 {:>7.2}/{:>7.2} ms | TPOT p50/p99 {:>6.3}/{:>6.3} ms | {:>7.2} mJ/req | batch {:>4.1}",
+            self.arch,
+            self.model,
+            self.completed,
+            self.throughput_tok_s,
+            self.ttft_p50_secs * 1e3,
+            self.ttft_p99_secs * 1e3,
+            self.tpot_p50_secs * 1e3,
+            self.tpot_p99_secs * 1e3,
+            self.energy_per_req_j * 1e3,
+            self.mean_batch
+        )
+    }
+}
+
+struct Req {
+    arrival: f64,
+    /// prefill completion; infinity until prefilled.
+    ready: f64,
+    /// completion time of the request's FIRST decoded token (the TTFT
+    /// reference: includes prefill, batch-slot queueing and the first
+    /// decode step). For zero-generation requests this stays infinite
+    /// and TTFT falls back to prefill completion.
+    first_token: f64,
+    finish: f64,
+    ctx: usize,
+    tokens_left: usize,
+    energy_j: f64,
+}
+
+/// Request-level serving simulator over a prebuilt platform.
+pub struct ServingSim<'a> {
+    platform: &'a Platform,
+    model: &'a ModelConfig,
+    opts: SimOptions,
+    cfg: ServingConfig,
+    /// bucketed context → (secs, joules) per decoded token.
+    step_cache: HashMap<usize, (f64, f64)>,
+}
+
+impl<'a> ServingSim<'a> {
+    pub fn new(platform: &'a Platform, model: &'a ModelConfig, cfg: ServingConfig) -> Self {
+        ServingSim {
+            platform,
+            model,
+            opts: SimOptions::default(),
+            cfg,
+            step_cache: HashMap::new(),
+        }
+    }
+
+    /// Override the engine options (e.g. `cycle_accurate`) used for the
+    /// prefill and decode-step cost probes; the default is analytic.
+    pub fn with_opts(mut self, opts: SimOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    fn bucket(&self, ctx: usize) -> usize {
+        let b = self.cfg.ctx_bucket.max(1);
+        ctx.max(1).div_ceil(b) * b
+    }
+
+    /// Memoized per-token decode cost at the context's bucket.
+    fn step_cost(&mut self, ctx: usize) -> (f64, f64) {
+        let key = self.bucket(ctx);
+        if let Some(&v) = self.step_cache.get(&key) {
+            return v;
+        }
+        let v = decode_step_on(self.platform, self.model, key, &self.opts);
+        self.step_cache.insert(key, v);
+        v
+    }
+
+    /// Context-free intercept (a_secs, a_joules) of the affine per-token
+    /// cost, from two memoized probes (cost is exactly affine in ctx).
+    fn intercept(&mut self) -> (f64, f64) {
+        let b = self.cfg.ctx_bucket.max(1);
+        let (c1, c2) = (b, 32 * b);
+        let (s1, e1) = self.step_cost(c1);
+        let (s2, e2) = self.step_cost(c2);
+        let slope_s = (s2 - s1) / (c2 - c1) as f64;
+        let slope_e = (e2 - e1) / (c2 - c1) as f64;
+        ((s1 - slope_s * c1 as f64).max(0.0), (e1 - slope_e * c1 as f64).max(0.0))
+    }
+
+    /// Run the scenario to completion.
+    pub fn run(&mut self) -> ServingReport {
+        let cfg = self.cfg.clone();
+        let max_batch = cfg.max_batch.max(1);
+
+        // --- arrival times
+        let arrivals: Vec<f64> = match &cfg.arrivals {
+            ArrivalProcess::Poisson {
+                rate_per_sec,
+                num_requests,
+            } => {
+                let mut rng = Rng::new(cfg.seed);
+                let rate = rate_per_sec.max(1e-9);
+                let mut t = 0.0f64;
+                (0..*num_requests)
+                    .map(|_| {
+                        t += -(1.0 - rng.f64()).ln() / rate;
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Trace(ts) => {
+                let mut ts = ts.clone();
+                ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                ts
+            }
+        };
+        let nreq = arrivals.len();
+
+        // --- prefill cost (memoized once: every request shares the
+        // prompt length) and decode cost decomposition
+        let prefill = self.platform.run(self.model, cfg.prompt_len.max(8), &self.opts);
+        let (prefill_secs, prefill_energy) = (prefill.latency_secs, prefill.energy_j);
+        let (a_secs, a_joules) = self.intercept();
+        let omega = cfg.weight_stream_frac.clamp(0.0, 1.0);
+
+        let mut reqs: Vec<Req> = arrivals
+            .iter()
+            .map(|&t| Req {
+                arrival: t,
+                ready: f64::INFINITY,
+                first_token: f64::INFINITY,
+                finish: f64::INFINITY,
+                ctx: cfg.prompt_len,
+                tokens_left: cfg.gen_tokens,
+                energy_j: 0.0,
+            })
+            .collect();
+
+        // disaggregated prefill: a separate serial instance prefills in
+        // arrival order and never blocks the decode engine
+        if cfg.disaggregate_prefill {
+            let mut busy = 0.0f64;
+            for r in reqs.iter_mut() {
+                let start = busy.max(r.arrival);
+                busy = start + prefill_secs;
+                r.ready = busy;
+                r.energy_j += prefill_energy;
+            }
+        }
+
+        let kv_full = kv_cache_bytes(self.model, cfg.prompt_len + cfg.gen_tokens);
+
+        let mut clock = 0.0f64;
+        let mut next_arr = 0usize;
+        let mut waiting: VecDeque<usize> = VecDeque::new();
+        let mut active: Vec<usize> = Vec::new();
+        let mut completed = 0usize;
+        let mut kv_reserved = 0.0f64;
+        let mut peak_kv = 0.0f64;
+        let mut batch_sum = 0.0f64;
+        let mut batch_steps = 0usize;
+        let mut decoded_tokens = 0u64;
+
+        while completed < nreq {
+            // pull arrived requests into the admission queue
+            while next_arr < nreq && arrivals[next_arr] <= clock {
+                waiting.push_back(next_arr);
+                next_arr += 1;
+            }
+
+            // FCFS admission into the decode batch
+            while active.len() < max_batch {
+                let Some(&i) = waiting.front() else { break };
+                if kv_reserved + kv_full > cfg.kv_capacity_bytes && !active.is_empty() {
+                    break; // wait for a slot to free its KV
+                }
+                if cfg.disaggregate_prefill {
+                    if reqs[i].ready > clock {
+                        break; // prefill instance hasn't finished it yet
+                    }
+                } else {
+                    // prefill on the serving engine: blocks decode
+                    clock += prefill_secs;
+                    reqs[i].ready = clock;
+                    reqs[i].energy_j += prefill_energy;
+                }
+                waiting.pop_front();
+                kv_reserved += kv_full;
+                active.push(i);
+            }
+
+            // retire zero-generation requests (complete at prefill)
+            active.retain(|&i| {
+                if reqs[i].tokens_left == 0 {
+                    reqs[i].finish = reqs[i].ready.max(clock);
+                    completed += 1;
+                    kv_reserved -= kv_full;
+                    false
+                } else {
+                    true
+                }
+            });
+
+            if active.is_empty() {
+                // idle: jump to the next event (arrival or prefill-ready)
+                let mut t_next = f64::INFINITY;
+                if next_arr < nreq {
+                    t_next = arrivals[next_arr];
+                }
+                if let Some(&i) = waiting.front() {
+                    if cfg.disaggregate_prefill {
+                        t_next = t_next.min(reqs[i].ready);
+                    }
+                }
+                if t_next.is_finite() {
+                    clock = clock.max(t_next);
+                    continue;
+                }
+                break; // nothing can ever arrive again
+            }
+
+            // --- one decode engine step over the batch
+            let mut t_step = omega * a_secs; // shared weight stream
+            let mut kv_now = 0.0f64;
+            for &i in &active {
+                let (s_i, _) = self.step_cost(reqs[i].ctx);
+                t_step += (s_i - omega * a_secs).max(0.0);
+            }
+            clock += t_step;
+            batch_sum += active.len() as f64;
+            batch_steps += 1;
+            let shared_energy = omega * a_joules / active.len() as f64;
+            for &i in &active {
+                let (_, e_i) = self.step_cost(reqs[i].ctx);
+                let r = &mut reqs[i];
+                if r.tokens_left == cfg.gen_tokens {
+                    r.first_token = clock; // first decoded token lands now
+                }
+                r.energy_j += (e_i - omega * a_joules).max(0.0) + shared_energy;
+                r.ctx += 1;
+                r.tokens_left -= 1;
+                decoded_tokens += 1;
+                kv_now += kv_cache_bytes(self.model, r.ctx);
+            }
+            peak_kv = peak_kv.max(kv_now);
+
+            active.retain(|&i| {
+                if reqs[i].tokens_left == 0 {
+                    reqs[i].finish = clock;
+                    completed += 1;
+                    kv_reserved -= kv_full;
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+
+        // --- aggregate. TTFT = first decoded token minus arrival, so it
+        // includes prefill, batch-slot queueing AND the first decode
+        // step — identical semantics in aggregated and disaggregated
+        // mode (zero-generation requests fall back to prefill
+        // completion). TPOT covers the remaining tokens after the first.
+        let ttft: Vec<f64> = reqs
+            .iter()
+            .map(|r| {
+                if r.first_token.is_finite() {
+                    r.first_token - r.arrival
+                } else {
+                    r.ready - r.arrival
+                }
+            })
+            .collect();
+        let tpot: Vec<f64> = reqs
+            .iter()
+            .map(|r| {
+                if cfg.gen_tokens > 1 && r.first_token.is_finite() {
+                    (r.finish - r.first_token) / (cfg.gen_tokens - 1) as f64
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let first_arrival = arrivals.first().copied().unwrap_or(0.0);
+        let last_finish = reqs
+            .iter()
+            .map(|r| r.finish)
+            .filter(|f| f.is_finite())
+            .fold(first_arrival, f64::max);
+        let makespan = (last_finish - first_arrival).max(1e-12);
+        let total_energy: f64 = reqs.iter().map(|r| r.energy_j).sum();
+
+        ServingReport {
+            arch: self.platform.arch.name().to_string(),
+            model: self.model.name.to_string(),
+            requests: nreq,
+            completed,
+            makespan_secs: makespan,
+            throughput_tok_s: decoded_tokens as f64 / makespan,
+            ttft_p50_secs: percentile(&ttft, 50.0),
+            ttft_p95_secs: percentile(&ttft, 95.0),
+            ttft_p99_secs: percentile(&ttft, 99.0),
+            tpot_p50_secs: percentile(&tpot, 50.0),
+            tpot_p95_secs: percentile(&tpot, 95.0),
+            tpot_p99_secs: percentile(&tpot, 99.0),
+            energy_per_req_j: total_energy / nreq.max(1) as f64,
+            mean_batch: if batch_steps == 0 {
+                0.0
+            } else {
+                batch_sum / batch_steps as f64
+            },
+            peak_kv_bytes: peak_kv,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::Arch;
+    use crate::config::{ModelZoo, SystemConfig};
+
+    fn burst_cfg(n: usize) -> ServingConfig {
+        ServingConfig {
+            arrivals: ArrivalProcess::Poisson {
+                rate_per_sec: 1.0e5, // saturating burst: throughput is service-limited
+                num_requests: n,
+            },
+            prompt_len: 64,
+            gen_tokens: 16,
+            max_batch: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let r = ServingSim::new(&p, &m, burst_cfg(24)).run();
+        assert_eq!(r.completed, 24);
+        assert!(r.throughput_tok_s > 0.0 && r.throughput_tok_s.is_finite());
+        assert!(r.ttft_p99_secs >= r.ttft_p50_secs);
+        assert!(r.tpot_p99_secs >= r.tpot_p50_secs);
+        assert!(r.energy_per_req_j > 0.0);
+        assert!(r.mean_batch >= 1.0 && r.mean_batch <= 8.0);
+        assert!(r.peak_kv_bytes > 0.0);
+    }
+
+    #[test]
+    fn deterministic_under_fixed_seed() {
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let a = ServingSim::new(&p, &m, burst_cfg(16)).run();
+        let b = ServingSim::new(&p, &m, burst_cfg(16)).run();
+        assert_eq!(a.makespan_secs, b.makespan_secs);
+        assert_eq!(a.throughput_tok_s, b.throughput_tok_s);
+        assert_eq!(a.ttft_p99_secs, b.ttft_p99_secs);
+        assert_eq!(a.energy_per_req_j, b.energy_per_req_j);
+    }
+
+    #[test]
+    fn hi_outserves_baselines_under_load() {
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let mut tput = Vec::new();
+        for arch in [Arch::Hi25D, Arch::TransPimChiplet, Arch::HaimaChiplet] {
+            let p = Platform::new(arch, &sys, &SimOptions::default());
+            let r = ServingSim::new(&p, &m, burst_cfg(16)).run();
+            tput.push(r);
+        }
+        assert!(
+            tput[0].throughput_tok_s > tput[1].throughput_tok_s,
+            "HI {} vs TransPIM {}",
+            tput[0].throughput_tok_s,
+            tput[1].throughput_tok_s
+        );
+        assert!(
+            tput[0].throughput_tok_s > tput[2].throughput_tok_s,
+            "HI {} vs HAIMA {}",
+            tput[0].throughput_tok_s,
+            tput[2].throughput_tok_s
+        );
+    }
+
+    #[test]
+    fn batching_beats_serial_throughput() {
+        // same burst, batch 8 vs batch 1: shared weight streaming must
+        // raise tokens/s
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let batched = ServingSim::new(&p, &m, burst_cfg(16)).run();
+        let serial_cfg = ServingConfig {
+            max_batch: 1,
+            ..burst_cfg(16)
+        };
+        let serial = ServingSim::new(&p, &m, serial_cfg).run();
+        assert!(
+            batched.throughput_tok_s > serial.throughput_tok_s,
+            "batched {} vs serial {}",
+            batched.throughput_tok_s,
+            serial.throughput_tok_s
+        );
+    }
+
+    #[test]
+    fn disaggregation_cuts_tail_ttft_under_load() {
+        // under a saturating burst, an aggregated tail request waits for
+        // decode slots *and* engine prefill stalls; the disaggregated
+        // prefill instance serializes prefills only, so tail TTFT can
+        // only improve
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let agg = ServingSim::new(&p, &m, burst_cfg(24)).run();
+        let dis_cfg = ServingConfig {
+            disaggregate_prefill: true,
+            ..burst_cfg(24)
+        };
+        let dis = ServingSim::new(&p, &m, dis_cfg).run();
+        assert!(
+            dis.ttft_p99_secs <= agg.ttft_p99_secs * 1.001,
+            "dis {} vs agg {}",
+            dis.ttft_p99_secs,
+            agg.ttft_p99_secs
+        );
+    }
+
+    #[test]
+    fn trace_arrivals_respected() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let cfg = ServingConfig {
+            arrivals: ArrivalProcess::Trace(vec![0.0, 0.001, 0.002, 0.5]),
+            prompt_len: 64,
+            gen_tokens: 8,
+            ..Default::default()
+        };
+        let r = ServingSim::new(&p, &m, cfg).run();
+        assert_eq!(r.requests, 4);
+        assert_eq!(r.completed, 4);
+        // the straggler at t=0.5 bounds the makespan from below
+        assert!(r.makespan_secs >= 0.5);
+    }
+
+    #[test]
+    fn zero_generation_requests_complete() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let cfg = ServingConfig {
+            arrivals: ArrivalProcess::Trace(vec![0.0, 0.001]),
+            prompt_len: 64,
+            gen_tokens: 0,
+            ..Default::default()
+        };
+        let r = ServingSim::new(&p, &m, cfg).run();
+        assert_eq!(r.completed, 2);
+        assert_eq!(r.tpot_p50_secs, 0.0);
+        assert!(r.ttft_p50_secs > 0.0);
+    }
+}

@@ -56,6 +56,12 @@ impl Args {
             .unwrap_or(default)
     }
 
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
     pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
@@ -87,7 +93,14 @@ mod tests {
         let a = parse(&[]);
         assert_eq!(a.get_usize("system", 36), 36);
         assert_eq!(a.get_str("arch", "hi"), "hi");
+        assert_eq!(a.get_f64("rate", 4.5), 4.5);
         assert!(!a.has_flag("x"));
+    }
+
+    #[test]
+    fn parses_floats() {
+        let a = parse(&["serve", "--rate", "12.5"]);
+        assert_eq!(a.get_f64("rate", 1.0), 12.5);
     }
 
     #[test]

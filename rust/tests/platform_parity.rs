@@ -1,0 +1,159 @@
+//! Platform refactor parity: `Platform::run` must reproduce the
+//! pre-refactor `simulate` numbers across every (arch × model × system
+//! size) combination, the MOO design plug-through must round-trip end to
+//! end, and the serving simulator must be bit-deterministic under a
+//! fixed seed.
+
+use chiplet_hi::arch::SfcKind;
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::moo::design::NoiDesign;
+use chiplet_hi::moo::{amosa, Evaluator};
+use chiplet_hi::model::kernels::Workload;
+use chiplet_hi::sim::engine::chiplets_for;
+use chiplet_hi::sim::{
+    generate, generate_on, simulate, ArrivalProcess, Platform, ServingConfig, ServingSim,
+    SimOptions,
+};
+
+/// Exact parity: one platform reused across models/seq-lens produces the
+/// same latency, energy and temperature as the one-shot `simulate` for
+/// every architecture and system size.
+#[test]
+fn platform_run_matches_simulate_everywhere() {
+    let opts = SimOptions::default();
+    for sys in [SystemConfig::s36(), SystemConfig::s64(), SystemConfig::s100()] {
+        for arch in Arch::all() {
+            let platform = Platform::new(arch, &sys, &opts);
+            for model in [ModelZoo::bert_base(), ModelZoo::bart_large(), ModelZoo::gpt_j()] {
+                for n in [64usize, 256] {
+                    let a = platform.run(&model, n, &opts);
+                    let b = simulate(arch, &sys, &model, n, &opts);
+                    assert_eq!(
+                        a.latency_secs, b.latency_secs,
+                        "{arch:?}/{}/n={n}/{} chiplets: latency",
+                        model.name,
+                        sys.size.chiplets()
+                    );
+                    assert_eq!(a.energy_j, b.energy_j, "{arch:?}/{}: energy", model.name);
+                    assert_eq!(a.temp_c, b.temp_c, "{arch:?}/{}: temp", model.name);
+                    assert_eq!(a.kernels.len(), b.kernels.len());
+                }
+            }
+        }
+    }
+}
+
+/// Cycle-accurate mode: the reused CycleSim inside the platform must
+/// match the one-shot path bit for bit.
+#[test]
+fn platform_cycle_accurate_parity() {
+    let opts = SimOptions {
+        cycle_accurate: true,
+        ..Default::default()
+    };
+    let sys = SystemConfig::s36();
+    let m = ModelZoo::bert_base();
+    let platform = Platform::new(Arch::Hi25D, &sys, &opts);
+    // run twice through the same platform to also exercise scratch reuse
+    for _ in 0..2 {
+        let a = platform.run(&m, 64, &opts);
+        let b = simulate(Arch::Hi25D, &sys, &m, 64, &opts);
+        assert_eq!(a.latency_secs, b.latency_secs, "cycle-accurate latency");
+        assert_eq!(a.energy_j, b.energy_j);
+    }
+}
+
+/// Decode path parity: generate_on over a reused platform == generate.
+#[test]
+fn decode_parity_on_reused_platform() {
+    let sys = SystemConfig::s100();
+    let m = ModelZoo::llama2_7b();
+    let opts = SimOptions::default();
+    let platform = Platform::new(Arch::Hi25D, &sys, &opts);
+    let a = generate_on(&platform, &m, 128, 32, &opts);
+    let b = generate(Arch::Hi25D, &sys, &m, 128, 32, &opts);
+    assert_eq!(a.prefill_secs, b.prefill_secs);
+    assert_eq!(a.total_secs, b.total_secs);
+    assert_eq!(a.tokens_per_sec, b.tokens_per_sec);
+    assert_eq!(a.energy_j, b.energy_j);
+}
+
+/// The optimize → export → simulate loop: a MOO-produced λ* design
+/// round-trips through the JSON interchange and runs end to end.
+#[test]
+fn moo_design_roundtrips_end_to_end() {
+    let sys = SystemConfig::s36();
+    let model = ModelZoo::bert_base();
+    let chiplets = chiplets_for(&sys);
+    let w = Workload::build(&model, 64);
+    let ev = Evaluator::new(&sys, &chiplets, &w);
+    let seed = NoiDesign::hi_seed(&sys, &chiplets, SfcKind::Boustrophedon);
+    // short annealing schedule: any non-empty archive will do
+    let cfg = amosa::AmosaConfig {
+        t_init: 0.1,
+        cooling: 0.5,
+        iters_per_temp: 8,
+        ..Default::default()
+    };
+    let r = amosa::amosa(&ev, seed, &cfg);
+    let (_, knee) = r.archive.best_scalar().expect("non-empty archive");
+
+    // export → load (the `optimize --export` / `--design` path)
+    let path = std::env::temp_dir().join("chiplet_hi_parity_design.json");
+    knee.save(&path).unwrap();
+    let loaded = NoiDesign::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(&loaded, knee, "JSON interchange must be lossless");
+
+    // end-to-end run on the loaded design
+    let opts = SimOptions::default();
+    let platform = Platform::with_design(Arch::Hi25D, &sys, loaded).unwrap();
+    let rep = platform.run(&model, 64, &opts);
+    assert!(rep.latency_secs > 0.0 && rep.latency_secs.is_finite());
+    assert!(rep.energy_j > 0.0 && rep.energy_j.is_finite());
+
+    // the optimizer's design keeps the §3.3 link budget, so comm stays
+    // in the same regime as the seed design (sanity, not bit-parity)
+    let base = simulate(Arch::Hi25D, &sys, &model, 64, &opts);
+    assert!(rep.latency_secs < base.latency_secs * 10.0);
+}
+
+/// Serving simulator determinism: identical config + seed → identical
+/// report, including tail percentiles and energy.
+#[test]
+fn serving_deterministic_under_fixed_seed() {
+    let sys = SystemConfig::s100();
+    let m = ModelZoo::gpt_j();
+    let opts = SimOptions::default();
+    let platform = Platform::new(Arch::Hi25D, &sys, &opts);
+    let cfg = ServingConfig {
+        arrivals: ArrivalProcess::Poisson {
+            rate_per_sec: 200.0,
+            num_requests: 32,
+        },
+        prompt_len: 96,
+        gen_tokens: 24,
+        max_batch: 8,
+        seed: 0xFEED,
+        ..Default::default()
+    };
+    let a = ServingSim::new(&platform, &m, cfg.clone()).run();
+    let b = ServingSim::new(&platform, &m, cfg.clone()).run();
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.makespan_secs, b.makespan_secs);
+    assert_eq!(a.throughput_tok_s, b.throughput_tok_s);
+    assert_eq!(a.ttft_p50_secs, b.ttft_p50_secs);
+    assert_eq!(a.ttft_p99_secs, b.ttft_p99_secs);
+    assert_eq!(a.tpot_p99_secs, b.tpot_p99_secs);
+    assert_eq!(a.energy_per_req_j, b.energy_per_req_j);
+    assert_eq!(a.peak_kv_bytes, b.peak_kv_bytes);
+
+    // a different seed shifts the arrival times and hence the tails
+    let cfg2 = ServingConfig { seed: 0xBEEF, ..cfg };
+    let c = ServingSim::new(&platform, &m, cfg2).run();
+    assert_ne!(
+        a.makespan_secs, c.makespan_secs,
+        "different seed must change arrivals"
+    );
+}

@@ -135,7 +135,7 @@ fn prop_cycle_sim_drains_and_bounded_below() {
         let p = Placement::identity(n, side, side);
         let t = Topology::mesh(&p);
         let r = RoutingTable::build(&t);
-        let sim = CycleSim::new(&t, &r, 8);
+        let mut sim = CycleSim::new(&t, &r, 8);
         let mut m = TrafficMatrix::zeros(n, KernelKind::Score, 1);
         for _ in 0..rng.range(1, 10) {
             let s = rng.below(n);
@@ -146,6 +146,8 @@ fn prop_cycle_sim_drains_and_bounded_below() {
         }
         let res = sim.run_phase(&m, 32.0);
         if res.packets > 0 {
+            assert!(res.drained, "case {case}: all packets must drain");
+            assert_eq!(res.delivered, res.packets, "case {case}");
             // lower bound: max flow path length
             assert!(res.cycles as f64 >= res.mean_packet_latency, "case {case}");
             assert!(res.mean_packet_latency > 0.0, "case {case}");

@@ -1,6 +1,8 @@
-//! Runtime + coordinator end-to-end tests. These REQUIRE artifacts/
-//! (run `make artifacts` first); they are skipped gracefully when the
+//! Runtime + coordinator end-to-end tests. These REQUIRE the `pjrt`
+//! cargo feature (vendored `xla` crate) plus artifacts/ (run
+//! `make artifacts` first); they are skipped gracefully when the
 //! artifacts are missing so `cargo test` works on a fresh checkout.
+#![cfg(feature = "pjrt")]
 
 use chiplet_hi::config::SystemConfig;
 use chiplet_hi::coordinator::{run_functional, TinyParams};
