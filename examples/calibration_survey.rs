@@ -6,6 +6,7 @@
 
 use chiplet_hi::*;
 fn main() {
+    let opts = sim::SimOptions::default();
     for (sys, m, n) in [
         (config::SystemConfig::s36(), config::ModelZoo::bert_base(), 64usize),
         (config::SystemConfig::s64(), config::ModelZoo::bart_large(), 64),
@@ -13,17 +14,28 @@ fn main() {
         (config::SystemConfig::s100(), config::ModelZoo::gpt_j(), 64),
         (config::SystemConfig::s100(), config::ModelZoo::llama2_7b(), 64),
     ] {
-        let hi = sim::simulate(baselines::Arch::Hi25D, &sys, &m, n, &sim::SimOptions::default());
-        let tp = sim::simulate(baselines::Arch::TransPimChiplet, &sys, &m, n, &sim::SimOptions::default());
-        let ha = sim::simulate(baselines::Arch::HaimaChiplet, &sys, &m, n, &sim::SimOptions::default());
-        let tpo = sim::simulate(baselines::Arch::TransPimOriginal, &sys, &m, n, &sim::SimOptions::default());
-        let hao = sim::simulate(baselines::Arch::HaimaOriginal, &sys, &m, n, &sim::SimOptions::default());
-        println!("{} {} n={}: HI {:.3}ms | TP {:.3}ms ({:.1}x) | HA {:.3}ms ({:.1}x) | TPo ({:.1}x) HAo ({:.1}x) | E: {:.1}/{:.1}/{:.1} mJ (TP {:.2}x HA {:.2}x)",
-            sys.size.chiplets(), m.name, n,
-            hi.latency_secs*1e3, tp.latency_secs*1e3, tp.latency_secs/hi.latency_secs,
-            ha.latency_secs*1e3, ha.latency_secs/hi.latency_secs,
-            tpo.latency_secs/hi.latency_secs, hao.latency_secs/hi.latency_secs,
-            hi.energy_j*1e3, tp.energy_j*1e3, ha.energy_j*1e3,
-            tp.energy_j/hi.energy_j, ha.energy_j/hi.energy_j);
+        let hi = sim::simulate(baselines::Arch::Hi25D, &sys, &m, n, &opts);
+        let tp = sim::simulate(baselines::Arch::TransPimChiplet, &sys, &m, n, &opts);
+        let ha = sim::simulate(baselines::Arch::HaimaChiplet, &sys, &m, n, &opts);
+        let tpo = sim::simulate(baselines::Arch::TransPimOriginal, &sys, &m, n, &opts);
+        let hao = sim::simulate(baselines::Arch::HaimaOriginal, &sys, &m, n, &opts);
+        println!(
+            "{} {} n={}: HI {:.3}ms | TP {:.3}ms ({:.1}x) | HA {:.3}ms ({:.1}x) | TPo ({:.1}x) HAo ({:.1}x) | E: {:.1}/{:.1}/{:.1} mJ (TP {:.2}x HA {:.2}x)",
+            sys.size.chiplets(),
+            m.name,
+            n,
+            hi.latency_secs * 1e3,
+            tp.latency_secs * 1e3,
+            tp.latency_secs / hi.latency_secs,
+            ha.latency_secs * 1e3,
+            ha.latency_secs / hi.latency_secs,
+            tpo.latency_secs / hi.latency_secs,
+            hao.latency_secs / hi.latency_secs,
+            hi.energy_j * 1e3,
+            tp.energy_j * 1e3,
+            ha.energy_j * 1e3,
+            tp.energy_j / hi.energy_j,
+            ha.energy_j / hi.energy_j
+        );
     }
 }

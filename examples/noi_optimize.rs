@@ -43,9 +43,27 @@ fn main() {
     let nsga_r = nsga2::nsga2(&ev, seeds, &nsga2::Nsga2Config::default());
     let mut best_design = None;
     for (name, phv, evals, objs, archive) in [
-        ("MOO-STAGE", stage_r.phv, stage_r.evaluations, stage_r.archive.objectives(), Some(&stage_r.archive)),
-        ("AMOSA", amosa_r.phv, amosa_r.evaluations, amosa_r.archive.objectives(), None),
-        ("NSGA-II", nsga_r.phv, nsga_r.evaluations, nsga_r.archive.objectives(), None),
+        (
+            "MOO-STAGE",
+            stage_r.phv,
+            stage_r.evaluations,
+            stage_r.archive.objectives(),
+            Some(&stage_r.archive),
+        ),
+        (
+            "AMOSA",
+            amosa_r.phv,
+            amosa_r.evaluations,
+            amosa_r.archive.objectives(),
+            None,
+        ),
+        (
+            "NSGA-II",
+            nsga_r.phv,
+            nsga_r.evaluations,
+            nsga_r.archive.objectives(),
+            None,
+        ),
     ] {
         let best_mu = objs.iter().map(|o| o[0]).fold(f64::MAX, f64::min);
         let best_sg = objs.iter().map(|o| o[1]).fold(f64::MAX, f64::min);

@@ -6,22 +6,27 @@
 //! prefill/decode disaggregation at the highest load — the ROADMAP
 //! "serve heavy traffic" scenario on top of the build-once Platform.
 //!
+//! The (rate × arch) sweep grid runs on the shared worker pool
+//! (`CHIPLET_JOBS` to cap it) — each cell owns its platform, and the
+//! printed tables come out in sweep order regardless of which worker
+//! finished first.
+//!
 //! Run: `cargo run --release --example serving_load`
 
 use chiplet_hi::baselines::Arch;
 use chiplet_hi::config::{ModelZoo, SystemConfig};
-use chiplet_hi::sim::{ArrivalProcess, Platform, ServingConfig, ServingSim, SimOptions};
+use chiplet_hi::sim::{
+    ArrivalProcess, Platform, ServingConfig, ServingReport, ServingSim, SimOptions,
+};
 use chiplet_hi::util::bench::Table;
+use chiplet_hi::util::parallel;
 
 fn main() {
     let sys = SystemConfig::s100();
     let model = ModelZoo::gpt_j();
     let opts = SimOptions::default();
     let arches = [Arch::Hi25D, Arch::TransPimChiplet, Arch::HaimaChiplet];
-    let platforms: Vec<Platform> = arches
-        .iter()
-        .map(|&a| Platform::new(a, &sys, &opts))
-        .collect();
+    let rates = [16.0, 64.0, 256.0];
 
     println!(
         "serving {} on {} chiplets: 64 requests, prompt 128, gen 64, batch 16\n",
@@ -29,15 +34,14 @@ fn main() {
         sys.size.chiplets()
     );
 
-    for rate in [16.0, 64.0, 256.0] {
-        let mut t = Table::new(
-            &format!("offered load {rate:.0} req/s (Poisson)"),
-            &[
-                "arch", "tok/s", "TTFT p50 ms", "TTFT p99 ms", "TPOT p50 ms", "TPOT p99 ms",
-                "mJ/req", "batch",
-            ],
-        );
-        for p in &platforms {
+    // the whole sweep grid in parallel, one (rate, arch) cell per task
+    let cells: Vec<(f64, Arch)> = rates
+        .iter()
+        .flat_map(|&rate| arches.iter().map(move |&a| (rate, a)))
+        .collect();
+    let reports: Vec<ServingReport> =
+        parallel::par_map(parallel::default_jobs(), &cells, |&(rate, arch)| {
+            let platform = Platform::new(arch, &sys, &opts);
             let cfg = ServingConfig {
                 arrivals: ArrivalProcess::Poisson {
                     rate_per_sec: rate,
@@ -45,7 +49,18 @@ fn main() {
                 },
                 ..Default::default()
             };
-            let r = ServingSim::new(p, &model, cfg).run();
+            ServingSim::new(&platform, &model, cfg).run()
+        });
+
+    for (ri, &rate) in rates.iter().enumerate() {
+        let mut t = Table::new(
+            &format!("offered load {rate:.0} req/s (Poisson)"),
+            &[
+                "arch", "tok/s", "TTFT p50 ms", "TTFT p99 ms", "TPOT p50 ms", "TPOT p99 ms",
+                "mJ/req", "batch",
+            ],
+        );
+        for r in &reports[ri * arches.len()..(ri + 1) * arches.len()] {
             t.row(vec![
                 r.arch.clone(),
                 format!("{:.1}", r.throughput_tok_s),
@@ -61,6 +76,7 @@ fn main() {
     }
 
     // prefill/decode disaggregation at the highest load (2.5D-HI)
+    let hi = Platform::new(Arch::Hi25D, &sys, &opts);
     let mut t = Table::new(
         "prefill/decode disaggregation, 2.5D-HI @ 256 req/s",
         &["mode", "tok/s", "TTFT p99 ms", "TPOT p99 ms"],
@@ -74,7 +90,7 @@ fn main() {
             disaggregate_prefill: disagg,
             ..Default::default()
         };
-        let r = ServingSim::new(&platforms[0], &model, cfg).run();
+        let r = ServingSim::new(&hi, &model, cfg).run();
         t.row(vec![
             if disagg { "disaggregated" } else { "aggregated" }.into(),
             format!("{:.1}", r.throughput_tok_s),

@@ -15,7 +15,10 @@ fn main() {
     for model in [ModelZoo::llama2_7b(), ModelZoo::gpt_j()] {
         let mut t = Table::new(
             &format!("Fig 10 - {} on 100 chiplets", model.name),
-            &["N", "HI ms", "TP_c", "HA_c", "TP orig", "HA orig", "gain(chiplet)", "gain(orig)", "E gain"],
+            &[
+                "N", "HI ms", "TP_c", "HA_c", "TP orig", "HA orig", "gain(chiplet)",
+                "gain(orig)", "E gain",
+            ],
         );
         for n in [64usize, 256, 1024] {
             let hi = simulate(Arch::Hi25D, &sys, &model, n, &opts);

@@ -49,7 +49,9 @@ fn main() {
     t.print();
     let tmin = temps.iter().cloned().fold(f64::MAX, f64::min);
     let tmax = temps.iter().cloned().fold(f64::MIN, f64::max);
-    println!("\nbaseline temperature band: {tmin:.0}-{tmax:.0} C (paper: 120-131 C, all infeasible)");
+    println!(
+        "\nbaseline temperature band: {tmin:.0}-{tmax:.0} C (paper: 120-131 C, all infeasible)"
+    );
     println!("BERT-Large n=2056 EDP vs original HAIMA: {bert_2056_edp:.1}x");
 
     // the paper's 14.5x EDP point normalizes against a *running* HAIMA

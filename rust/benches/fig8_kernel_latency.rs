@@ -20,8 +20,9 @@ fn main() {
         let hi = simulate(Arch::Hi25D, &sys, &model, n, &opts);
         let tp = simulate(Arch::TransPimChiplet, &sys, &model, n, &opts);
         let ha = simulate(Arch::HaimaChiplet, &sys, &model, n, &opts);
+        let panel = if n == 64 { "a" } else { "b" };
         let mut t = Table::new(
-            &format!("Fig 8{} - per-kernel latency, BERT-Base N={n}, 36 chiplets", if n == 64 { "a" } else { "b" }),
+            &format!("Fig 8{panel} - per-kernel latency, BERT-Base N={n}, 36 chiplets"),
             &["kernel", "HI us", "TransPIM us", "HAIMA us", "gain vs TP", "gain vs HA"],
         );
         let mut ff_gain = 0.0;

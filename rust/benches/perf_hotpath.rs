@@ -1,6 +1,8 @@
 //! L3 hot-path microbenchmarks (EXPERIMENTS.md SSPerf): the inner loops
-//! the MOO and the system simulator spend their time in, plus the
-//! build-once Platform payoff (amortized setup vs per-call rebuild).
+//! the MOO and the system simulator spend their time in, the build-once
+//! Platform payoff (amortized setup vs per-call rebuild), and the
+//! parallel + memoized MOO batch evaluator vs the pre-PR serial path.
+//! Emits the machine-readable `BENCH_3.json` perf trajectory.
 
 use chiplet_hi::arch::{Placement, SfcKind};
 use chiplet_hi::baselines::Arch;
@@ -12,6 +14,7 @@ use chiplet_hi::noi::{analytic, CycleSim, RoutingTable, Topology};
 use chiplet_hi::sim::engine::chiplets_for;
 use chiplet_hi::sim::{simulate, Platform, SimOptions};
 use chiplet_hi::util::bench::Bencher;
+use chiplet_hi::util::Rng;
 
 fn main() {
     let mut b = Bencher::new("perf_hotpath");
@@ -33,8 +36,65 @@ fn main() {
     let ev = Evaluator::new(&sys, &chiplets, &w);
     let d = NoiDesign::hi_seed(&sys, &chiplets, SfcKind::Hilbert);
     b.bench("moo_objective_eval", || {
+        ev.clear_cache();
         std::hint::black_box(ev.objectives(&d));
     });
+
+    // --- MOO batch evaluation: the population×generations wall of the
+    // §3.3 design-space search. Workload: 3 GA-style generations of 32
+    // candidates each, where half of generations 2 and 3 are survivors
+    // of the previous one (exactly what elitist selection produces).
+    // Serial baseline = the pre-PR per-candidate path (fresh routing
+    // table + allocations, no memo); parallel = objectives_batch at
+    // jobs=4 with the cross-generation memo cache.
+    let mut rng = Rng::new(0xBA7C4);
+    let uniques: Vec<NoiDesign> = (0..64)
+        .map(|_| {
+            let mut cand = d.clone();
+            for _ in 0..4 {
+                cand.random_move(&mut rng);
+            }
+            cand
+        })
+        .collect();
+    let mut generations: Vec<Vec<NoiDesign>> = vec![uniques[..32].to_vec()];
+    for g in 1..3 {
+        let mut pop: Vec<NoiDesign> = generations[g - 1][16..].to_vec(); // 16 survivors
+        pop.extend_from_slice(&uniques[16 + g * 16..32 + g * 16]); // 16 offspring
+        generations.push(pop);
+    }
+    let n_evals: usize = generations.iter().map(Vec::len).sum();
+
+    let serial_label = "moo_eval_3gen_serial_prepr";
+    b.bench(serial_label, || {
+        // pre-PR path: rebuild everything per candidate, no memo
+        for pop in &generations {
+            for cand in pop {
+                let routes = RoutingTable::build(&cand.topo);
+                let stages = ev.link_stages(cand);
+                let stats =
+                    analytic::evaluate_weighted(&cand.topo, &routes, &ev.phases, Some(&stages));
+                std::hint::black_box([stats.mu / ev.mesh_mu, stats.sigma / ev.mesh_sigma]);
+            }
+        }
+    });
+    let ev4 = Evaluator::new(&sys, &chiplets, &w).with_jobs(4);
+    let batch_label = "moo_eval_3gen_batch_jobs4";
+    b.bench(batch_label, || {
+        ev4.clear_cache(); // pay the cold cache every sample
+        for pop in &generations {
+            std::hint::black_box(ev4.objectives_batch(pop));
+        }
+    });
+    let serial = b.min_secs(serial_label).unwrap_or(f64::NAN);
+    let batch = b.min_secs(batch_label).unwrap_or(f64::NAN);
+    let speedup = b.note_speedup("moo_eval_parallel_memoized_vs_serial", serial / batch);
+    println!(
+        "\nMOO evaluation speedup (jobs=4, memoized, {n_evals} evals/iter): \
+         {speedup:.2}x (serial {:.3} ms -> batch {:.3} ms)",
+        serial * 1e3,
+        batch * 1e3
+    );
 
     // build-once Platform vs per-call rebuild: simulate() reconstructs
     // chiplets + placement + topology + routing tables + cycle-sim
@@ -47,18 +107,12 @@ fn main() {
     b.bench("platform_reuse_simulate", || {
         std::hint::black_box(platform.run(&ModelZoo::gpt_j(), 256, &opts));
     });
-    let min_of = |b: &Bencher, label: &str| {
-        b.results
-            .iter()
-            .find(|(l, _, _)| l == label)
-            .map(|&(_, min, _)| min)
-            .unwrap_or(f64::NAN)
-    };
-    let rebuild = min_of(&b, "full_system_simulate_hi");
-    let reuse = min_of(&b, "platform_reuse_simulate");
+    let rebuild = b.min_secs("full_system_simulate_hi").unwrap_or(f64::NAN);
+    let reuse = b.min_secs("platform_reuse_simulate").unwrap_or(f64::NAN);
+    let platform_speedup = b.note_speedup("platform_reuse_vs_rebuild", rebuild / reuse);
     println!(
-        "\nplatform reuse speedup: {:.2}x (rebuild {:.3} ms -> reuse {:.3} ms per evaluation)",
-        rebuild / reuse,
+        "\nplatform reuse speedup: {platform_speedup:.2}x \
+         (rebuild {:.3} ms -> reuse {:.3} ms per evaluation)",
         rebuild * 1e3,
         reuse * 1e3
     );
@@ -83,4 +137,10 @@ fn main() {
         r.flits,
         r.cycles
     );
+
+    // machine-readable perf trajectory (archived by CI)
+    match b.write_json("BENCH_3.json") {
+        Ok(()) => println!("\nwrote BENCH_3.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_3.json: {e}"),
+    }
 }

@@ -140,7 +140,8 @@ fn morton_decode(d: usize) -> (usize, usize) {
 /// and tail near the same edge).
 fn onion(rows: usize, cols: usize) -> Vec<(usize, usize)> {
     let mut out = Vec::with_capacity(rows * cols);
-    let (mut top, mut bot, mut left, mut right) = (0isize, rows as isize - 1, 0isize, cols as isize - 1);
+    let (mut top, mut bot, mut left, mut right) =
+        (0isize, rows as isize - 1, 0isize, cols as isize - 1);
     while top <= bot && left <= right {
         for c in left..=right {
             out.push((top as usize, c as usize));

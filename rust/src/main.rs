@@ -14,6 +14,10 @@
 //!   endurance  [--seq 4096]                           (§4.4 analysis)
 //!   functional [--layers 2] [--artifacts artifacts]   (end-to-end driver)
 //!   info                                              (Table 1-3 dump)
+//!
+//! Global: --jobs N caps the worker threads of the parallel MOO/serving
+//! paths (default: CHIPLET_JOBS env, else available cores); results are
+//! bit-identical for any N.
 
 use chiplet_hi::arch::SfcKind;
 use chiplet_hi::baselines::Arch;
@@ -23,11 +27,12 @@ use chiplet_hi::endurance;
 use chiplet_hi::model::kernels::Workload;
 use chiplet_hi::moo::{amosa, design::NoiDesign, nsga2, stage, Evaluator, ParetoArchive};
 use chiplet_hi::sim::{
-    self, ArrivalProcess, Platform, ServingConfig, ServingSim, SimOptions,
+    self, ArrivalProcess, Platform, ServingConfig, ServingReport, ServingSim, SimOptions,
 };
 use chiplet_hi::util::bench::Table;
 use chiplet_hi::util::cli::Args;
 use chiplet_hi::util::error::{Context, Result};
+use chiplet_hi::util::parallel;
 use chiplet_hi::{anyhow, bail};
 
 fn main() {
@@ -87,6 +92,15 @@ fn platform_for(
 }
 
 fn run(cmd: &str, args: &Args) -> Result<()> {
+    if let Some(jobs) = args.get("jobs") {
+        let jobs: usize = jobs
+            .parse()
+            .map_err(|_| anyhow!("--jobs expects a positive integer, got '{jobs}'"))?;
+        if jobs == 0 {
+            bail!("--jobs must be >= 1");
+        }
+        parallel::set_default_jobs(jobs);
+    }
     match cmd {
         "simulate" => {
             let sys = system_from(args);
@@ -312,9 +326,19 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     "TPOT p50 ms", "TPOT p99 ms", "mJ/req", "batch", "peak KV MB",
                 ],
             );
-            for arch in arches {
-                let platform = platform_for(arch, &sys, &design, &opts)?;
-                let r = ServingSim::new(&platform, &model, cfg.clone()).run();
+            // one serving simulation per arch, run concurrently (each
+            // worker builds its own platform); output order is the arch
+            // order regardless of completion order
+            let reports = parallel::par_map(
+                parallel::default_jobs(),
+                &arches,
+                |&arch| -> Result<ServingReport> {
+                    let platform = platform_for(arch, &sys, &design, &opts)?;
+                    Ok(ServingSim::new(&platform, &model, cfg.clone()).run())
+                },
+            );
+            for r in reports {
+                let r = r?;
                 t.row(vec![
                     r.arch.clone(),
                     format!("{:.1}", r.throughput_tok_s),
@@ -340,8 +364,14 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             println!("ReRAM-only attention (ReTransformer-style), BERT h=8, N={n}:");
             println!("  writes/cell/token: {:.2e}", r.writes_per_cell_per_token);
             println!("  writes/cell/seq:   {:.2e}", r.writes_per_cell_per_seq);
-            println!("  sequences to endurance failure (1e8 cycles): {:.2}", r.seqs_to_failure);
-            println!("  2.5D-HI ReRAM writes per model load: {}", endurance::hi_reram_writes_per_load());
+            println!(
+                "  sequences to endurance failure (1e8 cycles): {:.2}",
+                r.seqs_to_failure
+            );
+            println!(
+                "  2.5D-HI ReRAM writes per model load: {}",
+                endurance::hi_reram_writes_per_load()
+            );
             Ok(())
         }
         "functional" => {
@@ -382,8 +412,13 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         }
         _ => {
             println!("repro — heterogeneous chiplet platform for end-to-end transformers");
-            println!("commands: simulate | sweep | optimize | thermal | generate | serve | endurance | functional | info");
-            println!("NoI design plug-through: `optimize --export d.json` then `simulate|generate|serve --design d.json`");
+            println!(
+                "commands: simulate | sweep | optimize | thermal | generate | serve | endurance | functional | info"
+            );
+            println!(
+                "NoI design plug-through: `optimize --export d.json` then `simulate|generate|serve --design d.json`"
+            );
+            println!("global flags: --jobs N (parallel worker cap; CHIPLET_JOBS env)");
             println!("see README.md for usage");
             Ok(())
         }

@@ -5,7 +5,7 @@
 //! dominating moves always, dominated moves with a temperature-scaled
 //! probability based on the average domination amount.
 
-use crate::moo::design::{Evaluator, NoiDesign};
+use crate::moo::design::{EvalScratch, Evaluator, NoiDesign};
 use crate::moo::local::ref_point;
 use crate::moo::pareto::{dominates, ParetoArchive};
 use crate::moo::phv::hypervolume;
@@ -53,8 +53,12 @@ pub fn amosa(ev: &Evaluator, start: NoiDesign, cfg: &AmosaConfig) -> AmosaResult
     let mut archive = ParetoArchive::with_capacity(cfg.archive_cap);
     let mut evaluations = 0usize;
 
+    // the annealing walk is inherently sequential (each move depends on
+    // the previous accept), so it rides the allocation-free scratch path
+    // + the Evaluator memo cache instead of batch parallelism
+    let mut ws = EvalScratch::default();
     let mut cur = start;
-    let mut cur_obj = ev.objectives(&cur);
+    let mut cur_obj = ev.objectives_with(&cur, &mut ws);
     evaluations += 1;
     archive.insert(cur_obj.clone(), cur.clone());
 
@@ -63,7 +67,7 @@ pub fn amosa(ev: &Evaluator, start: NoiDesign, cfg: &AmosaConfig) -> AmosaResult
         for _ in 0..cfg.iters_per_temp {
             let mut cand = cur.clone();
             cand.random_move(&mut rng);
-            let cand_obj = ev.objectives(&cand);
+            let cand_obj = ev.objectives_with(&cand, &mut ws);
             evaluations += 1;
 
             let accept = if dominates(&cand_obj, &cur_obj) || cand_obj == cur_obj {

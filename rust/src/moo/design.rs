@@ -32,20 +32,43 @@ use crate::arch::chiplet::{ids_of, Chiplet, ChipletClass};
 use crate::arch::{Placement, SfcKind};
 use crate::config::SystemConfig;
 use crate::model::{kernels::Workload, traffic, TrafficMatrix};
+use crate::noi::analytic::AnalyticScratch;
+use crate::noi::routing::RoutingScratch;
 use crate::noi::{analytic, RoutingTable, Topology};
 use crate::thermal;
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use crate::util::Rng;
+use crate::util::{parallel, Rng};
 use crate::{anyhow, bail};
+use std::collections::HashMap;
 use std::fmt::Write as _;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// One candidate NoI design.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NoiDesign {
     pub placement: Placement,
     pub topo: Topology,
+}
+
+/// FNV-1a over one little-endian u64 word.
+#[inline]
+fn fnv_word(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// splitmix64-finalizer word mix — independent of [`fnv_word`].
+#[inline]
+fn mix_word(h: u64, v: u64) -> u64 {
+    let mut z = h ^ v.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 30)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z = (z ^ (z >> 27)).wrapping_mul(0x2545_f491_4f6c_dd1d);
+    z ^ (z >> 31)
 }
 
 impl NoiDesign {
@@ -224,6 +247,41 @@ impl NoiDesign {
         NoiDesign::from_json(&text)
     }
 
+    /// Canonical 64-bit design fingerprint (FNV-1a over the placement
+    /// vector and the sorted link set — `Topology` keeps `links` in
+    /// canonical sorted order through every constructor and move, so
+    /// equal designs always hash equal). One half of the memo-cache key
+    /// of [`Evaluator::objectives_batch`] (see [`NoiDesign::fingerprint2`]):
+    /// crossover/mutation duplicates and stage restarts hit the cache
+    /// instead of re-evaluating.
+    pub fn fingerprint(&self) -> u64 {
+        self.hash_words(0xcbf2_9ce4_8422_2325, fnv_word)
+    }
+
+    /// Second, independent fingerprint over the same canonical data
+    /// (splitmix64-style avalanche per word). The memo cache keys on the
+    /// `(fingerprint, fingerprint2)` pair, so a wrong cache hit needs a
+    /// simultaneous 128-bit collision — negligible even over the ~1e6
+    /// unique designs of a long MOO run.
+    pub fn fingerprint2(&self) -> u64 {
+        self.hash_words(0x9e37_79b9_7f4a_7c15, mix_word)
+    }
+
+    fn hash_words(&self, seed: u64, step: fn(u64, u64) -> u64) -> u64 {
+        let mut h = seed;
+        h = step(h, self.placement.rows as u64);
+        h = step(h, self.placement.cols as u64);
+        for &s in &self.placement.site_of {
+            h = step(h, s as u64);
+        }
+        h = step(h, u64::MAX - 1); // domain separator placement | links
+        h = step(h, self.topo.n as u64);
+        for &(a, b) in &self.topo.links {
+            h = step(h, ((a as u64) << 32) | b as u64);
+        }
+        h
+    }
+
     /// Feature vector for the MOO-STAGE learned evaluation function.
     /// Cheap structural descriptors — no routing required.
     pub fn features(&self, chiplets: &[Chiplet]) -> Vec<f64> {
@@ -286,7 +344,36 @@ impl NoiDesign {
     }
 }
 
+/// Per-worker scratch for [`Evaluator::objectives_with`]: a reusable
+/// routing table with its BFS workspace, the analytic accumulators and
+/// the stage-weight buffer. After warm-up, evaluating a candidate design
+/// allocates only its objective vector.
+pub struct EvalScratch {
+    routes: RoutingTable,
+    routing: RoutingScratch,
+    analytic: AnalyticScratch,
+    stages: Vec<f64>,
+}
+
+impl Default for EvalScratch {
+    fn default() -> Self {
+        EvalScratch {
+            routes: RoutingTable::empty(),
+            routing: RoutingScratch::default(),
+            analytic: AnalyticScratch::default(),
+            stages: Vec::new(),
+        }
+    }
+}
+
 /// Evaluation context shared across a MOO run.
+///
+/// Carries a cross-generation memo cache keyed by
+/// [`NoiDesign::fingerprint`]: population duplicates (GA elitism,
+/// crossover clones, stage restarts from archived designs) return their
+/// cached objective vector instead of re-routing + re-walking traffic.
+/// The cache is behind a `Mutex` so `objectives_batch` can fill it from
+/// worker threads; results are bit-identical for any `jobs` value.
 pub struct Evaluator {
     pub sys: SystemConfig,
     pub chiplets: Vec<Chiplet>,
@@ -298,7 +385,30 @@ pub struct Evaluator {
     pub three_d: bool,
     /// Tiers used when folding the 2.5D placement into a 3D stack.
     pub tiers: usize,
+    /// Worker threads for `objectives_batch` (1 = serial path).
+    pub jobs: usize,
+    /// (fingerprint pair, objective-set params) -> objective vector memo
+    /// (cross-generation). The dual 64-bit fingerprints make a wrong hit
+    /// require a 128-bit collision. The key covers the design plus
+    /// `three_d`/`tiers` ONLY — mutating any other pub evaluation input
+    /// (`phases`, `mesh_mu`, `mesh_sigma`, `sys`, `chiplets`) after an
+    /// evaluation requires a `clear_cache()` call, or previously seen
+    /// designs will be served vectors computed under the old inputs.
+    cache: Mutex<HashMap<CacheKey, Vec<f64>>>,
+    cache_hits: AtomicUsize,
+    cache_misses: AtomicUsize,
 }
+
+/// Memo key: both design fingerprints plus the objective-set parameters.
+type CacheKey = (u64, u64, bool, usize);
+
+/// Soft bound on memoized entries. A long random-walk search (AMOSA)
+/// inserts mostly-unique designs, so without a bound the cache grows one
+/// entry per evaluation forever; at the cap the whole map is flushed
+/// (epoch-style — cheap, and re-warming costs at most one evaluation per
+/// live design). Results are unaffected: the cache only short-circuits
+/// identical computations.
+const CACHE_CAP: usize = 1 << 20;
 
 impl Evaluator {
     pub fn new(sys: &SystemConfig, chiplets: &[Chiplet], workload: &Workload) -> Evaluator {
@@ -314,14 +424,43 @@ impl Evaluator {
             mesh_sigma: stats.sigma.max(1e-9),
             three_d: false,
             tiers: 1,
+            jobs: parallel::default_jobs(),
+            cache: Mutex::new(HashMap::new()),
+            cache_hits: AtomicUsize::new(0),
+            cache_misses: AtomicUsize::new(0),
         }
     }
 
-    /// Enable the Eq 20 objective set (3D-HI).
+    /// Enable the Eq 20 objective set (3D-HI). The memo key includes
+    /// `(three_d, tiers)`, so earlier 2-objective entries can never be
+    /// served afterwards; clearing just reclaims their memory.
     pub fn with_3d(mut self, tiers: usize) -> Evaluator {
         self.three_d = true;
         self.tiers = tiers.max(1);
+        self.clear_cache();
         self
+    }
+
+    /// Set the worker count used by [`Evaluator::objectives_batch`]
+    /// (1 = bit-for-bit serial fallback on the caller thread).
+    pub fn with_jobs(mut self, jobs: usize) -> Evaluator {
+        self.jobs = jobs.max(1);
+        self
+    }
+
+    /// (hits, misses) of the memo cache since construction / last clear.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        (
+            self.cache_hits.load(Ordering::Relaxed),
+            self.cache_misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Drop all memoized objective vectors (bench isolation).
+    pub fn clear_cache(&self) {
+        self.cache.lock().unwrap().clear();
+        self.cache_hits.store(0, Ordering::Relaxed);
+        self.cache_misses.store(0, Ordering::Relaxed);
     }
 
     pub fn n_objectives(&self) -> usize {
@@ -335,20 +474,62 @@ impl Evaluator {
     /// Pipeline-stage count per undirected link for a design's placement
     /// (Table 1: a link spans one stage per 1.55 mm grid hop).
     pub fn link_stages(&self, d: &NoiDesign) -> Vec<f64> {
-        d.topo
-            .links
-            .iter()
-            .map(|&(a, b)| d.placement.manhattan(a, b).max(1) as f64)
-            .collect()
+        let mut out = Vec::new();
+        self.link_stages_into(d, &mut out);
+        out
+    }
+
+    /// Allocation-free form of [`Evaluator::link_stages`] — the single
+    /// source of the stage-count formula (the hot path and the serial
+    /// bench baseline must never drift apart).
+    pub fn link_stages_into(&self, d: &NoiDesign, out: &mut Vec<f64>) {
+        out.clear();
+        for &(a, b) in &d.topo.links {
+            out.push(d.placement.manhattan(a, b).max(1) as f64);
+        }
     }
 
     /// Objective vector of a design (all minimized, mesh-normalized μ/σ).
     /// Link utilization is weighted by the placement-derived stage count,
     /// so both halves of λ = (λ_c, λ_l) shape the objectives.
+    /// Memoized; convenience wrapper over [`Evaluator::objectives_with`]
+    /// with throwaway scratch — sequential solvers that evaluate many
+    /// designs should hold one [`EvalScratch`] and call `objectives_with`.
     pub fn objectives(&self, d: &NoiDesign) -> Vec<f64> {
-        let routes = RoutingTable::build(&d.topo);
-        let stages = self.link_stages(d);
-        let stats = analytic::evaluate_weighted(&d.topo, &routes, &self.phases, Some(&stages));
+        self.objectives_with(d, &mut EvalScratch::default())
+    }
+
+    /// Memoized objective evaluation reusing the caller's scratch. On a
+    /// cache miss this is the allocation-free hot path: routing tables
+    /// rebuild in place and the analytic accumulators are reused.
+    pub fn objectives_with(&self, d: &NoiDesign, ws: &mut EvalScratch) -> Vec<f64> {
+        let key: CacheKey = (d.fingerprint(), d.fingerprint2(), self.three_d, self.tiers);
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return hit.clone();
+        }
+        let obj = self.objectives_uncached(d, ws);
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        let mut cache = self.cache.lock().unwrap();
+        if cache.len() >= CACHE_CAP {
+            cache.clear();
+        }
+        cache.insert(key, obj.clone());
+        obj
+    }
+
+    /// The raw evaluation (no memo): identical arithmetic to the
+    /// pre-scratch path, so results are bit-for-bit reproducible.
+    fn objectives_uncached(&self, d: &NoiDesign, ws: &mut EvalScratch) -> Vec<f64> {
+        ws.routes.rebuild_into(&d.topo, &mut ws.routing);
+        self.link_stages_into(d, &mut ws.stages);
+        let stats = analytic::evaluate_weighted_into(
+            &d.topo,
+            &ws.routes,
+            &self.phases,
+            Some(&ws.stages),
+            &mut ws.analytic,
+        );
         let mut obj = vec![stats.mu / self.mesh_mu, stats.sigma / self.mesh_sigma];
         if self.three_d {
             let (t_obj, noise) = self.thermal_objectives(d);
@@ -356,6 +537,18 @@ impl Evaluator {
             obj.push(noise);
         }
         obj
+    }
+
+    /// Evaluate a whole candidate batch: parallel across designs with
+    /// per-worker scratch at `self.jobs > 1`, plain sequential loop at
+    /// `jobs == 1`. Output order matches input order and every entry is
+    /// bit-identical across job counts; duplicates (within the batch or
+    /// vs. any earlier evaluation on this Evaluator) are served from the
+    /// memo cache.
+    pub fn objectives_batch(&self, designs: &[NoiDesign]) -> Vec<Vec<f64>> {
+        parallel::par_map_scratch(self.jobs, designs, EvalScratch::default, |ws, d| {
+            self.objectives_with(d, ws)
+        })
     }
 
     /// Fold the placement into `tiers` vertical tiers (row-blocks become
@@ -458,6 +651,56 @@ mod tests {
         let d = NoiDesign::hi_seed(&sys, &chips, SfcKind::Boustrophedon);
         let f = d.features(&chips);
         assert!((f[0] - 1.0).abs() < 1e-9, "macro contiguity {}", f[0]);
+    }
+
+    #[test]
+    fn fingerprint_canonical_and_discriminating() {
+        let (sys, chips, _) = ctx();
+        let d = NoiDesign::hi_seed(&sys, &chips, SfcKind::Hilbert);
+        assert_eq!(d.fingerprint(), d.clone().fingerprint());
+        // same link set given in a different order must hash equal
+        // (Topology::new canonicalizes)
+        let mut rev = d.topo.links.clone();
+        rev.reverse();
+        let same = NoiDesign {
+            placement: d.placement.clone(),
+            topo: Topology::new(d.topo.n, rev),
+        };
+        assert_eq!(d.fingerprint(), same.fingerprint());
+        assert_eq!(d.fingerprint2(), same.fingerprint2());
+        // a placement change must change both fingerprints
+        let mut moved = d.clone();
+        moved.placement.swap(0, 1);
+        assert_ne!(d.fingerprint(), moved.fingerprint());
+        assert_ne!(d.fingerprint2(), moved.fingerprint2());
+    }
+
+    #[test]
+    fn batch_matches_sequential_and_memoizes() {
+        // jobs=1 so cache hit/miss counts are deterministic (at jobs>1 a
+        // racing duplicate may be evaluated twice — values still agree)
+        let (sys, chips, ev) = ctx();
+        let ev = ev.with_jobs(1);
+        let mut rng = Rng::new(8);
+        let mut designs = Vec::new();
+        for k in 0..6 {
+            let mut d = NoiDesign::hi_seed(&sys, &chips, SfcKind::Hilbert);
+            for _ in 0..k {
+                d.random_move(&mut rng);
+            }
+            designs.push(d);
+        }
+        designs.push(designs[0].clone()); // in-batch duplicate
+        let batch = ev.objectives_batch(&designs);
+        for (d, got) in designs.iter().zip(&batch) {
+            assert_eq!(got, &ev.objectives(d), "batch must equal per-design eval");
+        }
+        let unique: std::collections::HashSet<u64> =
+            designs.iter().map(NoiDesign::fingerprint).collect();
+        let (hits, misses) = ev.cache_stats();
+        assert_eq!(misses, unique.len(), "each unique design evaluated once");
+        // in-batch duplicates + the whole re-check loop hit the memo
+        assert_eq!(hits, (designs.len() - unique.len()) + designs.len());
     }
 
     #[test]

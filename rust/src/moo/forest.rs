@@ -6,7 +6,7 @@
 //! vectors. Small (the training sets are hundreds of designs), fully
 //! deterministic given the seed.
 
-use crate::util::Rng;
+use crate::util::{parallel, Rng};
 
 #[derive(Debug, Clone)]
 enum Node {
@@ -25,7 +25,14 @@ pub struct Tree {
 }
 
 impl Tree {
-    fn fit(xs: &[Vec<f64>], ys: &[f64], idx: &[usize], depth: usize, min_leaf: usize, rng: &mut Rng) -> Node {
+    fn fit(
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        idx: &[usize],
+        depth: usize,
+        min_leaf: usize,
+        rng: &mut Rng,
+    ) -> Node {
         let mean = idx.iter().map(|&i| ys[i]).sum::<f64>() / idx.len() as f64;
         if depth == 0 || idx.len() < 2 * min_leaf {
             return Node::Leaf(mean);
@@ -105,20 +112,43 @@ pub struct RandomForest {
 }
 
 impl RandomForest {
-    /// Fit `n_trees` on bootstrap samples. Deterministic for a seed.
-    pub fn fit(xs: &[Vec<f64>], ys: &[f64], n_trees: usize, max_depth: usize, seed: u64) -> RandomForest {
+    /// Fit `n_trees` on bootstrap samples with the default worker count.
+    pub fn fit(
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        n_trees: usize,
+        max_depth: usize,
+        seed: u64,
+    ) -> RandomForest {
+        RandomForest::fit_jobs(xs, ys, n_trees, max_depth, seed, parallel::default_jobs())
+    }
+
+    /// Fit with an explicit worker count (MOO-STAGE passes the
+    /// Evaluator's `jobs`, so one knob governs the whole run).
+    /// Deterministic for a seed and for any worker count: the bootstrap
+    /// indices and one sub-seed per tree are drawn sequentially from the
+    /// master rng up front, then the independent trees fit in parallel.
+    pub fn fit_jobs(
+        xs: &[Vec<f64>],
+        ys: &[f64],
+        n_trees: usize,
+        max_depth: usize,
+        seed: u64,
+        jobs: usize,
+    ) -> RandomForest {
         assert_eq!(xs.len(), ys.len());
         assert!(!xs.is_empty());
         let mut rng = Rng::new(seed);
         let n = xs.len();
-        let trees = (0..n_trees)
+        let plans: Vec<(Vec<usize>, u64)> = (0..n_trees)
             .map(|_| {
                 let idx: Vec<usize> = (0..n).map(|_| rng.below(n)).collect();
-                Tree {
-                    root: Tree::fit(xs, ys, &idx, max_depth, 2, &mut rng),
-                }
+                (idx, rng.next_u64())
             })
             .collect();
+        let trees = parallel::par_map(jobs, &plans, |(idx, tree_seed)| Tree {
+            root: Tree::fit(xs, ys, idx, max_depth, 2, &mut Rng::new(*tree_seed)),
+        });
         RandomForest { trees }
     }
 

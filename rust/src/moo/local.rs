@@ -41,8 +41,9 @@ pub fn local_search(
     let mut archive = ParetoArchive::with_capacity(64);
     let mut trajectory = Vec::new();
     let mut evaluations = 0usize;
+    let mut ws = crate::moo::design::EvalScratch::default();
 
-    let start_obj = ev.objectives(&start);
+    let start_obj = ev.objectives_with(&start, &mut ws);
     evaluations += 1;
     archive.insert(start_obj.clone(), start.clone());
     trajectory.push((start.clone(), start_obj));
@@ -55,23 +56,32 @@ pub fn local_search(
         if stale >= patience {
             break;
         }
-        // propose fanout neighbors
-        let mut best_cand: Option<(NoiDesign, Vec<f64>, f64)> = None;
+        // propose fanout neighbors, then evaluate them as one batch
+        // (parallel + memoized at ev.jobs > 1; identical selection to the
+        // old one-at-a-time loop — rng is consumed in the same order and
+        // ties still resolve to the first candidate)
+        let mut cands: Vec<NoiDesign> = Vec::with_capacity(fanout);
         for _ in 0..fanout {
             let mut cand = current.clone();
             cand.random_move(rng);
-            let obj = ev.objectives(&cand);
-            evaluations += 1;
+            cands.push(cand);
+        }
+        let objs = ev.objectives_batch(&cands);
+        evaluations += cands.len();
+        let mut best_cand: Option<(usize, f64)> = None;
+        for (k, obj) in objs.iter().enumerate() {
             let mut probe = archive.clone();
-            probe.insert(obj.clone(), cand.clone());
+            probe.insert(obj.clone(), cands[k].clone());
             let phv = hypervolume(&probe.objectives(), &rp);
-            if best_cand.as_ref().map(|(_, _, b)| phv > *b).unwrap_or(true) {
-                best_cand = Some((cand, obj, phv));
+            if best_cand.map(|(_, b)| phv > b).unwrap_or(true) {
+                best_cand = Some((k, phv));
             }
         }
-        let Some((cand, obj, phv)) = best_cand else {
+        let Some((best_k, phv)) = best_cand else {
             break;
         };
+        let cand = cands.swap_remove(best_k);
+        let obj = objs[best_k].clone();
         trajectory.push((cand.clone(), obj.clone()));
         if phv > best_phv + 1e-12 {
             best_phv = phv;

@@ -11,6 +11,12 @@
 //!   art the paper compares MOO-STAGE against).
 //! - [`nsga2`]: NSGA-II elitist GA (second comparison baseline).
 //! - [`pareto`] / [`phv`]: non-dominated archive + hypervolume metric.
+//!
+//! Evaluation engine: [`Evaluator::objectives_batch`] fans candidate
+//! evaluations out over `util::parallel` workers with per-worker
+//! allocation-free scratch ([`EvalScratch`]) and a cross-generation memo
+//! cache keyed by [`NoiDesign::fingerprint`] — results are bit-identical
+//! for any `--jobs` value (tests/parallel_determinism.rs).
 
 pub mod amosa;
 pub mod design;
@@ -21,6 +27,6 @@ pub mod pareto;
 pub mod phv;
 pub mod stage;
 
-pub use design::{Evaluator, NoiDesign};
+pub use design::{EvalScratch, Evaluator, NoiDesign};
 pub use pareto::ParetoArchive;
 pub use phv::hypervolume;

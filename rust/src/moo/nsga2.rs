@@ -145,13 +145,10 @@ pub fn nsga2(ev: &Evaluator, seeds: Vec<NoiDesign>, cfg: &Nsga2Config) -> Nsga2R
         }
         pop.push(d);
     }
-    let mut objs: Vec<Vec<f64>> = pop
-        .iter()
-        .map(|d| {
-            evaluations += 1;
-            ev.objectives(d)
-        })
-        .collect();
+    // batch evaluation: parallel across candidates at ev.jobs > 1, memo
+    // cache catches clones surviving selection across generations
+    let mut objs: Vec<Vec<f64>> = ev.objectives_batch(&pop);
+    evaluations += pop.len();
 
     for _ in 0..cfg.generations {
         // offspring by binary tournament + crossover + mutation
@@ -175,13 +172,8 @@ pub fn nsga2(ev: &Evaluator, seeds: Vec<NoiDesign>, cfg: &Nsga2Config) -> Nsga2R
             }
             children.push(child);
         }
-        let child_objs: Vec<Vec<f64>> = children
-            .iter()
-            .map(|d| {
-                evaluations += 1;
-                ev.objectives(d)
-            })
-            .collect();
+        let child_objs: Vec<Vec<f64>> = ev.objectives_batch(&children);
+        evaluations += children.len();
 
         // environmental selection over pop + children
         let mut all = pop;

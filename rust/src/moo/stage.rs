@@ -10,6 +10,12 @@
 //!
 //! The global archive accumulates across iterations; the result is the
 //! paper's λ* Pareto set.
+//!
+//! Parallel/memoized evaluation: the base search batch-evaluates its
+//! fanout through [`Evaluator::objectives_batch`] (`ev.jobs` workers,
+//! allocation-free scratch) and the forest refits its trees on the same
+//! pool. Iteration restarts from archived designs are free — the
+//! Evaluator's cross-run memo cache already holds their objectives.
 
 use crate::moo::design::{Evaluator, NoiDesign};
 use crate::moo::forest::RandomForest;
@@ -100,12 +106,13 @@ pub fn moo_stage(ev: &Evaluator, seeds: Vec<NoiDesign>, cfg: &StageConfig) -> St
             global.insert(obj, d);
         }
         if train_x.len() >= 8 {
-            forest = Some(RandomForest::fit(
+            forest = Some(RandomForest::fit_jobs(
                 &train_x,
                 &train_y,
                 cfg.trees,
                 cfg.tree_depth,
                 cfg.seed ^ it as u64,
+                ev.jobs,
             ));
         }
         phv_history.push(hypervolume(&global.objectives(), &rp));

@@ -30,6 +30,28 @@ pub struct LinkStats {
     pub per_phase: Vec<(f64, f64)>,
 }
 
+/// Reusable accumulators for [`evaluate_weighted_into`]: the dense link
+/// map, the per-directed-link utilization vector and the expanded stage
+/// weights. One per worker thread in the parallel MOO evaluator — after
+/// warm-up the analytic evaluation of a candidate design performs no
+/// heap allocation beyond the returned `LinkStats`.
+#[derive(Debug)]
+pub struct AnalyticScratch {
+    lm: LinkMap,
+    u: Vec<f64>,
+    weights: Vec<f64>,
+}
+
+impl Default for AnalyticScratch {
+    fn default() -> Self {
+        AnalyticScratch {
+            lm: LinkMap::empty(),
+            u: Vec::new(),
+            weights: Vec::new(),
+        }
+    }
+}
+
 /// Evaluate a (topology, traffic) pair. Directed links are the unit of
 /// accounting (one physical link = 2 directed channels, as in BookSim).
 pub fn evaluate(topo: &Topology, routes: &RoutingTable, phases: &[TrafficMatrix]) -> LinkStats {
@@ -47,16 +69,36 @@ pub fn evaluate_weighted(
     phases: &[TrafficMatrix],
     stages: Option<&[f64]>,
 ) -> LinkStats {
-    let lm = LinkMap::build(topo);
+    evaluate_weighted_into(topo, routes, phases, stages, &mut AnalyticScratch::default())
+}
+
+/// Allocation-free core of [`evaluate_weighted`]: identical arithmetic
+/// (and therefore bit-identical results), but every per-link buffer is
+/// reused from `ws` — the form the memoized batch evaluator calls with
+/// per-worker scratch.
+pub fn evaluate_weighted_into(
+    topo: &Topology,
+    routes: &RoutingTable,
+    phases: &[TrafficMatrix],
+    stages: Option<&[f64]>,
+    ws: &mut AnalyticScratch,
+) -> LinkStats {
+    ws.lm.rebuild_into(topo);
+    let lm = &ws.lm;
     let n_links = lm.n_links();
     // expand undirected stage weights to the directed link order
-    let weights: Vec<f64> = match stages {
+    ws.weights.clear();
+    match stages {
         Some(s) => {
             debug_assert_eq!(s.len(), topo.links.len());
-            s.iter().flat_map(|&w| [w, w]).collect()
+            for &w in s {
+                ws.weights.push(w);
+                ws.weights.push(w);
+            }
         }
-        None => vec![1.0; n_links],
-    };
+        None => ws.weights.resize(n_links, 1.0),
+    }
+    let weights = &ws.weights;
 
     let mut per_phase = Vec::with_capacity(phases.len());
     let mut max_link: f64 = 0.0;
@@ -65,7 +107,9 @@ pub fn evaluate_weighted(
     let mut sg_acc = 0.0;
     let mut weight_acc = 0.0;
 
-    let mut u = vec![0.0f64; n_links];
+    ws.u.clear();
+    ws.u.resize(n_links, 0.0);
+    let u = &mut ws.u;
     for m in phases {
         u.iter_mut().for_each(|x| *x = 0.0);
         for (src, dst, bytes) in m.flows() {
@@ -80,8 +124,8 @@ pub fn evaluate_weighted(
                 cur = nh;
             }
         }
-        let mu = stats::mean(&u);
-        let sg = stats::std_dev(&u);
+        let mu = stats::mean(u);
+        let sg = stats::std_dev(u);
         max_link = max_link.max(u.iter().cloned().fold(0.0, f64::max));
         per_phase.push((mu, sg));
         let w = m.repeats as f64;

@@ -19,19 +19,39 @@ pub struct LinkMap {
 }
 
 impl LinkMap {
+    /// Empty map, intended as the target of [`LinkMap::rebuild_into`].
+    pub fn empty() -> LinkMap {
+        LinkMap {
+            n: 0,
+            idx: Vec::new(),
+            from: Vec::new(),
+            to: Vec::new(),
+        }
+    }
+
     pub fn build(topo: &Topology) -> LinkMap {
+        let mut lm = LinkMap::empty();
+        lm.rebuild_into(topo);
+        lm
+    }
+
+    /// Rebuild in place for a new topology, reusing the flat index table
+    /// and endpoint storage — allocation-free once grown (the analytic
+    /// evaluator calls this per candidate design in the MOO hot path).
+    pub fn rebuild_into(&mut self, topo: &Topology) {
         let n = topo.n;
-        let mut idx = vec![NO_LINK; n * n];
-        let mut from = Vec::with_capacity(topo.links.len() * 2);
-        let mut to = Vec::with_capacity(topo.links.len() * 2);
+        self.n = n;
+        self.idx.clear();
+        self.idx.resize(n * n, NO_LINK);
+        self.from.clear();
+        self.to.clear();
         for &(a, b) in &topo.links {
             for (x, y) in [(a, b), (b, a)] {
-                idx[x * n + y] = from.len() as u32;
-                from.push(x as u32);
-                to.push(y as u32);
+                self.idx[x * n + y] = self.from.len() as u32;
+                self.from.push(x as u32);
+                self.to.push(y as u32);
             }
         }
-        LinkMap { n, idx, from, to }
     }
 
     #[inline]
@@ -62,6 +82,21 @@ mod tests {
         assert!(lm.link(1, 0).is_some());
         assert_ne!(lm.link(0, 1), lm.link(1, 0));
         assert_eq!(lm.link(0, 2), None);
+    }
+
+    #[test]
+    fn rebuild_into_matches_build() {
+        let big = Topology::chain(6, &[0, 1, 2, 3, 4, 5]);
+        let small = Topology::chain(3, &[2, 0, 1]);
+        let mut reused = LinkMap::empty();
+        for t in [&big, &small, &big] {
+            reused.rebuild_into(t);
+            let fresh = LinkMap::build(t);
+            assert_eq!(reused.n, fresh.n);
+            assert_eq!(reused.idx, fresh.idx);
+            assert_eq!(reused.from, fresh.from);
+            assert_eq!(reused.to, fresh.to);
+        }
     }
 
     #[test]

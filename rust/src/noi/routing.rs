@@ -19,42 +19,97 @@ pub struct RoutingTable {
     pub dist: Vec<u32>,
 }
 
+/// Reusable BFS workspace for [`RoutingTable::rebuild_into`]: CSR
+/// adjacency storage and the BFS frontier. One per worker thread in the
+/// parallel MOO evaluator, so rebuilding the routing table of every
+/// candidate design allocates nothing after warm-up (§Perf iteration 5).
+#[derive(Debug, Default)]
+pub struct RoutingScratch {
+    /// CSR offsets: neighbors of v are `adj[adj_off[v]..adj_off[v + 1]]`.
+    adj_off: Vec<u32>,
+    /// CSR neighbor storage, each segment sorted ascending.
+    adj: Vec<u32>,
+    /// Per-router CSR fill cursor.
+    cursor: Vec<u32>,
+    /// BFS frontier.
+    queue: VecDeque<usize>,
+}
+
 impl RoutingTable {
+    /// Empty table, intended as the target of [`RoutingTable::rebuild_into`].
+    pub fn empty() -> RoutingTable {
+        RoutingTable {
+            n: 0,
+            next: Vec::new(),
+            dist: Vec::new(),
+        }
+    }
+
     /// Build by running BFS from every destination (so `next` points
     /// toward the destination, one table pass per dst).
     pub fn build(topo: &Topology) -> RoutingTable {
+        let mut rt = RoutingTable::empty();
+        rt.rebuild_into(topo, &mut RoutingScratch::default());
+        rt
+    }
+
+    /// Rebuild in place for a new topology, reusing the table storage and
+    /// the caller's BFS workspace. Produces tables bit-identical to
+    /// [`RoutingTable::build`] (same sorted-neighbor tie-breaking) while
+    /// performing zero allocations once `self` and `ws` have grown to the
+    /// topology's size — this is the MOO evaluation hot path.
+    pub fn rebuild_into(&mut self, topo: &Topology, ws: &mut RoutingScratch) {
         let n = topo.n;
-        let adj = {
-            // sorted adjacency for deterministic tie-breaks
-            let mut a = topo.adjacency();
-            for l in a.iter_mut() {
-                l.sort_unstable();
-            }
-            a
-        };
+        self.n = n;
+        self.next.clear();
+        self.next.resize(n * n, u32::MAX);
+        self.dist.clear();
+        self.dist.resize(n * n, u32::MAX);
+
+        // CSR adjacency with ascending neighbor order per router — the
+        // same deterministic tie-breaks as the Vec<Vec<_>> path
+        ws.adj_off.clear();
+        ws.adj_off.resize(n + 1, 0);
+        for &(a, b) in &topo.links {
+            ws.adj_off[a + 1] += 1;
+            ws.adj_off[b + 1] += 1;
+        }
+        for v in 0..n {
+            ws.adj_off[v + 1] += ws.adj_off[v];
+        }
+        ws.cursor.clear();
+        ws.cursor.extend_from_slice(&ws.adj_off[..n]);
+        ws.adj.clear();
+        ws.adj.resize(2 * topo.links.len(), 0);
+        for &(a, b) in &topo.links {
+            ws.adj[ws.cursor[a] as usize] = b as u32;
+            ws.cursor[a] += 1;
+            ws.adj[ws.cursor[b] as usize] = a as u32;
+            ws.cursor[b] += 1;
+        }
+        for v in 0..n {
+            ws.adj[ws.adj_off[v] as usize..ws.adj_off[v + 1] as usize].sort_unstable();
+        }
+
         // write directly in [src][dst] layout: BFS from dst fills the
         // dst-th column (next hop of v toward dst = BFS parent of v) —
         // avoids a full n^2 re-index pass (§Perf iteration 3)
-        let mut next = vec![u32::MAX; n * n];
-        let mut dist = vec![u32::MAX; n * n];
-        let mut q = VecDeque::new();
         for dst in 0..n {
-            dist[dst * n + dst] = 0;
-            q.clear();
-            q.push_back(dst);
-            while let Some(v) = q.pop_front() {
-                let dv = dist[v * n + dst];
-                for &w in &adj[v] {
-                    let slot = w * n + dst;
-                    if dist[slot] == u32::MAX {
-                        dist[slot] = dv + 1;
-                        next[slot] = v as u32;
-                        q.push_back(w);
+            self.dist[dst * n + dst] = 0;
+            ws.queue.clear();
+            ws.queue.push_back(dst);
+            while let Some(v) = ws.queue.pop_front() {
+                let dv = self.dist[v * n + dst];
+                for &w in &ws.adj[ws.adj_off[v] as usize..ws.adj_off[v + 1] as usize] {
+                    let slot = w as usize * n + dst;
+                    if self.dist[slot] == u32::MAX {
+                        self.dist[slot] = dv + 1;
+                        self.next[slot] = v as u32;
+                        ws.queue.push_back(w as usize);
                     }
                 }
             }
         }
-        RoutingTable { n, next, dist }
     }
 
     #[inline]
@@ -197,6 +252,33 @@ mod tests {
         let (t, r1) = mesh(36, 6);
         let r2 = RoutingTable::build(&t);
         assert_eq!(r1.next, r2.next);
+    }
+
+    #[test]
+    fn rebuild_into_matches_build_across_topologies() {
+        // one reused (table, workspace) pair across a stream of mutated
+        // topologies must equal a fresh build at every step — including
+        // shrinking ones (stale storage from a bigger table must not leak)
+        use crate::util::Rng;
+        let mut rng = Rng::new(97);
+        let mut reused = RoutingTable::empty();
+        let mut ws = RoutingScratch::default();
+        let p36 = Placement::identity(36, 6, 6);
+        let mut t36 = Topology::mesh(&p36);
+        for step in 0..25 {
+            t36.rewire(&mut rng);
+            reused.rebuild_into(&t36, &mut ws);
+            let fresh = RoutingTable::build(&t36);
+            assert_eq!(reused.next, fresh.next, "next diverged at step {step}");
+            assert_eq!(reused.dist, fresh.dist, "dist diverged at step {step}");
+        }
+        // shrink: rebuild the same table for a smaller topology
+        let t16 = Topology::mesh(&Placement::identity(16, 4, 4));
+        reused.rebuild_into(&t16, &mut ws);
+        let fresh = RoutingTable::build(&t16);
+        assert_eq!(reused.n, 16);
+        assert_eq!(reused.next, fresh.next);
+        assert_eq!(reused.dist, fresh.dist);
     }
 
     #[test]

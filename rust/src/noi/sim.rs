@@ -22,13 +22,14 @@ use crate::noi::routing::RoutingTable;
 use crate::noi::topology::Topology;
 use std::collections::VecDeque;
 
+/// Per-flit in-flight state. Deliberately minimal (8 bytes): packet
+/// boundaries are not carried per flit — tail arrival is detected from
+/// the per-packet remaining-flit counts, which keeps the inner-loop
+/// working set tight (§Perf iteration 5).
 #[derive(Debug, Clone, Copy)]
 struct Flit {
     packet: u32,
     dst: u32,
-    /// packet-boundary marker (kept for tracing/debug dumps)
-    #[allow(dead_code)]
-    is_tail: bool,
 }
 
 /// Result of simulating one phase to drain.
@@ -281,15 +282,11 @@ impl CycleSim {
                 }
                 if let Some(ol) = self.out_link(src, dst as usize) {
                     if self.queues[ol].len() < self.buffer_flits {
-                        let is_tail = p.injected + 1 == p.flits;
-                        self.queues[ol].push_back(Flit {
-                            packet: pid,
-                            dst,
-                            is_tail,
-                        });
+                        self.queues[ol].push_back(Flit { packet: pid, dst });
                         self.router_load[self.lm.to[ol] as usize] += 1;
                         p.injected += 1;
-                        if is_tail {
+                        // tail = last flit of the packet's flit budget
+                        if p.injected == p.flits {
                             self.inject[src].pop_front();
                         }
                     }

@@ -87,7 +87,12 @@ impl Platform {
         Ok(Platform::build(arch, sys, chiplets, design))
     }
 
-    fn build(arch: Arch, sys: &SystemConfig, chiplets: Vec<Chiplet>, design: NoiDesign) -> Platform {
+    fn build(
+        arch: Arch,
+        sys: &SystemConfig,
+        chiplets: Vec<Chiplet>,
+        design: NoiDesign,
+    ) -> Platform {
         let routes = RoutingTable::build(&design.topo);
         let cycle = CycleSim::new(&design.topo, &routes, sys.hw.noi_buffer_flits);
         Platform {

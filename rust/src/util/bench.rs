@@ -25,10 +25,19 @@ pub fn time_it<F: FnMut()>(mut f: F, warmup: usize, samples: usize) -> (f64, f64
     (stats::mean(&times), stats::std_dev(&times), min)
 }
 
+/// True when the `BENCH_SMOKE` env var requests a reduced-iteration run
+/// (the CI bench smoke: fewer samples, same labels and JSON shape).
+pub fn smoke_mode() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
+
 /// Convenience wrapper with throughput reporting.
 pub struct Bencher {
     pub name: String,
-    pub results: Vec<(String, f64, f64)>, // (label, mean_s, std_s)
+    pub results: Vec<(String, f64, f64)>, // (label, min_s, std_s)
+    /// Named ratios (e.g. parallel-vs-serial speedups) carried into the
+    /// machine-readable report.
+    pub speedups: Vec<(String, f64)>,
 }
 
 impl Bencher {
@@ -36,11 +45,13 @@ impl Bencher {
         Bencher {
             name: name.to_string(),
             results: Vec::new(),
+            speedups: Vec::new(),
         }
     }
 
     pub fn bench<F: FnMut()>(&mut self, label: &str, f: F) {
-        let (mean, std, min) = time_it(f, 2, 5);
+        let (warmup, samples) = if smoke_mode() { (0, 2) } else { (2, 5) };
+        let (mean, std, min) = time_it(f, warmup, samples);
         // report min too: on shared containers the mean is noisy, the
         // minimum is the reproducible number (EXPERIMENTS.md §Perf)
         println!(
@@ -50,6 +61,49 @@ impl Bencher {
             min * 1e3
         );
         self.results.push((label.to_string(), min, std));
+    }
+
+    /// Best (minimum) seconds recorded for `label`, if benched.
+    pub fn min_secs(&self, label: &str) -> Option<f64> {
+        self.results
+            .iter()
+            .find(|(l, _, _)| l == label)
+            .map(|&(_, min, _)| min)
+    }
+
+    /// Record a named ratio for the JSON report (and return it).
+    pub fn note_speedup(&mut self, label: &str, ratio: f64) -> f64 {
+        self.speedups.push((label.to_string(), ratio));
+        ratio
+    }
+
+    /// Emit the machine-readable bench report (the `BENCH_*.json` perf
+    /// trajectory): per-bench ns/iter (minimum over samples) plus any
+    /// noted speedup ratios.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", self.name));
+        out.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
+        out.push_str("  \"results\": [\n");
+        for (i, (label, min_s, std_s)) in self.results.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"label\": \"{label}\", \"ns_per_iter\": {:.1}, \"std_ns\": {:.1}}}{}\n",
+                min_s * 1e9,
+                std_s * 1e9,
+                if i + 1 < self.results.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"speedups\": [\n");
+        for (i, (label, ratio)) in self.speedups.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"label\": \"{label}\", \"ratio\": {ratio:.3}}}{}\n",
+                if i + 1 < self.speedups.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write(path, out)
     }
 }
 
@@ -143,5 +197,25 @@ mod tests {
     fn formatting() {
         assert_eq!(ms(0.05), "50.00");
         assert_eq!(ratio(4.6), "4.60x");
+    }
+
+    #[test]
+    fn json_report_parses_back() {
+        let mut b = Bencher::new("unit");
+        b.results.push(("fast_path".into(), 1.5e-3, 1.0e-5));
+        b.results.push(("slow_path".into(), 4.5e-3, 2.0e-5));
+        b.note_speedup("fast_vs_slow", 3.0);
+        let path = std::env::temp_dir().join("chiplet_bench_unit.json");
+        b.write_json(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(&text).expect("valid JSON");
+        let results = j.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(results.len(), 2);
+        let ns = results[0].get("ns_per_iter").and_then(|v| v.as_f64()).unwrap();
+        assert!((ns - 1.5e6).abs() < 1.0);
+        let sp = j.get("speedups").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(sp.len(), 1);
+        assert!((sp[0].get("ratio").and_then(|v| v.as_f64()).unwrap() - 3.0).abs() < 1e-9);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,188 @@
+//! Dependency-free parallel map over `std::thread::scope`.
+//!
+//! The MOO search loops are embarrassingly parallel across candidate
+//! designs but the offline registry has no rayon, so this module provides
+//! the minimal worker-pool primitive they need:
+//!
+//! - [`par_map`] / [`par_map_scratch`]: evaluate a slice concurrently
+//!   with **deterministic output ordering** (results land at their input
+//!   index no matter which worker ran them, so jobs=N is bit-for-bit
+//!   identical to jobs=1 for pure per-item functions).
+//! - [`par_map_scratch`] additionally gives every worker a private
+//!   scratch value (reusable routing tables / accumulators), which is
+//!   what makes the evaluation hot path allocation-free per candidate.
+//! - `jobs == 1` short-circuits to a plain sequential loop on the caller
+//!   thread — no threads spawned, the exact serial code path.
+//!
+//! The default worker count resolves once from the `CHIPLET_JOBS` env
+//! var, falling back to `std::thread::available_parallelism`; the CLI
+//! `--jobs` flag overrides both via [`set_default_jobs`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Resolved default job count; 0 means "not resolved yet".
+static DEFAULT_JOBS: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the default job count (the CLI `--jobs` flag). Clamped to 1.
+pub fn set_default_jobs(jobs: usize) {
+    DEFAULT_JOBS.store(jobs.max(1), Ordering::Relaxed);
+}
+
+/// Default job count: `--jobs` override if set, else `CHIPLET_JOBS`, else
+/// the machine's available parallelism, else 1.
+pub fn default_jobs() -> usize {
+    let cached = DEFAULT_JOBS.load(Ordering::Relaxed);
+    if cached > 0 {
+        return cached;
+    }
+    let resolved = std::env::var("CHIPLET_JOBS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
+    DEFAULT_JOBS.store(resolved, Ordering::Relaxed);
+    resolved
+}
+
+/// Parallel map preserving input order: `out[i] = f(&items[i])`.
+pub fn par_map<T, R, F>(jobs: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    par_map_scratch(jobs, items, || (), |_scratch, item| f(item))
+}
+
+/// Parallel map with per-worker scratch state: each worker owns one
+/// `make_scratch()` value for its whole lifetime, so expensive reusable
+/// buffers are built `jobs` times, not `items.len()` times.
+///
+/// Work is distributed by an atomic index counter (dynamic load
+/// balancing); output ordering is deterministic regardless of schedule.
+/// With `jobs <= 1` (or a single item) this is exactly the sequential
+/// loop `items.iter().map(|it| f(&mut scratch, it))` on the caller
+/// thread.
+///
+/// Threads are spawned per call (scoped — no pool), so each call pays
+/// ~0.1-0.3 ms of spawn/join overhead; worthwhile when per-item work is
+/// ≥ 1 ms or batches are large (the MOO evaluation profile). If a future
+/// caller needs high-frequency tiny batches, add a persistent pool here
+/// rather than sprinkling ad-hoc thresholds at call sites.
+pub fn par_map_scratch<T, R, S, M, F>(jobs: usize, items: &[T], make_scratch: M, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    M: Fn() -> S + Sync,
+    F: Fn(&mut S, &T) -> R + Sync,
+{
+    let jobs = jobs.max(1).min(items.len().max(1));
+    if jobs == 1 {
+        let mut scratch = make_scratch();
+        return items.iter().map(|it| f(&mut scratch, it)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let buckets: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..jobs)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut scratch = make_scratch();
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        local.push((i, f(&mut scratch, &items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel worker panicked"))
+            .collect()
+    });
+
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    for bucket in buckets {
+        for (i, r) in bucket {
+            debug_assert!(out[i].is_none(), "index {i} claimed twice");
+            out[i] = Some(r);
+        }
+    }
+    out.into_iter()
+        .map(|r| r.expect("every index produced exactly once"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_across_jobs() {
+        let items: Vec<u64> = (0..257).collect();
+        let serial = par_map(1, &items, |&x| x * x + 1);
+        for jobs in [2, 4, 7] {
+            let par = par_map(jobs, &items, |&x| x * x + 1);
+            assert_eq!(par, serial, "jobs={jobs} must match serial");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map(4, &empty, |&x| x).is_empty());
+        assert_eq!(par_map(4, &[9u32], |&x| x + 1), vec![10]);
+    }
+
+    #[test]
+    fn scratch_is_per_worker_and_reused() {
+        // each worker counts its own invocations in its scratch; the sum
+        // over all workers must cover every item exactly once
+        use std::sync::Mutex;
+        let totals = Mutex::new(Vec::new());
+        let items: Vec<usize> = (0..64).collect();
+        struct Scratch<'a> {
+            count: usize,
+            totals: &'a Mutex<Vec<usize>>,
+        }
+        impl Drop for Scratch<'_> {
+            fn drop(&mut self) {
+                self.totals.lock().unwrap().push(self.count);
+            }
+        }
+        let out = par_map_scratch(
+            3,
+            &items,
+            || Scratch {
+                count: 0,
+                totals: &totals,
+            },
+            |s, &i| {
+                s.count += 1;
+                i
+            },
+        );
+        assert_eq!(out, items);
+        let per_worker = totals.lock().unwrap();
+        assert_eq!(per_worker.iter().sum::<usize>(), items.len());
+        assert!(per_worker.len() <= 3, "at most `jobs` scratch values");
+    }
+
+    #[test]
+    fn default_jobs_positive_and_overridable() {
+        assert!(default_jobs() >= 1);
+        let before = default_jobs();
+        set_default_jobs(before); // idempotent round-trip
+        assert_eq!(default_jobs(), before);
+    }
+}

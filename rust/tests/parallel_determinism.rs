@@ -1,0 +1,128 @@
+//! Parallel determinism contract: for any `jobs` value the MOO stack
+//! must produce bit-identical results to the serial path — same Pareto
+//! fronts, same PHV, same evaluation counts. This is what licenses
+//! `--jobs`/`CHIPLET_JOBS` as a pure wall-clock knob.
+
+use chiplet_hi::arch::chiplet::build_chiplets;
+use chiplet_hi::arch::SfcKind;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::model::kernels::Workload;
+use chiplet_hi::moo::{design::NoiDesign, nsga2, stage, Evaluator};
+
+fn evaluator(jobs: usize) -> Evaluator {
+    let sys = SystemConfig::s36();
+    let chips = build_chiplets(20, 4, 4, 8);
+    let w = Workload::build(&ModelZoo::bert_base(), 64);
+    Evaluator::new(&sys, &chips, &w).with_jobs(jobs)
+}
+
+fn seeds(ev: &Evaluator) -> Vec<NoiDesign> {
+    vec![
+        NoiDesign::mesh_seed(&ev.sys, 36),
+        NoiDesign::hi_seed(&ev.sys, &ev.chiplets, SfcKind::Boustrophedon),
+    ]
+}
+
+#[test]
+fn nsga2_identical_across_job_counts() {
+    let cfg = nsga2::Nsga2Config {
+        pop: 10,
+        generations: 4,
+        mutation_moves: 2,
+        seed: 77,
+    };
+    let ev1 = evaluator(1);
+    let reference = nsga2::nsga2(&ev1, seeds(&ev1), &cfg);
+    for jobs in [2, 4] {
+        let evn = evaluator(jobs);
+        let run = nsga2::nsga2(&evn, seeds(&evn), &cfg);
+        assert_eq!(
+            run.archive.objectives(),
+            reference.archive.objectives(),
+            "jobs={jobs} Pareto front diverged from serial"
+        );
+        assert_eq!(run.phv, reference.phv, "jobs={jobs} PHV diverged");
+        assert_eq!(
+            run.evaluations, reference.evaluations,
+            "jobs={jobs} evaluation count diverged"
+        );
+    }
+}
+
+#[test]
+fn stage_identical_across_job_counts() {
+    let cfg = stage::StageConfig {
+        iterations: 3,
+        fanout: 4,
+        patience: 3,
+        max_steps: 10,
+        meta_steps: 6,
+        trees: 8,
+        tree_depth: 4,
+        seed: 5,
+    };
+    let ev1 = evaluator(1);
+    let reference = stage::moo_stage(&ev1, seeds(&ev1), &cfg);
+    let ev4 = evaluator(4);
+    let run = stage::moo_stage(&ev4, seeds(&ev4), &cfg);
+    assert_eq!(
+        run.archive.objectives(),
+        reference.archive.objectives(),
+        "jobs=4 stage Pareto front diverged from serial"
+    );
+    assert_eq!(run.phv, reference.phv);
+    assert_eq!(run.evaluations, reference.evaluations);
+    assert_eq!(run.phv_history, reference.phv_history);
+}
+
+#[test]
+fn batch_objectives_identical_across_job_counts() {
+    // raw objectives_batch: every entry bit-identical, any jobs value,
+    // duplicates included
+    let ev1 = evaluator(1);
+    let mut rng = chiplet_hi::util::Rng::new(31);
+    let mut designs = Vec::new();
+    for k in 0..12 {
+        let mut d = NoiDesign::hi_seed(&ev1.sys, &ev1.chiplets, SfcKind::Hilbert);
+        for _ in 0..(k % 5) {
+            d.random_move(&mut rng);
+        }
+        designs.push(d);
+    }
+    let reference = ev1.objectives_batch(&designs);
+    for jobs in [2, 3, 8] {
+        let evn = evaluator(jobs);
+        assert_eq!(
+            evn.objectives_batch(&designs),
+            reference,
+            "jobs={jobs} objectives diverged"
+        );
+    }
+}
+
+#[test]
+fn memo_cache_serves_stage_restarts() {
+    // re-running the same stage search on one Evaluator must be pure
+    // cache hits for every design revisited — and identical results
+    let ev = evaluator(2);
+    let cfg = stage::StageConfig {
+        iterations: 2,
+        fanout: 3,
+        patience: 3,
+        max_steps: 8,
+        meta_steps: 4,
+        trees: 8,
+        tree_depth: 4,
+        seed: 9,
+    };
+    let a = stage::moo_stage(&ev, seeds(&ev), &cfg);
+    let (_, misses_after_first) = ev.cache_stats();
+    let b = stage::moo_stage(&ev, seeds(&ev), &cfg);
+    let (_, misses_after_second) = ev.cache_stats();
+    assert_eq!(a.phv, b.phv);
+    assert_eq!(a.evaluations, b.evaluations);
+    assert_eq!(
+        misses_after_first, misses_after_second,
+        "second identical run must never re-pay an evaluation"
+    );
+}
