@@ -2,9 +2,12 @@
 //! (100 chiplets), continuous batching with Poisson arrivals.
 //!
 //! Sweeps the offered load and prints throughput, TTFT/TPOT tails and
-//! energy per request for each architecture, plus the effect of
-//! prefill/decode disaggregation at the highest load — the ROADMAP
-//! "serve heavy traffic" scenario on top of the build-once Platform.
+//! energy per request for each architecture; compares the scheduler
+//! modes (aggregated / disaggregated / chunked prefill / preemption)
+//! at the highest load; then scales out to a heterogeneous *fleet* of
+//! platforms behind a request router and sweeps the dispatch policies
+//! — the ROADMAP "serve heavy traffic from millions of users" scenario
+//! on top of the build-once Platform.
 //!
 //! The (rate × arch) sweep grid runs on the shared worker pool
 //! (`CHIPLET_JOBS` to cap it) — each cell owns its platform, and the
@@ -15,8 +18,11 @@
 
 use chiplet_hi::baselines::Arch;
 use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::sim::cluster::estimate_service_secs;
+use chiplet_hi::sim::decode::kv_cache_bytes;
 use chiplet_hi::sim::{
-    ArrivalProcess, Platform, ServingConfig, ServingReport, ServingSim, SimOptions,
+    ArrivalProcess, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec, Platform,
+    ServingConfig, ServingReport, ServingSim, SimOptions,
 };
 use chiplet_hi::util::bench::Table;
 use chiplet_hi::util::parallel;
@@ -75,27 +81,121 @@ fn main() {
         t.print();
     }
 
-    // prefill/decode disaggregation at the highest load (2.5D-HI)
+    // scheduler modes at the highest load (2.5D-HI): the classic
+    // aggregated stall vs disaggregated prefill vs Sarathi-style
+    // chunked prefill; the preemption row runs with a deliberately
+    // tight KV pool (3 full footprints) to show swap-outs in action
     let hi = Platform::new(Arch::Hi25D, &sys, &opts);
-    let mut t = Table::new(
-        "prefill/decode disaggregation, 2.5D-HI @ 256 req/s",
-        &["mode", "tok/s", "TTFT p99 ms", "TPOT p99 ms"],
-    );
-    for disagg in [false, true] {
-        let cfg = ServingConfig {
-            arrivals: ArrivalProcess::Poisson {
-                rate_per_sec: 256.0,
-                num_requests: 64,
+    let base = ServingConfig {
+        arrivals: ArrivalProcess::Poisson {
+            rate_per_sec: 256.0,
+            num_requests: 64,
+        },
+        ..Default::default()
+    };
+    let kv_full = kv_cache_bytes(&model, base.prompt_len + base.gen_tokens);
+    let modes: Vec<(&str, ServingConfig)> = vec![
+        ("aggregated", base.clone()),
+        (
+            "disaggregated",
+            ServingConfig {
+                disaggregate_prefill: true,
+                ..base.clone()
             },
-            disaggregate_prefill: disagg,
-            ..Default::default()
-        };
+        ),
+        (
+            "chunked prefill",
+            ServingConfig {
+                chunked_prefill: true,
+                ..base.clone()
+            },
+        ),
+        (
+            "chunked + preempt (tight KV)",
+            ServingConfig {
+                chunked_prefill: true,
+                preempt: true,
+                kv_capacity_bytes: 3.0 * kv_full,
+                ..base.clone()
+            },
+        ),
+    ];
+    let mut t = Table::new(
+        "scheduler modes, 2.5D-HI @ 256 req/s",
+        &["mode", "tok/s", "TTFT p99 ms", "TPOT p99 ms", "rej", "preempt"],
+    );
+    for (name, cfg) in modes {
         let r = ServingSim::new(&hi, &model, cfg).run();
         t.row(vec![
-            if disagg { "disaggregated" } else { "aggregated" }.into(),
+            name.into(),
             format!("{:.1}", r.throughput_tok_s),
             format!("{:.3}", r.ttft_p99_secs * 1e3),
             format!("{:.4}", r.tpot_p99_secs * 1e3),
+            r.rejected.to_string(),
+            r.preemptions.to_string(),
+        ]);
+    }
+    t.print();
+
+    // ---- fleet mode: a heterogeneous cluster (one fast HI instance,
+    // two slower baseline instances) behind the request router. The
+    // offered rate is a fraction of the fast instance's capacity but a
+    // multiple of the slow instances', spread over many service times:
+    // depth-aware dispatch (JSQ / least-KV) routes around the slow
+    // instances; round-robin blindly piles a third of the load onto
+    // each — the p99 TTFT gap is the whole point.
+    let specs = vec![
+        InstanceSpec::of(Arch::Hi25D),
+        InstanceSpec::of(Arch::TransPimChiplet),
+        InstanceSpec::of(Arch::HaimaChiplet),
+    ];
+    let est_fast = estimate_service_secs(&sys, &model, &specs[0], &base)
+        .expect("service estimate");
+    let rate = 4.0 / est_fast;
+    let serving = ServingConfig {
+        arrivals: ArrivalProcess::Poisson {
+            rate_per_sec: rate,
+            num_requests: 96,
+        },
+        ..base
+    };
+    println!(
+        "\nfleet: [hi, transpim, haima] x {} req @ {:.0} req/s (4 per fast-instance service time)",
+        96, rate
+    );
+    let mut t = Table::new(
+        "dispatch policy sweep (fleet-level)",
+        &[
+            "policy", "goodput req/s", "tok/s", "TTFT p50 ms", "TTFT p99 ms", "util %",
+            "per-instance req",
+        ],
+    );
+    for policy in DispatchPolicy::all() {
+        let fleet = ClusterSim::new(
+            &sys,
+            &model,
+            ClusterConfig {
+                specs: specs.clone(),
+                policy,
+                serving: serving.clone(),
+            },
+        )
+        .run()
+        .expect("fleet run");
+        let split = fleet
+            .instances
+            .iter()
+            .map(|r| r.requests.to_string())
+            .collect::<Vec<_>>()
+            .join("/");
+        t.row(vec![
+            fleet.policy.clone(),
+            format!("{:.1}", fleet.goodput_req_s),
+            format!("{:.1}", fleet.throughput_tok_s),
+            format!("{:.3}", fleet.ttft_p50_secs * 1e3),
+            format!("{:.3}", fleet.ttft_p99_secs * 1e3),
+            format!("{:.0}", fleet.mean_utilization * 100.0),
+            split,
         ]);
     }
     t.print();

@@ -12,7 +12,10 @@ use chiplet_hi::model::traffic::hi_traffic;
 use chiplet_hi::moo::{design::NoiDesign, Evaluator};
 use chiplet_hi::noi::{analytic, CycleSim, RoutingTable, Topology};
 use chiplet_hi::sim::engine::chiplets_for;
-use chiplet_hi::sim::{simulate, Platform, SimOptions};
+use chiplet_hi::sim::{
+    simulate, ArrivalProcess, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec, Platform,
+    ServingConfig, ServingSim, SimOptions,
+};
 use chiplet_hi::util::bench::Bencher;
 use chiplet_hi::util::Rng;
 
@@ -116,6 +119,34 @@ fn main() {
         rebuild * 1e3,
         reuse * 1e3
     );
+
+    // serving layer: one engine run (scheduler + KV accounting over a
+    // 32-request burst) and the 2-instance fleet on top of it — the
+    // cluster dispatch + aggregation overhead rides the same platforms
+    let gpt = ModelZoo::gpt_j();
+    let serve_cfg = ServingConfig {
+        arrivals: ArrivalProcess::Poisson {
+            rate_per_sec: 1.0e4,
+            num_requests: 32,
+        },
+        prompt_len: 64,
+        gen_tokens: 16,
+        max_batch: 8,
+        ..Default::default()
+    };
+    b.bench("serving_engine_32req", || {
+        let mut s = ServingSim::new(&platform, &gpt, serve_cfg.clone());
+        std::hint::black_box(s.run());
+    });
+    let cluster_cfg = ClusterConfig {
+        specs: vec![InstanceSpec::of(Arch::Hi25D), InstanceSpec::of(Arch::Hi25D)],
+        policy: DispatchPolicy::Jsq,
+        serving: serve_cfg.clone(),
+    };
+    b.bench("cluster_2inst_jsq_32req", || {
+        let c = ClusterSim::new(&sys, &gpt, cluster_cfg.clone());
+        std::hint::black_box(c.run_with_jobs(2).unwrap());
+    });
 
     let mut sim = CycleSim::new(&topo, &routes, 8);
     let flit = 32.0;

@@ -10,7 +10,10 @@
 //!   generate   --model gpt-j [--prompt 128] [--tokens 64] [--design file]
 //!   serve      --system 100 --model gpt-j [--rate 64] [--requests 64]
 //!              [--prompt 128] [--tokens 64] [--batch 16] [--seed N]
-//!              [--disaggregate] [--design file] [--all-arch]
+//!              [--disaggregate] [--chunked-prefill] [--chunk 256]
+//!              [--preempt] [--kv-gb 8] [--design file] [--all-arch]
+//!              [--arch hi,transpim,...] [--json out.json]
+//!              [--instances N --policy rr|jsq|least-kv|p2c]  (fleet mode)
 //!   endurance  [--seq 4096]                           (§4.4 analysis)
 //!   functional [--layers 2] [--artifacts artifacts]   (end-to-end driver)
 //!   info                                              (Table 1-3 dump)
@@ -27,7 +30,8 @@ use chiplet_hi::endurance;
 use chiplet_hi::model::kernels::Workload;
 use chiplet_hi::moo::{amosa, design::NoiDesign, nsga2, stage, Evaluator, ParetoArchive};
 use chiplet_hi::sim::{
-    self, ArrivalProcess, Platform, ServingConfig, ServingReport, ServingSim, SimOptions,
+    self, ArrivalProcess, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec, Platform,
+    ServingConfig, ServingReport, ServingSim, SimOptions,
 };
 use chiplet_hi::util::bench::Table;
 use chiplet_hi::util::cli::Args;
@@ -284,7 +288,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             Ok(())
         }
         "serve" => {
-            // request-level continuous-batching serving under load
+            // request-level continuous-batching serving under load;
+            // --instances N runs a fleet behind a request router
             let sys = system_from(args);
             let model = model_from(args, "gpt-j")?;
             let opts = SimOptions::default();
@@ -297,18 +302,25 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 prompt_len: args.get_usize("prompt", 128),
                 gen_tokens: args.get_usize("tokens", 64),
                 max_batch: args.get_usize("batch", 16),
+                kv_capacity_bytes: args.get_f64("kv-gb", 8.0) * (1u64 << 30) as f64,
                 disaggregate_prefill: args.has_flag("disaggregate"),
+                chunked_prefill: args.has_flag("chunked-prefill"),
+                chunk_tokens: args.get_usize("chunk", 256),
+                preempt: args.has_flag("preempt"),
                 seed: args.get_u64("seed", 0x5EED),
                 ..Default::default()
             };
-            let arches: Vec<Arch> = if args.has_flag("all-arch") || args.get("arch").is_none() {
-                Arch::chiplet_set().to_vec()
-            } else {
-                vec![Arch::by_name(args.get_str("arch", "hi"))
-                    .ok_or_else(|| anyhow!("unknown arch"))?]
-            };
+            // `--arch` comma list, shared by both modes (fleet cycles
+            // it over the instances; single-instance runs one row per
+            // entry, or the whole chiplet set when absent/--all-arch)
+            let arch_list: Vec<Arch> = args
+                .get_list("arch")
+                .iter()
+                .map(|s| Arch::by_name(s).ok_or_else(|| anyhow!("unknown arch '{s}'")))
+                .collect::<Result<_>>()?;
+            let instances = args.get_usize("instances", 1);
             println!(
-                "serving {} on {} chiplets: {} req @ {:.1} req/s, prompt {}, gen {}, batch {}{}{}",
+                "serving {} on {} chiplets: {} req @ {:.1} req/s, prompt {}, gen {}, batch {}{}{}{}{}",
                 model.name,
                 sys.size.chiplets(),
                 args.get_usize("requests", 64),
@@ -317,8 +329,70 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 cfg.gen_tokens,
                 cfg.max_batch,
                 if cfg.disaggregate_prefill { ", disaggregated prefill" } else { "" },
+                if cfg.chunked_prefill { ", chunked prefill" } else { "" },
+                if cfg.preempt { ", preemption" } else { "" },
                 if design.is_some() { ", custom design" } else { "" },
             );
+            if instances > 1 {
+                // fleet mode: the --arch list (default hi) cycles over
+                // the instances — heterogeneous fleets come for free
+                let pool: Vec<Arch> = if arch_list.is_empty() {
+                    vec![Arch::Hi25D]
+                } else {
+                    arch_list.clone()
+                };
+                let policy = DispatchPolicy::by_name(args.get_str("policy", "rr"))
+                    .ok_or_else(|| {
+                        anyhow!("unknown policy (have: rr, jsq, least-kv, p2c)")
+                    })?;
+                let specs: Vec<InstanceSpec> = (0..instances)
+                    .map(|i| InstanceSpec {
+                        arch: pool[i % pool.len()],
+                        design: design.clone(),
+                        kv_capacity_bytes: None,
+                    })
+                    .collect();
+                let fleet = ClusterSim::new(
+                    &sys,
+                    &model,
+                    ClusterConfig {
+                        specs,
+                        policy,
+                        serving: cfg,
+                    },
+                )
+                .run()?;
+                let mut t = Table::new(
+                    &format!("fleet serving: {instances} instances, {} dispatch", fleet.policy),
+                    &["inst", "arch", "req", "done", "tok/s", "TTFT p99 ms", "util %", "rej", "pre"],
+                );
+                for (i, r) in fleet.instances.iter().enumerate() {
+                    t.row(vec![
+                        i.to_string(),
+                        r.arch.clone(),
+                        r.requests.to_string(),
+                        r.completed.to_string(),
+                        format!("{:.1}", r.throughput_tok_s),
+                        format!("{:.3}", r.ttft_p99_secs * 1e3),
+                        format!("{:.0}", r.busy_secs / fleet.makespan_secs * 100.0),
+                        r.rejected.to_string(),
+                        r.preemptions.to_string(),
+                    ]);
+                }
+                t.print();
+                println!("{}", fleet.summary_line());
+                if let Some(path) = args.get("json") {
+                    std::fs::write(path, fleet.to_json())
+                        .with_context(|| format!("writing fleet report to {path}"))?;
+                    println!("wrote fleet report to {path}");
+                }
+                return Ok(());
+            }
+            let arches: Vec<Arch> = if args.has_flag("all-arch") || arch_list.is_empty() {
+                Arch::chiplet_set().to_vec()
+            } else {
+                arch_list
+            };
             let mut t = Table::new(
                 "request-level serving",
                 &[
@@ -337,8 +411,11 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     Ok(ServingSim::new(&platform, &model, cfg.clone()).run())
                 },
             );
+            let mut rows = Vec::with_capacity(reports.len());
             for r in reports {
-                let r = r?;
+                rows.push(r?);
+            }
+            for r in &rows {
                 t.row(vec![
                     r.arch.clone(),
                     format!("{:.1}", r.throughput_tok_s),
@@ -353,6 +430,16 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 ]);
             }
             t.print();
+            if let Some(path) = args.get("json") {
+                let body = rows
+                    .iter()
+                    .map(|r| format!("  {}", r.to_json()))
+                    .collect::<Vec<_>>()
+                    .join(",\n");
+                std::fs::write(path, format!("{{\"reports\": [\n{body}\n]}}\n"))
+                    .with_context(|| format!("writing serving report to {path}"))?;
+                println!("wrote serving report to {path}");
+            }
             Ok(())
         }
         "endurance" => {
@@ -417,6 +504,9 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             );
             println!(
                 "NoI design plug-through: `optimize --export d.json` then `simulate|generate|serve --design d.json`"
+            );
+            println!(
+                "fleet serving: `serve --instances N --policy jsq --arch hi,transpim [--chunked-prefill] [--preempt] [--json out.json]`"
             );
             println!("global flags: --jobs N (parallel worker cap; CHIPLET_JOBS env)");
             println!("see README.md for usage");

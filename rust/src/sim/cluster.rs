@@ -1,0 +1,528 @@
+//! Cluster-scale serving: N independent [`Platform`] instances
+//! (optionally heterogeneous — different archs or NoI designs per
+//! instance) behind a front-end request router — the ROADMAP
+//! "millions of users" scale-out step (group-level parallelism across
+//! heterogeneous compute units à la Hemlet, arXiv 2511.15397).
+//!
+//! One shared arrival stream (the same seeded Poisson/trace process a
+//! single [`ServingSim`] consumes) is dispatched request-by-request by
+//! a [`DispatchPolicy`]. The router acts on *estimated* instance state,
+//! the way a real front-end does: each instance is modeled as
+//! `max_batch` deterministic servers with a per-instance service-time
+//! estimate probed from its actual platform (prefill + decode costs),
+//! and queue depth is the count of dispatched-but-not-yet-finished
+//! requests under that model. Dispatch is strictly sequential in
+//! arrival order, so the assignment — and therefore the whole fleet
+//! simulation — is deterministic and independent of `--jobs`.
+//!
+//! After dispatch, every instance runs its assigned sub-trace through
+//! the full request-level engine (scheduler, KV accounting, preemption
+//! — whatever the shared [`ServingConfig`] enables) on the shared
+//! worker pool, and the per-request samples are merged into fleet-level
+//! goodput, utilization and TTFT/TPOT tails.
+
+use crate::bail;
+use crate::baselines::Arch;
+use crate::config::{ModelConfig, SystemConfig};
+use crate::moo::design::NoiDesign;
+use crate::sim::decode::{decode_step_on, kv_cache_bytes};
+use crate::sim::engine::SimOptions;
+use crate::sim::platform::Platform;
+use crate::sim::serving::{
+    ArrivalProcess, ServingConfig, ServingReport, ServingSamples, ServingSim,
+};
+use crate::util::error::Result;
+use crate::util::stats::percentile;
+use crate::util::{parallel, Rng};
+
+/// How the front-end router picks an instance for each arriving request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Blind rotation over the instances.
+    RoundRobin,
+    /// Join-shortest-queue: fewest outstanding requests (ties → lowest
+    /// instance index).
+    Jsq,
+    /// Least KV load: outstanding KV footprint as a fraction of the
+    /// instance's KV capacity (distinguishes instances with different
+    /// pool sizes; equals JSQ for a homogeneous fleet).
+    LeastKv,
+    /// Power-of-two-choices: sample two distinct instances (seeded,
+    /// deterministic), keep the shorter queue.
+    P2c,
+}
+
+impl DispatchPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "rr",
+            DispatchPolicy::Jsq => "jsq",
+            DispatchPolicy::LeastKv => "least-kv",
+            DispatchPolicy::P2c => "p2c",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<DispatchPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" => Some(DispatchPolicy::RoundRobin),
+            "jsq" => Some(DispatchPolicy::Jsq),
+            "lkv" | "least-kv" => Some(DispatchPolicy::LeastKv),
+            "p2c" | "power-of-two" => Some(DispatchPolicy::P2c),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [DispatchPolicy; 4] {
+        [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::Jsq,
+            DispatchPolicy::LeastKv,
+            DispatchPolicy::P2c,
+        ]
+    }
+}
+
+/// One simulated serving instance of the fleet.
+#[derive(Debug, Clone)]
+pub struct InstanceSpec {
+    pub arch: Arch,
+    /// Optional MOO-exported NoI design (default hi-seed otherwise).
+    pub design: Option<NoiDesign>,
+    /// Optional per-instance KV pool override (bytes); the shared
+    /// serving config's capacity otherwise.
+    pub kv_capacity_bytes: Option<f64>,
+}
+
+impl InstanceSpec {
+    pub fn of(arch: Arch) -> InstanceSpec {
+        InstanceSpec {
+            arch,
+            design: None,
+            kv_capacity_bytes: None,
+        }
+    }
+}
+
+/// Fleet scenario: instances + router policy + the shared workload.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub specs: Vec<InstanceSpec>,
+    pub policy: DispatchPolicy,
+    /// Shared workload shape; `arrivals` is the *global* stream that
+    /// the router splits, everything else applies per instance.
+    pub serving: ServingConfig,
+}
+
+/// Fleet-level aggregate over all instances.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub policy: String,
+    pub model: String,
+    pub requests: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub preemptions: usize,
+    /// first arrival → last completion across the fleet (s).
+    pub makespan_secs: f64,
+    /// completed requests per second over the fleet makespan.
+    pub goodput_req_s: f64,
+    /// decoded tokens per second over the fleet makespan.
+    pub throughput_tok_s: f64,
+    pub ttft_p50_secs: f64,
+    pub ttft_p95_secs: f64,
+    pub ttft_p99_secs: f64,
+    pub tpot_p50_secs: f64,
+    pub tpot_p95_secs: f64,
+    pub tpot_p99_secs: f64,
+    /// Mean engine-busy fraction over the fleet makespan.
+    pub mean_utilization: f64,
+    /// Per-instance reports, in spec order.
+    pub instances: Vec<ServingReport>,
+}
+
+impl FleetReport {
+    pub fn summary_line(&self) -> String {
+        format!(
+            "fleet[{}x {}] {:>4}/{} req | {:>7.1} req/s | {:>8.1} tok/s | TTFT p50/p99 {:>7.2}/{:>7.2} ms | util {:>4.0}% | rej {} | pre {}",
+            self.instances.len(),
+            self.policy,
+            self.completed,
+            self.requests,
+            self.goodput_req_s,
+            self.throughput_tok_s,
+            self.ttft_p50_secs * 1e3,
+            self.ttft_p99_secs * 1e3,
+            self.mean_utilization * 100.0,
+            self.rejected,
+            self.preemptions
+        )
+    }
+
+    /// Machine-readable fleet report (the cluster `serve --json`
+    /// interchange); embeds one [`ServingReport::to_json`] per instance.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"policy\": \"{}\",\n", self.policy));
+        out.push_str(&format!("  \"model\": \"{}\",\n", self.model));
+        out.push_str(&format!("  \"requests\": {},\n", self.requests));
+        out.push_str(&format!("  \"completed\": {},\n", self.completed));
+        out.push_str(&format!("  \"rejected\": {},\n", self.rejected));
+        out.push_str(&format!("  \"preemptions\": {},\n", self.preemptions));
+        out.push_str(&format!("  \"makespan_secs\": {},\n", self.makespan_secs));
+        out.push_str(&format!("  \"goodput_req_s\": {},\n", self.goodput_req_s));
+        out.push_str(&format!(
+            "  \"throughput_tok_s\": {},\n",
+            self.throughput_tok_s
+        ));
+        out.push_str(&format!("  \"ttft_p50_secs\": {},\n", self.ttft_p50_secs));
+        out.push_str(&format!("  \"ttft_p95_secs\": {},\n", self.ttft_p95_secs));
+        out.push_str(&format!("  \"ttft_p99_secs\": {},\n", self.ttft_p99_secs));
+        out.push_str(&format!("  \"tpot_p50_secs\": {},\n", self.tpot_p50_secs));
+        out.push_str(&format!("  \"tpot_p95_secs\": {},\n", self.tpot_p95_secs));
+        out.push_str(&format!("  \"tpot_p99_secs\": {},\n", self.tpot_p99_secs));
+        out.push_str(&format!(
+            "  \"mean_utilization\": {},\n",
+            self.mean_utilization
+        ));
+        out.push_str("  \"instances\": [\n");
+        for (i, inst) in self.instances.iter().enumerate() {
+            out.push_str("    ");
+            out.push_str(&inst.to_json());
+            out.push_str(if i + 1 < self.instances.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+fn build_platform(spec: &InstanceSpec, sys: &SystemConfig, opts: &SimOptions) -> Result<Platform> {
+    match &spec.design {
+        Some(d) => Platform::with_design(spec.arch, sys, d.clone()),
+        None => Ok(Platform::new(spec.arch, sys, opts)),
+    }
+}
+
+/// Router-side per-request service-time estimate for an instance:
+/// prefill plus the generation at the mid-context decode cost, probed
+/// from the instance's actual platform. Public so load scenarios
+/// (examples, tests) can express arrival rates in units of fleet
+/// capacity without hardcoding absolute latencies.
+pub fn estimate_service_secs(
+    sys: &SystemConfig,
+    model: &ModelConfig,
+    spec: &InstanceSpec,
+    cfg: &ServingConfig,
+) -> Result<f64> {
+    let opts = SimOptions::default();
+    let platform = build_platform(spec, sys, &opts)?;
+    let prefill = platform.run(model, cfg.prompt_len.max(8), &opts).latency_secs;
+    if cfg.gen_tokens == 0 {
+        return Ok(prefill.max(1e-12));
+    }
+    let mid = (cfg.prompt_len + cfg.gen_tokens / 2).max(1);
+    let (tok, _) = decode_step_on(&platform, model, mid, &opts);
+    Ok((prefill + cfg.gen_tokens as f64 * tok).max(1e-12))
+}
+
+/// Fleet simulator: dispatch + N request-level engines + aggregation.
+pub struct ClusterSim<'a> {
+    sys: &'a SystemConfig,
+    model: &'a ModelConfig,
+    cfg: ClusterConfig,
+}
+
+impl<'a> ClusterSim<'a> {
+    pub fn new(sys: &'a SystemConfig, model: &'a ModelConfig, cfg: ClusterConfig) -> Self {
+        ClusterSim { sys, model, cfg }
+    }
+
+    /// Run on the shared worker pool (`--jobs` / `CHIPLET_JOBS`).
+    pub fn run(&self) -> Result<FleetReport> {
+        self.run_with_jobs(parallel::default_jobs())
+    }
+
+    /// Run with an explicit worker count; results are bit-identical for
+    /// any `jobs` (dispatch is sequential, instance sims are pure and
+    /// order-preserved by `par_map`).
+    pub fn run_with_jobs(&self, jobs: usize) -> Result<FleetReport> {
+        let n = self.cfg.specs.len();
+        if n == 0 {
+            bail!("cluster needs at least one instance");
+        }
+        let scfg = &self.cfg.serving;
+
+        // per-instance service estimates for the router (parallel,
+        // deterministic ordering)
+        let est_results = parallel::par_map(jobs, &self.cfg.specs, |spec| {
+            estimate_service_secs(self.sys, self.model, spec, scfg)
+        });
+        let mut est = Vec::with_capacity(n);
+        for e in est_results {
+            est.push(e?);
+        }
+
+        // ---- front-end router: split the shared arrival stream
+        let arrivals = scfg.arrivals.times(scfg.seed);
+        let max_batch = scfg.max_batch.max(1);
+        let kv_full = kv_cache_bytes(self.model, scfg.prompt_len + scfg.gen_tokens).max(1.0);
+        let caps: Vec<f64> = self
+            .cfg
+            .specs
+            .iter()
+            .map(|s| s.kv_capacity_bytes.unwrap_or(scfg.kv_capacity_bytes).max(1.0))
+            .collect();
+        let mut assigned: Vec<Vec<f64>> = vec![Vec::new(); n];
+        let mut outstanding: Vec<Vec<f64>> = vec![Vec::new(); n];
+        let mut servers: Vec<Vec<f64>> = vec![vec![0.0f64; max_batch]; n];
+        let mut rng = Rng::new(scfg.seed ^ 0xC1A5_7E55);
+        for (k, &t) in arrivals.iter().enumerate() {
+            for o in outstanding.iter_mut() {
+                o.retain(|&f| f > t);
+            }
+            let pick = match self.cfg.policy {
+                DispatchPolicy::RoundRobin => k % n,
+                DispatchPolicy::Jsq => (0..n).min_by_key(|&i| outstanding[i].len()).unwrap(),
+                DispatchPolicy::LeastKv => (0..n)
+                    .min_by(|&a, &b| {
+                        let la = outstanding[a].len() as f64 * kv_full / caps[a];
+                        let lb = outstanding[b].len() as f64 * kv_full / caps[b];
+                        la.partial_cmp(&lb).unwrap()
+                    })
+                    .unwrap(),
+                DispatchPolicy::P2c => {
+                    let a = rng.below(n);
+                    let b = if n > 1 {
+                        (a + 1 + rng.below(n - 1)) % n
+                    } else {
+                        a
+                    };
+                    let (x, y) = (a.min(b), a.max(b));
+                    if outstanding[y].len() < outstanding[x].len() {
+                        y
+                    } else {
+                        x
+                    }
+                }
+            };
+            assigned[pick].push(t);
+            // estimated start on the instance's max_batch virtual servers
+            let (si, free) = servers[pick]
+                .iter()
+                .copied()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            let finish = free.max(t) + est[pick];
+            servers[pick][si] = finish;
+            outstanding[pick].push(finish);
+        }
+
+        // ---- per-instance request-level simulations (workers build
+        // their own platforms; output order is spec order)
+        let idx: Vec<usize> = (0..n).collect();
+        let runs = parallel::par_map(jobs, &idx, |&i| -> Result<(ServingReport, ServingSamples)> {
+            let spec = &self.cfg.specs[i];
+            let opts = SimOptions::default();
+            let platform = build_platform(spec, self.sys, &opts)?;
+            let mut cfg_i = scfg.clone();
+            cfg_i.arrivals = ArrivalProcess::Trace(assigned[i].clone());
+            if let Some(cap) = spec.kv_capacity_bytes {
+                cfg_i.kv_capacity_bytes = cap;
+            }
+            Ok(ServingSim::new(&platform, self.model, cfg_i).run_detailed())
+        });
+
+        // ---- aggregate
+        let mut instances = Vec::with_capacity(n);
+        let mut ttft = Vec::with_capacity(arrivals.len());
+        let mut tpot = Vec::with_capacity(arrivals.len());
+        let mut decoded = 0u64;
+        let mut first = f64::INFINITY;
+        let mut last = f64::NEG_INFINITY;
+        for r in runs {
+            let (rep, s) = r?;
+            if rep.requests > 0 {
+                first = first.min(s.first_arrival);
+                last = last.max(s.last_finish);
+            }
+            ttft.extend_from_slice(&s.ttft);
+            tpot.extend_from_slice(&s.tpot);
+            decoded += s.decoded_tokens;
+            instances.push(rep);
+        }
+        if !first.is_finite() {
+            first = 0.0;
+            last = 0.0;
+        }
+        let makespan = (last - first).max(1e-12);
+        let completed: usize = instances.iter().map(|r| r.completed).sum();
+        let rejected: usize = instances.iter().map(|r| r.rejected).sum();
+        let preemptions: usize = instances.iter().map(|r| r.preemptions).sum();
+        let busy: f64 = instances.iter().map(|r| r.busy_secs).sum();
+
+        Ok(FleetReport {
+            policy: self.cfg.policy.name().to_string(),
+            model: self.model.name.to_string(),
+            requests: arrivals.len(),
+            completed,
+            rejected,
+            preemptions,
+            makespan_secs: makespan,
+            goodput_req_s: completed as f64 / makespan,
+            throughput_tok_s: decoded as f64 / makespan,
+            ttft_p50_secs: percentile(&ttft, 50.0),
+            ttft_p95_secs: percentile(&ttft, 95.0),
+            ttft_p99_secs: percentile(&ttft, 99.0),
+            tpot_p50_secs: percentile(&tpot, 50.0),
+            tpot_p95_secs: percentile(&tpot, 95.0),
+            tpot_p99_secs: percentile(&tpot, 99.0),
+            mean_utilization: busy / (n as f64 * makespan),
+            instances,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelZoo, SystemConfig};
+
+    fn poisson(rate: f64, n: usize) -> ServingConfig {
+        ServingConfig {
+            arrivals: ArrivalProcess::Poisson {
+                rate_per_sec: rate,
+                num_requests: n,
+            },
+            prompt_len: 64,
+            gen_tokens: 16,
+            max_batch: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fleet_completes_and_aggregates() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let cfg = ClusterConfig {
+            specs: vec![InstanceSpec::of(Arch::Hi25D), InstanceSpec::of(Arch::Hi25D)],
+            policy: DispatchPolicy::RoundRobin,
+            serving: poisson(1.0e5, 24),
+        };
+        let fleet = ClusterSim::new(&sys, &m, cfg).run_with_jobs(1).unwrap();
+        assert_eq!(fleet.requests, 24);
+        assert_eq!(fleet.completed, 24);
+        assert_eq!(fleet.instances.len(), 2);
+        // round-robin splits a shared burst evenly
+        assert_eq!(fleet.instances[0].completed, 12);
+        assert_eq!(fleet.instances[1].completed, 12);
+        assert!(fleet.goodput_req_s > 0.0);
+        assert!(fleet.throughput_tok_s > 0.0);
+        assert!(fleet.ttft_p99_secs >= fleet.ttft_p50_secs);
+        assert!(fleet.mean_utilization > 0.0 && fleet.mean_utilization <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn policies_are_deterministic() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        for policy in DispatchPolicy::all() {
+            let cfg = ClusterConfig {
+                specs: vec![
+                    InstanceSpec::of(Arch::Hi25D),
+                    InstanceSpec::of(Arch::TransPimChiplet),
+                ],
+                policy,
+                serving: poisson(500.0, 16),
+            };
+            let a = ClusterSim::new(&sys, &m, cfg.clone()).run_with_jobs(1).unwrap();
+            let b = ClusterSim::new(&sys, &m, cfg).run_with_jobs(1).unwrap();
+            assert_eq!(a.ttft_p99_secs, b.ttft_p99_secs, "{}", policy.name());
+            assert_eq!(a.makespan_secs, b.makespan_secs, "{}", policy.name());
+            assert_eq!(a.completed, 16, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn jsq_beats_round_robin_on_heterogeneous_fleet() {
+        // HI vs the chiplet baselines at 100 chiplets on GPT-J: a wide
+        // service-time gap. The offered rate is a fraction of the fast
+        // instance's capacity but a multiple of the slow instances' —
+        // and the 60-request stream spans many service times, so queue
+        // depths are informative: round-robin blindly piles a third of
+        // the load onto each slow instance while depth-aware policies
+        // route around them.
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let specs = vec![
+            InstanceSpec::of(Arch::Hi25D),
+            InstanceSpec::of(Arch::TransPimChiplet),
+            InstanceSpec::of(Arch::HaimaChiplet),
+        ];
+        let base = ServingConfig {
+            prompt_len: 128,
+            gen_tokens: 64,
+            max_batch: 16,
+            ..Default::default()
+        };
+        let est_fast = estimate_service_secs(&sys, &m, &specs[0], &base).unwrap();
+        let rate = 4.0 / est_fast;
+        let serving = ServingConfig {
+            arrivals: ArrivalProcess::Poisson {
+                rate_per_sec: rate,
+                num_requests: 60,
+            },
+            ..base
+        };
+        let run = |policy| {
+            let cfg = ClusterConfig {
+                specs: specs.clone(),
+                policy,
+                serving: serving.clone(),
+            };
+            ClusterSim::new(&sys, &m, cfg).run_with_jobs(1).unwrap()
+        };
+        let rr = run(DispatchPolicy::RoundRobin);
+        let jsq = run(DispatchPolicy::Jsq);
+        let lkv = run(DispatchPolicy::LeastKv);
+        assert_eq!(rr.completed, 60);
+        assert_eq!(jsq.completed, 60);
+        assert!(
+            jsq.ttft_p99_secs < rr.ttft_p99_secs,
+            "jsq p99 {} must beat rr p99 {}",
+            jsq.ttft_p99_secs,
+            rr.ttft_p99_secs
+        );
+        assert!(
+            lkv.ttft_p99_secs < rr.ttft_p99_secs,
+            "least-kv p99 {} must beat rr p99 {}",
+            lkv.ttft_p99_secs,
+            rr.ttft_p99_secs
+        );
+    }
+
+    #[test]
+    fn per_instance_kv_override_applies() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let kv_full = kv_cache_bytes(&m, 64 + 16);
+        // instance 1's pool can't hold a single footprint: everything
+        // routed there is rejected, the rest completes on instance 0
+        let cfg = ClusterConfig {
+            specs: vec![
+                InstanceSpec::of(Arch::Hi25D),
+                InstanceSpec {
+                    kv_capacity_bytes: Some(0.5 * kv_full),
+                    ..InstanceSpec::of(Arch::Hi25D)
+                },
+            ],
+            policy: DispatchPolicy::RoundRobin,
+            serving: poisson(1.0e5, 8),
+        };
+        let fleet = ClusterSim::new(&sys, &m, cfg).run_with_jobs(1).unwrap();
+        assert_eq!(fleet.rejected, 4);
+        assert_eq!(fleet.completed, 4);
+        assert_eq!(fleet.instances[1].rejected, 4);
+    }
+}

@@ -11,17 +11,27 @@
 //!   and Table 4).
 //! - [`decode`]: autoregressive prefill + KV-cache decode costs on a
 //!   platform (`decode_step_on` / `generate_on`).
-//! - [`serving`]: request-level continuous-batching serving simulator
-//!   (Poisson/trace arrivals, KV-capacity admission, optional
-//!   prefill/decode disaggregation) reporting throughput, TTFT/TPOT
-//!   tails and energy per request.
+//! - [`scheduler`]: admission + batch-formation policy behind the
+//!   pluggable [`Scheduler`] trait — continuous batching (default) and
+//!   Sarathi-style chunked prefill.
+//! - [`serving`]: the request-level serving engine (Poisson/trace
+//!   arrivals, KV accounting with optional pressure preemption,
+//!   optional prefill/decode disaggregation) reporting throughput,
+//!   TTFT/TPOT tails, energy per request and utilization.
+//! - [`cluster`]: N platforms (optionally heterogeneous) behind a
+//!   front-end router (round-robin / JSQ / least-KV / power-of-two)
+//!   sharing one arrival stream — fleet goodput and aggregate tails.
 
+pub mod cluster;
 pub mod decode;
 pub mod engine;
 pub mod platform;
+pub mod scheduler;
 pub mod serving;
 
+pub use cluster::{ClusterConfig, ClusterSim, DispatchPolicy, FleetReport, InstanceSpec};
 pub use decode::{decode_step, decode_step_on, generate, generate_on, DecodeReport};
 pub use engine::{simulate, SimOptions};
 pub use platform::Platform;
-pub use serving::{ArrivalProcess, ServingConfig, ServingReport, ServingSim};
+pub use scheduler::{ChunkedPrefill, ContinuousBatching, Scheduler, StepPlan};
+pub use serving::{ArrivalProcess, ServingConfig, ServingReport, ServingSamples, ServingSim};

@@ -48,6 +48,10 @@ pub struct Platform {
     /// buffers are written during `run` but the platform is logically
     /// immutable).
     cycle: RefCell<CycleSim>,
+    /// Built from a user-supplied design (`with_design`) rather than
+    /// the default hi-seed — surfaced by [`Platform::label`] so fleet
+    /// tables can tell heterogeneous instances apart.
+    custom_design: bool,
 }
 
 impl Platform {
@@ -84,7 +88,19 @@ impl Platform {
             );
         }
         design.validate()?;
-        Ok(Platform::build(arch, sys, chiplets, design))
+        let mut p = Platform::build(arch, sys, chiplets, design);
+        p.custom_design = true;
+        Ok(p)
+    }
+
+    /// Display label: the arch name, starred when the platform runs a
+    /// user-supplied NoI design instead of the default hi-seed.
+    pub fn label(&self) -> String {
+        if self.custom_design {
+            format!("{}*", self.arch.name())
+        } else {
+            self.arch.name().to_string()
+        }
     }
 
     fn build(
@@ -104,6 +120,7 @@ impl Platform {
             design,
             routes,
             cycle: RefCell::new(cycle),
+            custom_design: false,
         }
     }
 

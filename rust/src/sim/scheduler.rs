@@ -1,0 +1,377 @@
+//! Batch-formation and admission policy for the serving engine.
+//!
+//! The request-level engine in [`crate::sim::serving`] owns the clock,
+//! the cost model and the KV accounting; everything *decisional* lives
+//! behind the [`Scheduler`] trait:
+//!
+//! - which waiting request (if any) to admit into the active batch, and
+//! - what token work the next engine step performs ([`StepPlan`]:
+//!   decode tokens and/or prefill chunks).
+//!
+//! Two implementations ship:
+//!
+//! - [`ContinuousBatching`] — the classic vLLM-style policy the serving
+//!   simulator always had: FCFS admission, the *whole* remaining prompt
+//!   runs as one blocking engine prefill at admission (or on the
+//!   disaggregated prefill instance), every step decodes the full
+//!   active batch.
+//! - [`ChunkedPrefill`] — Sarathi-style mixed steps: each step has a
+//!   token budget; decode tokens are scheduled first (every decode-ready
+//!   request, uncapped) and only the leftover budget is spent on
+//!   prompt-prefill chunks of the active requests
+//!   (FCFS). Prompts never monopolize the engine, so decode tokens keep
+//!   flowing while new prompts stream in, and chunks that ride a step
+//!   which also decodes reuse the already-streamed weights (the
+//!   `weight_stream_frac` discount) — the aggregated-mode tail-latency
+//!   fix flagged in the ROADMAP.
+//!
+//! Preemption is an *engine* feature (`ServingConfig::preempt`), not a
+//! scheduler: with it on, admission reserves only the KV bytes a
+//! request currently needs (its context so far) instead of the full
+//! prompt+generation footprint, the reservation grows token by token,
+//! and when the pool overflows the engine swaps out the most recently
+//! admitted request (KV freed, recompute-on-resume, vLLM-style). Both
+//! schedulers work under either reservation mode.
+
+use std::collections::VecDeque;
+
+use crate::sim::serving::ServingConfig;
+
+/// Per-request progress state tracked by the serving engine.
+#[derive(Debug, Clone)]
+pub struct ReqState {
+    pub arrival: f64,
+    /// First time the prompt KV was fully materialized; infinity until
+    /// then (the TTFT fallback for zero-generation requests).
+    pub ready: f64,
+    /// Completion time of the first decoded token; infinity until then.
+    pub first_token: f64,
+    /// Completion time; infinity until finished.
+    pub finish: f64,
+    /// Tokens generated so far (survives preemption — delivered tokens
+    /// are not un-delivered by a swap-out).
+    pub decoded: usize,
+    /// Context tokens with KV materialized on the engine. Preemption
+    /// resets this to 0 (recompute-on-resume).
+    pub kv_tokens: usize,
+    /// Bytes currently reserved against the KV pool for this request.
+    pub kv_held: f64,
+    pub energy_j: f64,
+    pub preemptions: usize,
+    /// Footprint can never fit: refused at arrival, never queued.
+    pub rejected: bool,
+}
+
+impl ReqState {
+    fn new(arrival: f64) -> ReqState {
+        ReqState {
+            arrival,
+            ready: f64::INFINITY,
+            first_token: f64::INFINITY,
+            finish: f64::INFINITY,
+            decoded: 0,
+            kv_tokens: 0,
+            kv_held: 0.0,
+            energy_j: 0.0,
+            preemptions: 0,
+            rejected: false,
+        }
+    }
+
+    /// Context the request needs materialized before its next decode:
+    /// the prompt plus everything decoded so far.
+    pub fn ctx_target(&self, cfg: &ServingConfig) -> usize {
+        cfg.prompt_len + self.decoded
+    }
+
+    /// Prompt/recompute tokens still to prefill.
+    pub fn prefill_remaining(&self, cfg: &ServingConfig) -> usize {
+        self.ctx_target(cfg).saturating_sub(self.kv_tokens)
+    }
+
+    /// Can decode a token this step (context materialized, budget left).
+    pub fn decode_ready(&self, cfg: &ServingConfig) -> bool {
+        self.prefill_remaining(cfg) == 0 && self.decoded < cfg.gen_tokens
+    }
+
+    /// Generation budget exhausted and KV caught up — retire.
+    pub fn done(&self, cfg: &ServingConfig) -> bool {
+        self.decoded >= cfg.gen_tokens && self.prefill_remaining(cfg) == 0
+    }
+}
+
+/// Mutable serving-run state the scheduler reads to make decisions.
+/// The engine owns it; schedulers only observe (admission/step choices
+/// are returned, the engine applies them).
+pub struct ServingState {
+    pub clock: f64,
+    pub reqs: Vec<ReqState>,
+    /// Next not-yet-arrived request index (requests are arrival-sorted).
+    pub next_arr: usize,
+    /// Arrived, not yet admitted (FCFS; preempted requests re-enter at
+    /// the front so resume has priority).
+    pub waiting: VecDeque<usize>,
+    /// Admission order; the last element is the preemption victim.
+    pub active: Vec<usize>,
+    pub completed: usize,
+    pub rejected: usize,
+    pub preemptions: usize,
+    /// Bytes currently reserved against the KV pool.
+    pub kv_reserved: f64,
+    /// Full prompt+generation KV footprint of one request (bytes).
+    pub kv_full: f64,
+    /// KV bytes of a single context token.
+    pub kv_token: f64,
+}
+
+impl ServingState {
+    pub fn new(arrivals: &[f64], kv_full: f64, kv_token: f64) -> ServingState {
+        ServingState {
+            clock: 0.0,
+            reqs: arrivals.iter().map(|&t| ReqState::new(t)).collect(),
+            next_arr: 0,
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            completed: 0,
+            rejected: 0,
+            preemptions: 0,
+            kv_reserved: 0.0,
+            kv_full,
+            kv_token,
+        }
+    }
+
+    /// Bytes admission must reserve for request `i`. Without preemption
+    /// the full prompt+gen footprint is reserved up front (no swap-out
+    /// ever needed). With preemption, first admission is optimistic
+    /// (context so far only; the reservation grows per token), but a
+    /// request that has already been preempted once is re-admitted
+    /// conservatively with its full footprint so it can run to
+    /// completion instead of thrashing in and out of the batch.
+    pub fn admit_reserve_bytes(&self, i: usize, cfg: &ServingConfig) -> f64 {
+        if cfg.preempt && self.reqs[i].preemptions == 0 {
+            self.reqs[i].ctx_target(cfg) as f64 * self.kv_token
+        } else {
+            self.kv_full
+        }
+    }
+}
+
+/// Token work for one engine step.
+#[derive(Debug, Clone, Default)]
+pub struct StepPlan {
+    /// Requests that decode one token this step.
+    pub decode: Vec<usize>,
+    /// `(request, token count)` prompt-prefill chunks this step.
+    pub prefill: Vec<(usize, usize)>,
+}
+
+impl StepPlan {
+    pub fn is_empty(&self) -> bool {
+        self.decode.is_empty() && self.prefill.is_empty()
+    }
+}
+
+/// Admission + batch-formation policy. See the module docs for the
+/// engine/scheduler split.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Whether admission runs the remaining prompt as one blocking
+    /// engine prefill (continuous batching; also gates the
+    /// disaggregated-prefill path). Chunked scheduling returns false
+    /// and prefills inside steps instead.
+    fn prefill_at_admission(&self) -> bool;
+
+    /// Next waiting request to admit into the batch, or None to hold.
+    /// The engine has already checked `active.len() < max_batch`.
+    fn admit(&mut self, st: &ServingState, cfg: &ServingConfig) -> Option<usize>;
+
+    /// Token work for the next engine step over the active batch.
+    fn plan_step(&mut self, st: &ServingState, cfg: &ServingConfig) -> StepPlan;
+}
+
+/// Shared FCFS admission gate: head of the waiting queue, if the KV
+/// reservation fits (an empty engine always admits — the footprint is
+/// capacity-checked at arrival, so a lone request always fits) and, in
+/// disaggregated mode, its prefill instance is done with it.
+fn fcfs_candidate(st: &ServingState, cfg: &ServingConfig, wait_for_ready: bool) -> Option<usize> {
+    let &i = st.waiting.front()?;
+    let need = st.admit_reserve_bytes(i, cfg);
+    if st.kv_reserved + need > cfg.kv_capacity_bytes && !st.active.is_empty() {
+        return None;
+    }
+    if wait_for_ready && st.reqs[i].ready > st.clock {
+        return None;
+    }
+    Some(i)
+}
+
+/// The default policy: continuous batching with whole-prompt prefill at
+/// admission — the original `ServingSim` behavior.
+pub struct ContinuousBatching;
+
+impl Scheduler for ContinuousBatching {
+    fn name(&self) -> &'static str {
+        "continuous"
+    }
+
+    fn prefill_at_admission(&self) -> bool {
+        true
+    }
+
+    fn admit(&mut self, st: &ServingState, cfg: &ServingConfig) -> Option<usize> {
+        fcfs_candidate(st, cfg, cfg.disaggregate_prefill)
+    }
+
+    fn plan_step(&mut self, st: &ServingState, cfg: &ServingConfig) -> StepPlan {
+        StepPlan {
+            decode: st
+                .active
+                .iter()
+                .copied()
+                .filter(|&i| st.reqs[i].decode_ready(cfg))
+                .collect(),
+            prefill: Vec::new(),
+        }
+    }
+}
+
+/// Sarathi-style chunked prefill: every decode-ready request decodes
+/// each step (decodes are never throttled), and prompt-prefill chunks
+/// (FCFS over the active batch) fill whatever is left of the
+/// `chunk_tokens` budget after counting those decodes — so prefill
+/// never pushes a step past the budget, but a batch with more than
+/// `chunk_tokens` decode-ready requests does. `disaggregate_prefill`
+/// is ignored under this policy (prefill is on-engine by design).
+pub struct ChunkedPrefill {
+    pub chunk_tokens: usize,
+}
+
+impl Scheduler for ChunkedPrefill {
+    fn name(&self) -> &'static str {
+        "chunked"
+    }
+
+    fn prefill_at_admission(&self) -> bool {
+        false
+    }
+
+    fn admit(&mut self, st: &ServingState, cfg: &ServingConfig) -> Option<usize> {
+        fcfs_candidate(st, cfg, false)
+    }
+
+    fn plan_step(&mut self, st: &ServingState, cfg: &ServingConfig) -> StepPlan {
+        let budget = self.chunk_tokens.max(1);
+        let mut plan = StepPlan::default();
+        for &i in &st.active {
+            if st.reqs[i].decode_ready(cfg) {
+                plan.decode.push(i);
+            }
+        }
+        let mut left = budget.saturating_sub(plan.decode.len());
+        for &i in &st.active {
+            if left == 0 {
+                break;
+            }
+            let rem = st.reqs[i].prefill_remaining(cfg);
+            if rem > 0 {
+                let c = rem.min(left);
+                plan.prefill.push((i, c));
+                left -= c;
+            }
+        }
+        plan
+    }
+}
+
+/// Scheduler implied by the config knobs (`chunked_prefill` →
+/// [`ChunkedPrefill`], else [`ContinuousBatching`]).
+pub fn scheduler_for(cfg: &ServingConfig) -> Box<dyn Scheduler> {
+    if cfg.chunked_prefill {
+        Box::new(ChunkedPrefill {
+            chunk_tokens: cfg.chunk_tokens,
+        })
+    } else {
+        Box::new(ContinuousBatching)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ServingConfig {
+        ServingConfig {
+            prompt_len: 64,
+            gen_tokens: 16,
+            max_batch: 8,
+            ..Default::default()
+        }
+    }
+
+    fn state(n: usize) -> ServingState {
+        let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 1e-3).collect();
+        ServingState::new(&arrivals, 1024.0, 8.0)
+    }
+
+    #[test]
+    fn continuous_plans_full_batch_of_ready_requests() {
+        let cfg = cfg();
+        let mut st = state(4);
+        for i in 0..3 {
+            st.reqs[i].kv_tokens = cfg.prompt_len; // prefilled
+            st.active.push(i);
+        }
+        st.reqs[2].decoded = cfg.gen_tokens; // exhausted: not decodable
+        let plan = ContinuousBatching.plan_step(&st, &cfg);
+        assert_eq!(plan.decode, vec![0, 1]);
+        assert!(plan.prefill.is_empty());
+    }
+
+    #[test]
+    fn chunked_budget_splits_between_decode_and_prefill() {
+        let cfg = cfg();
+        let mut st = state(4);
+        // req 0 decoding, reqs 1-2 mid-prefill
+        st.reqs[0].kv_tokens = cfg.prompt_len;
+        st.reqs[1].kv_tokens = 10;
+        st.active = vec![0, 1, 2];
+        let mut sched = ChunkedPrefill { chunk_tokens: 60 };
+        let plan = sched.plan_step(&st, &cfg);
+        assert_eq!(plan.decode, vec![0]);
+        // 59 tokens of budget left: 54 finish req 1, 5 start req 2
+        assert_eq!(plan.prefill, vec![(1, 54), (2, 5)]);
+    }
+
+    #[test]
+    fn chunked_prefill_never_exceeds_budget() {
+        let cfg = cfg();
+        let mut st = state(8);
+        st.active = (0..8).collect();
+        let mut sched = ChunkedPrefill { chunk_tokens: 100 };
+        let plan = sched.plan_step(&st, &cfg);
+        let total: usize = plan.prefill.iter().map(|&(_, c)| c).sum();
+        assert!(total <= 100);
+        assert_eq!(plan.prefill[0], (0, 64));
+        assert_eq!(plan.prefill[1], (1, 36));
+    }
+
+    #[test]
+    fn preempt_reservation_is_incremental_then_conservative() {
+        let mut c = cfg();
+        c.preempt = true;
+        let st = state(2);
+        // fresh: context-so-far bytes only
+        assert_eq!(
+            st.admit_reserve_bytes(0, &c),
+            c.prompt_len as f64 * st.kv_token
+        );
+        let mut st2 = state(2);
+        st2.reqs[0].preemptions = 1;
+        assert_eq!(st2.admit_reserve_bytes(0, &c), st2.kv_full);
+        // without preemption: always the full footprint
+        c.preempt = false;
+        assert_eq!(st.admit_reserve_bytes(0, &c), st.kv_full);
+    }
+}

@@ -1,13 +1,19 @@
-//! Request-level serving simulator: continuous batching on top of a
+//! Request-level serving engine: continuous batching on top of a
 //! prebuilt [`Platform`] — the ROADMAP "serve heavy traffic" scenario
 //! (vLLM-style scheduling, cf. the CIM LLM-serving surveys in PAPERS.md).
 //!
-//! Model:
+//! Policy lives in [`crate::sim::scheduler`] (admission + batch
+//! formation, pluggable via [`Scheduler`]); this module owns the
+//! mechanics:
+//!
 //!   - Requests arrive by a Poisson process (seeded, deterministic) or
 //!     an explicit trace; each carries a prompt and a generation budget.
-//!   - Prefill either runs on the serving engine between decode steps
-//!     (aggregated, the classic stall) or on a disaggregated prefill
-//!     instance that never blocks decode (`disaggregate_prefill`).
+//!     A request whose full prompt+gen KV footprint exceeds the *total*
+//!     pool is rejected at arrival (counted, never queued).
+//!   - Prefill runs per the scheduler: whole-prompt at admission
+//!     (blocking, the classic stall), on a disaggregated prefill
+//!     instance that never blocks decode (`disaggregate_prefill`), or
+//!     chunked into decode steps (`chunked_prefill`).
 //!   - Decode advances in engine steps over the active batch. Per-token
 //!     cost at context t comes from [`decode_step_on`], memoized per
 //!     context bucket; the cost is exactly affine in t (only the score
@@ -15,21 +21,28 @@
 //!     weight-stream part — shared across the batch, continuous
 //!     batching's win — and a per-request KV-read part:
 //!       t_step = ω·a + Σ_i (cost(ctx_i) − ω·a),   ω = weight_stream_frac
-//!     With batch size 1 this degenerates to exactly the one-shot
-//!     decode cost.
-//!   - KV capacity gates admission (full prompt+gen reservation, so no
-//!     mid-flight preemption is needed); per-step KV usage is tracked
-//!     for the peak report.
+//!     Prefill chunks co-scheduled with ≥1 decode reuse the streamed
+//!     weights and pay only the (1−ω) share. With batch size 1 this
+//!     degenerates to exactly the one-shot decode cost.
+//!   - KV reservation gates admission. Default: the full prompt+gen
+//!     footprint up front (no swap-out needed). With
+//!     `preempt`: context-so-far only, grown per token; on pool
+//!     overflow the most recently admitted request is swapped out
+//!     (KV freed, recompute-on-resume, counted in `preemptions`).
 //!
 //! Reported: throughput (tokens/s), p50/p95/p99 TTFT and per-token
-//! latency, energy per request, mean batch occupancy, peak KV bytes.
+//! latency, energy per request, mean batch occupancy, peak KV bytes,
+//! busy time / utilization, rejected + preemption counts. The fleet
+//! layer ([`crate::sim::cluster`]) aggregates several engines behind a
+//! request router.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 
 use crate::config::ModelConfig;
 use crate::sim::decode::{decode_step_on, kv_cache_bytes};
 use crate::sim::engine::SimOptions;
 use crate::sim::platform::Platform;
+use crate::sim::scheduler::{scheduler_for, Scheduler, ServingState, StepPlan};
 use crate::util::stats::percentile;
 use crate::util::Rng;
 
@@ -42,23 +55,61 @@ pub enum ArrivalProcess {
     Trace(Vec<f64>),
 }
 
+impl ArrivalProcess {
+    /// Materialize the arrival times (sorted, deterministic in `seed`).
+    pub fn times(&self, seed: u64) -> Vec<f64> {
+        match self {
+            ArrivalProcess::Poisson {
+                rate_per_sec,
+                num_requests,
+            } => {
+                let mut rng = Rng::new(seed);
+                let rate = rate_per_sec.max(1e-9);
+                let mut t = 0.0f64;
+                (0..*num_requests)
+                    .map(|_| {
+                        t += -(1.0 - rng.f64()).ln() / rate;
+                        t
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Trace(ts) => {
+                let mut ts = ts.clone();
+                ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                ts
+            }
+        }
+    }
+}
+
 /// Serving-scenario knobs.
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
     pub arrivals: ArrivalProcess,
     pub prompt_len: usize,
     pub gen_tokens: usize,
-    /// Max concurrent decode requests (continuous-batching slot count).
+    /// Max concurrent requests in the batch (continuous-batching slots).
     pub max_batch: usize,
-    /// KV-cache capacity in bytes; admission reserves the full
-    /// prompt+gen footprint.
+    /// KV-cache capacity in bytes. Admission reserves the full
+    /// prompt+gen footprint, or grows incrementally under `preempt`.
     pub kv_capacity_bytes: f64,
     /// Fraction of the context-free per-token cost that is weight
     /// streaming, shared across the batch (decode is
     /// weight-bandwidth-bound; §motivation / Fig 3).
     pub weight_stream_frac: f64,
     /// Prefill on a disaggregated instance (never blocks decode).
+    /// Ignored under `chunked_prefill` (chunks are on-engine by design).
     pub disaggregate_prefill: bool,
+    /// Sarathi-style chunked prefill: mix prompt chunks into decode
+    /// steps instead of blocking whole-prompt prefills at admission.
+    pub chunked_prefill: bool,
+    /// Per-step token budget when chunked: decodes (never throttled)
+    /// count against it, prefill chunks only get the remainder.
+    pub chunk_tokens: usize,
+    /// KV-pressure preemption: admit optimistically (context-so-far
+    /// reservation), swap out the newest request on pool overflow and
+    /// resume it later with recomputation.
+    pub preempt: bool,
     /// Context-bucket granularity for decode-step memoization.
     pub ctx_bucket: usize,
     pub seed: u64,
@@ -77,6 +128,9 @@ impl Default for ServingConfig {
             kv_capacity_bytes: 8.0 * (1u64 << 30) as f64,
             weight_stream_frac: 0.7,
             disaggregate_prefill: false,
+            chunked_prefill: false,
+            chunk_tokens: 256,
+            preempt: false,
             ctx_bucket: 128,
             seed: 0x5EED,
         }
@@ -88,8 +142,13 @@ impl Default for ServingConfig {
 pub struct ServingReport {
     pub arch: String,
     pub model: String,
+    pub scheduler: String,
     pub requests: usize,
     pub completed: usize,
+    /// Refused at arrival: full footprint exceeds the total KV pool.
+    pub rejected: usize,
+    /// KV-pressure swap-outs (0 unless `preempt`).
+    pub preemptions: usize,
     /// first arrival → last completion (s).
     pub makespan_secs: f64,
     /// decoded tokens per second over the makespan.
@@ -103,12 +162,16 @@ pub struct ServingReport {
     pub energy_per_req_j: f64,
     pub mean_batch: f64,
     pub peak_kv_bytes: f64,
+    /// Engine-busy seconds (prefill charges + steps).
+    pub busy_secs: f64,
+    /// busy / makespan.
+    pub utilization: f64,
 }
 
 impl ServingReport {
     pub fn summary_line(&self) -> String {
         format!(
-            "{:<18} {:<11} {:>4} req | {:>8.1} tok/s | TTFT p50/p99 {:>7.2}/{:>7.2} ms | TPOT p50/p99 {:>6.3}/{:>6.3} ms | {:>7.2} mJ/req | batch {:>4.1}",
+            "{:<18} {:<11} {:>4} req | {:>8.1} tok/s | TTFT p50/p99 {:>7.2}/{:>7.2} ms | TPOT p50/p99 {:>6.3}/{:>6.3} ms | {:>7.2} mJ/req | batch {:>4.1} | rej {} | pre {}",
             self.arch,
             self.model,
             self.completed,
@@ -118,24 +181,61 @@ impl ServingReport {
             self.tpot_p50_secs * 1e3,
             self.tpot_p99_secs * 1e3,
             self.energy_per_req_j * 1e3,
-            self.mean_batch
+            self.mean_batch,
+            self.rejected,
+            self.preemptions
+        )
+    }
+
+    /// Machine-readable report (the `serve --json` interchange; the
+    /// fleet report embeds one of these per instance).
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"arch\": \"{}\", \"model\": \"{}\", \"scheduler\": \"{}\", ",
+                "\"requests\": {}, \"completed\": {}, \"rejected\": {}, ",
+                "\"preemptions\": {}, \"makespan_secs\": {}, ",
+                "\"throughput_tok_s\": {}, ",
+                "\"ttft_p50_secs\": {}, \"ttft_p95_secs\": {}, \"ttft_p99_secs\": {}, ",
+                "\"tpot_p50_secs\": {}, \"tpot_p95_secs\": {}, \"tpot_p99_secs\": {}, ",
+                "\"energy_per_req_j\": {}, \"mean_batch\": {}, \"peak_kv_bytes\": {}, ",
+                "\"busy_secs\": {}, \"utilization\": {}}}"
+            ),
+            self.arch,
+            self.model,
+            self.scheduler,
+            self.requests,
+            self.completed,
+            self.rejected,
+            self.preemptions,
+            self.makespan_secs,
+            self.throughput_tok_s,
+            self.ttft_p50_secs,
+            self.ttft_p95_secs,
+            self.ttft_p99_secs,
+            self.tpot_p50_secs,
+            self.tpot_p95_secs,
+            self.tpot_p99_secs,
+            self.energy_per_req_j,
+            self.mean_batch,
+            self.peak_kv_bytes,
+            self.busy_secs,
+            self.utilization
         )
     }
 }
 
-struct Req {
-    arrival: f64,
-    /// prefill completion; infinity until prefilled.
-    ready: f64,
-    /// completion time of the request's FIRST decoded token (the TTFT
-    /// reference: includes prefill, batch-slot queueing and the first
-    /// decode step). For zero-generation requests this stays infinite
-    /// and TTFT falls back to prefill completion.
-    first_token: f64,
-    finish: f64,
-    ctx: usize,
-    tokens_left: usize,
-    energy_j: f64,
+/// Raw per-request samples + fleet-aggregation inputs from one run
+/// (absolute times, so a cluster can merge instances honestly).
+#[derive(Debug, Clone, Default)]
+pub struct ServingSamples {
+    /// TTFT per non-rejected request (seconds).
+    pub ttft: Vec<f64>,
+    /// TPOT per non-rejected request (seconds; 0 when gen <= 1).
+    pub tpot: Vec<f64>,
+    pub first_arrival: f64,
+    pub last_finish: f64,
+    pub decoded_tokens: u64,
 }
 
 /// Request-level serving simulator over a prebuilt platform.
@@ -144,17 +244,20 @@ pub struct ServingSim<'a> {
     model: &'a ModelConfig,
     opts: SimOptions,
     cfg: ServingConfig,
+    sched: Box<dyn Scheduler>,
     /// bucketed context → (secs, joules) per decoded token.
     step_cache: HashMap<usize, (f64, f64)>,
 }
 
 impl<'a> ServingSim<'a> {
     pub fn new(platform: &'a Platform, model: &'a ModelConfig, cfg: ServingConfig) -> Self {
+        let sched = scheduler_for(&cfg);
         ServingSim {
             platform,
             model,
             opts: SimOptions::default(),
             cfg,
+            sched,
             step_cache: HashMap::new(),
         }
     }
@@ -163,6 +266,12 @@ impl<'a> ServingSim<'a> {
     /// prefill and decode-step cost probes; the default is analytic.
     pub fn with_opts(mut self, opts: SimOptions) -> Self {
         self.opts = opts;
+        self
+    }
+
+    /// Replace the scheduler (the config-implied one otherwise).
+    pub fn with_scheduler(mut self, sched: Box<dyn Scheduler>) -> Self {
+        self.sched = sched;
         self
     }
 
@@ -196,31 +305,16 @@ impl<'a> ServingSim<'a> {
 
     /// Run the scenario to completion.
     pub fn run(&mut self) -> ServingReport {
+        self.run_detailed().0
+    }
+
+    /// Run and also return the raw per-request samples (fleet input).
+    pub fn run_detailed(&mut self) -> (ServingReport, ServingSamples) {
         let cfg = self.cfg.clone();
         let max_batch = cfg.max_batch.max(1);
+        let prompt = cfg.prompt_len.max(1);
 
-        // --- arrival times
-        let arrivals: Vec<f64> = match &cfg.arrivals {
-            ArrivalProcess::Poisson {
-                rate_per_sec,
-                num_requests,
-            } => {
-                let mut rng = Rng::new(cfg.seed);
-                let rate = rate_per_sec.max(1e-9);
-                let mut t = 0.0f64;
-                (0..*num_requests)
-                    .map(|_| {
-                        t += -(1.0 - rng.f64()).ln() / rate;
-                        t
-                    })
-                    .collect()
-            }
-            ArrivalProcess::Trace(ts) => {
-                let mut ts = ts.clone();
-                ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                ts
-            }
-        };
+        let arrivals = cfg.arrivals.times(cfg.seed);
         let nreq = arrivals.len();
 
         // --- prefill cost (memoized once: every request shares the
@@ -230,24 +324,17 @@ impl<'a> ServingSim<'a> {
         let (a_secs, a_joules) = self.intercept();
         let omega = cfg.weight_stream_frac.clamp(0.0, 1.0);
 
-        let mut reqs: Vec<Req> = arrivals
-            .iter()
-            .map(|&t| Req {
-                arrival: t,
-                ready: f64::INFINITY,
-                first_token: f64::INFINITY,
-                finish: f64::INFINITY,
-                ctx: cfg.prompt_len,
-                tokens_left: cfg.gen_tokens,
-                energy_j: 0.0,
-            })
-            .collect();
+        let kv_full = kv_cache_bytes(self.model, cfg.prompt_len + cfg.gen_tokens);
+        let kv_token = kv_cache_bytes(self.model, 1);
+        let mut st = ServingState::new(&arrivals, kv_full, kv_token);
 
         // disaggregated prefill: a separate serial instance prefills in
-        // arrival order and never blocks the decode engine
-        if cfg.disaggregate_prefill {
+        // arrival order and never blocks the decode engine (only under
+        // prefill-at-admission scheduling; chunked prefill is on-engine)
+        let wait_for_ready = self.sched.prefill_at_admission() && cfg.disaggregate_prefill;
+        if wait_for_ready && kv_full <= cfg.kv_capacity_bytes {
             let mut busy = 0.0f64;
-            for r in reqs.iter_mut() {
+            for r in st.reqs.iter_mut() {
                 let start = busy.max(r.arrival);
                 busy = start + prefill_secs;
                 r.ready = busy;
@@ -255,153 +342,227 @@ impl<'a> ServingSim<'a> {
             }
         }
 
-        let kv_full = kv_cache_bytes(self.model, cfg.prompt_len + cfg.gen_tokens);
-
-        let mut clock = 0.0f64;
-        let mut next_arr = 0usize;
-        let mut waiting: VecDeque<usize> = VecDeque::new();
-        let mut active: Vec<usize> = Vec::new();
-        let mut completed = 0usize;
-        let mut kv_reserved = 0.0f64;
         let mut peak_kv = 0.0f64;
         let mut batch_sum = 0.0f64;
         let mut batch_steps = 0usize;
         let mut decoded_tokens = 0u64;
+        let mut busy_secs = 0.0f64;
 
-        while completed < nreq {
-            // pull arrived requests into the admission queue
-            while next_arr < nreq && arrivals[next_arr] <= clock {
-                waiting.push_back(next_arr);
-                next_arr += 1;
+        while st.completed + st.rejected < nreq {
+            // pull arrived requests into the admission queue; footprints
+            // that can never fit the pool are refused on the spot
+            while st.next_arr < nreq && st.reqs[st.next_arr].arrival <= st.clock {
+                let i = st.next_arr;
+                st.next_arr += 1;
+                if kv_full > cfg.kv_capacity_bytes {
+                    st.reqs[i].rejected = true;
+                    st.rejected += 1;
+                } else {
+                    st.waiting.push_back(i);
+                }
             }
 
-            // FCFS admission into the decode batch
-            while active.len() < max_batch {
-                let Some(&i) = waiting.front() else { break };
-                if kv_reserved + kv_full > cfg.kv_capacity_bytes && !active.is_empty() {
-                    break; // wait for a slot to free its KV
-                }
-                if cfg.disaggregate_prefill {
-                    if reqs[i].ready > clock {
-                        break; // prefill instance hasn't finished it yet
+            // scheduler-driven admission into the batch
+            while st.active.len() < max_batch {
+                let Some(i) = self.sched.admit(&st, &cfg) else { break };
+                debug_assert_eq!(st.waiting.front(), Some(&i), "admission must be FCFS");
+                st.waiting.pop_front();
+                let reserve = st.admit_reserve_bytes(i, &cfg);
+                st.kv_reserved += reserve;
+                let prefill_now = self.sched.prefill_at_admission();
+                let r = &mut st.reqs[i];
+                r.kv_held = reserve;
+                if prefill_now {
+                    let remaining = (cfg.prompt_len + r.decoded).saturating_sub(r.kv_tokens);
+                    // fresh requests in disaggregated mode were already
+                    // prefilled off-engine; resumed (preempted) ones
+                    // recompute on the engine
+                    let off_engine = cfg.disaggregate_prefill && r.preemptions == 0;
+                    if remaining > 0 && !off_engine {
+                        let frac = remaining as f64 / prompt as f64;
+                        st.clock += prefill_secs * frac;
+                        busy_secs += prefill_secs * frac;
+                        r.energy_j += prefill_energy * frac;
                     }
-                } else {
-                    // prefill on the serving engine: blocks decode
-                    clock += prefill_secs;
-                    reqs[i].ready = clock;
-                    reqs[i].energy_j += prefill_energy;
+                    r.kv_tokens = cfg.prompt_len + r.decoded;
+                    if r.decoded == 0 && r.ready.is_infinite() {
+                        r.ready = st.clock;
+                    }
                 }
-                waiting.pop_front();
-                kv_reserved += kv_full;
-                active.push(i);
+                st.active.push(i);
             }
 
-            // retire zero-generation requests (complete at prefill)
-            active.retain(|&i| {
-                if reqs[i].tokens_left == 0 {
-                    reqs[i].finish = reqs[i].ready.max(clock);
-                    completed += 1;
-                    kv_reserved -= kv_full;
-                    false
-                } else {
-                    true
-                }
-            });
+            // retire caught-up requests (zero-generation completes here)
+            retire_finished(&mut st, &cfg);
+            if st.completed + st.rejected >= nreq {
+                break;
+            }
 
-            if active.is_empty() {
+            if st.active.is_empty() {
                 // idle: jump to the next event (arrival or prefill-ready)
                 let mut t_next = f64::INFINITY;
-                if next_arr < nreq {
-                    t_next = arrivals[next_arr];
+                if st.next_arr < nreq {
+                    t_next = st.reqs[st.next_arr].arrival;
                 }
-                if let Some(&i) = waiting.front() {
-                    if cfg.disaggregate_prefill {
-                        t_next = t_next.min(reqs[i].ready);
+                if let Some(&i) = st.waiting.front() {
+                    if wait_for_ready {
+                        t_next = t_next.min(st.reqs[i].ready);
                     }
                 }
                 if t_next.is_finite() {
-                    clock = clock.max(t_next);
+                    st.clock = st.clock.max(t_next);
                     continue;
                 }
                 break; // nothing can ever arrive again
             }
 
-            // --- one decode engine step over the batch
-            let mut t_step = omega * a_secs; // shared weight stream
-            let mut kv_now = 0.0f64;
-            for &i in &active {
-                let (s_i, _) = self.step_cost(reqs[i].ctx);
+            let mut plan = self.sched.plan_step(&st, &cfg);
+
+            // KV pressure: swap out the newest request until the step's
+            // reservation growth fits (recompute-on-resume). Only the
+            // preempt mode can overflow — the default reserves the full
+            // footprint at admission.
+            if cfg.preempt {
+                while st.active.len() > 1 {
+                    let growth = plan_growth_bytes(&plan, &st);
+                    if st.kv_reserved + growth <= cfg.kv_capacity_bytes {
+                        break;
+                    }
+                    let victim = *st.active.last().unwrap();
+                    st.active.pop();
+                    let r = &mut st.reqs[victim];
+                    st.kv_reserved -= r.kv_held;
+                    r.kv_held = 0.0;
+                    r.kv_tokens = 0;
+                    r.preemptions += 1;
+                    st.preemptions += 1;
+                    st.waiting.push_front(victim);
+                    plan.decode.retain(|&i| i != victim);
+                    plan.prefill.retain(|&(i, _)| i != victim);
+                }
+            }
+            if plan.is_empty() {
+                // defensive: every non-done active request is planned by
+                // both schedulers, so this only happens if preemption
+                // emptied the plan; re-enter the loop to replan/admit
+                if st.next_arr < nreq {
+                    st.clock = st.clock.max(st.reqs[st.next_arr].arrival);
+                    continue;
+                }
+                if st.active.is_empty() && st.waiting.is_empty() {
+                    break;
+                }
+                continue;
+            }
+
+            // --- one engine step: shared weight stream + per-request
+            // KV reads + co-scheduled prefill chunks
+            let ndec = plan.decode.len();
+            let mut t_step = if ndec > 0 { omega * a_secs } else { 0.0 };
+            for &i in &plan.decode {
+                let ctx = cfg.prompt_len + st.reqs[i].decoded;
+                let (s_i, _) = self.step_cost(ctx);
                 t_step += (s_i - omega * a_secs).max(0.0);
             }
-            clock += t_step;
-            batch_sum += active.len() as f64;
-            batch_steps += 1;
-            let shared_energy = omega * a_joules / active.len() as f64;
-            for &i in &active {
-                let (_, e_i) = self.step_cost(reqs[i].ctx);
-                let r = &mut reqs[i];
-                if r.tokens_left == cfg.gen_tokens {
-                    r.first_token = clock; // first decoded token lands now
-                }
-                r.energy_j += (e_i - omega * a_joules).max(0.0) + shared_energy;
-                r.ctx += 1;
-                r.tokens_left -= 1;
-                decoded_tokens += 1;
-                kv_now += kv_cache_bytes(self.model, r.ctx);
+            // chunks riding a decode step reuse the streamed weights
+            let chunk_disc = if ndec > 0 { 1.0 - omega } else { 1.0 };
+            for &(_, c) in &plan.prefill {
+                t_step += prefill_secs * (c as f64 / prompt as f64) * chunk_disc;
             }
+            st.clock += t_step;
+            busy_secs += t_step;
+            batch_sum += st.active.len() as f64;
+            batch_steps += 1;
+
+            for &(i, c) in &plan.prefill {
+                let frac = c as f64 / prompt as f64;
+                st.reqs[i].energy_j += prefill_energy * frac * chunk_disc;
+                st.reqs[i].kv_tokens += c;
+                let need = st.reqs[i].kv_tokens as f64 * st.kv_token;
+                if need > st.reqs[i].kv_held {
+                    st.kv_reserved += need - st.reqs[i].kv_held;
+                    st.reqs[i].kv_held = need;
+                }
+                if st.reqs[i].decoded == 0
+                    && st.reqs[i].kv_tokens >= cfg.prompt_len
+                    && st.reqs[i].ready.is_infinite()
+                {
+                    st.reqs[i].ready = st.clock;
+                }
+            }
+
+            let shared_energy = if ndec > 0 {
+                omega * a_joules / ndec as f64
+            } else {
+                0.0
+            };
+            for &i in &plan.decode {
+                let ctx = cfg.prompt_len + st.reqs[i].decoded;
+                let (_, e_i) = self.step_cost(ctx);
+                if st.reqs[i].decoded == 0 {
+                    st.reqs[i].first_token = st.clock; // first decoded token lands now
+                }
+                st.reqs[i].energy_j += (e_i - omega * a_joules).max(0.0) + shared_energy;
+                st.reqs[i].decoded += 1;
+                st.reqs[i].kv_tokens += 1;
+                decoded_tokens += 1;
+                let need = st.reqs[i].kv_tokens as f64 * st.kv_token;
+                if need > st.reqs[i].kv_held {
+                    st.kv_reserved += need - st.reqs[i].kv_held;
+                    st.reqs[i].kv_held = need;
+                }
+            }
+            let kv_now: f64 = st
+                .active
+                .iter()
+                .map(|&i| st.reqs[i].kv_tokens as f64 * st.kv_token)
+                .sum();
             peak_kv = peak_kv.max(kv_now);
 
-            active.retain(|&i| {
-                if reqs[i].tokens_left == 0 {
-                    reqs[i].finish = clock;
-                    completed += 1;
-                    kv_reserved -= kv_full;
-                    false
-                } else {
-                    true
-                }
-            });
+            retire_finished(&mut st, &cfg);
         }
 
         // --- aggregate. TTFT = first decoded token minus arrival, so it
         // includes prefill, batch-slot queueing AND the first decode
-        // step — identical semantics in aggregated and disaggregated
-        // mode (zero-generation requests fall back to prefill
-        // completion). TPOT covers the remaining tokens after the first.
-        let ttft: Vec<f64> = reqs
-            .iter()
-            .map(|r| {
-                if r.first_token.is_finite() {
-                    r.first_token - r.arrival
-                } else {
-                    r.ready - r.arrival
-                }
-            })
-            .collect();
-        let tpot: Vec<f64> = reqs
-            .iter()
-            .map(|r| {
-                if cfg.gen_tokens > 1 && r.first_token.is_finite() {
-                    (r.finish - r.first_token) / (cfg.gen_tokens - 1) as f64
-                } else {
-                    0.0
-                }
-            })
-            .collect();
+        // step — identical semantics across schedulers (zero-generation
+        // requests fall back to prefill completion). TPOT covers the
+        // remaining tokens after the first. Rejected requests are
+        // excluded from the latency samples.
+        let mut ttft = Vec::with_capacity(nreq);
+        let mut tpot = Vec::with_capacity(nreq);
+        for r in &st.reqs {
+            if r.rejected {
+                continue;
+            }
+            ttft.push(if r.first_token.is_finite() {
+                r.first_token - r.arrival
+            } else {
+                r.ready - r.arrival
+            });
+            tpot.push(if cfg.gen_tokens > 1 && r.first_token.is_finite() {
+                (r.finish - r.first_token) / (cfg.gen_tokens - 1) as f64
+            } else {
+                0.0
+            });
+        }
         let first_arrival = arrivals.first().copied().unwrap_or(0.0);
-        let last_finish = reqs
+        let last_finish = st
+            .reqs
             .iter()
             .map(|r| r.finish)
             .filter(|f| f.is_finite())
             .fold(first_arrival, f64::max);
         let makespan = (last_finish - first_arrival).max(1e-12);
-        let total_energy: f64 = reqs.iter().map(|r| r.energy_j).sum();
+        let total_energy: f64 = st.reqs.iter().map(|r| r.energy_j).sum();
 
-        ServingReport {
-            arch: self.platform.arch.name().to_string(),
+        let report = ServingReport {
+            arch: self.platform.label(),
             model: self.model.name.to_string(),
+            scheduler: self.sched.name().to_string(),
             requests: nreq,
-            completed,
+            completed: st.completed,
+            rejected: st.rejected,
+            preemptions: st.preemptions,
             makespan_secs: makespan,
             throughput_tok_s: decoded_tokens as f64 / makespan,
             ttft_p50_secs: percentile(&ttft, 50.0),
@@ -410,15 +571,65 @@ impl<'a> ServingSim<'a> {
             tpot_p50_secs: percentile(&tpot, 50.0),
             tpot_p95_secs: percentile(&tpot, 95.0),
             tpot_p99_secs: percentile(&tpot, 99.0),
-            energy_per_req_j: total_energy / nreq.max(1) as f64,
+            energy_per_req_j: total_energy / st.completed.max(1) as f64,
             mean_batch: if batch_steps == 0 {
                 0.0
             } else {
                 batch_sum / batch_steps as f64
             },
             peak_kv_bytes: peak_kv,
-        }
+            busy_secs,
+            utilization: busy_secs / makespan,
+        };
+        let samples = ServingSamples {
+            ttft,
+            tpot,
+            first_arrival,
+            last_finish,
+            decoded_tokens,
+        };
+        (report, samples)
     }
+}
+
+/// Bytes the step's plan will add to the KV pool (0 in the default
+/// full-reservation mode, where `kv_held` already covers the footprint).
+fn plan_growth_bytes(plan: &StepPlan, st: &ServingState) -> f64 {
+    let mut growth = 0.0f64;
+    for &i in &plan.decode {
+        let need = (st.reqs[i].kv_tokens + 1) as f64 * st.kv_token;
+        growth += (need - st.reqs[i].kv_held).max(0.0);
+    }
+    for &(i, c) in &plan.prefill {
+        let need = (st.reqs[i].kv_tokens + c) as f64 * st.kv_token;
+        growth += (need - st.reqs[i].kv_held).max(0.0);
+    }
+    growth
+}
+
+/// Remove finished requests from the batch, stamping completion and
+/// releasing their KV reservation.
+fn retire_finished(st: &mut ServingState, cfg: &ServingConfig) {
+    let clock = st.clock;
+    let reqs = &mut st.reqs;
+    let kv_reserved = &mut st.kv_reserved;
+    let completed = &mut st.completed;
+    st.active.retain(|&i| {
+        let r = &mut reqs[i];
+        if r.done(cfg) {
+            r.finish = if cfg.gen_tokens == 0 {
+                r.ready.max(clock)
+            } else {
+                clock
+            };
+            *kv_reserved -= r.kv_held;
+            r.kv_held = 0.0;
+            *completed += 1;
+            false
+        } else {
+            true
+        }
+    });
 }
 
 #[cfg(test)]
@@ -447,12 +658,15 @@ mod tests {
         let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
         let r = ServingSim::new(&p, &m, burst_cfg(24)).run();
         assert_eq!(r.completed, 24);
+        assert_eq!(r.rejected, 0);
+        assert_eq!(r.preemptions, 0);
         assert!(r.throughput_tok_s > 0.0 && r.throughput_tok_s.is_finite());
         assert!(r.ttft_p99_secs >= r.ttft_p50_secs);
         assert!(r.tpot_p99_secs >= r.tpot_p50_secs);
         assert!(r.energy_per_req_j > 0.0);
         assert!(r.mean_batch >= 1.0 && r.mean_batch <= 8.0);
         assert!(r.peak_kv_bytes > 0.0);
+        assert!(r.busy_secs > 0.0 && r.utilization > 0.0 && r.utilization <= 1.0 + 1e-9);
     }
 
     #[test]
@@ -534,6 +748,166 @@ mod tests {
             dis.ttft_p99_secs,
             agg.ttft_p99_secs
         );
+    }
+
+    #[test]
+    fn chunked_prefill_cuts_tail_ttft_under_load() {
+        // chunked prompts ride decode steps and reuse the streamed
+        // weights (the (1-omega) discount), so the engine spends
+        // strictly less time on prefill once any request is decoding;
+        // under a saturating burst the tail request waits on all
+        // earlier work and must come out no later
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let agg = ServingSim::new(&p, &m, burst_cfg(24)).run();
+        let chunked_cfg = ServingConfig {
+            chunked_prefill: true,
+            ..burst_cfg(24)
+        };
+        let chunked = ServingSim::new(&p, &m, chunked_cfg).run();
+        assert_eq!(chunked.completed, 24);
+        assert_eq!(chunked.scheduler, "chunked");
+        assert!(
+            chunked.ttft_p99_secs <= agg.ttft_p99_secs * 1.001,
+            "chunked {} vs aggregated {}",
+            chunked.ttft_p99_secs,
+            agg.ttft_p99_secs
+        );
+    }
+
+    #[test]
+    fn chunked_prefill_deterministic() {
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let cfg = ServingConfig {
+            chunked_prefill: true,
+            chunk_tokens: 48,
+            ..burst_cfg(16)
+        };
+        let a = ServingSim::new(&p, &m, cfg.clone()).run();
+        let b = ServingSim::new(&p, &m, cfg).run();
+        assert_eq!(a.makespan_secs, b.makespan_secs);
+        assert_eq!(a.ttft_p99_secs, b.ttft_p99_secs);
+        assert_eq!(a.energy_per_req_j, b.energy_per_req_j);
+    }
+
+    #[test]
+    fn preemption_swaps_out_under_kv_pressure() {
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let kv_full = kv_cache_bytes(&m, 64 + 64);
+        let base = ServingConfig {
+            arrivals: ArrivalProcess::Trace(vec![0.0, 0.0, 0.0, 0.0]),
+            prompt_len: 64,
+            gen_tokens: 64,
+            max_batch: 4,
+            kv_capacity_bytes: 2.5 * kv_full,
+            ..Default::default()
+        };
+        // optimistic admission fits all 4 prompts, but the batch grows
+        // toward 4 full footprints > 2.5: swap-outs are inevitable
+        let pre = ServingSim::new(
+            &p,
+            &m,
+            ServingConfig {
+                preempt: true,
+                ..base.clone()
+            },
+        )
+        .run();
+        assert_eq!(pre.completed, 4, "preempted requests must resume and finish");
+        assert!(pre.preemptions >= 1, "KV pressure must trigger swap-out");
+        // the conservative default admits 2 at a time and never preempts
+        let full = ServingSim::new(&p, &m, base).run();
+        assert_eq!(full.completed, 4);
+        assert_eq!(full.preemptions, 0);
+    }
+
+    #[test]
+    fn preemption_deterministic() {
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let kv_full = kv_cache_bytes(&m, 64 + 64);
+        let cfg = ServingConfig {
+            arrivals: ArrivalProcess::Trace(vec![0.0, 0.0, 0.0, 0.0]),
+            prompt_len: 64,
+            gen_tokens: 64,
+            max_batch: 4,
+            kv_capacity_bytes: 2.5 * kv_full,
+            preempt: true,
+            ..Default::default()
+        };
+        let a = ServingSim::new(&p, &m, cfg.clone()).run();
+        let b = ServingSim::new(&p, &m, cfg).run();
+        assert_eq!(a.preemptions, b.preemptions);
+        assert_eq!(a.makespan_secs, b.makespan_secs);
+        assert_eq!(a.ttft_p99_secs, b.ttft_p99_secs);
+    }
+
+    #[test]
+    fn oversized_footprint_rejected_not_queued() {
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let kv_full = kv_cache_bytes(&m, 64 + 64);
+        for preempt in [false, true] {
+            let cfg = ServingConfig {
+                arrivals: ArrivalProcess::Trace(vec![0.0, 0.001]),
+                prompt_len: 64,
+                gen_tokens: 64,
+                kv_capacity_bytes: 0.5 * kv_full,
+                preempt,
+                ..Default::default()
+            };
+            let r = ServingSim::new(&p, &m, cfg).run();
+            assert_eq!(r.rejected, 2, "preempt={preempt}");
+            assert_eq!(r.completed, 0, "preempt={preempt}");
+            assert!(
+                r.summary_line().contains("rej 2"),
+                "rejections must be surfaced: {}",
+                r.summary_line()
+            );
+        }
+    }
+
+    #[test]
+    fn report_percentiles_match_samples_at_small_n() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        // n = 1: every percentile is the single sample
+        let cfg1 = ServingConfig {
+            arrivals: ArrivalProcess::Trace(vec![0.0]),
+            prompt_len: 64,
+            gen_tokens: 8,
+            ..Default::default()
+        };
+        let (r1, s1) = ServingSim::new(&p, &m, cfg1).run_detailed();
+        assert_eq!(s1.ttft.len(), 1);
+        assert_eq!(r1.ttft_p50_secs, s1.ttft[0]);
+        assert_eq!(r1.ttft_p95_secs, s1.ttft[0]);
+        assert_eq!(r1.ttft_p99_secs, s1.ttft[0]);
+        assert_eq!(r1.tpot_p50_secs, r1.tpot_p99_secs);
+        // n = 2: linear interpolation between the two samples
+        let cfg2 = ServingConfig {
+            arrivals: ArrivalProcess::Trace(vec![0.0, 0.5]),
+            prompt_len: 64,
+            gen_tokens: 8,
+            ..Default::default()
+        };
+        let (r2, s2) = ServingSim::new(&p, &m, cfg2).run_detailed();
+        assert_eq!(s2.ttft.len(), 2);
+        let (lo, hi) = (
+            s2.ttft[0].min(s2.ttft[1]),
+            s2.ttft[0].max(s2.ttft[1]),
+        );
+        assert!((r2.ttft_p50_secs - (lo + 0.5 * (hi - lo))).abs() < 1e-15);
+        assert!((r2.ttft_p95_secs - (lo + 0.95 * (hi - lo))).abs() < 1e-15);
+        assert!((r2.ttft_p99_secs - (lo + 0.99 * (hi - lo))).abs() < 1e-15);
     }
 
     #[test]

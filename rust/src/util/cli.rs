@@ -69,6 +69,19 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Comma-separated list value: `--arch hi,transpim` → `["hi",
+    /// "transpim"]`; empty when the option is absent.
+    pub fn get_list(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|v| {
+                v.split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
 }
 
 #[cfg(test)]
@@ -101,6 +114,13 @@ mod tests {
     fn parses_floats() {
         let a = parse(&["serve", "--rate", "12.5"]);
         assert_eq!(a.get_f64("rate", 1.0), 12.5);
+    }
+
+    #[test]
+    fn parses_comma_lists() {
+        let a = parse(&["serve", "--arch", "hi, transpim,,haima"]);
+        assert_eq!(a.get_list("arch"), vec!["hi", "transpim", "haima"]);
+        assert!(a.get_list("policy").is_empty());
     }
 
     #[test]

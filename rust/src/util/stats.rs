@@ -68,6 +68,39 @@ mod tests {
     }
 
     #[test]
+    fn percentile_single_sample_is_that_sample() {
+        // n = 1: every percentile is the sample itself (the serving
+        // report's p50 == p95 == p99 for a single request)
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[3.25], p), 3.25, "p{p}");
+        }
+    }
+
+    #[test]
+    fn percentile_two_samples_interpolates_linearly() {
+        // n = 2: rank = p/100, hand-computed oracle lo + (p/100)(hi-lo)
+        let xs = [1.0, 3.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert!((percentile(&xs, 95.0) - 2.9).abs() < 1e-12);
+        assert!((percentile(&xs, 99.0) - 2.98).abs() < 1e-12);
+        // order of the input must not matter
+        assert_eq!(percentile(&[3.0, 1.0], 95.0), percentile(&xs, 95.0));
+    }
+
+    #[test]
+    fn percentile_ties_collapse() {
+        // all-equal samples: every percentile is the tied value
+        for p in [0.0, 50.0, 99.0] {
+            assert_eq!(percentile(&[2.0, 2.0, 2.0], p), 2.0, "p{p}");
+        }
+        // partial tie at the median: rank 1 lands exactly on the tie
+        let xs = [1.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 50.0), 1.0);
+        // p99: rank = 1.98 between s[1]=1 and s[2]=3 → 1 + 0.98*2
+        assert!((percentile(&xs, 99.0) - 2.96).abs() < 1e-12);
+    }
+
+    #[test]
     fn geomean_basic() {
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
     }

@@ -1,13 +1,18 @@
 //! Parallel determinism contract: for any `jobs` value the MOO stack
-//! must produce bit-identical results to the serial path — same Pareto
-//! fronts, same PHV, same evaluation counts. This is what licenses
+//! and the cluster serving simulator must produce bit-identical
+//! results to the serial path — same Pareto fronts, same PHV, same
+//! evaluation counts, same fleet metrics. This is what licenses
 //! `--jobs`/`CHIPLET_JOBS` as a pure wall-clock knob.
 
 use chiplet_hi::arch::chiplet::build_chiplets;
 use chiplet_hi::arch::SfcKind;
+use chiplet_hi::baselines::Arch;
 use chiplet_hi::config::{ModelZoo, SystemConfig};
 use chiplet_hi::model::kernels::Workload;
 use chiplet_hi::moo::{design::NoiDesign, nsga2, stage, Evaluator};
+use chiplet_hi::sim::{
+    ArrivalProcess, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec, ServingConfig,
+};
 
 fn evaluator(jobs: usize) -> Evaluator {
     let sys = SystemConfig::s36();
@@ -97,6 +102,53 @@ fn batch_objectives_identical_across_job_counts() {
             reference,
             "jobs={jobs} objectives diverged"
         );
+    }
+}
+
+#[test]
+fn cluster_identical_across_job_counts() {
+    // a heterogeneous fleet: dispatch is sequential and instance sims
+    // are pure, so jobs=N must be bit-identical to jobs=1 down to every
+    // per-instance metric
+    let sys = SystemConfig::s36();
+    let m = ModelZoo::bert_base();
+    let cfg = ClusterConfig {
+        specs: vec![
+            InstanceSpec::of(Arch::Hi25D),
+            InstanceSpec::of(Arch::TransPimChiplet),
+            InstanceSpec::of(Arch::HaimaChiplet),
+        ],
+        policy: DispatchPolicy::Jsq,
+        serving: ServingConfig {
+            arrivals: ArrivalProcess::Poisson {
+                rate_per_sec: 500.0,
+                num_requests: 18,
+            },
+            prompt_len: 64,
+            gen_tokens: 16,
+            max_batch: 8,
+            chunked_prefill: true,
+            ..Default::default()
+        },
+    };
+    let reference = ClusterSim::new(&sys, &m, cfg.clone()).run_with_jobs(1).unwrap();
+    for jobs in [2, 4] {
+        let run = ClusterSim::new(&sys, &m, cfg.clone()).run_with_jobs(jobs).unwrap();
+        assert_eq!(run.completed, reference.completed, "jobs={jobs}");
+        assert_eq!(run.makespan_secs, reference.makespan_secs, "jobs={jobs}");
+        assert_eq!(
+            run.throughput_tok_s, reference.throughput_tok_s,
+            "jobs={jobs}"
+        );
+        assert_eq!(run.ttft_p99_secs, reference.ttft_p99_secs, "jobs={jobs}");
+        assert_eq!(run.tpot_p99_secs, reference.tpot_p99_secs, "jobs={jobs}");
+        for (a, b) in run.instances.iter().zip(reference.instances.iter()) {
+            assert_eq!(a.requests, b.requests, "jobs={jobs}");
+            assert_eq!(a.completed, b.completed, "jobs={jobs}");
+            assert_eq!(a.ttft_p99_secs, b.ttft_p99_secs, "jobs={jobs}");
+            assert_eq!(a.energy_per_req_j, b.energy_per_req_j, "jobs={jobs}");
+            assert_eq!(a.busy_secs, b.busy_secs, "jobs={jobs}");
+        }
     }
 }
 
