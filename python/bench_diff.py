@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Tolerance-gated perf-regression diff between two BENCH_*.json files.
+
+Compares the ns_per_iter of selected bench labels in a current report
+against an archived baseline and fails (exit 1) when any watched label
+regressed by more than the tolerance. Intended for CI: the baseline is
+the archived artifact of a previous generation (e.g. BENCH_3.json) and
+the current file is the one the bench smoke just emitted (BENCH_5.json).
+When the baseline file is absent the check is skipped with exit 0 —
+fresh machines and forks have no trajectory to compare against.
+
+Usage:
+    bench_diff.py --baseline BENCH_3.json --current BENCH_5.json \
+        --keys cycle_sim_score_phase,moo_eval_3gen_batch_jobs4 \
+        --tolerance 0.25
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+
+def load_results(path):
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    return {r["label"]: float(r["ns_per_iter"]) for r in doc.get("results", [])}
+
+
+def seed_baseline(current, baseline):
+    os.makedirs(os.path.dirname(baseline) or ".", exist_ok=True)
+    shutil.copyfile(current, baseline)
+    print(f"bench-diff: archived {current} as new baseline {baseline}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="archived BENCH_*.json")
+    ap.add_argument("--current", required=True, help="freshly emitted BENCH_*.json")
+    ap.add_argument(
+        "--keys",
+        required=True,
+        help="comma-separated bench labels to gate on",
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="allowed fractional slowdown (0.25 = fail beyond +25%%)",
+    )
+    ap.add_argument(
+        "--archive-on-pass",
+        action="store_true",
+        help=(
+            "after a passing (or skipped) check, copy --current over "
+            "--baseline so the next run diffs against this one. Comparing "
+            "run-over-run keeps the gate honest about single-change "
+            "regressions while tolerating heterogeneous runner hardware — "
+            "a pinned baseline from a fast CPU generation would fail "
+            "forever on slower runners; the cost is that repeated "
+            "sub-tolerance slowdowns can accumulate across runs"
+        ),
+    )
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"bench-diff: baseline {args.baseline} absent, skipping")
+        if args.archive_on_pass:
+            seed_baseline(args.current, args.baseline)
+        return 0
+    base = load_results(args.baseline)
+    cur = load_results(args.current)
+
+    failed = False
+    for key in [k.strip() for k in args.keys.split(",") if k.strip()]:
+        if key not in base:
+            print(f"bench-diff: {key}: not in baseline, skipping")
+            continue
+        if key not in cur:
+            print(f"bench-diff: {key}: MISSING from current report")
+            failed = True
+            continue
+        ratio = cur[key] / base[key] if base[key] > 0 else float("inf")
+        verdict = "OK"
+        if ratio > 1.0 + args.tolerance:
+            verdict = f"REGRESSION (> +{args.tolerance:.0%})"
+            failed = True
+        print(
+            f"bench-diff: {key}: {base[key]:.1f} ns -> {cur[key]:.1f} ns "
+            f"({ratio:.2f}x)  {verdict}"
+        )
+    if failed:
+        return 1
+    if args.archive_on_pass:
+        seed_baseline(args.current, args.baseline)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,11 @@
 //! L3 hot-path microbenchmarks (EXPERIMENTS.md SSPerf): the inner loops
 //! the MOO and the system simulator spend their time in, the build-once
-//! Platform payoff (amortized setup vs per-call rebuild), and the
-//! parallel + memoized MOO batch evaluator vs the pre-PR serial path.
-//! Emits the machine-readable `BENCH_3.json` perf trajectory.
+//! Platform payoff (amortized setup vs per-call rebuild), the parallel
+//! + memoized MOO batch evaluator vs the pre-PR serial path, and the
+//! flat-arena cycle-sim throughput (exact Mflit-hops/s) plus the
+//! single-build fleet serving wall clock. Emits the machine-readable
+//! `BENCH_5.json` perf trajectory (labels are kept stable across
+//! `BENCH_*` generations so CI can diff against the archived baseline).
 
 use chiplet_hi::arch::{Placement, SfcKind};
 use chiplet_hi::baselines::Arch;
@@ -153,7 +156,9 @@ fn main() {
     b.bench("cycle_sim_score_phase", || {
         std::hint::black_box(sim.run_phase(&phases[2], flit));
     });
-    // throughput metric for the cycle sim
+    // throughput metric for the cycle sim — flit_hops is the exact
+    // (link, cycle) slot count, so this is true Mflit-hops/s rather
+    // than the old flits × mean-hops estimate
     let r = sim.run_phase(&phases[2], flit);
     let (mean, _, _) = chiplet_hi::util::bench::time_it(
         || {
@@ -162,16 +167,26 @@ fn main() {
         1,
         3,
     );
+    let mflit_hops = b.note_metric(
+        "cycle_sim_mflit_hops_per_s",
+        r.flit_hops as f64 / mean / 1e6,
+    );
     println!(
-        "\ncycle sim throughput: {:.2} Mflit-hops/s  ({} flits, {} cycles)",
-        (r.flits as f64 * 6.0) / mean / 1e6,
-        r.flits,
-        r.cycles
+        "\ncycle sim throughput: {mflit_hops:.2} Mflit-hops/s  \
+         ({} flits, {} flit-hops, {} cycles)",
+        r.flits, r.flit_hops, r.cycles
     );
 
+    // fleet serving wall clock: the single-build estimate → dispatch →
+    // simulate pipeline, one number CI tracks across BENCH_* baselines
+    let fleet_secs = b
+        .min_secs("cluster_2inst_jsq_32req")
+        .unwrap_or(f64::NAN);
+    b.note_metric("fleet_serve_2inst_jsq_32req_ms", fleet_secs * 1e3);
+
     // machine-readable perf trajectory (archived by CI)
-    match b.write_json("BENCH_3.json") {
-        Ok(()) => println!("\nwrote BENCH_3.json"),
-        Err(e) => eprintln!("\nfailed to write BENCH_3.json: {e}"),
+    match b.write_json("BENCH_5.json") {
+        Ok(()) => println!("\nwrote BENCH_5.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_5.json: {e}"),
     }
 }

@@ -3,6 +3,7 @@
 //! Commands:
 //!   simulate   --system 36|64|100 --model bert-base --seq 64 --arch hi
 //!              [--all-arch] [--cycle-accurate] [--design file.json]
+//!              [--max-flits N]  (cycle-sim volume-sampling bound)
 //!   sweep      --system 64 --model bart-large        (Fig 9-style table)
 //!   optimize   --system 36 --model bert-base [--solver stage|amosa|nsga2]
 //!              [--3d] [--export design.json]          (Fig 4 / Eq 10-20)
@@ -13,6 +14,7 @@
 //!              [--disaggregate] [--chunked-prefill] [--chunk 256]
 //!              [--preempt] [--kv-gb 8] [--design file] [--all-arch]
 //!              [--arch hi,transpim,...] [--json out.json]
+//!              [--cycle-accurate [--max-flits N]]  (flit-level probes)
 //!              [--instances N --policy rr|jsq|least-kv|p2c]  (fleet mode)
 //!   endurance  [--seq 4096]                           (§4.4 analysis)
 //!   functional [--layers 2] [--artifacts artifacts]   (end-to-end driver)
@@ -82,6 +84,11 @@ fn design_from(args: &Args) -> Result<Option<NoiDesign>> {
     }
 }
 
+/// `--max-flits N` → cycle-sim volume-sampling bound (default 200k).
+fn max_flits_from(args: &Args) -> usize {
+    args.get_usize("max-flits", chiplet_hi::noi::DEFAULT_MAX_FLITS)
+}
+
 /// Platform for `arch`: the default hi-seed mesh, or the `--design` file.
 fn platform_for(
     arch: Arch,
@@ -89,10 +96,12 @@ fn platform_for(
     design: &Option<NoiDesign>,
     opts: &SimOptions,
 ) -> Result<Platform> {
-    match design {
-        Some(d) => Platform::with_design(arch, sys, d.clone()),
-        None => Ok(Platform::new(arch, sys, opts)),
-    }
+    let p = match design {
+        Some(d) => Platform::with_design(arch, sys, d.clone())?,
+        None => Platform::new(arch, sys, opts),
+    };
+    p.set_max_flits(opts.max_flits);
+    Ok(p)
 }
 
 fn run(cmd: &str, args: &Args) -> Result<()> {
@@ -112,6 +121,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let n = args.get_usize("seq", 64);
             let opts = SimOptions {
                 cycle_accurate: args.has_flag("cycle-accurate"),
+                max_flits: max_flits_from(args),
                 ..Default::default()
             };
             let design = design_from(args)?;
@@ -262,7 +272,10 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let model = model_from(args, "gpt-j")?;
             let prompt = args.get_usize("prompt", 128);
             let tokens = args.get_usize("tokens", 64);
-            let opts = SimOptions::default();
+            let opts = SimOptions {
+                max_flits: max_flits_from(args),
+                ..Default::default()
+            };
             let design = design_from(args)?;
             let mut t = Table::new(
                 &format!(
@@ -292,7 +305,14 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             // --instances N runs a fleet behind a request router
             let sys = system_from(args);
             let model = model_from(args, "gpt-j")?;
-            let opts = SimOptions::default();
+            // --cycle-accurate drives the serving cost probes through
+            // the flit-level sim (single-instance mode), which is where
+            // --max-flits becomes observable; fleet probes stay analytic
+            let opts = SimOptions {
+                cycle_accurate: args.has_flag("cycle-accurate"),
+                max_flits: max_flits_from(args),
+                ..Default::default()
+            };
             let design = design_from(args)?;
             let cfg = ServingConfig {
                 arrivals: ArrivalProcess::Poisson {
@@ -307,6 +327,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 chunked_prefill: args.has_flag("chunked-prefill"),
                 chunk_tokens: args.get_usize("chunk", 256),
                 preempt: args.has_flag("preempt"),
+                max_flits: args.get("max-flits").and_then(|v| v.parse().ok()),
                 seed: args.get_u64("seed", 0x5EED),
                 ..Default::default()
             };
@@ -408,7 +429,9 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 &arches,
                 |&arch| -> Result<ServingReport> {
                     let platform = platform_for(arch, &sys, &design, &opts)?;
-                    Ok(ServingSim::new(&platform, &model, cfg.clone()).run())
+                    Ok(ServingSim::new(&platform, &model, cfg.clone())
+                        .with_opts(opts.clone())
+                        .run())
                 },
             );
             let mut rows = Vec::with_capacity(reports.len());

@@ -16,6 +16,14 @@ pub struct LinkMap {
     pub from: Vec<u32>,
     /// destination router of each directed link.
     pub to: Vec<u32>,
+    /// CSR offsets of the input-link index: the links whose destination
+    /// is router r are `in_ids[in_start[r]..in_start[r+1]]`, in
+    /// ascending link-id order (the cycle sim's arbitration scan order).
+    pub in_start: Vec<u32>,
+    /// CSR payload of the input-link index (directed link ids).
+    pub in_ids: Vec<u32>,
+    /// per-router write cursor reused by the CSR fill pass.
+    csr_next: Vec<u32>,
 }
 
 impl LinkMap {
@@ -26,6 +34,9 @@ impl LinkMap {
             idx: Vec::new(),
             from: Vec::new(),
             to: Vec::new(),
+            in_start: Vec::new(),
+            in_ids: Vec::new(),
+            csr_next: Vec::new(),
         }
     }
 
@@ -52,6 +63,31 @@ impl LinkMap {
                 self.to.push(y as u32);
             }
         }
+        // input-link CSR: count per destination, prefix-sum, then fill in
+        // ascending link-id order (so each router's bucket is ascending)
+        self.in_start.clear();
+        self.in_start.resize(n + 1, 0);
+        for &t in &self.to {
+            self.in_start[t as usize + 1] += 1;
+        }
+        for r in 0..n {
+            self.in_start[r + 1] += self.in_start[r];
+        }
+        self.csr_next.clear();
+        self.csr_next.extend_from_slice(&self.in_start[..n]);
+        self.in_ids.clear();
+        self.in_ids.resize(self.to.len(), 0);
+        for (l, &t) in self.to.iter().enumerate() {
+            let cursor = &mut self.csr_next[t as usize];
+            self.in_ids[*cursor as usize] = l as u32;
+            *cursor += 1;
+        }
+    }
+
+    /// Directed links entering router `r`, ascending link id.
+    #[inline]
+    pub fn in_links(&self, r: usize) -> &[u32] {
+        &self.in_ids[self.in_start[r] as usize..self.in_start[r + 1] as usize]
     }
 
     #[inline]
@@ -96,7 +132,28 @@ mod tests {
             assert_eq!(reused.idx, fresh.idx);
             assert_eq!(reused.from, fresh.from);
             assert_eq!(reused.to, fresh.to);
+            assert_eq!(reused.in_start, fresh.in_start);
+            assert_eq!(reused.in_ids, fresh.in_ids);
         }
+    }
+
+    #[test]
+    fn input_csr_covers_every_link_in_ascending_order() {
+        let t = Topology::chain(5, &[0, 1, 2, 3, 4]);
+        let lm = LinkMap::build(&t);
+        let mut seen = vec![false; lm.n_links()];
+        for r in 0..lm.n {
+            let ins = lm.in_links(r);
+            for w in ins.windows(2) {
+                assert!(w[0] < w[1], "router {r} inputs not ascending");
+            }
+            for &l in ins {
+                assert_eq!(lm.to[l as usize] as usize, r);
+                assert!(!seen[l as usize], "link {l} listed twice");
+                seen[l as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every link is someone's input");
     }
 
     #[test]

@@ -6,21 +6,36 @@
 //! backpressure); arbitration is round-robin across contending inputs.
 //! Packets complete when their tail flit reaches the destination router.
 //!
-//! Large phases are volume-sampled (`max_flits`) — the simulator keeps
-//! the *distributional* behaviour (contention, hotspots) while bounding
-//! runtime; the scale factor is reported so callers can de-normalize.
+//! Large phases are volume-sampled ([`CycleSim::max_flits`], default
+//! [`DEFAULT_MAX_FLITS`]) — the simulator keeps the *distributional*
+//! behaviour (contention, hotspots) while bounding runtime; the scale
+//! factor is reported so callers can de-normalize.
 //!
 //! The simulator is built once per (topology, routing table) and reused
 //! across phases: the link map, the precomputed out-link table and all
 //! per-cycle scratch buffers live in the struct, so `run_phase` performs
 //! no per-phase rebuild of derived structures (§Perf iteration 4 — this
 //! is what makes `sim::Platform` reuse pay off in the MOO/serving loops).
+//!
+//! Data layout (§Perf iteration 6): all per-link FIFOs live in one flat
+//! ring-buffer arena (`buffer_flits` slots per link, contiguous), so the
+//! hot loop touches three dense arrays instead of a `Vec<VecDeque>` of
+//! scattered heap blocks. The every-cycle all-router scan is replaced by
+//! an active-router worklist kept in ascending router order (the same
+//! visit order as the old full scan, so round-robin arbitration state
+//! advances identically), idle sources are skipped via an
+//! active-injector list, and `out_taken` is cleared lazily with a cycle
+//! stamp. Results are bit-identical to the pre-rewrite layout (pinned in
+//! tests/cycle_golden.rs).
 
 use crate::model::TrafficMatrix;
 use crate::noi::linkmap::{LinkMap, NO_LINK};
 use crate::noi::routing::RoutingTable;
 use crate::noi::topology::Topology;
-use std::collections::VecDeque;
+
+/// Default volume-sampling bound on injected flits per phase
+/// (overridable via `--max-flits` / `SimOptions::max_flits`).
+pub const DEFAULT_MAX_FLITS: usize = 200_000;
 
 /// Per-flit in-flight state. Deliberately minimal (8 bytes): packet
 /// boundaries are not carried per flit — tail arrival is detected from
@@ -32,6 +47,8 @@ struct Flit {
     dst: u32,
 }
 
+const NULL_FLIT: Flit = Flit { packet: 0, dst: 0 };
+
 /// Result of simulating one phase to drain.
 #[derive(Debug, Clone)]
 pub struct SimResult {
@@ -40,11 +57,17 @@ pub struct SimResult {
     /// Packets whose tail flit reached its destination.
     pub delivered: usize,
     pub flits: usize,
+    /// Total (link, cycle) slots that carried a flit — one per link a
+    /// flit was pushed onto (injection or forward), i.e. exact
+    /// flit-hops traversed, including partial paths of undelivered
+    /// flits when the safety bound is hit.
+    pub flit_hops: u64,
     /// Mean latency over *delivered* packets only.
     pub mean_packet_latency: f64,
     /// Max latency over *delivered* packets only.
     pub max_packet_latency: u64,
-    /// Fraction of (link, cycle) slots that carried a flit.
+    /// Fraction of (link, cycle) slots that carried a flit:
+    /// `flit_hops / (cycles * n_links)`.
     pub link_utilization: f64,
     /// bytes-per-flit scale if the phase was sampled (1.0 = exact).
     pub scale: f64,
@@ -57,36 +80,53 @@ pub struct SimResult {
 
 /// Flit-level simulator for one (topology, routing table) pair.
 ///
-/// Construction precomputes the dense link map, the per-router input
-/// lists and the out-link table; `run_phase` reuses internal buffers so
-/// the inner loop is allocation-free across phases.
+/// Construction precomputes the dense link map (with its per-router
+/// input-link CSR), the out-link table and the flat FIFO arena;
+/// `run_phase` reuses every internal buffer so the inner loop is
+/// allocation-free across phases.
 pub struct CycleSim {
     /// router count
     n: usize,
-    /// flit capacity of each router input FIFO
+    /// flit capacity of each router input FIFO (ring size per link)
     buffer_flits: usize,
     /// sampling bound on total injected flits per phase
     pub max_flits: usize,
     lm: LinkMap,
-    /// input links per router
-    in_links: Vec<Vec<usize>>,
     /// out_table[at*n + dst] = directed link id toward dst
     /// (NO_LINK when at == dst or unreachable)
     out_table: Vec<u32>,
     diameter: usize,
     // --- reusable per-phase state (cleared at the top of run_phase) ---
-    /// FIFO of flits queued at the *receiving* router of each link
-    queues: Vec<VecDeque<Flit>>,
-    /// per-source injection queues of (packet id, dst)
-    inject: Vec<VecDeque<(u32, u32)>>,
+    /// flat FIFO arena: link l owns slots [l*buffer_flits,
+    /// (l+1)*buffer_flits), used as a ring via q_head/q_len
+    arena: Vec<Flit>,
+    /// ring-buffer head slot per link
+    q_head: Vec<u32>,
+    /// flits queued per link
+    q_len: Vec<u32>,
+    /// per-source injection backlog of (packet id, dst), drained via
+    /// `inject_head` (entries are only appended during phase setup)
+    inject_q: Vec<Vec<(u32, u32)>>,
+    inject_head: Vec<u32>,
     /// round-robin arbitration state per router
     rr: Vec<usize>,
-    out_taken: Vec<bool>,
-    moves: Vec<(usize, usize)>,
-    arrivals: Vec<usize>,
-    /// flits queued at each router's inputs — idle routers skip
-    /// arbitration entirely (§Perf iteration 2)
+    /// lazily-cleared `out_taken`: an output link is claimed this cycle
+    /// iff its stamp equals the cycle number
+    out_taken_stamp: Vec<u64>,
+    moves: Vec<(u32, u32)>,
+    arrivals: Vec<u32>,
+    /// flits queued at each router's inputs
     router_load: Vec<u32>,
+    /// routers with load > 0, ascending — the arbitration worklist
+    active: Vec<u32>,
+    /// membership flag for `active` (kept in sync at worklist rebuild)
+    in_active: Vec<bool>,
+    /// routers that gained their first load this cycle (merge scratch)
+    activated: Vec<u32>,
+    /// merge target for the worklist rebuild
+    active_scratch: Vec<u32>,
+    /// sources with pending injections, ascending
+    active_src: Vec<u32>,
 }
 
 impl CycleSim {
@@ -94,10 +134,6 @@ impl CycleSim {
         let n = topo.n;
         let lm = LinkMap::build(topo);
         let n_links = lm.n_links();
-        let mut in_links: Vec<Vec<usize>> = vec![Vec::new(); n];
-        for l in 0..n_links {
-            in_links[lm.to[l] as usize].push(l);
-        }
         let mut out_table = vec![NO_LINK; n * n];
         for at in 0..n {
             for dst in 0..n {
@@ -113,42 +149,125 @@ impl CycleSim {
         CycleSim {
             n,
             buffer_flits,
-            max_flits: 200_000,
+            max_flits: DEFAULT_MAX_FLITS,
             lm,
-            in_links,
             out_table,
             diameter: routes.diameter(),
-            queues: vec![VecDeque::new(); n_links],
-            inject: vec![VecDeque::new(); n],
+            arena: vec![NULL_FLIT; n_links * buffer_flits],
+            q_head: vec![0; n_links],
+            q_len: vec![0; n_links],
+            inject_q: vec![Vec::new(); n],
+            inject_head: vec![0; n],
             rr: vec![0; n],
-            out_taken: vec![false; n_links],
+            out_taken_stamp: vec![0; n_links],
             moves: Vec::with_capacity(n_links),
             arrivals: Vec::with_capacity(n_links),
             router_load: vec![0u32; n],
+            active: Vec::with_capacity(n),
+            in_active: vec![false; n],
+            activated: Vec::with_capacity(n),
+            active_scratch: Vec::with_capacity(n),
+            active_src: Vec::with_capacity(n),
         }
     }
 
+    /// Front flit of link `l`'s FIFO (caller checks `q_len[l] > 0`).
     #[inline]
-    fn out_link(&self, at: usize, dst: usize) -> Option<usize> {
-        let v = self.out_table[at * self.n + dst];
-        if v == NO_LINK {
-            None
-        } else {
-            Some(v as usize)
+    fn q_front(&self, l: usize) -> Flit {
+        self.arena[l * self.buffer_flits + self.q_head[l] as usize]
+    }
+
+    #[inline]
+    fn q_pop(&mut self, l: usize) -> Flit {
+        let cap = self.buffer_flits;
+        let h = self.q_head[l] as usize;
+        let flit = self.arena[l * cap + h];
+        // branchy wrap instead of `%`: cap need not be a power of two,
+        // and a hardware divide per flit would eat the arena's win
+        let h1 = h + 1;
+        self.q_head[l] = if h1 == cap { 0 } else { h1 as u32 };
+        self.q_len[l] -= 1;
+        flit
+    }
+
+    /// Push onto link `l`'s FIFO (caller checks `q_len[l] < cap`).
+    #[inline]
+    fn q_push(&mut self, l: usize, flit: Flit) {
+        let cap = self.buffer_flits;
+        let mut pos = self.q_head[l] as usize + self.q_len[l] as usize;
+        if pos >= cap {
+            pos -= cap;
         }
+        self.arena[l * cap + pos] = flit;
+        self.q_len[l] += 1;
+    }
+
+    /// Bump a router's input load, enrolling it in the worklist merge if
+    /// this is its first flit (worklist membership is reconciled once
+    /// per cycle, so the arbitration scan order stays ascending).
+    #[inline]
+    fn add_load(&mut self, router: usize) {
+        if self.router_load[router] == 0 && !self.in_active[router] {
+            self.in_active[router] = true;
+            self.activated.push(router as u32);
+        }
+        self.router_load[router] += 1;
+    }
+
+    /// Fold this cycle's newly-loaded routers into the worklist and drop
+    /// drained ones. Both lists are ascending, so one merge preserves
+    /// the ascending scan order the arbitration loop relies on.
+    fn rebuild_worklist(&mut self) {
+        self.activated.sort_unstable();
+        self.active_scratch.clear();
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.active.len() || j < self.activated.len() {
+            // next survivor from the old worklist, or next newly-loaded
+            // router — whichever index is smaller (they never overlap:
+            // a router in the worklist is never pushed to `activated`)
+            let ra = self.active.get(i).copied();
+            let rb = self.activated.get(j).copied();
+            let take_old = match (ra, rb) {
+                (Some(a), Some(b)) => a <= b,
+                (Some(_), None) => true,
+                (None, _) => false,
+            };
+            if take_old {
+                let a = ra.unwrap();
+                i += 1;
+                if ra == rb {
+                    j += 1; // defensive de-dup, see invariant above
+                }
+                if self.router_load[a as usize] > 0 {
+                    self.active_scratch.push(a);
+                } else {
+                    self.in_active[a as usize] = false;
+                }
+            } else {
+                self.active_scratch.push(rb.unwrap());
+                j += 1;
+            }
+        }
+        std::mem::swap(&mut self.active, &mut self.active_scratch);
+        self.activated.clear();
     }
 
     /// Reset the reusable per-phase state (queues may hold leftovers if
     /// a previous phase hit the safety bound undrained).
     fn reset(&mut self) {
-        for q in &mut self.queues {
+        self.q_head.iter_mut().for_each(|x| *x = 0);
+        self.q_len.iter_mut().for_each(|x| *x = 0);
+        for q in &mut self.inject_q {
             q.clear();
         }
-        for q in &mut self.inject {
-            q.clear();
-        }
+        self.inject_head.iter_mut().for_each(|x| *x = 0);
         self.rr.iter_mut().for_each(|x| *x = 0);
+        self.out_taken_stamp.iter_mut().for_each(|x| *x = 0);
         self.router_load.iter_mut().for_each(|x| *x = 0);
+        self.in_active.iter_mut().for_each(|x| *x = false);
+        self.active.clear();
+        self.activated.clear();
+        self.active_src.clear();
     }
 
     /// Simulate one traffic phase until all packets drain.
@@ -191,17 +310,23 @@ impl CycleSim {
                     t_inject: 0,
                     t_done: 0,
                 });
-                self.inject[src].push_back((id, dst as u32));
+                self.inject_q[src].push((id, dst as u32));
                 flits -= take;
+            }
+        }
+        for (src, q) in self.inject_q.iter().enumerate() {
+            if !q.is_empty() {
+                self.active_src.push(src as u32);
             }
         }
         let n_packets = packets.len();
         let total_flits: usize = packets.iter().map(|p| p.flits).sum();
         let n_links = self.lm.n_links();
+        let n = self.n;
 
         let mut cycle: u64 = 0;
         let mut done_packets = 0usize;
-        let mut flit_slots_used: u64 = 0;
+        let mut flit_hops: u64 = 0;
         let mut remaining = vec![0usize; n_packets]; // flits not yet at dst
         for (i, p) in packets.iter().enumerate() {
             remaining[i] = p.flits;
@@ -213,43 +338,53 @@ impl CycleSim {
         while done_packets < n_packets && cycle < max_cycles {
             cycle += 1;
             // 1) link traversal: each router forwards up to one flit per
-            //    *output* link per cycle, arbitrating round-robin over its
-            //    input queues (+ injection queue).
-            self.out_taken.iter_mut().for_each(|x| *x = false);
+            //    *output* link per cycle, arbitrating round-robin over
+            //    its input queues. Only routers with queued flits are
+            //    visited, in ascending index order — the same order (and
+            //    rr advancement) as a full 0..n scan.
             self.moves.clear();
             self.arrivals.clear();
-
-            for router in 0..self.n {
-                if self.router_load[router] == 0 {
-                    continue;
-                }
-                let inputs = &self.in_links[router];
+            let active = std::mem::take(&mut self.active);
+            for &router in &active {
+                let router = router as usize;
+                let inputs = self.lm.in_links(router);
                 if inputs.is_empty() {
                     continue;
                 }
                 let start = self.rr[router] % inputs.len();
+                // out-table row hoisted out of the flit loop
+                let row = &self.out_table[router * n..(router + 1) * n];
                 for k in 0..inputs.len() {
-                    let l = inputs[(start + k) % inputs.len()];
-                    let Some(&flit) = self.queues[l].front() else {
-                        continue;
-                    };
-                    let dst = flit.dst as usize;
-                    if dst == router {
-                        self.arrivals.push(l);
+                    let l = inputs[(start + k) % inputs.len()] as usize;
+                    if self.q_len[l] == 0 {
                         continue;
                     }
-                    if let Some(ol) = self.out_link(router, dst) {
-                        if !self.out_taken[ol] && self.queues[ol].len() < self.buffer_flits {
-                            self.out_taken[ol] = true;
-                            self.moves.push((l, ol));
+                    let dst = self.q_front(l).dst as usize;
+                    if dst == router {
+                        self.arrivals.push(l as u32);
+                        continue;
+                    }
+                    let ol = row[dst];
+                    if ol != NO_LINK {
+                        let ol = ol as usize;
+                        if self.out_taken_stamp[ol] != cycle
+                            && (self.q_len[ol] as usize) < self.buffer_flits
+                        {
+                            self.out_taken_stamp[ol] = cycle;
+                            self.moves.push((l as u32, ol as u32));
                         }
                     }
                 }
                 self.rr[router] = self.rr[router].wrapping_add(1);
             }
+            self.active = active;
 
-            for &l in &self.arrivals {
-                let flit = self.queues[l].pop_front().unwrap();
+            // ejections first (frees buffer slots), then forwards —
+            // the decisions above were all made on pre-apply state
+            let arrivals = std::mem::take(&mut self.arrivals);
+            for &l in &arrivals {
+                let l = l as usize;
+                let flit = self.q_pop(l);
                 self.router_load[self.lm.to[l] as usize] -= 1;
                 let pid = flit.packet as usize;
                 remaining[pid] -= 1;
@@ -257,21 +392,29 @@ impl CycleSim {
                     packets[pid].t_done = cycle;
                     done_packets += 1;
                 }
-                flit_slots_used += 1;
+                // ejection into the router core is not a link traversal:
+                // the hop onto link l was counted when the flit was
+                // pushed (injection or forward)
             }
-            for &(from, to) in &self.moves {
-                let flit = self.queues[from].pop_front().unwrap();
+            self.arrivals = arrivals;
+            let moves = std::mem::take(&mut self.moves);
+            for &(from, to) in &moves {
+                let (from, to) = (from as usize, to as usize);
+                let flit = self.q_pop(from);
                 self.router_load[self.lm.to[from] as usize] -= 1;
-                self.queues[to].push_back(flit);
-                self.router_load[self.lm.to[to] as usize] += 1;
-                flit_slots_used += 1;
+                self.q_push(to, flit);
+                self.add_load(self.lm.to[to] as usize);
+                flit_hops += 1;
             }
+            self.moves = moves;
 
-            // 2) injection: one flit per source router per cycle
-            for src in 0..self.n {
-                let Some(&(pid, dst)) = self.inject[src].front() else {
-                    continue;
-                };
+            // 2) injection: one flit per source router per cycle; idle
+            //    sources carry no cost (active-injector list, ascending
+            //    — the same order as the old 0..n scan)
+            let mut active_src = std::mem::take(&mut self.active_src);
+            for &src in &active_src {
+                let src = src as usize;
+                let (pid, dst) = self.inject_q[src][self.inject_head[src] as usize];
                 let p = &mut packets[pid as usize];
                 if p.injected == 0 {
                     p.t_inject = cycle;
@@ -280,18 +423,32 @@ impl CycleSim {
                 if dst as usize == src {
                     unreachable!("flows exclude self-traffic");
                 }
-                if let Some(ol) = self.out_link(src, dst as usize) {
-                    if self.queues[ol].len() < self.buffer_flits {
-                        self.queues[ol].push_back(Flit { packet: pid, dst });
-                        self.router_load[self.lm.to[ol] as usize] += 1;
+                let ol = self.out_table[src * n + dst as usize];
+                if ol != NO_LINK {
+                    let ol = ol as usize;
+                    if (self.q_len[ol] as usize) < self.buffer_flits {
+                        self.q_push(ol, Flit { packet: pid, dst });
+                        self.add_load(self.lm.to[ol] as usize);
+                        // the injected flit traverses its first link now
+                        flit_hops += 1;
+                        let p = &mut packets[pid as usize];
                         p.injected += 1;
                         // tail = last flit of the packet's flit budget
                         if p.injected == p.flits {
-                            self.inject[src].pop_front();
+                            self.inject_head[src] += 1;
                         }
                     }
                 }
             }
+            {
+                let inject_q = &self.inject_q;
+                let inject_head = &self.inject_head;
+                active_src
+                    .retain(|&s| (inject_head[s as usize] as usize) < inject_q[s as usize].len());
+            }
+            self.active_src = active_src;
+
+            self.rebuild_worklist();
         }
 
         // stats over delivered packets only: undelivered packets (safety
@@ -317,12 +474,13 @@ impl CycleSim {
             packets: n_packets,
             delivered,
             flits: total_flits,
+            flit_hops,
             mean_packet_latency: mean_lat,
             max_packet_latency: max_lat,
             link_utilization: if cycle == 0 || n_links == 0 {
                 0.0
             } else {
-                flit_slots_used as f64 / (cycle as f64 * n_links as f64)
+                flit_hops as f64 / (cycle as f64 * n_links as f64)
             },
             scale,
             drained: done_packets == n_packets,
@@ -363,6 +521,8 @@ mod tests {
         // 6 hops; store-and-forward latency ≈ hops + O(1)
         assert!(res.mean_packet_latency >= 6.0);
         assert!(res.mean_packet_latency <= 10.0, "{}", res.mean_packet_latency);
+        // the flit traversed exactly its 6-hop path
+        assert_eq!(res.flit_hops, 6);
     }
 
     #[test]
@@ -383,6 +543,25 @@ mod tests {
         assert_eq!(res.delivered, res.packets);
         assert!(res.cycles > 0);
         assert!(res.link_utilization > 0.0 && res.link_utilization <= 1.0);
+    }
+
+    #[test]
+    fn one_hop_flow_counts_its_injection_slot() {
+        // a single 1-flit, 1-hop flow: injected at cycle 1 (traversing
+        // its only link), ejected at cycle 2 — utilization must be
+        // nonzero and exactly flit_hops / (cycles * n_links)
+        let t = Topology::chain(2, &[0, 1]);
+        let r = RoutingTable::build(&t);
+        let mut sim = CycleSim::new(&t, &r, 8);
+        let mut m = TrafficMatrix::zeros(2, KernelKind::Score, 1);
+        m.add(0, 1, 32.0);
+        let res = sim.run_phase(&m, 32.0);
+        assert!(res.drained);
+        assert_eq!(res.cycles, 2);
+        assert_eq!(res.flit_hops, 1);
+        assert_eq!(res.mean_packet_latency, 1.0);
+        // 2 directed links, 2 cycles, 1 occupied slot
+        assert_eq!(res.link_utilization, 1.0 / (2.0 * 2.0));
     }
 
     #[test]
@@ -418,6 +597,25 @@ mod tests {
         assert!(res.scale > 1.0);
         assert!(res.flits <= 1100);
         assert!(res.drained);
+    }
+
+    #[test]
+    fn raising_max_flits_tightens_scale() {
+        // the volume-sampling bound is the knob behind --max-flits: a
+        // larger budget simulates more of the real volume, so the
+        // de-normalization factor must shrink toward 1
+        let (t, r) = mesh4();
+        let mut m = TrafficMatrix::zeros(16, KernelKind::FeedForward, 1);
+        m.add(0, 15, 1.0e9);
+        let mut coarse = CycleSim::new(&t, &r, 8);
+        coarse.max_flits = 500;
+        let mut fine = CycleSim::new(&t, &r, 8);
+        fine.max_flits = 5000;
+        let rc = coarse.run_phase(&m, 32.0);
+        let rf = fine.run_phase(&m, 32.0);
+        assert!(rc.scale > rf.scale, "coarse {} vs fine {}", rc.scale, rf.scale);
+        assert!(rf.scale > 1.0);
+        assert!((rc.scale / rf.scale - 10.0).abs() < 0.5, "scale ∝ 1/max_flits");
     }
 
     #[test]
@@ -467,6 +665,7 @@ mod tests {
             let b = CycleSim::new(&t, &r, 8).run_phase(m, 32.0);
             assert_eq!(a.cycles, b.cycles);
             assert_eq!(a.delivered, b.delivered);
+            assert_eq!(a.flit_hops, b.flit_hops);
             assert_eq!(a.mean_packet_latency, b.mean_packet_latency);
             assert_eq!(a.link_utilization, b.link_utilization);
         }

@@ -20,6 +20,16 @@
 //! — whatever the shared [`ServingConfig`] enables) on the shared
 //! worker pool, and the per-request samples are merged into fleet-level
 //! goodput, utilization and TTFT/TPOT tails.
+//!
+//! Each instance's [`Platform`] is built **exactly once** and threaded
+//! through the whole estimate → dispatch → simulate pipeline: the
+//! parallel estimate stage returns the platforms it probed, and the
+//! owned-transfer [`parallel::par_map_owned`] moves each one into the
+//! worker that runs its request-level sim (`Platform` is `Send` but
+//! `!Sync`, so sharing is out — moving is free).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use crate::bail;
 use crate::baselines::Arch;
@@ -28,9 +38,7 @@ use crate::moo::design::NoiDesign;
 use crate::sim::decode::{decode_step_on, kv_cache_bytes};
 use crate::sim::engine::SimOptions;
 use crate::sim::platform::Platform;
-use crate::sim::serving::{
-    ArrivalProcess, ServingConfig, ServingReport, ServingSamples, ServingSim,
-};
+use crate::sim::serving::{ArrivalProcess, ServingConfig, ServingReport, ServingSim};
 use crate::util::error::Result;
 use crate::util::stats::percentile;
 use crate::util::{parallel, Rng};
@@ -196,18 +204,46 @@ impl FleetReport {
     }
 }
 
-fn build_platform(spec: &InstanceSpec, sys: &SystemConfig, opts: &SimOptions) -> Result<Platform> {
-    match &spec.design {
-        Some(d) => Platform::with_design(spec.arch, sys, d.clone()),
-        None => Ok(Platform::new(spec.arch, sys, opts)),
+fn build_platform(
+    spec: &InstanceSpec,
+    sys: &SystemConfig,
+    opts: &SimOptions,
+    max_flits: Option<usize>,
+) -> Result<Platform> {
+    let p = match &spec.design {
+        Some(d) => Platform::with_design(spec.arch, sys, d.clone())?,
+        None => Platform::new(spec.arch, sys, opts),
+    };
+    if let Some(mf) = max_flits {
+        p.set_max_flits(mf);
     }
+    Ok(p)
 }
 
-/// Router-side per-request service-time estimate for an instance:
-/// prefill plus the generation at the mid-context decode cost, probed
-/// from the instance's actual platform. Public so load scenarios
-/// (examples, tests) can express arrival rates in units of fleet
-/// capacity without hardcoding absolute latencies.
+/// Router-side per-request service-time estimate on an already-built
+/// platform: prefill plus the generation at the mid-context decode
+/// cost. The fleet path probes each instance's platform through this
+/// and then reuses the *same* platform for the request-level sim.
+pub fn estimate_service_secs_on(
+    platform: &Platform,
+    model: &ModelConfig,
+    cfg: &ServingConfig,
+) -> f64 {
+    let opts = SimOptions::default();
+    let prefill = platform.run(model, cfg.prompt_len.max(8), &opts).latency_secs;
+    if cfg.gen_tokens == 0 {
+        return prefill.max(1e-12);
+    }
+    let mid = (cfg.prompt_len + cfg.gen_tokens / 2).max(1);
+    let (tok, _) = decode_step_on(platform, model, mid, &opts);
+    (prefill + cfg.gen_tokens as f64 * tok).max(1e-12)
+}
+
+/// Convenience wrapper over [`estimate_service_secs_on`] that builds a
+/// throwaway platform for the spec. Public so load scenarios (examples,
+/// tests) can express arrival rates in units of fleet capacity without
+/// hardcoding absolute latencies; fleet runs do NOT go through this —
+/// they build each platform once and keep it.
 pub fn estimate_service_secs(
     sys: &SystemConfig,
     model: &ModelConfig,
@@ -215,14 +251,111 @@ pub fn estimate_service_secs(
     cfg: &ServingConfig,
 ) -> Result<f64> {
     let opts = SimOptions::default();
-    let platform = build_platform(spec, sys, &opts)?;
-    let prefill = platform.run(model, cfg.prompt_len.max(8), &opts).latency_secs;
-    if cfg.gen_tokens == 0 {
-        return Ok(prefill.max(1e-12));
+    let platform = build_platform(spec, sys, &opts, cfg.max_flits)?;
+    Ok(estimate_service_secs_on(&platform, model, cfg))
+}
+
+/// Finish-time key for the outstanding-request min-heaps (total order
+/// on finite f64s; the dispatch model never produces NaN).
+#[derive(PartialEq)]
+struct FinishTime(f64);
+
+impl Eq for FinishTime {}
+
+impl PartialOrd for FinishTime {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
     }
-    let mid = (cfg.prompt_len + cfg.gen_tokens / 2).max(1);
-    let (tok, _) = decode_step_on(&platform, model, mid, &opts);
-    Ok((prefill + cfg.gen_tokens as f64 * tok).max(1e-12))
+}
+
+impl Ord for FinishTime {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Deterministic front-end dispatch: split one shared arrival stream
+/// over the instances of a fleet. Each instance is modeled as
+/// `max_batch` deterministic servers with service time `est[i]`;
+/// "queue depth" is its dispatched-but-unfinished count under that
+/// model. Outstanding finish times live in per-instance min-heaps, so
+/// retiring everything finished by the next arrival is O(log k) per
+/// retirement instead of the former O(k) `retain` sweep over every
+/// instance per arrival — bit-identical assignments (pinned against
+/// the sweep reference in the tests below). With no instances
+/// (`est` empty) there is nowhere to route: returns an empty set.
+///
+/// Contract: `est` and `caps` are per-instance and must be the same
+/// length, and `caps` entries must be positive (the fleet path clamps
+/// them with `.max(1.0)`) — `LeastKv` divides queue pressure by them.
+pub fn route_requests(
+    policy: DispatchPolicy,
+    arrivals: &[f64],
+    est: &[f64],
+    caps: &[f64],
+    kv_full: f64,
+    max_batch: usize,
+    seed: u64,
+) -> Vec<Vec<f64>> {
+    let n = est.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    assert_eq!(n, caps.len(), "one KV capacity per instance");
+    let max_batch = max_batch.max(1);
+    let mut assigned: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut outstanding: Vec<BinaryHeap<Reverse<FinishTime>>> =
+        (0..n).map(|_| BinaryHeap::new()).collect();
+    let mut servers: Vec<Vec<f64>> = vec![vec![0.0f64; max_batch]; n];
+    let mut rng = Rng::new(seed ^ 0xC1A5_7E55);
+    for (k, &t) in arrivals.iter().enumerate() {
+        for o in outstanding.iter_mut() {
+            while let Some(&Reverse(FinishTime(f))) = o.peek() {
+                if f <= t {
+                    o.pop();
+                } else {
+                    break;
+                }
+            }
+        }
+        let pick = match policy {
+            DispatchPolicy::RoundRobin => k % n,
+            DispatchPolicy::Jsq => (0..n).min_by_key(|&i| outstanding[i].len()).unwrap(),
+            DispatchPolicy::LeastKv => (0..n)
+                .min_by(|&a, &b| {
+                    let la = outstanding[a].len() as f64 * kv_full / caps[a];
+                    let lb = outstanding[b].len() as f64 * kv_full / caps[b];
+                    la.partial_cmp(&lb).unwrap()
+                })
+                .unwrap(),
+            DispatchPolicy::P2c => {
+                let a = rng.below(n);
+                let b = if n > 1 {
+                    (a + 1 + rng.below(n - 1)) % n
+                } else {
+                    a
+                };
+                let (x, y) = (a.min(b), a.max(b));
+                if outstanding[y].len() < outstanding[x].len() {
+                    y
+                } else {
+                    x
+                }
+            }
+        };
+        assigned[pick].push(t);
+        // estimated start on the instance's max_batch virtual servers
+        let (si, free) = servers[pick]
+            .iter()
+            .copied()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let finish = free.max(t) + est[pick];
+        servers[pick][si] = finish;
+        outstanding[pick].push(Reverse(FinishTime(finish)));
+    }
+    assigned
 }
 
 /// Fleet simulator: dispatch + N request-level engines + aggregation.
@@ -244,7 +377,13 @@ impl<'a> ClusterSim<'a> {
 
     /// Run with an explicit worker count; results are bit-identical for
     /// any `jobs` (dispatch is sequential, instance sims are pure and
-    /// order-preserved by `par_map`).
+    /// order-preserved by the parallel maps).
+    ///
+    /// Builds each instance's [`Platform`] exactly once: the estimate
+    /// stage returns `(Platform, est)` pairs, dispatch runs on the
+    /// estimates, and the owned platforms are then moved (not rebuilt)
+    /// into the per-instance simulation workers via
+    /// [`parallel::par_map_owned`].
     pub fn run_with_jobs(&self, jobs: usize) -> Result<FleetReport> {
         let n = self.cfg.specs.len();
         if n == 0 {
@@ -252,19 +391,24 @@ impl<'a> ClusterSim<'a> {
         }
         let scfg = &self.cfg.serving;
 
-        // per-instance service estimates for the router (parallel,
-        // deterministic ordering)
-        let est_results = parallel::par_map(jobs, &self.cfg.specs, |spec| {
-            estimate_service_secs(self.sys, self.model, spec, scfg)
+        // build every platform once and probe its service estimate for
+        // the router (parallel, deterministic ordering)
+        let built = parallel::par_map(jobs, &self.cfg.specs, |spec| -> Result<(Platform, f64)> {
+            let opts = SimOptions::default();
+            let platform = build_platform(spec, self.sys, &opts, scfg.max_flits)?;
+            let est = estimate_service_secs_on(&platform, self.model, scfg);
+            Ok((platform, est))
         });
+        let mut platforms = Vec::with_capacity(n);
         let mut est = Vec::with_capacity(n);
-        for e in est_results {
-            est.push(e?);
+        for r in built {
+            let (p, e) = r?;
+            platforms.push(p);
+            est.push(e);
         }
 
         // ---- front-end router: split the shared arrival stream
         let arrivals = scfg.arrivals.times(scfg.seed);
-        let max_batch = scfg.max_batch.max(1);
         let kv_full = kv_cache_bytes(self.model, scfg.prompt_len + scfg.gen_tokens).max(1.0);
         let caps: Vec<f64> = self
             .cfg
@@ -272,65 +416,26 @@ impl<'a> ClusterSim<'a> {
             .iter()
             .map(|s| s.kv_capacity_bytes.unwrap_or(scfg.kv_capacity_bytes).max(1.0))
             .collect();
-        let mut assigned: Vec<Vec<f64>> = vec![Vec::new(); n];
-        let mut outstanding: Vec<Vec<f64>> = vec![Vec::new(); n];
-        let mut servers: Vec<Vec<f64>> = vec![vec![0.0f64; max_batch]; n];
-        let mut rng = Rng::new(scfg.seed ^ 0xC1A5_7E55);
-        for (k, &t) in arrivals.iter().enumerate() {
-            for o in outstanding.iter_mut() {
-                o.retain(|&f| f > t);
-            }
-            let pick = match self.cfg.policy {
-                DispatchPolicy::RoundRobin => k % n,
-                DispatchPolicy::Jsq => (0..n).min_by_key(|&i| outstanding[i].len()).unwrap(),
-                DispatchPolicy::LeastKv => (0..n)
-                    .min_by(|&a, &b| {
-                        let la = outstanding[a].len() as f64 * kv_full / caps[a];
-                        let lb = outstanding[b].len() as f64 * kv_full / caps[b];
-                        la.partial_cmp(&lb).unwrap()
-                    })
-                    .unwrap(),
-                DispatchPolicy::P2c => {
-                    let a = rng.below(n);
-                    let b = if n > 1 {
-                        (a + 1 + rng.below(n - 1)) % n
-                    } else {
-                        a
-                    };
-                    let (x, y) = (a.min(b), a.max(b));
-                    if outstanding[y].len() < outstanding[x].len() {
-                        y
-                    } else {
-                        x
-                    }
-                }
-            };
-            assigned[pick].push(t);
-            // estimated start on the instance's max_batch virtual servers
-            let (si, free) = servers[pick]
-                .iter()
-                .copied()
-                .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                .unwrap();
-            let finish = free.max(t) + est[pick];
-            servers[pick][si] = finish;
-            outstanding[pick].push(finish);
-        }
+        let assigned = route_requests(
+            self.cfg.policy,
+            &arrivals,
+            &est,
+            &caps,
+            kv_full,
+            scfg.max_batch,
+            scfg.seed,
+        );
 
-        // ---- per-instance request-level simulations (workers build
-        // their own platforms; output order is spec order)
-        let idx: Vec<usize> = (0..n).collect();
-        let runs = parallel::par_map(jobs, &idx, |&i| -> Result<(ServingReport, ServingSamples)> {
-            let spec = &self.cfg.specs[i];
-            let opts = SimOptions::default();
-            let platform = build_platform(spec, self.sys, &opts)?;
+        // ---- per-instance request-level simulations: each prebuilt
+        // platform is moved into its worker (output order = spec order)
+        let work: Vec<(usize, Platform)> = platforms.into_iter().enumerate().collect();
+        let runs = parallel::par_map_owned(jobs, work, |(i, platform)| {
             let mut cfg_i = scfg.clone();
             cfg_i.arrivals = ArrivalProcess::Trace(assigned[i].clone());
-            if let Some(cap) = spec.kv_capacity_bytes {
+            if let Some(cap) = self.cfg.specs[i].kv_capacity_bytes {
                 cfg_i.kv_capacity_bytes = cap;
             }
-            Ok(ServingSim::new(&platform, self.model, cfg_i).run_detailed())
+            ServingSim::new(&platform, self.model, cfg_i).run_detailed()
         });
 
         // ---- aggregate
@@ -340,8 +445,7 @@ impl<'a> ClusterSim<'a> {
         let mut decoded = 0u64;
         let mut first = f64::INFINITY;
         let mut last = f64::NEG_INFINITY;
-        for r in runs {
-            let (rep, s) = r?;
+        for (rep, s) in runs {
             if rep.requests > 0 {
                 first = first.min(s.first_arrival);
                 last = last.max(s.last_finish);
@@ -500,6 +604,86 @@ mod tests {
             lkv.ttft_p99_secs,
             rr.ttft_p99_secs
         );
+    }
+
+    /// The pre-heap dispatcher, kept verbatim as the golden model: a
+    /// `Vec` of outstanding finish times swept with `retain` on every
+    /// arrival. The production heap path must reproduce it exactly.
+    fn retain_sweep_reference(
+        policy: DispatchPolicy,
+        arrivals: &[f64],
+        est: &[f64],
+        caps: &[f64],
+        kv_full: f64,
+        max_batch: usize,
+        seed: u64,
+    ) -> Vec<Vec<f64>> {
+        let n = est.len();
+        let max_batch = max_batch.max(1);
+        let mut assigned: Vec<Vec<f64>> = vec![Vec::new(); n];
+        let mut outstanding: Vec<Vec<f64>> = vec![Vec::new(); n];
+        let mut servers: Vec<Vec<f64>> = vec![vec![0.0f64; max_batch]; n];
+        let mut rng = crate::util::Rng::new(seed ^ 0xC1A5_7E55);
+        for (k, &t) in arrivals.iter().enumerate() {
+            for o in outstanding.iter_mut() {
+                o.retain(|&f| f > t);
+            }
+            let pick = match policy {
+                DispatchPolicy::RoundRobin => k % n,
+                DispatchPolicy::Jsq => (0..n).min_by_key(|&i| outstanding[i].len()).unwrap(),
+                DispatchPolicy::LeastKv => (0..n)
+                    .min_by(|&a, &b| {
+                        let la = outstanding[a].len() as f64 * kv_full / caps[a];
+                        let lb = outstanding[b].len() as f64 * kv_full / caps[b];
+                        la.partial_cmp(&lb).unwrap()
+                    })
+                    .unwrap(),
+                DispatchPolicy::P2c => {
+                    let a = rng.below(n);
+                    let b = if n > 1 { (a + 1 + rng.below(n - 1)) % n } else { a };
+                    let (x, y) = (a.min(b), a.max(b));
+                    if outstanding[y].len() < outstanding[x].len() {
+                        y
+                    } else {
+                        x
+                    }
+                }
+            };
+            assigned[pick].push(t);
+            let (si, free) = servers[pick]
+                .iter()
+                .copied()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            let finish = free.max(t) + est[pick];
+            servers[pick][si] = finish;
+            outstanding[pick].push(finish);
+        }
+        assigned
+    }
+
+    #[test]
+    fn heap_dispatch_matches_retain_sweep_golden() {
+        // a stream long enough for queues to grow, drain and tie across
+        // three uneven instances — every policy must route identically
+        // to the O(k)-sweep reference, request for request
+        let arrivals = ArrivalProcess::Poisson {
+            rate_per_sec: 120.0,
+            num_requests: 80,
+        }
+        .times(0xD15C);
+        let est = [0.031, 0.011, 0.074];
+        let caps = [8.0e9, 4.0e9, 16.0e9];
+        let kv_full = 3.0e7;
+        for policy in DispatchPolicy::all() {
+            let heap = route_requests(policy, &arrivals, &est, &caps, kv_full, 4, 0x5EED);
+            let golden =
+                retain_sweep_reference(policy, &arrivals, &est, &caps, kv_full, 4, 0x5EED);
+            assert_eq!(heap, golden, "policy {}", policy.name());
+            let routed: usize = heap.iter().map(Vec::len).sum();
+            assert_eq!(routed, arrivals.len(), "policy {}", policy.name());
+        }
     }
 
     #[test]

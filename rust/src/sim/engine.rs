@@ -23,6 +23,11 @@ pub struct SimOptions {
     pub cycle_accurate: bool,
     /// SFC used for the ReRAM macro placement seed.
     pub sfc: SfcKind,
+    /// Volume-sampling bound on injected flits per cycle-sim phase (the
+    /// `--max-flits` CLI knob): larger bounds simulate more of the real
+    /// traffic volume, tightening the de-normalization `scale` factor at
+    /// the cost of wall-clock time.
+    pub max_flits: usize,
 }
 
 impl Default for SimOptions {
@@ -30,6 +35,7 @@ impl Default for SimOptions {
         SimOptions {
             cycle_accurate: false,
             sfc: SfcKind::Boustrophedon,
+            max_flits: crate::noi::sim::DEFAULT_MAX_FLITS,
         }
     }
 }

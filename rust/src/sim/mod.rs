@@ -29,9 +29,12 @@ pub mod platform;
 pub mod scheduler;
 pub mod serving;
 
-pub use cluster::{ClusterConfig, ClusterSim, DispatchPolicy, FleetReport, InstanceSpec};
+pub use cluster::{
+    estimate_service_secs, estimate_service_secs_on, route_requests, ClusterConfig, ClusterSim,
+    DispatchPolicy, FleetReport, InstanceSpec,
+};
 pub use decode::{decode_step, decode_step_on, generate, generate_on, DecodeReport};
 pub use engine::{simulate, SimOptions};
-pub use platform::Platform;
+pub use platform::{platform_build_count, Platform};
 pub use scheduler::{ChunkedPrefill, ContinuousBatching, Scheduler, StepPlan};
 pub use serving::{ArrivalProcess, ServingConfig, ServingReport, ServingSamples, ServingSim};

@@ -16,6 +16,7 @@
 //! paper's tool flow describes.
 
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::arch::chiplet::Chiplet;
 use crate::baselines::{plan, Arch};
@@ -28,6 +29,16 @@ use crate::sim::engine::{chiplets_for, SimOptions};
 use crate::thermal;
 use crate::bail;
 use crate::util::error::Result;
+
+/// Monotonic count of [`Platform`]s ever built in this process — a test
+/// hook: fleet paths assert "exactly one build per instance" against the
+/// delta of this counter (see tests/platform_build_count.rs).
+static PLATFORM_BUILDS: AtomicUsize = AtomicUsize::new(0);
+
+/// Total `Platform` constructions so far (relaxed; compare deltas only).
+pub fn platform_build_count() -> usize {
+    PLATFORM_BUILDS.load(Ordering::Relaxed)
+}
 
 /// A fully-built simulation platform: reusable across any number of
 /// `(model, seq_len)` evaluations.
@@ -64,7 +75,9 @@ impl Platform {
     pub fn new(arch: Arch, sys: &SystemConfig, opts: &SimOptions) -> Platform {
         let chiplets = chiplets_for(sys);
         let design = NoiDesign::hi_seed(sys, &chiplets, opts.sfc);
-        Platform::build(arch, sys, chiplets, design)
+        let p = Platform::build(arch, sys, chiplets, design);
+        p.set_max_flits(opts.max_flits);
+        p
     }
 
     /// Platform over an arbitrary NoI design (e.g. a λ* point exported
@@ -103,12 +116,26 @@ impl Platform {
         }
     }
 
+    /// Set the cycle-sim volume-sampling bound (the `--max-flits` knob).
+    /// Takes `&self`: the simulator lives behind the platform's interior
+    /// `RefCell`, so builders that only hand out shared references (the
+    /// fleet path) can still apply per-run overrides.
+    pub fn set_max_flits(&self, max_flits: usize) {
+        self.cycle.borrow_mut().max_flits = max_flits.max(1);
+    }
+
+    /// Current cycle-sim volume-sampling bound.
+    pub fn max_flits(&self) -> usize {
+        self.cycle.borrow().max_flits
+    }
+
     fn build(
         arch: Arch,
         sys: &SystemConfig,
         chiplets: Vec<Chiplet>,
         design: NoiDesign,
     ) -> Platform {
+        PLATFORM_BUILDS.fetch_add(1, Ordering::Relaxed);
         let routes = RoutingTable::build(&design.topo);
         let cycle = CycleSim::new(&design.topo, &routes, sys.hw.noi_buffer_flits);
         Platform {
@@ -326,6 +353,24 @@ mod tests {
         assert!(r.latency_secs > 0.0 && r.latency_secs.is_finite());
         assert!(r.energy_j > 0.0 && r.energy_j.is_finite());
         assert!(r.temp_c > 40.0 && r.temp_c < 300.0);
+    }
+
+    #[test]
+    fn max_flits_plumbs_through_options() {
+        let sys = SystemConfig::s36();
+        let p = Platform::new(
+            Arch::Hi25D,
+            &sys,
+            &SimOptions {
+                max_flits: 4321,
+                ..Default::default()
+            },
+        );
+        assert_eq!(p.max_flits(), 4321);
+        p.set_max_flits(99);
+        assert_eq!(p.max_flits(), 99);
+        p.set_max_flits(0); // clamped: a zero bound would divide by zero
+        assert_eq!(p.max_flits(), 1);
     }
 
     #[test]

@@ -112,6 +112,11 @@ pub struct ServingConfig {
     pub preempt: bool,
     /// Context-bucket granularity for decode-step memoization.
     pub ctx_bucket: usize,
+    /// Override of the cycle-sim volume-sampling bound applied to every
+    /// platform the fleet layer builds (`None` = the builder's default;
+    /// only observable under cycle-accurate cost probes). The CLI
+    /// `--max-flits` flag lands here for `serve` runs.
+    pub max_flits: Option<usize>,
     pub seed: u64,
 }
 
@@ -132,6 +137,7 @@ impl Default for ServingConfig {
             chunk_tokens: 256,
             preempt: false,
             ctx_bucket: 128,
+            max_flits: None,
             seed: 0x5EED,
         }
     }

@@ -38,6 +38,9 @@ pub struct Bencher {
     /// Named ratios (e.g. parallel-vs-serial speedups) carried into the
     /// machine-readable report.
     pub speedups: Vec<(String, f64)>,
+    /// Named absolute metrics (e.g. throughput in Mflit-hops/s) carried
+    /// into the machine-readable report.
+    pub metrics: Vec<(String, f64)>,
 }
 
 impl Bencher {
@@ -46,6 +49,7 @@ impl Bencher {
             name: name.to_string(),
             results: Vec::new(),
             speedups: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -77,6 +81,14 @@ impl Bencher {
         ratio
     }
 
+    /// Record a named absolute metric for the JSON report (and return
+    /// it) — throughputs and the like, where bigger is better but the
+    /// number is not a ratio of two benched labels.
+    pub fn note_metric(&mut self, label: &str, value: f64) -> f64 {
+        self.metrics.push((label.to_string(), value));
+        value
+    }
+
     /// Emit the machine-readable bench report (the `BENCH_*.json` perf
     /// trajectory): per-bench ns/iter (minimum over samples) plus any
     /// noted speedup ratios.
@@ -100,6 +112,14 @@ impl Bencher {
             out.push_str(&format!(
                 "    {{\"label\": \"{label}\", \"ratio\": {ratio:.3}}}{}\n",
                 if i + 1 < self.speedups.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"metrics\": [\n");
+        for (i, (label, value)) in self.metrics.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"label\": \"{label}\", \"value\": {value:.3}}}{}\n",
+                if i + 1 < self.metrics.len() { "," } else { "" }
             ));
         }
         out.push_str("  ]\n}\n");
@@ -205,6 +225,7 @@ mod tests {
         b.results.push(("fast_path".into(), 1.5e-3, 1.0e-5));
         b.results.push(("slow_path".into(), 4.5e-3, 2.0e-5));
         b.note_speedup("fast_vs_slow", 3.0);
+        b.note_metric("cycle_sim_mflit_hops_per_s", 42.5);
         let path = std::env::temp_dir().join("chiplet_bench_unit.json");
         b.write_json(path.to_str().unwrap()).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
@@ -216,6 +237,9 @@ mod tests {
         let sp = j.get("speedups").and_then(|s| s.as_arr()).unwrap();
         assert_eq!(sp.len(), 1);
         assert!((sp[0].get("ratio").and_then(|v| v.as_f64()).unwrap() - 3.0).abs() < 1e-9);
+        let mt = j.get("metrics").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(mt.len(), 1);
+        assert!((mt[0].get("value").and_then(|v| v.as_f64()).unwrap() - 42.5).abs() < 1e-9);
         let _ = std::fs::remove_file(&path);
     }
 }

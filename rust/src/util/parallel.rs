@@ -11,6 +11,12 @@
 //! - [`par_map_scratch`] additionally gives every worker a private
 //!   scratch value (reusable routing tables / accumulators), which is
 //!   what makes the evaluation hot path allocation-free per candidate.
+//! - [`par_map_owned`]: moves each item *into* the worker that claims it
+//!   and moves the result back out. This is the owned-transfer variant
+//!   for `Send + !Sync` values (e.g. `sim::Platform`, whose interior
+//!   `RefCell<CycleSim>` forbids sharing): a pipeline can build such a
+//!   value once, hand it through a sequential stage, then fan the
+//!   per-item work back out without ever aliasing it across threads.
 //! - `jobs == 1` short-circuits to a plain sequential loop on the caller
 //!   thread — no threads spawned, the exact serial code path.
 //!
@@ -19,6 +25,7 @@
 //! `--jobs` flag overrides both via [`set_default_jobs`].
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Resolved default job count; 0 means "not resolved yet".
 static DEFAULT_JOBS: AtomicUsize = AtomicUsize::new(0);
@@ -123,6 +130,70 @@ where
         .collect()
 }
 
+/// Owned-transfer parallel map preserving input order: `out[i] =
+/// f(items[i])`, where each item is *moved* into whichever worker claims
+/// its index (and each result moved back out).
+///
+/// Unlike [`par_map`], items only need `Send`, not `Sync` — this is the
+/// variant for values that are safe to hand between threads but not to
+/// share (interior mutability, e.g. a built `Platform`). Work
+/// distribution, deterministic output ordering and the `jobs == 1`
+/// exact-serial short-circuit all match [`par_map_scratch`]; the only
+/// extra cost is one uncontended mutex lock per item to transfer
+/// ownership out of the shared slot vector.
+pub fn par_map_owned<T, R, F>(jobs: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let jobs = jobs.max(1).min(items.len().max(1));
+    if jobs == 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let next = AtomicUsize::new(0);
+    let buckets: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..jobs)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= slots.len() {
+                            break;
+                        }
+                        let item = slots[i]
+                            .lock()
+                            .expect("owned-slot mutex poisoned")
+                            .take()
+                            .expect("index claimed twice");
+                        local.push((i, f(item)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel worker panicked"))
+            .collect()
+    });
+
+    let mut out: Vec<Option<R>> = Vec::with_capacity(slots.len());
+    out.resize_with(slots.len(), || None);
+    for bucket in buckets {
+        for (i, r) in bucket {
+            debug_assert!(out[i].is_none(), "index {i} claimed twice");
+            out[i] = Some(r);
+        }
+    }
+    out.into_iter()
+        .map(|r| r.expect("every index produced exactly once"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,6 +247,27 @@ mod tests {
         let per_worker = totals.lock().unwrap();
         assert_eq!(per_worker.iter().sum::<usize>(), items.len());
         assert!(per_worker.len() <= 3, "at most `jobs` scratch values");
+    }
+
+    #[test]
+    fn owned_map_moves_non_sync_items_and_preserves_order() {
+        // Cell is Send but !Sync: par_map could not accept these items
+        // at all — par_map_owned moves each one into exactly one worker
+        use std::cell::Cell;
+        let expect: Vec<u64> = (0..97).map(|x| x * 3 + 1).collect();
+        for jobs in [1, 2, 5] {
+            let items: Vec<Cell<u64>> = (0..97).map(Cell::new).collect();
+            let out = par_map_owned(jobs, items, |c| c.get() * 3 + 1);
+            assert_eq!(out, expect, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn owned_map_empty_and_single() {
+        let empty: Vec<String> = Vec::new();
+        assert!(par_map_owned(4, empty, |s| s).is_empty());
+        let one = vec![String::from("x")];
+        assert_eq!(par_map_owned(4, one, |s| s + "y"), vec!["xy".to_string()]);
     }
 
     #[test]

@@ -135,18 +135,79 @@ fn cluster_identical_across_job_counts() {
     for jobs in [2, 4] {
         let run = ClusterSim::new(&sys, &m, cfg.clone()).run_with_jobs(jobs).unwrap();
         assert_eq!(run.completed, reference.completed, "jobs={jobs}");
+        assert_eq!(run.rejected, reference.rejected, "jobs={jobs}");
+        assert_eq!(run.preemptions, reference.preemptions, "jobs={jobs}");
         assert_eq!(run.makespan_secs, reference.makespan_secs, "jobs={jobs}");
+        assert_eq!(run.goodput_req_s, reference.goodput_req_s, "jobs={jobs}");
         assert_eq!(
             run.throughput_tok_s, reference.throughput_tok_s,
             "jobs={jobs}"
         );
+        assert_eq!(run.ttft_p50_secs, reference.ttft_p50_secs, "jobs={jobs}");
         assert_eq!(run.ttft_p99_secs, reference.ttft_p99_secs, "jobs={jobs}");
         assert_eq!(run.tpot_p99_secs, reference.tpot_p99_secs, "jobs={jobs}");
+        assert_eq!(
+            run.mean_utilization, reference.mean_utilization,
+            "jobs={jobs}"
+        );
         for (a, b) in run.instances.iter().zip(reference.instances.iter()) {
             assert_eq!(a.requests, b.requests, "jobs={jobs}");
             assert_eq!(a.completed, b.completed, "jobs={jobs}");
             assert_eq!(a.ttft_p99_secs, b.ttft_p99_secs, "jobs={jobs}");
+            assert_eq!(a.tpot_p99_secs, b.tpot_p99_secs, "jobs={jobs}");
             assert_eq!(a.energy_per_req_j, b.energy_per_req_j, "jobs={jobs}");
+            assert_eq!(a.busy_secs, b.busy_secs, "jobs={jobs}");
+            assert_eq!(a.peak_kv_bytes, b.peak_kv_bytes, "jobs={jobs}");
+        }
+    }
+}
+
+#[test]
+fn cluster_identical_across_job_counts_under_preemption() {
+    // the single-build pipeline must stay bit-identical when instances
+    // run heterogeneous KV pools and the preemption path is active —
+    // the platforms moved into the workers are the same ones the
+    // estimate stage probed, so nothing may depend on worker schedule
+    // mirror of serving.rs::preemption_swaps_out_under_kv_pressure at
+    // the fleet level: a simultaneous burst JSQ-alternates 6 requests
+    // onto each instance; on the tight-pool instance, optimistic
+    // admission fits 4 prompts (4 x 0.5 footprints) but the batch grows
+    // toward 4 full footprints > 2.5 — swap-outs are inevitable
+    use chiplet_hi::sim::decode::kv_cache_bytes;
+    let sys = SystemConfig::s36();
+    let m = ModelZoo::bert_base();
+    let kv_full = kv_cache_bytes(&m, 64 + 64);
+    let cfg = ClusterConfig {
+        specs: vec![
+            InstanceSpec::of(Arch::Hi25D),
+            InstanceSpec {
+                kv_capacity_bytes: Some(2.5 * kv_full),
+                ..InstanceSpec::of(Arch::TransPimChiplet)
+            },
+        ],
+        policy: DispatchPolicy::Jsq,
+        serving: ServingConfig {
+            arrivals: ArrivalProcess::Trace(vec![0.0; 12]),
+            prompt_len: 64,
+            gen_tokens: 64,
+            max_batch: 4,
+            preempt: true,
+            ..Default::default()
+        },
+    };
+    let reference = ClusterSim::new(&sys, &m, cfg.clone()).run_with_jobs(1).unwrap();
+    assert!(
+        reference.preemptions >= 1,
+        "scenario must actually exercise the preemption path (got 0 swap-outs)"
+    );
+    for jobs in [2, 3] {
+        let run = ClusterSim::new(&sys, &m, cfg.clone()).run_with_jobs(jobs).unwrap();
+        assert_eq!(run.completed, reference.completed, "jobs={jobs}");
+        assert_eq!(run.preemptions, reference.preemptions, "jobs={jobs}");
+        assert_eq!(run.makespan_secs, reference.makespan_secs, "jobs={jobs}");
+        assert_eq!(run.ttft_p99_secs, reference.ttft_p99_secs, "jobs={jobs}");
+        for (a, b) in run.instances.iter().zip(reference.instances.iter()) {
+            assert_eq!(a.completed, b.completed, "jobs={jobs}");
             assert_eq!(a.busy_secs, b.busy_secs, "jobs={jobs}");
         }
     }

@@ -1,0 +1,52 @@
+//! Fleet-path construction contract: `ClusterSim::run_with_jobs` must
+//! build each instance's `Platform` exactly once (the estimate stage
+//! returns the platforms it probed; the simulate stage moves them into
+//! its workers via the owned-transfer parallel map — nothing rebuilds).
+//!
+//! This file is its own integration binary on purpose: the build
+//! counter is process-global, so no other test may run in this process
+//! and pollute the delta.
+
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::sim::{
+    platform_build_count, ArrivalProcess, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec,
+    ServingConfig,
+};
+
+#[test]
+fn fleet_builds_exactly_one_platform_per_instance() {
+    let sys = SystemConfig::s36();
+    let m = ModelZoo::bert_base();
+    let specs = vec![
+        InstanceSpec::of(Arch::Hi25D),
+        InstanceSpec::of(Arch::TransPimChiplet),
+        InstanceSpec::of(Arch::HaimaChiplet),
+    ];
+    let n = specs.len();
+    let cfg = ClusterConfig {
+        specs,
+        policy: DispatchPolicy::Jsq,
+        serving: ServingConfig {
+            arrivals: ArrivalProcess::Poisson {
+                rate_per_sec: 1.0e4,
+                num_requests: 12,
+            },
+            prompt_len: 64,
+            gen_tokens: 8,
+            max_batch: 4,
+            ..Default::default()
+        },
+    };
+    for jobs in [1, 4] {
+        let before = platform_build_count();
+        let fleet = ClusterSim::new(&sys, &m, cfg.clone()).run_with_jobs(jobs).unwrap();
+        let delta = platform_build_count() - before;
+        assert_eq!(
+            delta, n,
+            "jobs={jobs}: fleet run built {delta} platforms for {n} instances \
+             (estimate and simulate must share one build)"
+        );
+        assert_eq!(fleet.completed, 12, "jobs={jobs}");
+    }
+}
