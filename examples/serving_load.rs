@@ -7,7 +7,10 @@
 //! at the highest load; then scales out to a heterogeneous *fleet* of
 //! platforms behind a request router and sweeps the dispatch policies
 //! — the ROADMAP "serve heavy traffic from millions of users" scenario
-//! on top of the build-once Platform.
+//! on top of the build-once Platform. The final section runs the
+//! single-pass *streaming* fleet: lazy arrival generators with
+//! heavy-tailed lengths, P² sketch tails (O(1) sample memory), a
+//! load-watermark autoscaler and SLO-aware shedding.
 //!
 //! The (rate × arch) sweep grid runs on the shared worker pool
 //! (`CHIPLET_JOBS` to cap it) — each cell owns its platform, and the
@@ -21,11 +24,11 @@ use chiplet_hi::config::{ModelZoo, SystemConfig};
 use chiplet_hi::sim::cluster::estimate_service_secs;
 use chiplet_hi::sim::decode::kv_cache_bytes;
 use chiplet_hi::sim::{
-    ArrivalProcess, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec, Platform,
-    ServingConfig, ServingReport, ServingSim, SimOptions,
+    ArrivalProcess, AutoscaleConfig, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec,
+    LenDist, Platform, ServingConfig, ServingReport, ServingSim, SimOptions, StreamConfig,
 };
 use chiplet_hi::util::bench::Table;
-use chiplet_hi::util::parallel;
+use chiplet_hi::util::{parallel, SinkMode};
 
 fn main() {
     let sys = SystemConfig::s100();
@@ -199,4 +202,50 @@ fn main() {
         ]);
     }
     t.print();
+
+    // ---- streaming fleet: the same heterogeneous cluster driven by a
+    // lazy arrival generator (never materialized), heavy-tailed
+    // ShareGPT-style lengths, tails folded into P² sketches, with a
+    // watermark autoscaler and an SLO gate shedding arrivals predicted
+    // to bust the p99 target. The buffered-sample counter is the
+    // O(1)-memory receipt: it stays flat no matter the request count.
+    let streaming = ClusterConfig {
+        specs: specs.clone(),
+        policy: DispatchPolicy::Jsq,
+        serving: ServingConfig {
+            arrivals: ArrivalProcess::Poisson {
+                rate_per_sec: rate,
+                num_requests: 2000,
+            },
+            len_dist: LenDist::LogNormal { sigma: 1.2 },
+            sink: SinkMode::Sketch,
+            ..serving.clone()
+        },
+    };
+    let stream = StreamConfig {
+        autoscale: Some(AutoscaleConfig {
+            min_instances: 1,
+            max_instances: specs.len(),
+            high_watermark: 8.0,
+            low_watermark: 1.0,
+            cooldown_secs: 0.2,
+        }),
+        slo_ttft_secs: Some(50.0 * est_fast),
+    };
+    let fleet = ClusterSim::new(&sys, &model, streaming)
+        .run_streaming(&stream)
+        .expect("streaming fleet run");
+    println!(
+        "\nstreaming fleet (jsq, lognormal σ=1.2 lengths, P² sketch tails, autoscale, SLO gate):"
+    );
+    println!("{}", fleet.summary_line());
+    println!(
+        "  shed {} / scale-ups {} / scale-downs {} — peak buffered samples {} (vs {} exact), peak live requests {}",
+        fleet.shed,
+        fleet.scale_ups,
+        fleet.scale_downs,
+        fleet.samples_buffered_peak,
+        2 * fleet.requests,
+        fleet.peak_live_requests,
+    );
 }

@@ -4,19 +4,28 @@
 Compares the ns_per_iter of selected bench labels in a current report
 against an archived baseline and fails (exit 1) when any watched label
 regressed by more than the tolerance. Intended for CI: the baseline is
-the archived artifact of a previous generation (e.g. BENCH_3.json) and
-the current file is the one the bench smoke just emitted (BENCH_5.json).
+the archived artifact of a previous generation (e.g. BENCH_5.json) and
+the current file is the one the bench smoke just emitted (BENCH_6.json).
 When the baseline file is absent the check is skipped with exit 0 —
 fresh machines and forks have no trajectory to compare against.
 
+When both reports carry raw per-sample timings (`samples_ns`, emitted
+by the in-crate bench harness) with at least --min-samples entries on
+each side, a point slowdown beyond the tolerance is only treated as a
+regression if a one-sided Welch's t-test rejects "current is no slower
+than baseline" at --alpha: noisy containers routinely produce +30%
+point blips whose sample populations overlap completely. With fewer
+samples the gate falls back to the plain min-ratio comparison.
+
 Usage:
-    bench_diff.py --baseline BENCH_3.json --current BENCH_5.json \
+    bench_diff.py --baseline BENCH_5.json --current BENCH_6.json \
         --keys cycle_sim_score_phase,moo_eval_3gen_batch_jobs4 \
-        --tolerance 0.25
+        --tolerance 0.25 [--min-samples 5] [--alpha 0.05]
 """
 
 import argparse
 import json
+import math
 import os
 import shutil
 import sys
@@ -25,7 +34,92 @@ import sys
 def load_results(path):
     with open(path, encoding="utf-8") as fh:
         doc = json.load(fh)
-    return {r["label"]: float(r["ns_per_iter"]) for r in doc.get("results", [])}
+    point = {r["label"]: float(r["ns_per_iter"]) for r in doc.get("results", [])}
+    samples = {
+        r["label"]: [float(s) for s in r.get("samples_ns", [])]
+        for r in doc.get("results", [])
+    }
+    return point, samples
+
+
+def _betacf(a, b, x):
+    """Continued fraction for the regularized incomplete beta function
+    (Numerical Recipes 6.4) — enough precision for p-value gating."""
+    qab, qap, qam = a + b, a + 1.0, a - 1.0
+    c, d = 1.0, 1.0 - qab * x / qap
+    if abs(d) < 1e-30:
+        d = 1e-30
+    d = 1.0 / d
+    h = d
+    for m in range(1, 200):
+        m2 = 2 * m
+        aa = m * (b - m) * x / ((qam + m2) * (a + m2))
+        d = 1.0 + aa * d
+        if abs(d) < 1e-30:
+            d = 1e-30
+        c = 1.0 + aa / c
+        if abs(c) < 1e-30:
+            c = 1e-30
+        d = 1.0 / d
+        h *= d * c
+        aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2))
+        d = 1.0 + aa * d
+        if abs(d) < 1e-30:
+            d = 1e-30
+        c = 1.0 + aa / c
+        if abs(c) < 1e-30:
+            c = 1e-30
+        d = 1.0 / d
+        delta = d * c
+        h *= delta
+        if abs(delta - 1.0) < 1e-12:
+            break
+    return h
+
+
+def _betai(a, b, x):
+    """Regularized incomplete beta I_x(a, b)."""
+    if x <= 0.0:
+        return 0.0
+    if x >= 1.0:
+        return 1.0
+    ln_front = (
+        math.lgamma(a + b)
+        - math.lgamma(a)
+        - math.lgamma(b)
+        + a * math.log(x)
+        + b * math.log(1.0 - x)
+    )
+    front = math.exp(ln_front)
+    if x < (a + 1.0) / (a + b + 2.0):
+        return front * _betacf(a, b, x) / a
+    return 1.0 - front * _betacf(b, a, 1.0 - x) / b
+
+
+def welch_p_slower(base, cur):
+    """One-sided Welch's t-test p-value for H1: mean(cur) > mean(base).
+
+    Returns 0.0 when both populations are constant but the current one
+    is strictly slower (a degenerate but decisive case), 1.0 when the
+    current mean is not above the baseline mean.
+    """
+    nb, nc = len(base), len(cur)
+    mb = sum(base) / nb
+    mc = sum(cur) / nc
+    vb = sum((x - mb) ** 2 for x in base) / (nb - 1)
+    vc = sum((x - mc) ** 2 for x in cur) / (nc - 1)
+    if mc <= mb:
+        return 1.0
+    se2 = vb / nb + vc / nc
+    if se2 <= 0.0:
+        return 0.0  # constant samples, strictly slower mean
+    t = (mc - mb) / math.sqrt(se2)
+    # Welch–Satterthwaite degrees of freedom
+    df = se2 * se2 / (
+        (vb / nb) ** 2 / (nb - 1) + (vc / nc) ** 2 / (nc - 1)
+    )
+    # one-sided survival: P(T > t) = I_{df/(df+t^2)}(df/2, 1/2) / 2
+    return 0.5 * _betai(df / 2.0, 0.5, df / (df + t * t))
 
 
 def seed_baseline(current, baseline):
@@ -50,6 +144,24 @@ def main():
         help="allowed fractional slowdown (0.25 = fail beyond +25%%)",
     )
     ap.add_argument(
+        "--min-samples",
+        type=int,
+        default=5,
+        help=(
+            "minimum per-sample timings on BOTH sides to use the Welch "
+            "t-test gate; below this the plain min-ratio gate applies"
+        ),
+    )
+    ap.add_argument(
+        "--alpha",
+        type=float,
+        default=0.05,
+        help=(
+            "significance level: a beyond-tolerance slowdown only fails "
+            "when the one-sided Welch p-value is below alpha"
+        ),
+    )
+    ap.add_argument(
         "--archive-on-pass",
         action="store_true",
         help=(
@@ -69,8 +181,8 @@ def main():
         if args.archive_on_pass:
             seed_baseline(args.current, args.baseline)
         return 0
-    base = load_results(args.baseline)
-    cur = load_results(args.current)
+    base, base_samples = load_results(args.baseline)
+    cur, cur_samples = load_results(args.current)
 
     failed = False
     for key in [k.strip() for k in args.keys.split(",") if k.strip()]:
@@ -84,8 +196,24 @@ def main():
         ratio = cur[key] / base[key] if base[key] > 0 else float("inf")
         verdict = "OK"
         if ratio > 1.0 + args.tolerance:
-            verdict = f"REGRESSION (> +{args.tolerance:.0%})"
-            failed = True
+            bs = base_samples.get(key, [])
+            cs = cur_samples.get(key, [])
+            if len(bs) >= args.min_samples and len(cs) >= args.min_samples:
+                p = welch_p_slower(bs, cs)
+                if p < args.alpha:
+                    verdict = (
+                        f"REGRESSION (> +{args.tolerance:.0%}, "
+                        f"Welch p={p:.4f} < {args.alpha})"
+                    )
+                    failed = True
+                else:
+                    verdict = (
+                        f"noisy but not significant (Welch p={p:.4f} "
+                        f">= {args.alpha}), letting it pass"
+                    )
+            else:
+                verdict = f"REGRESSION (> +{args.tolerance:.0%})"
+                failed = True
         print(
             f"bench-diff: {key}: {base[key]:.1f} ns -> {cur[key]:.1f} ns "
             f"({ratio:.2f}x)  {verdict}"

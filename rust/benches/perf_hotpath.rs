@@ -3,9 +3,11 @@
 //! Platform payoff (amortized setup vs per-call rebuild), the parallel
 //! + memoized MOO batch evaluator vs the pre-PR serial path, and the
 //! flat-arena cycle-sim throughput (exact Mflit-hops/s) plus the
-//! single-build fleet serving wall clock. Emits the machine-readable
-//! `BENCH_5.json` perf trajectory (labels are kept stable across
-//! `BENCH_*` generations so CI can diff against the archived baseline).
+//! single-build fleet serving wall clock and the single-pass streaming
+//! fleet (P² sketch sinks) sustained request rate. Emits the
+//! machine-readable `BENCH_6.json` perf trajectory (labels are kept
+//! stable across `BENCH_*` generations so CI can diff against the
+//! archived baseline).
 
 use chiplet_hi::arch::{Placement, SfcKind};
 use chiplet_hi::baselines::Arch;
@@ -17,10 +19,10 @@ use chiplet_hi::noi::{analytic, CycleSim, RoutingTable, Topology};
 use chiplet_hi::sim::engine::chiplets_for;
 use chiplet_hi::sim::{
     simulate, ArrivalProcess, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec, Platform,
-    ServingConfig, ServingSim, SimOptions,
+    ServingConfig, ServingSim, SimOptions, StreamConfig,
 };
 use chiplet_hi::util::bench::Bencher;
-use chiplet_hi::util::Rng;
+use chiplet_hi::util::{Rng, SinkMode};
 
 fn main() {
     let mut b = Bencher::new("perf_hotpath");
@@ -184,9 +186,41 @@ fn main() {
         .unwrap_or(f64::NAN);
     b.note_metric("fleet_serve_2inst_jsq_32req_ms", fleet_secs * 1e3);
 
+    // streaming fleet: the single-pass event-loop engine with P² tail
+    // sketches — the per-request cost of the 10M-request mode, measured
+    // at bench scale and tracked as sustained requests/s end-to-end
+    // (platform build included; same 2-instance JSQ fleet as above)
+    let stream_n = 2000;
+    let stream_cfg = ClusterConfig {
+        specs: vec![InstanceSpec::of(Arch::Hi25D), InstanceSpec::of(Arch::Hi25D)],
+        policy: DispatchPolicy::Jsq,
+        serving: ServingConfig {
+            arrivals: ArrivalProcess::Poisson {
+                rate_per_sec: 1.0e4,
+                num_requests: stream_n,
+            },
+            prompt_len: 64,
+            gen_tokens: 16,
+            max_batch: 8,
+            sink: SinkMode::Sketch,
+            ..Default::default()
+        },
+    };
+    let stream_label = "fleet_streaming_2inst_jsq_2000req";
+    b.bench(stream_label, || {
+        let c = ClusterSim::new(&sys, &gpt, stream_cfg.clone());
+        std::hint::black_box(c.run_streaming(&StreamConfig::default()).unwrap());
+    });
+    let stream_secs = b.min_secs(stream_label).unwrap_or(f64::NAN);
+    let reqs_per_s = b.note_metric("fleet_streaming_reqs_per_s", stream_n as f64 / stream_secs);
+    println!(
+        "\nstreaming fleet: {reqs_per_s:.0} req/s sustained \
+         (2 instances, jsq, P2 sketch sinks, {stream_n} requests)"
+    );
+
     // machine-readable perf trajectory (archived by CI)
-    match b.write_json("BENCH_5.json") {
-        Ok(()) => println!("\nwrote BENCH_5.json"),
-        Err(e) => eprintln!("\nfailed to write BENCH_5.json: {e}"),
+    match b.write_json("BENCH_6.json") {
+        Ok(()) => println!("\nwrote BENCH_6.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_6.json: {e}"),
     }
 }

@@ -16,6 +16,14 @@
 //!              [--arch hi,transpim,...] [--json out.json]
 //!              [--cycle-accurate [--max-flits N]]  (flit-level probes)
 //!              [--instances N --policy rr|jsq|least-kv|p2c]  (fleet mode)
+//!              [--streaming]  (P2-sketch tails, O(1) sample memory —
+//!                             the 10M-request mode)
+//!              [--heavy-tail SIGMA]  (lognormal prompt/gen lengths)
+//!              [--diurnal-amp A --diurnal-period SECS]  (rate modulation)
+//!              [--tenants rate:prompt:gen,...]  (multi-tenant mix)
+//!              [--autoscale [--min-instances 1] [--max-instances N]
+//!               [--scale-up 12] [--scale-down 2] [--cooldown-ms 500]]
+//!              [--slo-ttft-ms MS]  (shed arrivals predicted to bust it)
 //!   endurance  [--seq 4096]                           (§4.4 analysis)
 //!   functional [--layers 2] [--artifacts artifacts]   (end-to-end driver)
 //!   info                                              (Table 1-3 dump)
@@ -32,9 +40,10 @@ use chiplet_hi::endurance;
 use chiplet_hi::model::kernels::Workload;
 use chiplet_hi::moo::{amosa, design::NoiDesign, nsga2, stage, Evaluator, ParetoArchive};
 use chiplet_hi::sim::{
-    self, ArrivalProcess, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec, Platform,
-    ServingConfig, ServingReport, ServingSim, SimOptions,
+    self, ArrivalProcess, AutoscaleConfig, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec,
+    LenDist, Platform, ServingConfig, ServingReport, ServingSim, SimOptions, StreamConfig, Tenant,
 };
+use chiplet_hi::util::SinkMode;
 use chiplet_hi::util::bench::Table;
 use chiplet_hi::util::cli::Args;
 use chiplet_hi::util::error::{Context, Result};
@@ -314,11 +323,67 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 ..Default::default()
             };
             let design = design_from(args)?;
-            let cfg = ServingConfig {
-                arrivals: ArrivalProcess::Poisson {
-                    rate_per_sec: args.get_f64("rate", 64.0),
-                    num_requests: args.get_usize("requests", 64),
+            let nreq = args.get_usize("requests", 64);
+            let rate = args.get_f64("rate", 64.0);
+            // workload shaping: --tenants wins, then --diurnal-amp,
+            // else plain Poisson (the legacy default, bit-identical)
+            let tenants: Vec<Tenant> = args
+                .get_list("tenants")
+                .iter()
+                .map(|spec| {
+                    let parts: Vec<&str> = spec.split(':').collect();
+                    if parts.len() != 3 {
+                        return Err(anyhow!(
+                            "--tenants entry '{spec}' is not rate:prompt:gen"
+                        ));
+                    }
+                    Ok(Tenant {
+                        rate_per_sec: parts[0]
+                            .parse()
+                            .with_context(|| format!("tenant rate in '{spec}'"))?,
+                        prompt_len: parts[1]
+                            .parse()
+                            .with_context(|| format!("tenant prompt in '{spec}'"))?,
+                        gen_tokens: parts[2]
+                            .parse()
+                            .with_context(|| format!("tenant gen in '{spec}'"))?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let diurnal_amp = args.get_f64("diurnal-amp", 0.0);
+            let arrivals = if !tenants.is_empty() {
+                ArrivalProcess::MultiTenant {
+                    tenants,
+                    num_requests: nreq,
+                }
+            } else if diurnal_amp > 0.0 {
+                ArrivalProcess::Modulated {
+                    base_rate_per_sec: rate,
+                    amplitude: diurnal_amp,
+                    period_secs: args.get_f64("diurnal-period", 60.0),
+                    num_requests: nreq,
+                }
+            } else {
+                ArrivalProcess::Poisson {
+                    rate_per_sec: rate,
+                    num_requests: nreq,
+                }
+            };
+            let len_dist = match args.get("heavy-tail") {
+                Some(v) => LenDist::LogNormal {
+                    sigma: v.parse().with_context(|| "--heavy-tail sigma")?,
                 },
+                None => LenDist::Fixed,
+            };
+            let sink = if args.has_flag("streaming") {
+                SinkMode::Sketch
+            } else {
+                SinkMode::Exact
+            };
+            let cfg = ServingConfig {
+                arrivals,
+                len_dist,
+                sink,
                 prompt_len: args.get_usize("prompt", 128),
                 gen_tokens: args.get_usize("tokens", 64),
                 max_batch: args.get_usize("batch", 16),
@@ -373,7 +438,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                         kv_capacity_bytes: None,
                     })
                     .collect();
-                let fleet = ClusterSim::new(
+                let sim = ClusterSim::new(
                     &sys,
                     &model,
                     ClusterConfig {
@@ -381,8 +446,32 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                         policy,
                         serving: cfg,
                     },
-                )
-                .run()?;
+                );
+                // --streaming / --autoscale / --slo-ttft-ms select the
+                // single-pass event-loop fleet; plain fleets keep the
+                // buffered exact-quantile path (the test oracle)
+                let streaming = args.has_flag("streaming")
+                    || args.has_flag("autoscale")
+                    || args.get("slo-ttft-ms").is_some();
+                let fleet = if streaming {
+                    let stream = StreamConfig {
+                        autoscale: args.has_flag("autoscale").then(|| AutoscaleConfig {
+                            min_instances: args.get_usize("min-instances", 1),
+                            max_instances: args.get_usize("max-instances", instances),
+                            high_watermark: args.get_f64("scale-up", 12.0),
+                            low_watermark: args.get_f64("scale-down", 2.0),
+                            cooldown_secs: args.get_f64("cooldown-ms", 500.0) / 1e3,
+                        }),
+                        slo_ttft_secs: args
+                            .get("slo-ttft-ms")
+                            .map(|v| v.parse::<f64>().map(|ms| ms / 1e3))
+                            .transpose()
+                            .with_context(|| "parsing --slo-ttft-ms")?,
+                    };
+                    sim.run_streaming(&stream)?
+                } else {
+                    sim.run()?
+                };
                 let mut t = Table::new(
                     &format!("fleet serving: {instances} instances, {} dispatch", fleet.policy),
                     &["inst", "arch", "req", "done", "tok/s", "TTFT p99 ms", "util %", "rej", "pre"],
@@ -402,6 +491,16 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 }
                 t.print();
                 println!("{}", fleet.summary_line());
+                if streaming {
+                    println!(
+                        "streaming: {} sink, shed {}, scale-ups {}, scale-downs {}, peak buffered samples {}",
+                        fleet.sink,
+                        fleet.shed,
+                        fleet.scale_ups,
+                        fleet.scale_downs,
+                        fleet.samples_buffered_peak,
+                    );
+                }
                 if let Some(path) = args.get("json") {
                     std::fs::write(path, fleet.to_json())
                         .with_context(|| format!("writing fleet report to {path}"))?;
@@ -530,6 +629,12 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             );
             println!(
                 "fleet serving: `serve --instances N --policy jsq --arch hi,transpim [--chunked-prefill] [--preempt] [--json out.json]`"
+            );
+            println!(
+                "streaming serving: `serve --requests 10000000 --streaming [--heavy-tail 1.5] [--diurnal-amp 0.5 --diurnal-period 60] [--tenants rate:prompt:gen,...]`"
+            );
+            println!(
+                "autoscaling fleet: `serve --instances N --autoscale [--min-instances 1] [--max-instances N] [--scale-up 12] [--scale-down 2] [--cooldown-ms 500] [--slo-ttft-ms 250]`"
             );
             println!("global flags: --jobs N (parallel worker cap; CHIPLET_JOBS env)");
             println!("see README.md for usage");

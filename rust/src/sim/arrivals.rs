@@ -1,0 +1,442 @@
+//! Lazy, seeded arrival generation for the serving pipeline.
+//!
+//! [`ArrivalProcess::times`] used to materialize every arrival up
+//! front, which caps a run at whatever fits in RAM. [`ArrivalGen`] is
+//! the streaming replacement: an iterator of [`ArrivalEvent`]s (time +
+//! per-request prompt/generation lengths) produced on demand from a
+//! seed, so a 10M-request trace costs O(1) memory. `times` survives as
+//! an eager wrapper for the legacy paths and is bit-identical to the
+//! pre-streaming draws (same PRNG stream, same arithmetic).
+//!
+//! Length distributions draw from a *separate* PRNG stream
+//! (`seed ^ LEN_SALT`), so switching [`LenDist::Fixed`] to
+//! [`LenDist::LogNormal`] reshapes request sizes without perturbing a
+//! single arrival time — load sweeps stay comparable across length
+//! regimes, and the jobs=1-vs-N determinism contract is untouched.
+
+use crate::util::Rng;
+
+/// Salt for the length-distribution PRNG stream ("LEN_SALT" in ASCII):
+/// arrival times and request lengths never share draws.
+pub const LEN_SALT: u64 = 0x4C45_4E5F_5341_4C54;
+
+/// One arriving request: time plus its prompt/generation lengths.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalEvent {
+    pub t: f64,
+    pub prompt: usize,
+    pub gen: usize,
+}
+
+/// One tenant lane of a [`ArrivalProcess::MultiTenant`] mix: its own
+/// Poisson arrival stream and its own fixed request shape.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    pub rate_per_sec: f64,
+    pub prompt_len: usize,
+    pub gen_tokens: usize,
+}
+
+/// Per-request prompt/generation length distribution, anchored at the
+/// serving config's `prompt_len`/`gen_tokens` as the median.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub enum LenDist {
+    /// Every request uses exactly the configured lengths (the
+    /// pre-streaming behavior).
+    #[default]
+    Fixed,
+    /// Heavy-tailed ShareGPT-style lengths: `median * exp(sigma * z)`,
+    /// z standard normal, clamped to `[1, 8 * median]` and quantized to
+    /// a `median/8` bucket so cost-probe memoization stays bounded.
+    LogNormal { sigma: f64 },
+}
+
+impl LenDist {
+    fn sample(&self, rng: &mut Rng, prompt_median: usize, gen_median: usize) -> (usize, usize) {
+        match self {
+            LenDist::Fixed => (prompt_median, gen_median),
+            LenDist::LogNormal { sigma } => (
+                lognormal_len(rng, prompt_median, *sigma),
+                lognormal_len(rng, gen_median, *sigma),
+            ),
+        }
+    }
+}
+
+/// One heavy-tailed length draw. Always consumes exactly one normal
+/// draw so the length stream stays aligned across median choices
+/// (including `median == 0`, which pins the length to 0 — e.g.
+/// prefill-only requests keep `gen = 0` under any distribution).
+fn lognormal_len(rng: &mut Rng, median: usize, sigma: f64) -> usize {
+    let z = rng.normal();
+    if median == 0 {
+        return 0;
+    }
+    let raw = (median as f64 * (sigma * z).exp()).clamp(1.0, 8.0 * median as f64);
+    let bucket = (median / 8).max(1);
+    (raw as usize).max(1).div_ceil(bucket) * bucket
+}
+
+/// How requests arrive.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Poisson process at `rate_per_sec`, `num_requests` total.
+    Poisson { rate_per_sec: f64, num_requests: usize },
+    /// Explicit arrival times in seconds (sorted internally).
+    Trace(Vec<f64>),
+    /// Bursty/diurnal Poisson: instantaneous rate
+    /// `base * (1 + amplitude * sin(2*pi*t / period))`, amplitude
+    /// clamped to [0, 0.95] so the rate never collapses to zero.
+    Modulated {
+        base_rate_per_sec: f64,
+        amplitude: f64,
+        period_secs: f64,
+        num_requests: usize,
+    },
+    /// Multi-tenant mix: independent Poisson lanes (one seeded PRNG
+    /// stream per tenant) merged in time order, each carrying its own
+    /// request shape. Ties break toward the lowest tenant index.
+    MultiTenant {
+        tenants: Vec<Tenant>,
+        num_requests: usize,
+    },
+    /// Explicit per-request events — the fleet router hands each
+    /// instance its assignment through this (sorted internally, stable
+    /// on ties).
+    Events(Vec<ArrivalEvent>),
+}
+
+impl ArrivalProcess {
+    /// Materialize the arrival times (sorted, deterministic in `seed`).
+    /// Eager wrapper over [`ArrivalProcess::events`]; NaN-safe
+    /// (`total_cmp`) for explicit traces.
+    pub fn times(&self, seed: u64) -> Vec<f64> {
+        self.events(seed, 1, 0, &LenDist::Fixed).map(|e| e.t).collect()
+    }
+
+    /// Lazy event stream: deterministic in `seed`, O(1) memory for the
+    /// generated variants. `default_prompt`/`default_gen` anchor the
+    /// length distribution for variants that don't carry explicit
+    /// lengths; `MultiTenant` and `Events` ignore `len_dist` (their
+    /// lengths are explicit).
+    pub fn events(
+        &self,
+        seed: u64,
+        default_prompt: usize,
+        default_gen: usize,
+        len_dist: &LenDist,
+    ) -> ArrivalGen {
+        let inner = match self {
+            ArrivalProcess::Poisson {
+                rate_per_sec,
+                num_requests,
+            } => GenInner::Poisson {
+                rng: Rng::new(seed),
+                rate: rate_per_sec.max(1e-9),
+                t: 0.0,
+                left: *num_requests,
+            },
+            ArrivalProcess::Trace(ts) => {
+                let mut ts = ts.clone();
+                ts.sort_by(f64::total_cmp);
+                GenInner::Trace(ts.into_iter())
+            }
+            ArrivalProcess::Modulated {
+                base_rate_per_sec,
+                amplitude,
+                period_secs,
+                num_requests,
+            } => GenInner::Modulated {
+                rng: Rng::new(seed),
+                base: base_rate_per_sec.max(1e-9),
+                amp: amplitude.clamp(0.0, 0.95),
+                period: period_secs.max(1e-9),
+                t: 0.0,
+                left: *num_requests,
+            },
+            ArrivalProcess::MultiTenant {
+                tenants,
+                num_requests,
+            } => {
+                let lanes: Vec<Lane> = tenants
+                    .iter()
+                    .enumerate()
+                    .map(|(k, ten)| {
+                        let mut rng =
+                            Rng::new(seed ^ (k as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                        let rate = ten.rate_per_sec.max(1e-9);
+                        let next_t = -(1.0 - rng.f64()).ln() / rate;
+                        Lane {
+                            rng,
+                            rate,
+                            next_t,
+                            prompt: ten.prompt_len,
+                            gen: ten.gen_tokens,
+                        }
+                    })
+                    .collect();
+                GenInner::MultiTenant {
+                    left: if lanes.is_empty() { 0 } else { *num_requests },
+                    lanes,
+                }
+            }
+            ArrivalProcess::Events(evs) => {
+                let mut evs = evs.clone();
+                evs.sort_by(|a, b| a.t.total_cmp(&b.t));
+                GenInner::Events(evs.into_iter())
+            }
+        };
+        ArrivalGen {
+            inner,
+            len_rng: Rng::new(seed ^ LEN_SALT),
+            len_dist: len_dist.clone(),
+            prompt_median: default_prompt,
+            gen_median: default_gen,
+        }
+    }
+}
+
+struct Lane {
+    rng: Rng,
+    rate: f64,
+    next_t: f64,
+    prompt: usize,
+    gen: usize,
+}
+
+enum GenInner {
+    Poisson {
+        rng: Rng,
+        rate: f64,
+        t: f64,
+        left: usize,
+    },
+    Modulated {
+        rng: Rng,
+        base: f64,
+        amp: f64,
+        period: f64,
+        t: f64,
+        left: usize,
+    },
+    Trace(std::vec::IntoIter<f64>),
+    MultiTenant {
+        lanes: Vec<Lane>,
+        left: usize,
+    },
+    Events(std::vec::IntoIter<ArrivalEvent>),
+}
+
+/// Lazy iterator of [`ArrivalEvent`]s — see [`ArrivalProcess::events`].
+pub struct ArrivalGen {
+    inner: GenInner,
+    len_rng: Rng,
+    len_dist: LenDist,
+    prompt_median: usize,
+    gen_median: usize,
+}
+
+impl Iterator for ArrivalGen {
+    type Item = ArrivalEvent;
+
+    fn next(&mut self) -> Option<ArrivalEvent> {
+        let t = match &mut self.inner {
+            GenInner::Poisson { rng, rate, t, left } => {
+                if *left == 0 {
+                    return None;
+                }
+                *left -= 1;
+                *t += -(1.0 - rng.f64()).ln() / *rate;
+                *t
+            }
+            GenInner::Modulated {
+                rng,
+                base,
+                amp,
+                period,
+                t,
+                left,
+            } => {
+                if *left == 0 {
+                    return None;
+                }
+                *left -= 1;
+                let phase = 2.0 * std::f64::consts::PI * *t / *period;
+                let rate = *base * (1.0 + *amp * phase.sin());
+                *t += -(1.0 - rng.f64()).ln() / rate;
+                *t
+            }
+            GenInner::Trace(ts) => ts.next()?,
+            GenInner::MultiTenant { lanes, left } => {
+                if *left == 0 {
+                    return None;
+                }
+                *left -= 1;
+                // earliest lane wins; ties break to the lowest index
+                let mut best = 0;
+                for k in 1..lanes.len() {
+                    if lanes[k].next_t < lanes[best].next_t {
+                        best = k;
+                    }
+                }
+                let lane = &mut lanes[best];
+                let at = lane.next_t;
+                lane.next_t += -(1.0 - lane.rng.f64()).ln() / lane.rate;
+                return Some(ArrivalEvent {
+                    t: at,
+                    prompt: lane.prompt,
+                    gen: lane.gen,
+                });
+            }
+            GenInner::Events(evs) => return evs.next(),
+        };
+        let (prompt, gen) = self
+            .len_dist
+            .sample(&mut self.len_rng, self.prompt_median, self.gen_median);
+        Some(ArrivalEvent { t, prompt, gen })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_events_match_legacy_times_bitwise() {
+        // the lazy iterator must reproduce the historical eager draws
+        // exactly: same PRNG stream, same `t += -(1-u).ln()/rate` chain
+        let p = ArrivalProcess::Poisson {
+            rate_per_sec: 120.0,
+            num_requests: 200,
+        };
+        let mut rng = Rng::new(0xD15C);
+        let mut t = 0.0f64;
+        let legacy: Vec<f64> = (0..200)
+            .map(|_| {
+                t += -(1.0 - rng.f64()).ln() / 120.0;
+                t
+            })
+            .collect();
+        assert_eq!(p.times(0xD15C), legacy);
+        let lazy: Vec<f64> = p.events(0xD15C, 64, 16, &LenDist::Fixed).map(|e| e.t).collect();
+        assert_eq!(lazy, legacy);
+    }
+
+    #[test]
+    fn fixed_lengths_use_the_medians() {
+        let p = ArrivalProcess::Poisson {
+            rate_per_sec: 10.0,
+            num_requests: 5,
+        };
+        for ev in p.events(7, 128, 32, &LenDist::Fixed) {
+            assert_eq!((ev.prompt, ev.gen), (128, 32));
+        }
+    }
+
+    #[test]
+    fn lognormal_lengths_leave_arrival_times_untouched() {
+        // lengths come from a salted side stream: switching the length
+        // distribution must not move a single arrival
+        let p = ArrivalProcess::Poisson {
+            rate_per_sec: 50.0,
+            num_requests: 300,
+        };
+        let fixed: Vec<f64> = p.events(42, 128, 32, &LenDist::Fixed).map(|e| e.t).collect();
+        let heavy: Vec<f64> = p
+            .events(42, 128, 32, &LenDist::LogNormal { sigma: 1.5 })
+            .map(|e| e.t)
+            .collect();
+        assert_eq!(fixed, heavy);
+    }
+
+    #[test]
+    fn lognormal_lengths_are_bounded_and_heavy_tailed() {
+        let p = ArrivalProcess::Poisson {
+            rate_per_sec: 50.0,
+            num_requests: 2000,
+        };
+        let evs: Vec<ArrivalEvent> = p.events(9, 128, 16, &LenDist::LogNormal { sigma: 1.5 }).collect();
+        let mut distinct = std::collections::HashSet::new();
+        for ev in &evs {
+            assert!((1..=8 * 128).contains(&ev.prompt));
+            assert!((1..=8 * 16).contains(&ev.gen));
+            distinct.insert(ev.prompt);
+        }
+        assert!(distinct.len() > 5, "sigma=1.5 must actually spread lengths");
+        // zero generation budget stays zero under any distribution
+        let zero_gen = p.events(9, 128, 0, &LenDist::LogNormal { sigma: 1.5 });
+        assert!(zero_gen.take(50).all(|e| e.gen == 0));
+    }
+
+    #[test]
+    fn modulated_rate_is_monotone_and_deterministic() {
+        let p = ArrivalProcess::Modulated {
+            base_rate_per_sec: 100.0,
+            amplitude: 0.8,
+            period_secs: 1.0,
+            num_requests: 500,
+        };
+        let a: Vec<f64> = p.events(3, 64, 8, &LenDist::Fixed).map(|e| e.t).collect();
+        let b: Vec<f64> = p.events(3, 64, 8, &LenDist::Fixed).map(|e| e.t).collect();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 500);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "times must be sorted");
+        // modulation actually modulates: inter-arrival spread far wider
+        // than a flat Poisson's at the same mean would center
+        let flat = ArrivalProcess::Poisson {
+            rate_per_sec: 100.0,
+            num_requests: 500,
+        };
+        let f: Vec<f64> = flat.events(3, 64, 8, &LenDist::Fixed).map(|e| e.t).collect();
+        assert_ne!(a, f, "amplitude 0.8 must reshape the stream");
+    }
+
+    #[test]
+    fn multi_tenant_merge_is_sorted_with_per_tenant_shapes() {
+        let p = ArrivalProcess::MultiTenant {
+            tenants: vec![
+                Tenant {
+                    rate_per_sec: 200.0,
+                    prompt_len: 32,
+                    gen_tokens: 4,
+                },
+                Tenant {
+                    rate_per_sec: 50.0,
+                    prompt_len: 512,
+                    gen_tokens: 64,
+                },
+            ],
+            num_requests: 400,
+        };
+        let evs: Vec<ArrivalEvent> = p.events(11, 128, 16, &LenDist::Fixed).collect();
+        assert_eq!(evs.len(), 400);
+        assert!(evs.windows(2).all(|w| w[0].t <= w[1].t), "merged stream sorted");
+        let fast = evs.iter().filter(|e| e.prompt == 32 && e.gen == 4).count();
+        let slow = evs.iter().filter(|e| e.prompt == 512 && e.gen == 64).count();
+        assert_eq!(fast + slow, 400, "every event carries a tenant shape");
+        assert!(fast > slow, "the 4x-rate tenant must dominate the mix");
+    }
+
+    #[test]
+    fn trace_and_events_sort_and_respect_lengths() {
+        let tr = ArrivalProcess::Trace(vec![0.5, 0.0, 0.25]);
+        let ts: Vec<f64> = tr.events(1, 64, 8, &LenDist::Fixed).map(|e| e.t).collect();
+        assert_eq!(ts, vec![0.0, 0.25, 0.5]);
+        let evp = ArrivalProcess::Events(vec![
+            ArrivalEvent {
+                t: 0.2,
+                prompt: 16,
+                gen: 2,
+            },
+            ArrivalEvent {
+                t: 0.1,
+                prompt: 8,
+                gen: 1,
+            },
+        ]);
+        let evs: Vec<ArrivalEvent> = evp.events(1, 64, 8, &LenDist::LogNormal { sigma: 2.0 }).collect();
+        // explicit events keep their own lengths; len_dist is ignored
+        assert_eq!(evs[0], ArrivalEvent { t: 0.1, prompt: 8, gen: 1 });
+        assert_eq!(evs[1], ArrivalEvent { t: 0.2, prompt: 16, gen: 2 });
+    }
+}

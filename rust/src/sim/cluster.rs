@@ -4,9 +4,9 @@
 //! "millions of users" scale-out step (group-level parallelism across
 //! heterogeneous compute units à la Hemlet, arXiv 2511.15397).
 //!
-//! One shared arrival stream (the same seeded Poisson/trace process a
-//! single [`ServingSim`] consumes) is dispatched request-by-request by
-//! a [`DispatchPolicy`]. The router acts on *estimated* instance state,
+//! One shared arrival stream (the same seeded process a single
+//! [`ServingSim`] consumes) is dispatched request-by-request by a
+//! [`DispatchPolicy`]. The router acts on *estimated* instance state,
 //! the way a real front-end does: each instance is modeled as
 //! `max_batch` deterministic servers with a per-instance service-time
 //! estimate probed from its actual platform (prefill + decode costs),
@@ -15,11 +15,25 @@
 //! arrival order, so the assignment — and therefore the whole fleet
 //! simulation — is deterministic and independent of `--jobs`.
 //!
-//! After dispatch, every instance runs its assigned sub-trace through
-//! the full request-level engine (scheduler, KV accounting, preemption
-//! — whatever the shared [`ServingConfig`] enables) on the shared
-//! worker pool, and the per-request samples are merged into fleet-level
-//! goodput, utilization and TTFT/TPOT tails.
+//! Two execution modes share that router model:
+//!
+//! - [`ClusterSim::run_with_jobs`] — the *buffered oracle*: dispatch the
+//!   whole stream up front, run every instance's sub-trace through the
+//!   full request-level engine on the shared worker pool with exact
+//!   sample buffering, and merge per-request samples into fleet tails.
+//!   Uniform-length workloads route through the scalar
+//!   [`route_requests`] (pinned by the golden test below); workloads
+//!   whose requests carry their own lengths (heavy-tailed `len_dist`,
+//!   multi-tenant mixes, explicit events) route per event.
+//! - [`ClusterSim::run_streaming`] — the *production* path: one pass
+//!   over the lazy arrival stream, engines driven incrementally
+//!   (`push_request`/`advance_until`), completions folded straight into
+//!   fleet-level [`SampleSink`]s. Memory is O(live requests + sketches)
+//!   no matter how many requests flow. This is also where fleet
+//!   *elasticity* lives: optional autoscaling (instances join/leave on
+//!   load watermarks, with the router re-anchored to the active set)
+//!   and SLO-aware admission (arrivals whose predicted TTFT busts the
+//!   target are shed at the front door to protect the served tail).
 //!
 //! Each instance's [`Platform`] is built **exactly once** and threaded
 //! through the whole estimate → dispatch → simulate pipeline: the
@@ -38,8 +52,11 @@ use crate::moo::design::NoiDesign;
 use crate::sim::decode::{decode_step_on, kv_cache_bytes};
 use crate::sim::engine::SimOptions;
 use crate::sim::platform::Platform;
-use crate::sim::serving::{ArrivalProcess, ServingConfig, ServingReport, ServingSim};
+use crate::sim::serving::{
+    ArrivalEvent, ArrivalProcess, LenDist, ServingConfig, ServingReport, ServingSim,
+};
 use crate::util::error::Result;
+use crate::util::sketch::{SampleSink, SinkMode};
 use crate::util::stats::percentile;
 use crate::util::{parallel, Rng};
 
@@ -111,6 +128,50 @@ impl InstanceSpec {
     }
 }
 
+/// Fleet elasticity knobs for [`ClusterSim::run_streaming`]. The
+/// watermarks are *outstanding requests per active instance* under the
+/// router's virtual-server model; crossing the high watermark activates
+/// the lowest-index parked instance, dropping below the low watermark
+/// parks the most recently activated one (it keeps draining what it
+/// already holds — only new dispatches stop).
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Never park below this many active instances.
+    pub min_instances: usize,
+    /// Never activate beyond this many (clamped to the spec count).
+    pub max_instances: usize,
+    /// Scale up when outstanding-per-active exceeds this.
+    pub high_watermark: f64,
+    /// Scale down when outstanding-per-active falls below this.
+    pub low_watermark: f64,
+    /// Minimum simulated seconds between scaling actions.
+    pub cooldown_secs: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_instances: 1,
+            max_instances: usize::MAX,
+            high_watermark: 12.0,
+            low_watermark: 2.0,
+            cooldown_secs: 0.5,
+        }
+    }
+}
+
+/// Streaming-mode scenario knobs (both off by default: the streaming
+/// run then behaves like the buffered fleet, just in O(1) memory).
+#[derive(Debug, Clone, Default)]
+pub struct StreamConfig {
+    /// Elastic fleet sizing; `None` keeps every instance active.
+    pub autoscale: Option<AutoscaleConfig>,
+    /// Shed arrivals whose *predicted* TTFT (virtual queue wait plus
+    /// this instance's prefill) exceeds the target — protects the p99
+    /// of what is actually served.
+    pub slo_ttft_secs: Option<f64>,
+}
+
 /// Fleet scenario: instances + router policy + the shared workload.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -130,6 +191,12 @@ pub struct FleetReport {
     pub completed: usize,
     pub rejected: usize,
     pub preemptions: usize,
+    /// Arrivals refused at the front door by the SLO admission gate
+    /// (streaming mode only; 0 on the buffered path).
+    pub shed: usize,
+    /// Autoscaler activations / parks (streaming mode only).
+    pub scale_ups: usize,
+    pub scale_downs: usize,
     /// first arrival → last completion across the fleet (s).
     pub makespan_secs: f64,
     /// completed requests per second over the fleet makespan.
@@ -144,6 +211,14 @@ pub struct FleetReport {
     pub tpot_p99_secs: f64,
     /// Mean engine-busy fraction over the fleet makespan.
     pub mean_utilization: f64,
+    /// Which sample sink produced the fleet quantiles.
+    pub sink: String,
+    /// Fleet-wide high-water mark of buffered latency samples (instance
+    /// sinks + fleet sinks) — the RSS proxy the streaming smoke asserts
+    /// on; independent of request count under `SinkMode::Sketch`.
+    pub samples_buffered_peak: usize,
+    /// Sum of per-instance live-request high-water marks.
+    pub peak_live_requests: usize,
     /// Per-instance reports, in spec order.
     pub instances: Vec<ServingReport>,
 }
@@ -177,6 +252,9 @@ impl FleetReport {
         out.push_str(&format!("  \"completed\": {},\n", self.completed));
         out.push_str(&format!("  \"rejected\": {},\n", self.rejected));
         out.push_str(&format!("  \"preemptions\": {},\n", self.preemptions));
+        out.push_str(&format!("  \"shed\": {},\n", self.shed));
+        out.push_str(&format!("  \"scale_ups\": {},\n", self.scale_ups));
+        out.push_str(&format!("  \"scale_downs\": {},\n", self.scale_downs));
         out.push_str(&format!("  \"makespan_secs\": {},\n", self.makespan_secs));
         out.push_str(&format!("  \"goodput_req_s\": {},\n", self.goodput_req_s));
         out.push_str(&format!(
@@ -192,6 +270,15 @@ impl FleetReport {
         out.push_str(&format!(
             "  \"mean_utilization\": {},\n",
             self.mean_utilization
+        ));
+        out.push_str(&format!("  \"sink\": \"{}\",\n", self.sink));
+        out.push_str(&format!(
+            "  \"samples_buffered_peak\": {},\n",
+            self.samples_buffered_peak
+        ));
+        out.push_str(&format!(
+            "  \"peak_live_requests\": {},\n",
+            self.peak_live_requests
         ));
         out.push_str("  \"instances\": [\n");
         for (i, inst) in self.instances.iter().enumerate() {
@@ -220,6 +307,23 @@ fn build_platform(
     Ok(p)
 }
 
+/// Router-side cost basis of one instance: the full-prompt prefill
+/// latency (probed at the config's prompt length) and the mid-context
+/// per-token decode latency. Per-request estimates scale these by the
+/// request's own prompt/gen lengths, so one probe pair serves the whole
+/// stream.
+pub fn instance_cost_basis(
+    platform: &Platform,
+    model: &ModelConfig,
+    cfg: &ServingConfig,
+) -> (f64, f64) {
+    let opts = SimOptions::default();
+    let prefill = platform.run(model, cfg.prompt_len.max(8), &opts).latency_secs;
+    let mid = (cfg.prompt_len + cfg.gen_tokens / 2).max(1);
+    let (tok, _) = decode_step_on(platform, model, mid, &opts);
+    (prefill, tok)
+}
+
 /// Router-side per-request service-time estimate on an already-built
 /// platform: prefill plus the generation at the mid-context decode
 /// cost. The fleet path probes each instance's platform through this
@@ -229,13 +333,10 @@ pub fn estimate_service_secs_on(
     model: &ModelConfig,
     cfg: &ServingConfig,
 ) -> f64 {
-    let opts = SimOptions::default();
-    let prefill = platform.run(model, cfg.prompt_len.max(8), &opts).latency_secs;
+    let (prefill, tok) = instance_cost_basis(platform, model, cfg);
     if cfg.gen_tokens == 0 {
         return prefill.max(1e-12);
     }
-    let mid = (cfg.prompt_len + cfg.gen_tokens / 2).max(1);
-    let (tok, _) = decode_step_on(platform, model, mid, &opts);
     (prefill + cfg.gen_tokens as f64 * tok).max(1e-12)
 }
 
@@ -272,6 +373,42 @@ impl Ord for FinishTime {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         self.0.total_cmp(&other.0)
     }
+}
+
+/// Outstanding-request heap entry for the event router: finish time
+/// plus the KV bytes the entry holds against its instance (released
+/// when the virtual request retires; `LeastKv` scores on the sum).
+#[derive(PartialEq)]
+struct OutEntry {
+    finish: f64,
+    kv: f64,
+}
+
+impl Eq for OutEntry {}
+
+impl PartialOrd for OutEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OutEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.finish
+            .total_cmp(&other.finish)
+            .then(self.kv.total_cmp(&other.kv))
+    }
+}
+
+/// The power-of-two-choices candidate pair: two *distinct* indices in
+/// `0..n` (one index when `n == 1`), smaller first, consuming exactly
+/// one RNG draw for `n == 1` and two otherwise. Shared by every
+/// dispatcher (scalar, event, streaming) and the golden-model test so
+/// the draw sequence can never drift between them.
+pub(crate) fn p2c_pair(rng: &mut Rng, n: usize) -> (usize, usize) {
+    let a = rng.below(n);
+    let b = if n > 1 { (a + 1 + rng.below(n - 1)) % n } else { a };
+    (a.min(b), a.max(b))
 }
 
 /// Deterministic front-end dispatch: split one shared arrival stream
@@ -329,13 +466,7 @@ pub fn route_requests(
                 })
                 .unwrap(),
             DispatchPolicy::P2c => {
-                let a = rng.below(n);
-                let b = if n > 1 {
-                    (a + 1 + rng.below(n - 1)) % n
-                } else {
-                    a
-                };
-                let (x, y) = (a.min(b), a.max(b));
+                let (x, y) = p2c_pair(&mut rng, n);
                 if outstanding[y].len() < outstanding[x].len() {
                     y
                 } else {
@@ -358,6 +489,98 @@ pub fn route_requests(
     assigned
 }
 
+/// Per-request service-time estimate for one event on one instance:
+/// the instance's probed prefill scaled by the request's prompt length
+/// (relative to the config prompt the probe used) plus its own
+/// generation at the per-token cost. For uniform lengths the scale is
+/// exactly 1.0 and this reproduces [`estimate_service_secs_on`]
+/// bit-for-bit.
+fn event_est(basis: (f64, f64), ev: &ArrivalEvent, ref_prompt: usize) -> f64 {
+    let (prefill, tok) = basis;
+    let frac = ev.prompt as f64 / ref_prompt.max(1) as f64;
+    (prefill * frac + ev.gen as f64 * tok).max(1e-12)
+}
+
+/// Event-carrying sibling of [`route_requests`]: same virtual-server
+/// model, but each request brings its own prompt/gen lengths, so the
+/// service estimate and the KV pressure are per-event. `RoundRobin`,
+/// `Jsq` and `P2c` reproduce the scalar router bit-for-bit on
+/// uniform-length streams (depth counts and the shared [`p2c_pair`]
+/// draw sequence are identical); `LeastKv` scores on the *sum* of
+/// outstanding per-event KV, which for uniform streams equals the
+/// scalar `count * kv_full` score up to f64 rounding — picks can
+/// differ only on near-ties.
+#[allow(clippy::too_many_arguments)]
+fn route_events(
+    policy: DispatchPolicy,
+    events: &[ArrivalEvent],
+    basis: &[(f64, f64)],
+    ref_prompt: usize,
+    model: &ModelConfig,
+    caps: &[f64],
+    max_batch: usize,
+    seed: u64,
+) -> Vec<Vec<ArrivalEvent>> {
+    let n = basis.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    assert_eq!(n, caps.len(), "one KV capacity per instance");
+    let max_batch = max_batch.max(1);
+    let mut assigned: Vec<Vec<ArrivalEvent>> = vec![Vec::new(); n];
+    let mut outstanding: Vec<BinaryHeap<Reverse<OutEntry>>> =
+        (0..n).map(|_| BinaryHeap::new()).collect();
+    let mut kv_out = vec![0.0f64; n];
+    let mut servers: Vec<Vec<f64>> = vec![vec![0.0f64; max_batch]; n];
+    let mut rng = Rng::new(seed ^ 0xC1A5_7E55);
+    for (k, ev) in events.iter().enumerate() {
+        let t = ev.t;
+        for (o, kv) in outstanding.iter_mut().zip(kv_out.iter_mut()) {
+            while let Some(Reverse(e)) = o.peek() {
+                if e.finish <= t {
+                    *kv -= e.kv;
+                    o.pop();
+                } else {
+                    break;
+                }
+            }
+        }
+        let pick = match policy {
+            DispatchPolicy::RoundRobin => k % n,
+            DispatchPolicy::Jsq => (0..n).min_by_key(|&i| outstanding[i].len()).unwrap(),
+            DispatchPolicy::LeastKv => (0..n)
+                .min_by(|&a, &b| {
+                    let la = kv_out[a] / caps[a];
+                    let lb = kv_out[b] / caps[b];
+                    la.partial_cmp(&lb).unwrap()
+                })
+                .unwrap(),
+            DispatchPolicy::P2c => {
+                let (x, y) = p2c_pair(&mut rng, n);
+                if outstanding[y].len() < outstanding[x].len() {
+                    y
+                } else {
+                    x
+                }
+            }
+        };
+        assigned[pick].push(*ev);
+        let est = event_est(basis[pick], ev, ref_prompt);
+        let kv = kv_cache_bytes(model, ev.prompt + ev.gen).max(1.0);
+        let (si, free) = servers[pick]
+            .iter()
+            .copied()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let finish = free.max(t) + est;
+        servers[pick][si] = finish;
+        kv_out[pick] += kv;
+        outstanding[pick].push(Reverse(OutEntry { finish, kv }));
+    }
+    assigned
+}
+
 /// Fleet simulator: dispatch + N request-level engines + aggregation.
 pub struct ClusterSim<'a> {
     sys: &'a SystemConfig,
@@ -370,6 +593,16 @@ impl<'a> ClusterSim<'a> {
         ClusterSim { sys, model, cfg }
     }
 
+    /// Whether every request in the configured stream has the uniform
+    /// config lengths (the scalar-router fast path).
+    fn uniform_lengths(&self) -> bool {
+        matches!(self.cfg.serving.len_dist, LenDist::Fixed)
+            && !matches!(
+                self.cfg.serving.arrivals,
+                ArrivalProcess::MultiTenant { .. } | ArrivalProcess::Events(_)
+            )
+    }
+
     /// Run on the shared worker pool (`--jobs` / `CHIPLET_JOBS`).
     pub fn run(&self) -> Result<FleetReport> {
         self.run_with_jobs(parallel::default_jobs())
@@ -380,10 +613,15 @@ impl<'a> ClusterSim<'a> {
     /// order-preserved by the parallel maps).
     ///
     /// Builds each instance's [`Platform`] exactly once: the estimate
-    /// stage returns `(Platform, est)` pairs, dispatch runs on the
+    /// stage returns `(Platform, basis)` pairs, dispatch runs on the
     /// estimates, and the owned platforms are then moved (not rebuilt)
     /// into the per-instance simulation workers via
     /// [`parallel::par_map_owned`].
+    ///
+    /// This is the buffered *oracle* path: instance engines always run
+    /// with exact sample buffering (whatever `ServingConfig::sink`
+    /// says), and fleet tails come from a full sort over the merged
+    /// samples. Use [`Self::run_streaming`] for bounded-memory runs.
     pub fn run_with_jobs(&self, jobs: usize) -> Result<FleetReport> {
         let n = self.cfg.specs.len();
         if n == 0 {
@@ -391,47 +629,92 @@ impl<'a> ClusterSim<'a> {
         }
         let scfg = &self.cfg.serving;
 
-        // build every platform once and probe its service estimate for
-        // the router (parallel, deterministic ordering)
-        let built = parallel::par_map(jobs, &self.cfg.specs, |spec| -> Result<(Platform, f64)> {
-            let opts = SimOptions::default();
-            let platform = build_platform(spec, self.sys, &opts, scfg.max_flits)?;
-            let est = estimate_service_secs_on(&platform, self.model, scfg);
-            Ok((platform, est))
-        });
+        // build every platform once and probe its cost basis for the
+        // router (parallel, deterministic ordering)
+        let built =
+            parallel::par_map(jobs, &self.cfg.specs, |spec| -> Result<(Platform, (f64, f64))> {
+                let opts = SimOptions::default();
+                let platform = build_platform(spec, self.sys, &opts, scfg.max_flits)?;
+                let basis = instance_cost_basis(&platform, self.model, scfg);
+                Ok((platform, basis))
+            });
         let mut platforms = Vec::with_capacity(n);
-        let mut est = Vec::with_capacity(n);
+        let mut basis = Vec::with_capacity(n);
         for r in built {
-            let (p, e) = r?;
+            let (p, b) = r?;
             platforms.push(p);
-            est.push(e);
+            basis.push(b);
         }
 
         // ---- front-end router: split the shared arrival stream
-        let arrivals = scfg.arrivals.times(scfg.seed);
-        let kv_full = kv_cache_bytes(self.model, scfg.prompt_len + scfg.gen_tokens).max(1.0);
         let caps: Vec<f64> = self
             .cfg
             .specs
             .iter()
             .map(|s| s.kv_capacity_bytes.unwrap_or(scfg.kv_capacity_bytes).max(1.0))
             .collect();
-        let assigned = route_requests(
-            self.cfg.policy,
-            &arrivals,
-            &est,
-            &caps,
-            kv_full,
-            scfg.max_batch,
-            scfg.seed,
-        );
+        let (requests, assigned): (usize, Vec<ArrivalProcess>) = if self.uniform_lengths() {
+            // uniform lengths: the original scalar dispatcher, pinned
+            // by the golden test — instances consume plain time traces
+            let arrivals = scfg.arrivals.times(scfg.seed);
+            let est: Vec<f64> = basis
+                .iter()
+                .map(|&(prefill, tok)| {
+                    if scfg.gen_tokens == 0 {
+                        prefill.max(1e-12)
+                    } else {
+                        (prefill + scfg.gen_tokens as f64 * tok).max(1e-12)
+                    }
+                })
+                .collect();
+            let kv_full =
+                kv_cache_bytes(self.model, scfg.prompt_len + scfg.gen_tokens).max(1.0);
+            let split = route_requests(
+                self.cfg.policy,
+                &arrivals,
+                &est,
+                &caps,
+                kv_full,
+                scfg.max_batch,
+                scfg.seed,
+            );
+            (
+                arrivals.len(),
+                split.into_iter().map(ArrivalProcess::Trace).collect(),
+            )
+        } else {
+            // length-carrying workloads (heavy-tailed, multi-tenant,
+            // explicit events): per-event routing
+            let events: Vec<ArrivalEvent> = scfg
+                .arrivals
+                .events(scfg.seed, scfg.prompt_len, scfg.gen_tokens, &scfg.len_dist)
+                .collect();
+            let split = route_events(
+                self.cfg.policy,
+                &events,
+                &basis,
+                scfg.prompt_len,
+                self.model,
+                &caps,
+                scfg.max_batch,
+                scfg.seed,
+            );
+            (
+                events.len(),
+                split.into_iter().map(ArrivalProcess::Events).collect(),
+            )
+        };
 
         // ---- per-instance request-level simulations: each prebuilt
         // platform is moved into its worker (output order = spec order)
         let work: Vec<(usize, Platform)> = platforms.into_iter().enumerate().collect();
         let runs = parallel::par_map_owned(jobs, work, |(i, platform)| {
             let mut cfg_i = scfg.clone();
-            cfg_i.arrivals = ArrivalProcess::Trace(assigned[i].clone());
+            cfg_i.arrivals = assigned[i].clone();
+            // the buffered path is the exact-quantile oracle: fleet
+            // tails need the raw samples regardless of the sink the
+            // streaming path would use
+            cfg_i.sink = SinkMode::Exact;
             if let Some(cap) = self.cfg.specs[i].kv_capacity_bytes {
                 cfg_i.kv_capacity_bytes = cap;
             }
@@ -440,8 +723,8 @@ impl<'a> ClusterSim<'a> {
 
         // ---- aggregate
         let mut instances = Vec::with_capacity(n);
-        let mut ttft = Vec::with_capacity(arrivals.len());
-        let mut tpot = Vec::with_capacity(arrivals.len());
+        let mut ttft = Vec::with_capacity(requests);
+        let mut tpot = Vec::with_capacity(requests);
         let mut decoded = 0u64;
         let mut first = f64::INFINITY;
         let mut last = f64::NEG_INFINITY;
@@ -464,14 +747,19 @@ impl<'a> ClusterSim<'a> {
         let rejected: usize = instances.iter().map(|r| r.rejected).sum();
         let preemptions: usize = instances.iter().map(|r| r.preemptions).sum();
         let busy: f64 = instances.iter().map(|r| r.busy_secs).sum();
+        let buffered: usize = instances.iter().map(|r| r.samples_buffered_peak).sum();
+        let live: usize = instances.iter().map(|r| r.peak_live_requests).sum();
 
         Ok(FleetReport {
             policy: self.cfg.policy.name().to_string(),
             model: self.model.name.to_string(),
-            requests: arrivals.len(),
+            requests,
             completed,
             rejected,
             preemptions,
+            shed: 0,
+            scale_ups: 0,
+            scale_downs: 0,
             makespan_secs: makespan,
             goodput_req_s: completed as f64 / makespan,
             throughput_tok_s: decoded as f64 / makespan,
@@ -482,6 +770,246 @@ impl<'a> ClusterSim<'a> {
             tpot_p95_secs: percentile(&tpot, 95.0),
             tpot_p99_secs: percentile(&tpot, 99.0),
             mean_utilization: busy / (n as f64 * makespan),
+            sink: "exact".to_string(),
+            samples_buffered_peak: buffered,
+            peak_live_requests: live,
+            instances,
+        })
+    }
+
+    /// Single-pass streaming fleet: one walk over the lazy arrival
+    /// stream drives every engine incrementally, completions fold into
+    /// fleet-level [`SampleSink`]s as they retire, and (optionally) the
+    /// fleet autoscales on load watermarks and sheds SLO-busting
+    /// arrivals at the front door. Memory is O(live requests +
+    /// sketches): nothing — arrivals, assignments, samples — is ever
+    /// materialized per-request. Serial by construction (the event loop
+    /// is a strict sequential dependency chain), deterministic, and on
+    /// uniform streams with both knobs off it reproduces the buffered
+    /// fleet's dynamics exactly.
+    pub fn run_streaming(&self, stream: &StreamConfig) -> Result<FleetReport> {
+        let n = self.cfg.specs.len();
+        if n == 0 {
+            bail!("cluster needs at least one instance");
+        }
+        let scfg = &self.cfg.serving;
+        let opts = SimOptions::default();
+
+        // platforms, probed serially (declared before the engines that
+        // borrow them)
+        let mut platforms = Vec::with_capacity(n);
+        let mut basis = Vec::with_capacity(n);
+        for spec in &self.cfg.specs {
+            let p = build_platform(spec, self.sys, &opts, scfg.max_flits)?;
+            basis.push(instance_cost_basis(&p, self.model, scfg));
+            platforms.push(p);
+        }
+        let caps: Vec<f64> = self
+            .cfg
+            .specs
+            .iter()
+            .map(|s| s.kv_capacity_bytes.unwrap_or(scfg.kv_capacity_bytes).max(1.0))
+            .collect();
+
+        let mut engines: Vec<ServingSim> = Vec::with_capacity(n);
+        for (i, p) in platforms.iter().enumerate() {
+            let mut cfg_i = scfg.clone();
+            if let Some(cap) = self.cfg.specs[i].kv_capacity_bytes {
+                cfg_i.kv_capacity_bytes = cap;
+            }
+            let mut eng = ServingSim::new(p, self.model, cfg_i).with_completions(true);
+            eng.begin();
+            engines.push(eng);
+        }
+
+        // fleet-level latency sinks (sketches in streaming mode)
+        let mut ttft_sink: SampleSink = scfg.sink.make();
+        let mut tpot_sink: SampleSink = scfg.sink.make();
+        let mut buffered_peak = 0usize;
+
+        // router virtual state (same server model as the dispatchers)
+        let max_batch = scfg.max_batch.max(1);
+        let mut outstanding: Vec<BinaryHeap<Reverse<FinishTime>>> =
+            (0..n).map(|_| BinaryHeap::new()).collect();
+        let mut servers: Vec<Vec<f64>> = vec![vec![0.0f64; max_batch]; n];
+        let mut rng = Rng::new(scfg.seed ^ 0xC1A5_7E55);
+
+        // elasticity state: the active set starts at min_instances (or
+        // the whole fleet without autoscaling); parked instances keep
+        // draining, they just stop receiving dispatches
+        let auto = stream.autoscale.as_ref();
+        let mut active: Vec<usize> = match auto {
+            Some(a) => (0..a.min_instances.clamp(1, n)).collect(),
+            None => (0..n).collect(),
+        };
+        let mut last_scale = f64::NEG_INFINITY;
+        let mut rr_cursor = 0usize;
+        let mut requests = 0usize;
+        let mut shed = 0usize;
+        let mut scale_ups = 0usize;
+        let mut scale_downs = 0usize;
+
+        let events =
+            scfg.arrivals
+                .events(scfg.seed, scfg.prompt_len, scfg.gen_tokens, &scfg.len_dist);
+        for ev in events {
+            requests += 1;
+            let t = ev.t;
+            for o in outstanding.iter_mut() {
+                while let Some(&Reverse(FinishTime(f))) = o.peek() {
+                    if f <= t {
+                        o.pop();
+                    } else {
+                        break;
+                    }
+                }
+            }
+
+            // autoscale on the virtual load, re-anchoring the router to
+            // the new active set
+            if let Some(a) = auto {
+                if t - last_scale >= a.cooldown_secs {
+                    let load: usize = active.iter().map(|&i| outstanding[i].len()).sum();
+                    let per = load as f64 / active.len() as f64;
+                    if per > a.high_watermark && active.len() < a.max_instances.min(n) {
+                        // activate the lowest-index parked instance
+                        if let Some(next) = (0..n).find(|i| !active.contains(i)) {
+                            active.push(next);
+                            active.sort_unstable();
+                            scale_ups += 1;
+                            last_scale = t;
+                        }
+                    } else if per < a.low_watermark && active.len() > a.min_instances.max(1) {
+                        // park the highest-index active instance; it
+                        // drains what it holds
+                        active.pop();
+                        scale_downs += 1;
+                        last_scale = t;
+                    }
+                }
+            }
+
+            let na = active.len();
+            let pick = match self.cfg.policy {
+                DispatchPolicy::RoundRobin => {
+                    let p = active[rr_cursor % na];
+                    rr_cursor += 1;
+                    p
+                }
+                DispatchPolicy::Jsq => active
+                    .iter()
+                    .copied()
+                    .min_by_key(|&i| (outstanding[i].len(), i))
+                    .unwrap(),
+                DispatchPolicy::LeastKv => active
+                    .iter()
+                    .copied()
+                    .min_by(|&a, &b| {
+                        let la = outstanding[a].len() as f64 / caps[a];
+                        let lb = outstanding[b].len() as f64 / caps[b];
+                        la.total_cmp(&lb).then(a.cmp(&b))
+                    })
+                    .unwrap(),
+                DispatchPolicy::P2c => {
+                    let (x, y) = p2c_pair(&mut rng, na);
+                    let (ia, ib) = (active[x], active[y]);
+                    if outstanding[ib].len() < outstanding[ia].len() {
+                        ib
+                    } else {
+                        ia
+                    }
+                }
+            };
+
+            let est = event_est(basis[pick], &ev, scfg.prompt_len);
+            let (si, free) = servers[pick]
+                .iter()
+                .copied()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+
+            // SLO admission: shed if the predicted TTFT (virtual queue
+            // wait + this instance's prefill share) busts the target
+            if let Some(slo) = stream.slo_ttft_secs {
+                let prefill = basis[pick].0 * (ev.prompt as f64 / scfg.prompt_len.max(1) as f64);
+                let predicted = (free.max(t) - t) + prefill;
+                if predicted > slo {
+                    shed += 1;
+                    continue;
+                }
+            }
+
+            let eng = &mut engines[pick];
+            eng.advance_until(t);
+            eng.push_request(t, ev.prompt, ev.gen);
+            for (a, b) in eng.take_completions() {
+                ttft_sink.push(a);
+                tpot_sink.push(b);
+            }
+            buffered_peak = buffered_peak.max(ttft_sink.buffered_len() + tpot_sink.buffered_len());
+
+            let finish = free.max(t) + est;
+            servers[pick][si] = finish;
+            outstanding[pick].push(Reverse(FinishTime(finish)));
+        }
+
+        // drain every engine (parked ones included) and aggregate in
+        // spec order
+        let mut instances = Vec::with_capacity(n);
+        let mut decoded = 0u64;
+        let mut first = f64::INFINITY;
+        let mut last = f64::NEG_INFINITY;
+        for eng in engines.iter_mut() {
+            eng.advance_until(f64::INFINITY);
+            for (a, b) in eng.take_completions() {
+                ttft_sink.push(a);
+                tpot_sink.push(b);
+            }
+            buffered_peak = buffered_peak.max(ttft_sink.buffered_len() + tpot_sink.buffered_len());
+            let (rep, s) = eng.finish();
+            if rep.requests > 0 {
+                first = first.min(s.first_arrival);
+                last = last.max(s.last_finish);
+            }
+            decoded += s.decoded_tokens;
+            instances.push(rep);
+        }
+        if !first.is_finite() {
+            first = 0.0;
+            last = 0.0;
+        }
+        let makespan = (last - first).max(1e-12);
+        let completed: usize = instances.iter().map(|r| r.completed).sum();
+        let rejected: usize = instances.iter().map(|r| r.rejected).sum();
+        let preemptions: usize = instances.iter().map(|r| r.preemptions).sum();
+        let busy: f64 = instances.iter().map(|r| r.busy_secs).sum();
+        let inst_buffered: usize = instances.iter().map(|r| r.samples_buffered_peak).sum();
+        let live: usize = instances.iter().map(|r| r.peak_live_requests).sum();
+
+        Ok(FleetReport {
+            policy: self.cfg.policy.name().to_string(),
+            model: self.model.name.to_string(),
+            requests,
+            completed,
+            rejected,
+            preemptions,
+            shed,
+            scale_ups,
+            scale_downs,
+            makespan_secs: makespan,
+            goodput_req_s: completed as f64 / makespan,
+            throughput_tok_s: decoded as f64 / makespan,
+            ttft_p50_secs: ttft_sink.quantile(50.0),
+            ttft_p95_secs: ttft_sink.quantile(95.0),
+            ttft_p99_secs: ttft_sink.quantile(99.0),
+            tpot_p50_secs: tpot_sink.quantile(50.0),
+            tpot_p95_secs: tpot_sink.quantile(95.0),
+            tpot_p99_secs: tpot_sink.quantile(99.0),
+            mean_utilization: busy / (n as f64 * makespan),
+            sink: ttft_sink.mode().name().to_string(),
+            samples_buffered_peak: inst_buffered + buffered_peak,
+            peak_live_requests: live,
             instances,
         })
     }
@@ -525,6 +1053,8 @@ mod tests {
         assert!(fleet.throughput_tok_s > 0.0);
         assert!(fleet.ttft_p99_secs >= fleet.ttft_p50_secs);
         assert!(fleet.mean_utilization > 0.0 && fleet.mean_utilization <= 1.0 + 1e-9);
+        assert_eq!(fleet.shed, 0);
+        assert_eq!(fleet.sink, "exact");
     }
 
     #[test]
@@ -639,9 +1169,7 @@ mod tests {
                     })
                     .unwrap(),
                 DispatchPolicy::P2c => {
-                    let a = rng.below(n);
-                    let b = if n > 1 { (a + 1 + rng.below(n - 1)) % n } else { a };
-                    let (x, y) = (a.min(b), a.max(b));
+                    let (x, y) = p2c_pair(&mut rng, n);
                     if outstanding[y].len() < outstanding[x].len() {
                         y
                     } else {
@@ -687,6 +1215,56 @@ mod tests {
     }
 
     #[test]
+    fn event_router_matches_scalar_router_on_uniform_lengths() {
+        // on a uniform-length stream the event router must reproduce
+        // the scalar router's assignment exactly for the depth-count
+        // policies (LeastKv scores on summed per-event KV, equal only
+        // up to f64 rounding — see route_events docs)
+        let m = ModelZoo::bert_base();
+        let arrivals = ArrivalProcess::Poisson {
+            rate_per_sec: 150.0,
+            num_requests: 70,
+        };
+        let times = arrivals.times(0xD15C);
+        let events: Vec<ArrivalEvent> = arrivals
+            .events(0xD15C, 64, 16, &LenDist::Fixed)
+            .collect();
+        let basis = [(0.031, 2.1e-4), (0.011, 9.0e-5), (0.074, 4.4e-4)];
+        let est: Vec<f64> = basis
+            .iter()
+            .map(|&(p, tok)| (p + 16.0 * tok).max(1e-12))
+            .collect();
+        let caps = [8.0e9, 4.0e9, 16.0e9];
+        let kv_full = kv_cache_bytes(&m, 64 + 16).max(1.0);
+        for policy in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::Jsq,
+            DispatchPolicy::P2c,
+        ] {
+            let scalar = route_requests(policy, &times, &est, &caps, kv_full, 4, 0x5EED);
+            let by_event =
+                route_events(policy, &events, &basis, 64, &m, &caps, 4, 0x5EED);
+            let flat: Vec<Vec<f64>> = by_event
+                .iter()
+                .map(|evs| evs.iter().map(|e| e.t).collect())
+                .collect();
+            assert_eq!(flat, scalar, "policy {}", policy.name());
+            for evs in &by_event {
+                for e in evs {
+                    assert_eq!((e.prompt, e.gen), (64, 16));
+                }
+            }
+        }
+        // LeastKv: not pinned bit-for-bit against the scalar router,
+        // but it must be deterministic and route every event
+        let a = route_events(DispatchPolicy::LeastKv, &events, &basis, 64, &m, &caps, 4, 0x5EED);
+        let b = route_events(DispatchPolicy::LeastKv, &events, &basis, 64, &m, &caps, 4, 0x5EED);
+        assert_eq!(a, b);
+        let routed: usize = a.iter().map(Vec::len).sum();
+        assert_eq!(routed, events.len());
+    }
+
+    #[test]
     fn per_instance_kv_override_applies() {
         let sys = SystemConfig::s36();
         let m = ModelZoo::bert_base();
@@ -708,5 +1286,133 @@ mod tests {
         assert_eq!(fleet.rejected, 4);
         assert_eq!(fleet.completed, 4);
         assert_eq!(fleet.instances[1].rejected, 4);
+    }
+
+    #[test]
+    fn streaming_matches_buffered_fleet_on_uniform_load() {
+        // with autoscaling and SLO off, the streaming pass must
+        // reproduce the buffered oracle's routing and dynamics exactly
+        // on a uniform stream (same virtual-router state, same engines
+        // via the push driver), and exact sinks make even the fleet
+        // quantiles bit-equal
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let cfg = ClusterConfig {
+            specs: vec![InstanceSpec::of(Arch::Hi25D), InstanceSpec::of(Arch::Hi25D)],
+            policy: DispatchPolicy::Jsq,
+            serving: poisson(1.0e5, 24),
+        };
+        let sim = ClusterSim::new(&sys, &m, cfg);
+        let buffered = sim.run_with_jobs(1).unwrap();
+        let streaming = sim.run_streaming(&StreamConfig::default()).unwrap();
+        assert_eq!(streaming.requests, buffered.requests);
+        assert_eq!(streaming.completed, buffered.completed);
+        assert_eq!(streaming.shed, 0);
+        assert_eq!(streaming.makespan_secs, buffered.makespan_secs);
+        assert_eq!(streaming.ttft_p99_secs, buffered.ttft_p99_secs);
+        assert_eq!(streaming.tpot_p50_secs, buffered.tpot_p50_secs);
+        assert_eq!(streaming.throughput_tok_s, buffered.throughput_tok_s);
+    }
+
+    #[test]
+    fn streaming_fleet_is_deterministic_under_heavy_tails() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let cfg = ClusterConfig {
+            specs: vec![InstanceSpec::of(Arch::Hi25D), InstanceSpec::of(Arch::Hi25D)],
+            policy: DispatchPolicy::Jsq,
+            serving: ServingConfig {
+                len_dist: LenDist::LogNormal { sigma: 1.2 },
+                ..poisson(1.0e4, 64)
+            },
+        };
+        let sim = ClusterSim::new(&sys, &m, cfg);
+        let a = sim.run_streaming(&StreamConfig::default()).unwrap();
+        let b = sim.run_streaming(&StreamConfig::default()).unwrap();
+        assert_eq!(a.completed, 64);
+        assert_eq!(a.makespan_secs, b.makespan_secs);
+        assert_eq!(a.ttft_p99_secs, b.ttft_p99_secs);
+        assert_eq!(a.throughput_tok_s, b.throughput_tok_s);
+    }
+
+    #[test]
+    fn autoscale_activates_under_load_and_sheds_with_slo() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let mk = || ClusterConfig {
+            specs: vec![
+                InstanceSpec::of(Arch::Hi25D),
+                InstanceSpec::of(Arch::Hi25D),
+                InstanceSpec::of(Arch::Hi25D),
+            ],
+            policy: DispatchPolicy::Jsq,
+            serving: poisson(1.0e5, 48),
+        };
+        // a burst against a 1-instance floor with a hair-trigger
+        // watermark must activate reinforcements
+        let scaled = ClusterSim::new(&sys, &m, mk())
+            .run_streaming(&StreamConfig {
+                autoscale: Some(AutoscaleConfig {
+                    min_instances: 1,
+                    high_watermark: 1.0,
+                    cooldown_secs: 0.0,
+                    ..Default::default()
+                }),
+                slo_ttft_secs: None,
+            })
+            .unwrap();
+        assert!(scaled.scale_ups >= 1, "burst must trigger scale-up");
+        assert_eq!(scaled.completed, 48, "scaling must not lose requests");
+        // an impossible SLO sheds everything at the front door...
+        let strict = ClusterSim::new(&sys, &m, mk())
+            .run_streaming(&StreamConfig {
+                autoscale: None,
+                slo_ttft_secs: Some(0.0),
+            })
+            .unwrap();
+        assert_eq!(strict.shed, 48);
+        assert_eq!(strict.completed, 0);
+        // ...and a generous one sheds nothing
+        let lax = ClusterSim::new(&sys, &m, mk())
+            .run_streaming(&StreamConfig {
+                autoscale: None,
+                slo_ttft_secs: Some(1.0e9),
+            })
+            .unwrap();
+        assert_eq!(lax.shed, 0);
+        assert_eq!(lax.completed, 48);
+    }
+
+    #[test]
+    fn streaming_fleet_bounds_sample_buffers() {
+        // under sketch sinks the fleet-wide buffered-sample high-water
+        // mark must not grow with the request count — the O(1)-memory
+        // acceptance proxy for the 10M-request headline run
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let mk = |n: usize| ClusterConfig {
+            specs: vec![InstanceSpec::of(Arch::Hi25D), InstanceSpec::of(Arch::Hi25D)],
+            policy: DispatchPolicy::Jsq,
+            serving: ServingConfig {
+                sink: SinkMode::Sketch,
+                prompt_len: 32,
+                gen_tokens: 4,
+                ..poisson(1.0e5, n)
+            },
+        };
+        let small = ClusterSim::new(&sys, &m, mk(800))
+            .run_streaming(&StreamConfig::default())
+            .unwrap();
+        let big = ClusterSim::new(&sys, &m, mk(2400))
+            .run_streaming(&StreamConfig::default())
+            .unwrap();
+        assert_eq!(small.sink, "sketch");
+        assert_eq!(big.completed, 2400);
+        assert_eq!(
+            small.samples_buffered_peak, big.samples_buffered_peak,
+            "sketch sample memory must be independent of the request count"
+        );
+        // 2 instances x 2 banks + 2 fleet banks, <= 15 buffered each
+        assert!(big.samples_buffered_peak <= 90);
     }
 }

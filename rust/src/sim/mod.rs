@@ -11,17 +11,28 @@
 //!   and Table 4).
 //! - [`decode`]: autoregressive prefill + KV-cache decode costs on a
 //!   platform (`decode_step_on` / `generate_on`).
+//! - [`arrivals`]: lazy seeded arrival generators — Poisson, diurnal
+//!   rate modulation, multi-tenant mixes, explicit traces/events — with
+//!   per-request heavy-tailed prompt/gen lengths ([`LenDist`]). Streams
+//!   are iterators: a 10M-request trace is never materialized.
 //! - [`scheduler`]: admission + batch-formation policy behind the
 //!   pluggable [`Scheduler`] trait — continuous batching (default) and
 //!   Sarathi-style chunked prefill.
-//! - [`serving`]: the request-level serving engine (Poisson/trace
-//!   arrivals, KV accounting with optional pressure preemption,
-//!   optional prefill/decode disaggregation) reporting throughput,
-//!   TTFT/TPOT tails, energy per request and utilization.
+//! - [`serving`]: the request-level serving engine (KV accounting with
+//!   optional pressure preemption, optional prefill/decode
+//!   disaggregation) reporting throughput, TTFT/TPOT tails, energy per
+//!   request and utilization. Push-based: arrivals stream in through
+//!   `push_request`/`advance_until`, retired requests fold into
+//!   [`crate::util::sketch::SampleSink`]s (exact buffers or P² sketches)
+//!   and recycle their slab slots, so memory is O(live requests).
 //! - [`cluster`]: N platforms (optionally heterogeneous) behind a
 //!   front-end router (round-robin / JSQ / least-KV / power-of-two)
 //!   sharing one arrival stream — fleet goodput and aggregate tails.
+//!   Two modes: the buffered exact-quantile oracle (`run_with_jobs`)
+//!   and the single-pass streaming fleet (`run_streaming`) with
+//!   optional load-watermark autoscaling and SLO-aware shedding.
 
+pub mod arrivals;
 pub mod cluster;
 pub mod decode;
 pub mod engine;
@@ -29,9 +40,11 @@ pub mod platform;
 pub mod scheduler;
 pub mod serving;
 
+pub use arrivals::{ArrivalEvent, ArrivalGen, LenDist, Tenant};
 pub use cluster::{
-    estimate_service_secs, estimate_service_secs_on, route_requests, ClusterConfig, ClusterSim,
-    DispatchPolicy, FleetReport, InstanceSpec,
+    estimate_service_secs, estimate_service_secs_on, instance_cost_basis, route_requests,
+    AutoscaleConfig, ClusterConfig, ClusterSim, DispatchPolicy, FleetReport, InstanceSpec,
+    StreamConfig,
 };
 pub use decode::{decode_step, decode_step_on, generate, generate_on, DecodeReport};
 pub use engine::{simulate, SimOptions};

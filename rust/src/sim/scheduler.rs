@@ -32,6 +32,13 @@
 //! and when the pool overflows the engine swaps out the most recently
 //! admitted request (KV freed, recompute-on-resume, vLLM-style). Both
 //! schedulers work under either reservation mode.
+//!
+//! Since the streaming rework, [`ServingState`] is a slab: requests are
+//! pushed as they arrive and their slots are recycled after retirement,
+//! so live state is O(active + waiting) regardless of how many requests
+//! the run has seen. Each request also carries its *own* prompt/gen
+//! lengths and KV footprint (heavy-tailed length distributions make
+//! them per-request quantities, not config constants).
 
 use std::collections::VecDeque;
 
@@ -41,6 +48,12 @@ use crate::sim::serving::ServingConfig;
 #[derive(Debug, Clone)]
 pub struct ReqState {
     pub arrival: f64,
+    /// This request's prompt length in tokens (>= 1).
+    pub prompt_len: usize,
+    /// This request's generation budget in tokens.
+    pub gen_tokens: usize,
+    /// Full prompt+generation KV footprint of this request (bytes).
+    pub kv_full: f64,
     /// First time the prompt KV was fully materialized; infinity until
     /// then (the TTFT fallback for zero-generation requests).
     pub ready: f64,
@@ -58,14 +71,15 @@ pub struct ReqState {
     pub kv_held: f64,
     pub energy_j: f64,
     pub preemptions: usize,
-    /// Footprint can never fit: refused at arrival, never queued.
-    pub rejected: bool,
 }
 
 impl ReqState {
-    fn new(arrival: f64) -> ReqState {
+    fn new(arrival: f64, prompt_len: usize, gen_tokens: usize, kv_full: f64) -> ReqState {
         ReqState {
             arrival,
+            prompt_len: prompt_len.max(1),
+            gen_tokens,
+            kv_full,
             ready: f64::INFINITY,
             first_token: f64::INFINITY,
             finish: f64::INFINITY,
@@ -74,40 +88,43 @@ impl ReqState {
             kv_held: 0.0,
             energy_j: 0.0,
             preemptions: 0,
-            rejected: false,
         }
     }
 
     /// Context the request needs materialized before its next decode:
     /// the prompt plus everything decoded so far.
-    pub fn ctx_target(&self, cfg: &ServingConfig) -> usize {
-        cfg.prompt_len + self.decoded
+    pub fn ctx_target(&self) -> usize {
+        self.prompt_len + self.decoded
     }
 
     /// Prompt/recompute tokens still to prefill.
-    pub fn prefill_remaining(&self, cfg: &ServingConfig) -> usize {
-        self.ctx_target(cfg).saturating_sub(self.kv_tokens)
+    pub fn prefill_remaining(&self) -> usize {
+        self.ctx_target().saturating_sub(self.kv_tokens)
     }
 
     /// Can decode a token this step (context materialized, budget left).
-    pub fn decode_ready(&self, cfg: &ServingConfig) -> bool {
-        self.prefill_remaining(cfg) == 0 && self.decoded < cfg.gen_tokens
+    pub fn decode_ready(&self) -> bool {
+        self.prefill_remaining() == 0 && self.decoded < self.gen_tokens
     }
 
     /// Generation budget exhausted and KV caught up — retire.
-    pub fn done(&self, cfg: &ServingConfig) -> bool {
-        self.decoded >= cfg.gen_tokens && self.prefill_remaining(cfg) == 0
+    pub fn done(&self) -> bool {
+        self.decoded >= self.gen_tokens && self.prefill_remaining() == 0
     }
 }
 
 /// Mutable serving-run state the scheduler reads to make decisions.
 /// The engine owns it; schedulers only observe (admission/step choices
-/// are returned, the engine applies them).
+/// are returned, the engine applies them). Requests live in a recycled
+/// slab (`reqs` + `free`), so memory tracks the number of *live*
+/// requests, not the run length.
 pub struct ServingState {
     pub clock: f64,
+    /// Request slab; slots are recycled via the free list after
+    /// retirement.
     pub reqs: Vec<ReqState>,
-    /// Next not-yet-arrived request index (requests are arrival-sorted).
-    pub next_arr: usize,
+    /// Recycled slab slots.
+    free: Vec<usize>,
     /// Arrived, not yet admitted (FCFS; preempted requests re-enter at
     /// the front so resume has priority).
     pub waiting: VecDeque<usize>,
@@ -118,27 +135,56 @@ pub struct ServingState {
     pub preemptions: usize,
     /// Bytes currently reserved against the KV pool.
     pub kv_reserved: f64,
-    /// Full prompt+generation KV footprint of one request (bytes).
-    pub kv_full: f64,
     /// KV bytes of a single context token.
     pub kv_token: f64,
+    /// High-water mark of simultaneously live slab slots — the
+    /// bounded-memory telemetry the streaming tests assert on.
+    pub peak_live: usize,
 }
 
 impl ServingState {
-    pub fn new(arrivals: &[f64], kv_full: f64, kv_token: f64) -> ServingState {
+    pub fn new(kv_token: f64) -> ServingState {
         ServingState {
             clock: 0.0,
-            reqs: arrivals.iter().map(|&t| ReqState::new(t)).collect(),
-            next_arr: 0,
+            reqs: Vec::new(),
+            free: Vec::new(),
             waiting: VecDeque::new(),
             active: Vec::new(),
             completed: 0,
             rejected: 0,
             preemptions: 0,
             kv_reserved: 0.0,
-            kv_full,
             kv_token,
+            peak_live: 0,
         }
+    }
+
+    /// Add an arriving request to the slab (recycling a retired slot if
+    /// one is free) and return its index. The caller queues it.
+    pub fn push(&mut self, arrival: f64, prompt_len: usize, gen_tokens: usize, kv_full: f64) -> usize {
+        let r = ReqState::new(arrival, prompt_len, gen_tokens, kv_full);
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.reqs[i] = r;
+                i
+            }
+            None => {
+                self.reqs.push(r);
+                self.reqs.len() - 1
+            }
+        };
+        self.peak_live = self.peak_live.max(self.reqs.len() - self.free.len());
+        i
+    }
+
+    /// Return a retired request's slot to the free list.
+    pub fn release(&mut self, i: usize) {
+        self.free.push(i);
+    }
+
+    /// Number of live (not yet retired) requests in the slab.
+    pub fn live(&self) -> usize {
+        self.reqs.len() - self.free.len()
     }
 
     /// Bytes admission must reserve for request `i`. Without preemption
@@ -150,9 +196,9 @@ impl ServingState {
     /// completion instead of thrashing in and out of the batch.
     pub fn admit_reserve_bytes(&self, i: usize, cfg: &ServingConfig) -> f64 {
         if cfg.preempt && self.reqs[i].preemptions == 0 {
-            self.reqs[i].ctx_target(cfg) as f64 * self.kv_token
+            self.reqs[i].ctx_target() as f64 * self.kv_token
         } else {
-            self.kv_full
+            self.reqs[i].kv_full
         }
     }
 }
@@ -224,13 +270,13 @@ impl Scheduler for ContinuousBatching {
         fcfs_candidate(st, cfg, cfg.disaggregate_prefill)
     }
 
-    fn plan_step(&mut self, st: &ServingState, cfg: &ServingConfig) -> StepPlan {
+    fn plan_step(&mut self, st: &ServingState, _cfg: &ServingConfig) -> StepPlan {
         StepPlan {
             decode: st
                 .active
                 .iter()
                 .copied()
-                .filter(|&i| st.reqs[i].decode_ready(cfg))
+                .filter(|&i| st.reqs[i].decode_ready())
                 .collect(),
             prefill: Vec::new(),
         }
@@ -261,11 +307,11 @@ impl Scheduler for ChunkedPrefill {
         fcfs_candidate(st, cfg, false)
     }
 
-    fn plan_step(&mut self, st: &ServingState, cfg: &ServingConfig) -> StepPlan {
+    fn plan_step(&mut self, st: &ServingState, _cfg: &ServingConfig) -> StepPlan {
         let budget = self.chunk_tokens.max(1);
         let mut plan = StepPlan::default();
         for &i in &st.active {
-            if st.reqs[i].decode_ready(cfg) {
+            if st.reqs[i].decode_ready() {
                 plan.decode.push(i);
             }
         }
@@ -274,7 +320,7 @@ impl Scheduler for ChunkedPrefill {
             if left == 0 {
                 break;
             }
-            let rem = st.reqs[i].prefill_remaining(cfg);
+            let rem = st.reqs[i].prefill_remaining();
             if rem > 0 {
                 let c = rem.min(left);
                 plan.prefill.push((i, c));
@@ -311,8 +357,11 @@ mod tests {
     }
 
     fn state(n: usize) -> ServingState {
-        let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 1e-3).collect();
-        ServingState::new(&arrivals, 1024.0, 8.0)
+        let mut st = ServingState::new(8.0);
+        for i in 0..n {
+            st.push(i as f64 * 1e-3, 64, 16, 1024.0);
+        }
+        st
     }
 
     #[test]
@@ -320,10 +369,10 @@ mod tests {
         let cfg = cfg();
         let mut st = state(4);
         for i in 0..3 {
-            st.reqs[i].kv_tokens = cfg.prompt_len; // prefilled
+            st.reqs[i].kv_tokens = st.reqs[i].prompt_len; // prefilled
             st.active.push(i);
         }
-        st.reqs[2].decoded = cfg.gen_tokens; // exhausted: not decodable
+        st.reqs[2].decoded = st.reqs[2].gen_tokens; // exhausted: not decodable
         let plan = ContinuousBatching.plan_step(&st, &cfg);
         assert_eq!(plan.decode, vec![0, 1]);
         assert!(plan.prefill.is_empty());
@@ -334,7 +383,7 @@ mod tests {
         let cfg = cfg();
         let mut st = state(4);
         // req 0 decoding, reqs 1-2 mid-prefill
-        st.reqs[0].kv_tokens = cfg.prompt_len;
+        st.reqs[0].kv_tokens = st.reqs[0].prompt_len;
         st.reqs[1].kv_tokens = 10;
         st.active = vec![0, 1, 2];
         let mut sched = ChunkedPrefill { chunk_tokens: 60 };
@@ -369,9 +418,39 @@ mod tests {
         );
         let mut st2 = state(2);
         st2.reqs[0].preemptions = 1;
-        assert_eq!(st2.admit_reserve_bytes(0, &c), st2.kv_full);
+        assert_eq!(st2.admit_reserve_bytes(0, &c), st2.reqs[0].kv_full);
         // without preemption: always the full footprint
         c.preempt = false;
-        assert_eq!(st.admit_reserve_bytes(0, &c), st.kv_full);
+        assert_eq!(st.admit_reserve_bytes(0, &c), st.reqs[0].kv_full);
+    }
+
+    #[test]
+    fn slab_recycles_released_slots() {
+        let mut st = state(3);
+        assert_eq!(st.live(), 3);
+        st.release(1);
+        assert_eq!(st.live(), 2);
+        // the freed slot is reused, so the slab does not grow
+        let i = st.push(9.0, 32, 4, 512.0);
+        assert_eq!(i, 1);
+        assert_eq!(st.reqs.len(), 3);
+        assert_eq!(st.reqs[1].prompt_len, 32);
+        assert_eq!(st.peak_live, 3, "peak tracks the high-water mark");
+    }
+
+    #[test]
+    fn requests_carry_their_own_lengths() {
+        let mut st = ServingState::new(8.0);
+        let i = st.push(0.0, 100, 7, 856.0);
+        let r = &st.reqs[i];
+        assert_eq!(r.ctx_target(), 100);
+        assert_eq!(r.prefill_remaining(), 100);
+        assert!(!r.decode_ready());
+        let mut r2 = st.reqs[i].clone();
+        r2.kv_tokens = 100;
+        assert!(r2.decode_ready());
+        r2.decoded = 7;
+        r2.kv_tokens = 107;
+        assert!(r2.done());
     }
 }

@@ -9,9 +9,11 @@ use std::time::Instant;
 
 use crate::util::stats;
 
-/// Measure a closure: warmup runs, then `samples` timed runs.
-/// Returns (mean_secs, std_secs, min_secs).
-pub fn time_it<F: FnMut()>(mut f: F, warmup: usize, samples: usize) -> (f64, f64, f64) {
+/// Measure a closure: warmup runs, then `samples` timed runs, returning
+/// every per-sample wall-clock second. The raw vector is what licenses
+/// statistical gating downstream (bench_diff runs Welch's t-test over
+/// the per-sample populations instead of comparing two point numbers).
+pub fn time_samples<F: FnMut()>(mut f: F, warmup: usize, samples: usize) -> Vec<f64> {
     for _ in 0..warmup {
         f();
     }
@@ -21,6 +23,13 @@ pub fn time_it<F: FnMut()>(mut f: F, warmup: usize, samples: usize) -> (f64, f64
         f();
         times.push(t0.elapsed().as_secs_f64());
     }
+    times
+}
+
+/// Measure a closure: warmup runs, then `samples` timed runs.
+/// Returns (mean_secs, std_secs, min_secs).
+pub fn time_it<F: FnMut()>(f: F, warmup: usize, samples: usize) -> (f64, f64, f64) {
+    let times = time_samples(f, warmup, samples);
     let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
     (stats::mean(&times), stats::std_dev(&times), min)
 }
@@ -35,6 +44,10 @@ pub fn smoke_mode() -> bool {
 pub struct Bencher {
     pub name: String,
     pub results: Vec<(String, f64, f64)>, // (label, min_s, std_s)
+    /// Raw per-sample wall-clock seconds per benched label (same order
+    /// as `results`); emitted as `samples_ns` in the JSON report so
+    /// bench_diff can gate on a Welch's t-test instead of a point ratio.
+    pub samples: Vec<(String, Vec<f64>)>,
     /// Named ratios (e.g. parallel-vs-serial speedups) carried into the
     /// machine-readable report.
     pub speedups: Vec<(String, f64)>,
@@ -48,6 +61,7 @@ impl Bencher {
         Bencher {
             name: name.to_string(),
             results: Vec::new(),
+            samples: Vec::new(),
             speedups: Vec::new(),
             metrics: Vec::new(),
         }
@@ -55,7 +69,10 @@ impl Bencher {
 
     pub fn bench<F: FnMut()>(&mut self, label: &str, f: F) {
         let (warmup, samples) = if smoke_mode() { (0, 2) } else { (2, 5) };
-        let (mean, std, min) = time_it(f, warmup, samples);
+        let times = time_samples(f, warmup, samples);
+        let mean = stats::mean(&times);
+        let std = stats::std_dev(&times);
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
         // report min too: on shared containers the mean is noisy, the
         // minimum is the reproducible number (EXPERIMENTS.md §Perf)
         println!(
@@ -65,6 +82,7 @@ impl Bencher {
             min * 1e3
         );
         self.results.push((label.to_string(), min, std));
+        self.samples.push((label.to_string(), times));
     }
 
     /// Best (minimum) seconds recorded for `label`, if benched.
@@ -99,8 +117,23 @@ impl Bencher {
         out.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
         out.push_str("  \"results\": [\n");
         for (i, (label, min_s, std_s)) in self.results.iter().enumerate() {
+            // hand-pushed results (unit tests) may lack raw samples;
+            // they get an empty samples_ns and bench_diff falls back to
+            // the min-ratio comparison for that label
+            let samples_ns = self
+                .samples
+                .iter()
+                .find(|(l, _)| l == label)
+                .map(|(_, times)| {
+                    times
+                        .iter()
+                        .map(|t| format!("{:.1}", t * 1e9))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                })
+                .unwrap_or_default();
             out.push_str(&format!(
-                "    {{\"label\": \"{label}\", \"ns_per_iter\": {:.1}, \"std_ns\": {:.1}}}{}\n",
+                "    {{\"label\": \"{label}\", \"ns_per_iter\": {:.1}, \"std_ns\": {:.1}, \"samples_ns\": [{samples_ns}]}}{}\n",
                 min_s * 1e9,
                 std_s * 1e9,
                 if i + 1 < self.results.len() { "," } else { "" }
@@ -234,12 +267,37 @@ mod tests {
         assert_eq!(results.len(), 2);
         let ns = results[0].get("ns_per_iter").and_then(|v| v.as_f64()).unwrap();
         assert!((ns - 1.5e6).abs() < 1.0);
+        // hand-pushed results carry no raw samples — the field is still
+        // present (stable JSON shape) but empty
+        let s0 = results[0].get("samples_ns").and_then(|v| v.as_arr()).unwrap();
+        assert!(s0.is_empty());
         let sp = j.get("speedups").and_then(|s| s.as_arr()).unwrap();
         assert_eq!(sp.len(), 1);
         assert!((sp[0].get("ratio").and_then(|v| v.as_f64()).unwrap() - 3.0).abs() < 1e-9);
         let mt = j.get("metrics").and_then(|s| s.as_arr()).unwrap();
         assert_eq!(mt.len(), 1);
         assert!((mt[0].get("value").and_then(|v| v.as_f64()).unwrap() - 42.5).abs() < 1e-9);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn benched_labels_carry_raw_samples() {
+        let mut b = Bencher::new("unit_samples");
+        b.bench("busy_loop", || {
+            std::hint::black_box((0..500).sum::<u64>());
+        });
+        let path = std::env::temp_dir().join("chiplet_bench_unit_samples.json");
+        b.write_json(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(&text).expect("valid JSON");
+        let results = j.get("results").and_then(|r| r.as_arr()).unwrap();
+        let samples = results[0].get("samples_ns").and_then(|v| v.as_arr()).unwrap();
+        // 2 samples in smoke mode, 5 otherwise — never fewer than 2, so
+        // Welch's t-test downstream always has a population to work with
+        assert!(samples.len() >= 2, "got {} samples", samples.len());
+        for s in samples {
+            assert!(s.as_f64().unwrap() >= 0.0);
+        }
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -10,7 +10,9 @@ pub mod error;
 pub mod json;
 pub mod parallel;
 pub mod prng;
+pub mod sketch;
 pub mod stats;
 
 pub use prng::Rng;
+pub use sketch::{P2Quantile, SampleSink, SinkMode, TailSketch};
 pub use stats::{mean, percentile, std_dev};

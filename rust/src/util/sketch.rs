@@ -1,0 +1,449 @@
+//! Streaming quantile estimation: the P² algorithm (Jain & Chlamtac,
+//! CACM 1985) and the pluggable `SampleSink` used by the serving and
+//! cluster reports.
+//!
+//! Contract: `SampleSink::Exact` buffers every sample and reproduces
+//! `stats::percentile` bit-for-bit — it is the test oracle. `Sketch`
+//! folds each sample into three P² estimators (p50/p95/p99) plus
+//! count/mean/min/max and buffers at most 5 samples per estimator
+//! (15 total), independent of stream length. For n <= 5 the sketch is
+//! exact (it still holds every sample); beyond that the markers track
+//! the target quantiles with bounded relative error — see the pinned
+//! tolerances in the tests below and the quantile contract in ROADMAP.
+
+use crate::util::stats::percentile;
+
+/// One P² marker bank tracking a single quantile `q` in (0, 1).
+///
+/// Memory is O(1): five marker heights, five positions, and the first
+/// five observations (kept so small-n queries stay exact).
+#[derive(Clone, Debug, PartialEq)]
+pub struct P2Quantile {
+    q: f64,
+    count: u64,
+    /// First five observations, sorted once the markers initialize.
+    initial: Vec<f64>,
+    heights: [f64; 5],
+    positions: [f64; 5],
+    desired: [f64; 5],
+    increments: [f64; 5],
+}
+
+impl P2Quantile {
+    pub fn new(q: f64) -> Self {
+        assert!(q > 0.0 && q < 1.0, "quantile target must be in (0,1)");
+        P2Quantile {
+            q,
+            count: 0,
+            initial: Vec::with_capacity(5),
+            heights: [0.0; 5],
+            positions: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            increments: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+        }
+    }
+
+    /// Number of observations folded in so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Samples currently buffered (bounded by 5 forever).
+    pub fn buffered_len(&self) -> usize {
+        self.initial.len()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if self.count <= 5 {
+            self.initial.push(x);
+            if self.count == 5 {
+                self.initial.sort_by(f64::total_cmp);
+                self.heights.copy_from_slice(&self.initial);
+            }
+            return;
+        }
+
+        // Locate the marker cell containing x, stretching the extremes.
+        let h = &mut self.heights;
+        let k = if x < h[0] {
+            h[0] = x;
+            0
+        } else if x >= h[4] {
+            h[4] = x;
+            3
+        } else {
+            let mut cell = 0;
+            for i in 0..4 {
+                if x < h[i + 1] {
+                    cell = i;
+                    break;
+                }
+            }
+            cell
+        };
+
+        for i in (k + 1)..5 {
+            self.positions[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.desired[i] += self.increments[i];
+        }
+
+        // Nudge the interior markers toward their desired positions.
+        for i in 1..4 {
+            let d = self.desired[i] - self.positions[i];
+            let right_gap = self.positions[i + 1] - self.positions[i];
+            let left_gap = self.positions[i - 1] - self.positions[i];
+            if (d >= 1.0 && right_gap > 1.0) || (d <= -1.0 && left_gap < -1.0) {
+                let s = if d >= 1.0 { 1.0 } else { -1.0 };
+                let cand = self.parabolic(i, s);
+                self.heights[i] = if self.heights[i - 1] < cand && cand < self.heights[i + 1] {
+                    cand
+                } else {
+                    self.linear(i, s)
+                };
+                self.positions[i] += s;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let h = &self.heights;
+        let n = &self.positions;
+        h[i]
+            + s / (n[i + 1] - n[i - 1])
+                * ((n[i] - n[i - 1] + s) * (h[i + 1] - h[i]) / (n[i + 1] - n[i])
+                    + (n[i + 1] - n[i] - s) * (h[i] - h[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let h = &self.heights;
+        let n = &self.positions;
+        let j = if s > 0.0 { i + 1 } else { i - 1 };
+        h[i] + s * (h[j] - h[i]) / (n[j] - n[i])
+    }
+
+    /// Current estimate of the tracked quantile. Exact for n <= 5.
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else if self.count <= 5 {
+            percentile(&self.initial, self.q * 100.0)
+        } else {
+            self.heights[2]
+        }
+    }
+}
+
+/// Streaming tail summary: p50/p95/p99 P² estimators plus running
+/// count/mean/min/max. O(1) memory regardless of stream length.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TailSketch {
+    p50: P2Quantile,
+    p95: P2Quantile,
+    p99: P2Quantile,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for TailSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TailSketch {
+    pub fn new() -> Self {
+        TailSketch {
+            p50: P2Quantile::new(0.50),
+            p95: P2Quantile::new(0.95),
+            p99: P2Quantile::new(0.99),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.p50.push(x);
+        self.p95.push(x);
+        self.p99.push(x);
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile estimate; only the tracked targets (50, 95, 99) are
+    /// supported — the nearest tracked marker answers other probes.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if p <= 72.5 {
+            self.p50.value()
+        } else if p <= 97.0 {
+            self.p95.value()
+        } else {
+            self.p99.value()
+        }
+    }
+
+    /// Samples buffered across the three estimators (bounded by 15).
+    pub fn buffered_len(&self) -> usize {
+        self.p50.buffered_len() + self.p95.buffered_len() + self.p99.buffered_len()
+    }
+}
+
+/// Which sink flavor a run should use for its latency samples.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SinkMode {
+    /// Buffer every sample; quantiles via `stats::percentile` (oracle).
+    #[default]
+    Exact,
+    /// Fold into P² sketches; O(1) memory for million-request traces.
+    Sketch,
+}
+
+impl SinkMode {
+    pub fn make(self) -> SampleSink {
+        match self {
+            SinkMode::Exact => SampleSink::Exact(Vec::new()),
+            SinkMode::Sketch => SampleSink::Sketch(TailSketch::new()),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SinkMode::Exact => "exact",
+            SinkMode::Sketch => "sketch",
+        }
+    }
+}
+
+/// Pluggable destination for per-request latency samples.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SampleSink {
+    Exact(Vec<f64>),
+    Sketch(TailSketch),
+}
+
+impl SampleSink {
+    pub fn push(&mut self, x: f64) {
+        match self {
+            SampleSink::Exact(v) => v.push(x),
+            SampleSink::Sketch(s) => s.push(x),
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        match self {
+            SampleSink::Exact(v) => v.len() as u64,
+            SampleSink::Sketch(s) => s.count(),
+        }
+    }
+
+    pub fn quantile(&self, p: f64) -> f64 {
+        match self {
+            SampleSink::Exact(v) => percentile(v, p),
+            SampleSink::Sketch(s) => s.quantile(p),
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match self {
+            SampleSink::Exact(v) => crate::util::stats::mean(v),
+            SampleSink::Sketch(s) => s.mean(),
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        match self {
+            SampleSink::Exact(v) => v.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            SampleSink::Sketch(s) => s.max(),
+        }
+    }
+
+    /// Samples currently held in memory — the RSS proxy asserted by the
+    /// streaming smoke tests. Exact grows with the stream; Sketch is
+    /// bounded by 15 forever.
+    pub fn buffered_len(&self) -> usize {
+        match self {
+            SampleSink::Exact(v) => v.len(),
+            SampleSink::Sketch(s) => s.buffered_len(),
+        }
+    }
+
+    pub fn mode(&self) -> SinkMode {
+        match self {
+            SampleSink::Exact(_) => SinkMode::Exact,
+            SampleSink::Sketch(_) => SinkMode::Sketch,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rel_err(est: f64, exact: f64) -> f64 {
+        (est - exact).abs() / exact.abs().max(1e-12)
+    }
+
+    fn check_stream(xs: &[f64], tol50: f64, tol95: f64, tol99: f64, label: &str) {
+        let mut sk = TailSketch::new();
+        for &x in xs {
+            sk.push(x);
+        }
+        for (p, tol) in [(50.0, tol50), (95.0, tol95), (99.0, tol99)] {
+            let exact = percentile(xs, p);
+            let est = sk.quantile(p);
+            assert!(
+                rel_err(est, exact) < tol,
+                "{label} p{p}: sketch {est} vs exact {exact} (tol {tol})"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_stream_tracks_exact_quantiles() {
+        let mut rng = Rng::new(0xA11CE);
+        let xs: Vec<f64> = (0..100_000).map(|_| rng.f64()).collect();
+        check_stream(&xs, 0.05, 0.05, 0.05, "uniform");
+    }
+
+    #[test]
+    fn exponential_stream_tracks_exact_quantiles() {
+        let mut rng = Rng::new(0xB0B);
+        let xs: Vec<f64> = (0..100_000).map(|_| -(1.0 - rng.f64()).ln()).collect();
+        check_stream(&xs, 0.10, 0.10, 0.15, "exponential");
+    }
+
+    #[test]
+    fn heavy_tailed_stream_tracks_exact_quantiles() {
+        // lognormal sigma = 1.5: p99/p50 ratio ~ 33x, the ShareGPT-style
+        // regime the streaming pipeline is built for
+        let mut rng = Rng::new(0xC0FFEE);
+        let xs: Vec<f64> = (0..100_000).map(|_| (1.5 * rng.normal()).exp()).collect();
+        check_stream(&xs, 0.10, 0.15, 0.25, "lognormal");
+    }
+
+    #[test]
+    fn sketch_is_deterministic_for_identical_streams() {
+        let mut rng = Rng::new(42);
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.f64() * 7.0).collect();
+        let mut a = TailSketch::new();
+        let mut b = TailSketch::new();
+        for &x in &xs {
+            a.push(x);
+            b.push(x);
+        }
+        assert_eq!(a, b, "same stream must yield identical sketch state");
+        assert_eq!(a.quantile(99.0).to_bits(), b.quantile(99.0).to_bits());
+    }
+
+    #[test]
+    fn small_n_is_exact() {
+        // n <= 5: the sketch still holds every sample and must agree
+        // with the exact-sort oracle bit-for-bit at every target
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0];
+        for n in 1..=5 {
+            let mut sk = TailSketch::new();
+            for &x in &xs[..n] {
+                sk.push(x);
+            }
+            for p in [50.0, 95.0, 99.0] {
+                assert_eq!(
+                    sk.quantile(p),
+                    percentile(&xs[..n], p),
+                    "n={n} p{p} must be exact"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_memory_is_bounded() {
+        let mut sk = SinkMode::Sketch.make();
+        let mut peak = 0;
+        let mut rng = Rng::new(7);
+        for _ in 0..50_000 {
+            sk.push(rng.f64());
+            peak = peak.max(sk.buffered_len());
+        }
+        assert!(peak <= 15, "sketch buffered {peak} samples (cap 15)");
+        assert_eq!(sk.count(), 50_000);
+    }
+
+    #[test]
+    fn exact_sink_matches_percentile_oracle() {
+        let mut sink = SinkMode::Exact.make();
+        let xs = [0.3, 0.9, 0.1, 0.5];
+        for &x in &xs {
+            sink.push(x);
+        }
+        for p in [50.0, 95.0, 99.0] {
+            assert_eq!(sink.quantile(p), percentile(&xs, p));
+        }
+        assert_eq!(sink.buffered_len(), 4);
+        assert_eq!(sink.mode().name(), "exact");
+    }
+
+    #[test]
+    fn tail_sketch_summary_stats() {
+        let mut sk = TailSketch::new();
+        for x in [2.0, 4.0, 6.0] {
+            sk.push(x);
+        }
+        assert_eq!(sk.count(), 3);
+        assert_eq!(sk.mean(), 4.0);
+        assert_eq!(sk.min(), 2.0);
+        assert_eq!(sk.max(), 6.0);
+        let empty = TailSketch::new();
+        assert_eq!(empty.mean(), 0.0);
+        assert_eq!(empty.quantile(99.0), 0.0);
+    }
+
+    #[test]
+    fn sketch_orders_quantiles_on_monotone_stream() {
+        // 1..=100k in order: markers must keep p50 <= p95 <= p99
+        let mut sk = TailSketch::new();
+        for i in 1..=100_000 {
+            sk.push(i as f64);
+        }
+        let (a, b, c) = (sk.quantile(50.0), sk.quantile(95.0), sk.quantile(99.0));
+        assert!(a <= b && b <= c, "quantile ordering violated: {a} {b} {c}");
+        assert!(rel_err(a, 50_000.5) < 0.05, "p50 {a}");
+        assert!(rel_err(c, 99_000.0) < 0.05, "p99 {c}");
+    }
+}

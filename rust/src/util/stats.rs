@@ -18,20 +18,27 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// p-th percentile (0..=100) by linear interpolation on a sorted copy.
+/// p-th percentile (0..=100) by linear interpolation between the two
+/// order statistics bracketing the rank. NaN-safe (`total_cmp` ordering,
+/// NaNs sort above +inf) and allocation-light: a single scratch copy is
+/// partitioned with `select_nth_unstable_by` instead of fully sorted.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = (p / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
+    let (_, lo_val, rest) = s.select_nth_unstable_by(lo, f64::total_cmp);
+    let lo_val = *lo_val;
     if lo == hi {
-        s[lo]
+        lo_val
     } else {
-        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+        // hi == lo + 1, so the hi-th order statistic is the minimum of
+        // the right partition left behind by the selection above.
+        let hi_val = rest.iter().copied().min_by(f64::total_cmp).unwrap_or(lo_val);
+        lo_val + (rank - lo as f64) * (hi_val - lo_val)
     }
 }
 
@@ -103,5 +110,31 @@ mod tests {
     #[test]
     fn geomean_basic() {
         assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nan_safe() {
+        // NaNs must not panic; total_cmp sorts them above +inf so finite
+        // quantiles of a mostly-finite stream stay meaningful
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert!(percentile(&xs, 100.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_matches_full_sort_reference() {
+        // the select_nth path must agree with the classic sorted-copy
+        // interpolation on a scrambled stream at every probed quantile
+        let mut rng = crate::util::Rng::new(0xCAFE);
+        let xs: Vec<f64> = (0..257).map(|_| rng.f64() * 100.0).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(f64::total_cmp);
+        for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+            let (lo, hi) = (rank.floor() as usize, rank.ceil() as usize);
+            let want = sorted[lo] + (rank - lo as f64) * (sorted[hi] - sorted[lo]);
+            assert!((percentile(&xs, p) - want).abs() < 1e-12, "p{p}");
+        }
     }
 }

@@ -11,7 +11,8 @@ use chiplet_hi::config::{ModelZoo, SystemConfig};
 use chiplet_hi::model::kernels::Workload;
 use chiplet_hi::moo::{design::NoiDesign, nsga2, stage, Evaluator};
 use chiplet_hi::sim::{
-    ArrivalProcess, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec, ServingConfig,
+    ArrivalProcess, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec, LenDist,
+    ServingConfig,
 };
 
 fn evaluator(jobs: usize) -> Evaluator {
@@ -209,6 +210,58 @@ fn cluster_identical_across_job_counts_under_preemption() {
         for (a, b) in run.instances.iter().zip(reference.instances.iter()) {
             assert_eq!(a.completed, b.completed, "jobs={jobs}");
             assert_eq!(a.busy_secs, b.busy_secs, "jobs={jobs}");
+        }
+    }
+}
+
+#[test]
+fn cluster_identical_across_job_counts_under_streaming_arrivals() {
+    // length-carrying workloads (diurnal rate modulation + lognormal
+    // prompt/gen lengths) take the event-routing path instead of the
+    // scalar trace splitter; jobs must still be a pure wall-clock knob
+    let sys = SystemConfig::s36();
+    let m = ModelZoo::bert_base();
+    let cfg = ClusterConfig {
+        specs: vec![
+            InstanceSpec::of(Arch::Hi25D),
+            InstanceSpec::of(Arch::TransPimChiplet),
+            InstanceSpec::of(Arch::HaimaChiplet),
+        ],
+        policy: DispatchPolicy::P2c,
+        serving: ServingConfig {
+            arrivals: ArrivalProcess::Modulated {
+                base_rate_per_sec: 400.0,
+                amplitude: 0.6,
+                period_secs: 0.05,
+                num_requests: 48,
+            },
+            len_dist: LenDist::LogNormal { sigma: 1.0 },
+            prompt_len: 48,
+            gen_tokens: 12,
+            max_batch: 8,
+            seed: 0xFEED,
+            ..Default::default()
+        },
+    };
+    let reference = ClusterSim::new(&sys, &m, cfg.clone()).run_with_jobs(1).unwrap();
+    assert_eq!(reference.requests, 48);
+    assert_eq!(reference.completed, 48, "all modulated arrivals must finish");
+    for jobs in [2, 4] {
+        let run = ClusterSim::new(&sys, &m, cfg.clone()).run_with_jobs(jobs).unwrap();
+        assert_eq!(run.completed, reference.completed, "jobs={jobs}");
+        assert_eq!(run.makespan_secs, reference.makespan_secs, "jobs={jobs}");
+        assert_eq!(run.ttft_p50_secs, reference.ttft_p50_secs, "jobs={jobs}");
+        assert_eq!(run.ttft_p99_secs, reference.ttft_p99_secs, "jobs={jobs}");
+        assert_eq!(run.tpot_p99_secs, reference.tpot_p99_secs, "jobs={jobs}");
+        assert_eq!(
+            run.throughput_tok_s, reference.throughput_tok_s,
+            "jobs={jobs}"
+        );
+        for (a, b) in run.instances.iter().zip(reference.instances.iter()) {
+            assert_eq!(a.requests, b.requests, "jobs={jobs}");
+            assert_eq!(a.completed, b.completed, "jobs={jobs}");
+            assert_eq!(a.busy_secs, b.busy_secs, "jobs={jobs}");
+            assert_eq!(a.peak_kv_bytes, b.peak_kv_bytes, "jobs={jobs}");
         }
     }
 }
