@@ -1,0 +1,100 @@
+//! Observability walkthrough: capture a Chrome/Perfetto trace of a
+//! streaming autoscaling fleet, then pull a NoI link-utilization
+//! heatmap out of the cycle-accurate simulator.
+//!
+//! The tracer is the library-level API behind `serve --trace` /
+//! `simulate --link-heatmap`: a shared recording buffer the fleet
+//! router (track 0) and every engine instance (tracks 1..) append
+//! into, exported as Trace Event Format JSON that loads directly in
+//! <https://ui.perfetto.dev> or `chrome://tracing`. Attaching a
+//! `Tracer::off()` handle instead (the NullSink) costs one predictable
+//! branch per emit site and is bit-identical — pinned by tests, so
+//! traces are free to leave wired into production paths.
+//!
+//! Run: `cargo run --release --example trace_capture`
+
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::obs::{EvKind, Tracer};
+use chiplet_hi::sim::{
+    ArrivalProcess, AutoscaleConfig, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec,
+    Platform, ServingConfig, SimOptions, StreamConfig,
+};
+use chiplet_hi::util::SinkMode;
+
+fn main() {
+    let sys = SystemConfig::s36();
+    let model = ModelZoo::gpt_j();
+
+    // ---- traced streaming fleet: 3 JSQ instances behind a watermark
+    // autoscaler, 5k Poisson arrivals, gauge windows of 10 ms
+    let cfg = ClusterConfig {
+        specs: vec![InstanceSpec::of(Arch::Hi25D); 3],
+        policy: DispatchPolicy::Jsq,
+        serving: ServingConfig {
+            arrivals: ArrivalProcess::Poisson {
+                rate_per_sec: 5.0e3,
+                num_requests: 5000,
+            },
+            prompt_len: 64,
+            gen_tokens: 8,
+            max_batch: 16,
+            sink: SinkMode::Sketch,
+            ..Default::default()
+        },
+    };
+    let stream = StreamConfig {
+        autoscale: Some(AutoscaleConfig {
+            min_instances: 1,
+            max_instances: 3,
+            high_watermark: 4.0,
+            low_watermark: 1.0,
+            cooldown_secs: 0.05,
+        }),
+        slo_ttft_secs: None,
+    };
+    let tracer = Tracer::recording().with_metrics_every(0.01);
+    let fleet = ClusterSim::new(&sys, &model, cfg)
+        .run_streaming_traced(&stream, &tracer)
+        .expect("streaming fleet run");
+    println!("{}", fleet.summary_line());
+    println!(
+        "  scale-ups {} / scale-downs {} / shed {}",
+        fleet.scale_ups, fleet.scale_downs, fleet.shed
+    );
+
+    // per-phase census straight off the recorded buffer
+    let (spans, instants, counters) = tracer
+        .with_buf(|b| {
+            let count = |k: EvKind| b.events.iter().filter(|e| e.kind == k).count();
+            (
+                count(EvKind::AsyncBegin),
+                count(EvKind::Instant),
+                count(EvKind::Counter),
+            )
+        })
+        .unwrap();
+    println!(
+        "trace: {} events — {spans} request spans, {instants} instant markers, {counters} gauge windows",
+        tracer.event_count()
+    );
+
+    let path = "TRACE_EXAMPLE.json";
+    std::fs::write(path, tracer.chrome_json().unwrap()).expect("write trace");
+    println!("wrote {path} — load it in https://ui.perfetto.dev or chrome://tracing");
+
+    // ---- NoI heatmap: run the same model through the flit-level
+    // cycle sim with per-link profiling on, then export the histogram
+    let opts = SimOptions {
+        cycle_accurate: true,
+        ..Default::default()
+    };
+    let platform = Platform::new(Arch::Hi25D, &sys, &opts);
+    platform.enable_noi_profiling();
+    let r = platform.run(&model, 256, &opts);
+    println!("\ncycle-accurate: {}", r.summary_line());
+    let heatmap = platform.noi_heatmap_json().expect("profiling was enabled");
+    let hot = heatmap.lines().count();
+    std::fs::write("NOI_HEATMAP_EXAMPLE.json", &heatmap).expect("write heatmap");
+    println!("wrote NOI_HEATMAP_EXAMPLE.json ({hot} lines of per-link flit-hop data)");
+}

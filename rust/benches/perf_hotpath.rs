@@ -16,6 +16,7 @@ use chiplet_hi::model::kernels::Workload;
 use chiplet_hi::model::traffic::hi_traffic;
 use chiplet_hi::moo::{design::NoiDesign, Evaluator};
 use chiplet_hi::noi::{analytic, CycleSim, RoutingTable, Topology};
+use chiplet_hi::obs::Tracer;
 use chiplet_hi::sim::engine::chiplets_for;
 use chiplet_hi::sim::{
     simulate, ArrivalProcess, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec, Platform,
@@ -141,6 +142,15 @@ fn main() {
     };
     b.bench("serving_engine_32req", || {
         let mut s = ServingSim::new(&platform, &gpt, serve_cfg.clone());
+        std::hint::black_box(s.run());
+    });
+    // disabled-path tracing cost: same engine run with an explicit
+    // NullSink tracer attached — every emit site pays its one branch.
+    // CI Welch-diffs this against serving_engine_32req's archived
+    // baseline, pinning "trace off ≈ free" as a perf invariant.
+    b.bench("serving_trace_off_overhead", || {
+        let mut s = ServingSim::new(&platform, &gpt, serve_cfg.clone())
+            .with_tracer(Tracer::off(), 1);
         std::hint::black_box(s.run());
     });
     let cluster_cfg = ClusterConfig {

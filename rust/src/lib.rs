@@ -39,6 +39,7 @@ pub mod metrics;
 pub mod model;
 pub mod moo;
 pub mod noi;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod thermal;

@@ -4,6 +4,9 @@
 //!   simulate   --system 36|64|100 --model bert-base --seq 64 --arch hi
 //!              [--all-arch] [--cycle-accurate] [--design file.json]
 //!              [--max-flits N]  (cycle-sim volume-sampling bound)
+//!              [--json out.json]  (kernel-breakdown report export)
+//!              [--link-heatmap out.json]  (per-link flit-hop / per-router
+//!               busy-cycle histograms; implies --cycle-accurate)
 //!   sweep      --system 64 --model bart-large        (Fig 9-style table)
 //!   optimize   --system 36 --model bert-base [--solver stage|amosa|nsga2]
 //!              [--3d] [--export design.json]          (Fig 4 / Eq 10-20)
@@ -24,13 +27,18 @@
 //!              [--autoscale [--min-instances 1] [--max-instances N]
 //!               [--scale-up 12] [--scale-down 2] [--cooldown-ms 500]]
 //!              [--slo-ttft-ms MS]  (shed arrivals predicted to bust it)
+//!              [--trace out.json [--metrics-every SECS]]  (Chrome-trace
+//!               export: request lifecycle spans + fleet events + windowed
+//!               gauges; single-instance and streaming-fleet modes)
 //!   endurance  [--seq 4096]                           (§4.4 analysis)
 //!   functional [--layers 2] [--artifacts artifacts]   (end-to-end driver)
 //!   info                                              (Table 1-3 dump)
 //!
 //! Global: --jobs N caps the worker threads of the parallel MOO/serving
 //! paths (default: CHIPLET_JOBS env, else available cores); results are
-//! bit-identical for any N.
+//! bit-identical for any N. --quiet/-q silences everything but errors,
+//! -v/--verbose enables debug narration; all diagnostics go to stderr so
+//! stdout stays pipeable.
 
 use chiplet_hi::arch::SfcKind;
 use chiplet_hi::baselines::Arch;
@@ -43,15 +51,22 @@ use chiplet_hi::sim::{
     self, ArrivalProcess, AutoscaleConfig, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec,
     LenDist, Platform, ServingConfig, ServingReport, ServingSim, SimOptions, StreamConfig, Tenant,
 };
+use chiplet_hi::obs::Tracer;
 use chiplet_hi::util::SinkMode;
 use chiplet_hi::util::bench::Table;
 use chiplet_hi::util::cli::Args;
 use chiplet_hi::util::error::{Context, Result};
+use chiplet_hi::util::log::{self, Level};
 use chiplet_hi::util::parallel;
-use chiplet_hi::{anyhow, bail};
+use chiplet_hi::{anyhow, bail, log_debug, log_error, log_info, log_warn};
 
 fn main() {
     let args = Args::from_env();
+    if args.has_flag("quiet") || args.has_flag("q") {
+        log::set_level(Level::Error);
+    } else if args.has_flag("verbose") || args.has_flag("v") {
+        log::set_level(Level::Debug);
+    }
     let cmd = args
         .positional
         .first()
@@ -60,7 +75,7 @@ fn main() {
     let code = match run(cmd, &args) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            log_error!("{e:#}");
             1
         }
     };
@@ -128,8 +143,10 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let sys = system_from(args);
             let model = model_from(args, "bert-base")?;
             let n = args.get_usize("seq", 64);
+            let heatmap_path = args.get("link-heatmap");
             let opts = SimOptions {
-                cycle_accurate: args.has_flag("cycle-accurate"),
+                // the heatmap counts flit hops, so it only exists cycle-accurately
+                cycle_accurate: args.has_flag("cycle-accurate") || heatmap_path.is_some(),
                 max_flits: max_flits_from(args),
                 ..Default::default()
             };
@@ -140,8 +157,21 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 vec![Arch::by_name(args.get_str("arch", "hi"))
                     .ok_or_else(|| anyhow!("unknown arch"))?]
             };
+            if heatmap_path.is_some() && arches.len() > 1 {
+                log_warn!("--link-heatmap records the first arch listed only");
+            }
+            log_debug!(
+                "simulate: {} arch(es), n={n}, cycle_accurate={}",
+                arches.len(),
+                opts.cycle_accurate
+            );
+            let mut reports = Vec::new();
+            let mut heatmap: Option<String> = None;
             for arch in arches {
                 let platform = platform_for(arch, &sys, &design, &opts)?;
+                if heatmap_path.is_some() && heatmap.is_none() {
+                    platform.enable_noi_profiling();
+                }
                 let r = platform.run(&model, n, &opts);
                 println!("{}", r.summary_line());
                 if args.has_flag("kernels") {
@@ -157,6 +187,25 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                         );
                     }
                 }
+                if heatmap_path.is_some() && heatmap.is_none() {
+                    heatmap = platform.noi_heatmap_json();
+                }
+                reports.push(r);
+            }
+            if let Some(path) = args.get("json") {
+                let body = reports
+                    .iter()
+                    .map(|r| r.to_json().trim_end().to_string())
+                    .collect::<Vec<_>>()
+                    .join(",\n");
+                std::fs::write(path, format!("{{\"reports\": [\n{body}\n]}}\n"))
+                    .with_context(|| format!("writing {path}"))?;
+                log_info!("wrote simulate report to {path}");
+            }
+            if let Some(path) = heatmap_path {
+                let js = heatmap.ok_or_else(|| anyhow!("no NoI profile recorded"))?;
+                std::fs::write(path, js).with_context(|| format!("writing {path}"))?;
+                log_info!("wrote NoI link heatmap to {path}");
             }
             Ok(())
         }
@@ -204,7 +253,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 NoiDesign::hi_seed(&sys, &chiplets, SfcKind::Hilbert),
             ];
             let solver = args.get_str("solver", "stage");
-            println!(
+            log_info!(
                 "optimizing {} chiplets / {} / N={n} with {solver} ...",
                 sys.size.chiplets(),
                 model.name
@@ -244,7 +293,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     .best_scalar()
                     .context("empty Pareto archive — nothing to export")?;
                 d.save(path)?;
-                println!(
+                log_info!(
                     "exported knee design (objectives [{}]) to {path}",
                     obj.iter()
                         .map(|x| format!("{x:.4}"))
@@ -405,7 +454,16 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 .map(|s| Arch::by_name(s).ok_or_else(|| anyhow!("unknown arch '{s}'")))
                 .collect::<Result<_>>()?;
             let instances = args.get_usize("instances", 1);
-            println!(
+            // --trace: Chrome-trace capture. The tracer's shared buffer
+            // is Rc-backed (single-threaded by design), so traced runs
+            // take the serial paths below.
+            let trace_path = args.get("trace");
+            let tracer = if trace_path.is_some() {
+                Tracer::recording().with_metrics_every(args.get_f64("metrics-every", 0.0))
+            } else {
+                Tracer::off()
+            };
+            log_info!(
                 "serving {} on {} chiplets: {} req @ {:.1} req/s, prompt {}, gen {}, batch {}{}{}{}{}",
                 model.name,
                 sys.size.chiplets(),
@@ -468,8 +526,14 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                             .transpose()
                             .with_context(|| "parsing --slo-ttft-ms")?,
                     };
-                    sim.run_streaming(&stream)?
+                    sim.run_streaming_traced(&stream, &tracer)?
                 } else {
+                    if trace_path.is_some() {
+                        log_warn!(
+                            "--trace covers the streaming fleet path only; \
+                             buffered fleet run is untraced"
+                        );
+                    }
                     sim.run()?
                 };
                 let mut t = Table::new(
@@ -504,7 +568,17 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 if let Some(path) = args.get("json") {
                     std::fs::write(path, fleet.to_json())
                         .with_context(|| format!("writing fleet report to {path}"))?;
-                    println!("wrote fleet report to {path}");
+                    log_info!("wrote fleet report to {path}");
+                }
+                if let (true, Some(path), Some(js)) =
+                    (streaming, trace_path, tracer.chrome_json())
+                {
+                    std::fs::write(path, js)
+                        .with_context(|| format!("writing trace to {path}"))?;
+                    log_info!(
+                        "wrote chrome trace to {path} ({} events)",
+                        tracer.event_count()
+                    );
                 }
                 return Ok(());
             }
@@ -520,22 +594,38 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     "TPOT p50 ms", "TPOT p99 ms", "mJ/req", "batch", "peak KV MB",
                 ],
             );
-            // one serving simulation per arch, run concurrently (each
-            // worker builds its own platform); output order is the arch
-            // order regardless of completion order
-            let reports = parallel::par_map(
-                parallel::default_jobs(),
-                &arches,
-                |&arch| -> Result<ServingReport> {
+            // one serving simulation per arch. Untraced runs go through
+            // par_map (each worker builds its own platform; output order
+            // is the arch order regardless of completion order); traced
+            // runs go serially — the tracer's Rc buffer is !Send, which
+            // is the point (tracing targets the single-threaded paths).
+            let mut rows = Vec::with_capacity(arches.len());
+            if tracer.on() {
+                for (i, &arch) in arches.iter().enumerate() {
+                    let track = i as u32 + 1;
+                    tracer.name_track(track, arch.name());
                     let platform = platform_for(arch, &sys, &design, &opts)?;
-                    Ok(ServingSim::new(&platform, &model, cfg.clone())
-                        .with_opts(opts.clone())
-                        .run())
-                },
-            );
-            let mut rows = Vec::with_capacity(reports.len());
-            for r in reports {
-                rows.push(r?);
+                    rows.push(
+                        ServingSim::new(&platform, &model, cfg.clone())
+                            .with_opts(opts.clone())
+                            .with_tracer(tracer.clone(), track)
+                            .run(),
+                    );
+                }
+            } else {
+                let reports = parallel::par_map(
+                    parallel::default_jobs(),
+                    &arches,
+                    |&arch| -> Result<ServingReport> {
+                        let platform = platform_for(arch, &sys, &design, &opts)?;
+                        Ok(ServingSim::new(&platform, &model, cfg.clone())
+                            .with_opts(opts.clone())
+                            .run())
+                    },
+                );
+                for r in reports {
+                    rows.push(r?);
+                }
             }
             for r in &rows {
                 t.row(vec![
@@ -560,7 +650,15 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                     .join(",\n");
                 std::fs::write(path, format!("{{\"reports\": [\n{body}\n]}}\n"))
                     .with_context(|| format!("writing serving report to {path}"))?;
-                println!("wrote serving report to {path}");
+                log_info!("wrote serving report to {path}");
+            }
+            if let (Some(path), Some(js)) = (trace_path, tracer.chrome_json()) {
+                std::fs::write(path, js)
+                    .with_context(|| format!("writing trace to {path}"))?;
+                log_info!(
+                    "wrote chrome trace to {path} ({} events)",
+                    tracer.event_count()
+                );
             }
             Ok(())
         }
@@ -636,7 +734,15 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             println!(
                 "autoscaling fleet: `serve --instances N --autoscale [--min-instances 1] [--max-instances N] [--scale-up 12] [--scale-down 2] [--cooldown-ms 500] [--slo-ttft-ms 250]`"
             );
-            println!("global flags: --jobs N (parallel worker cap; CHIPLET_JOBS env)");
+            println!(
+                "tracing: `serve ... --trace out.json [--metrics-every 0.5]` (Chrome/Perfetto trace: request spans, fleet events, windowed gauges)"
+            );
+            println!(
+                "NoI profiling: `simulate --link-heatmap out.json` (per-link flit hops + per-router busy cycles; implies --cycle-accurate); `simulate --json out.json` exports kernel breakdowns"
+            );
+            println!(
+                "global flags: --jobs N (parallel worker cap; CHIPLET_JOBS env) | --quiet/-q | -v/--verbose"
+            );
             println!("see README.md for usage");
             Ok(())
         }

@@ -1,6 +1,7 @@
 //! Result types + report formatting for the system simulator.
 
 use crate::model::kernels::KernelKind;
+use crate::util::json::JsonWriter;
 
 /// Per-kernel timing/energy breakdown (one entry per phase kind).
 #[derive(Debug, Clone)]
@@ -66,6 +67,40 @@ impl SimReport {
             self.temp_c
         )
     }
+
+    /// Machine-readable report (the `simulate --json` interchange) —
+    /// top-level end-to-end numbers plus the per-kernel phase
+    /// breakdown, via the shared [`JsonWriter`].
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj_pretty();
+        w.field_str("arch", &self.arch);
+        w.field_str("model", &self.model);
+        w.field_usize("seq_len", self.seq_len);
+        w.field_usize("system_chiplets", self.system_chiplets);
+        w.field_f64("latency_secs", self.latency_secs);
+        w.field_f64("energy_j", self.energy_j);
+        w.field_f64("edp", self.edp());
+        w.field_f64("temp_c", self.temp_c);
+        w.key("kernels");
+        w.begin_arr_pretty();
+        for k in &self.kernels {
+            w.begin_obj();
+            w.field_str("kind", k.kind.name());
+            w.field_f64("compute_secs", k.compute_secs);
+            w.field_f64("comm_secs", k.comm_secs);
+            w.field_f64("dram_secs", k.dram_secs);
+            w.field_f64("overhead_secs", k.overhead_secs);
+            w.field_f64("energy_j", k.energy_j);
+            w.field_usize("repeats", k.repeats);
+            w.end();
+        }
+        w.end();
+        w.end();
+        let mut out = w.finish();
+        out.push('\n');
+        out
+    }
 }
 
 #[cfg(test)]
@@ -114,5 +149,34 @@ mod tests {
         };
         assert!((r.edp() - 0.1).abs() < 1e-12);
         assert!(r.summary_line().contains("BERT-Base"));
+    }
+
+    #[test]
+    fn json_export_round_trips() {
+        let r = SimReport {
+            arch: "hi".into(),
+            model: "BERT-Base".into(),
+            seq_len: 64,
+            system_chiplets: 36,
+            kernels: vec![km(KernelKind::Score, 1.0, 12)],
+            latency_secs: 0.05,
+            energy_j: 2.0,
+            temp_c: 60.0,
+        };
+        let js = r.to_json();
+        assert!(js.starts_with("{\n  \"arch\": \"hi\",\n"));
+        assert!(js.ends_with("\n}\n"));
+        let parsed = crate::util::json::Json::parse(&js).unwrap();
+        assert_eq!(
+            parsed.get("latency_secs").and_then(|v| v.as_f64()),
+            Some(0.05)
+        );
+        let kernels = parsed.get("kernels").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(kernels.len(), 1);
+        assert_eq!(
+            kernels[0].get("repeats").and_then(|v| v.as_usize()),
+            Some(12)
+        );
+        assert!(kernels[0].get("kind").and_then(|v| v.as_str()).is_some());
     }
 }

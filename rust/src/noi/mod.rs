@@ -18,5 +18,5 @@ pub mod topology;
 
 pub use analytic::{evaluate, LinkStats};
 pub use routing::RoutingTable;
-pub use sim::{CycleSim, SimResult, DEFAULT_MAX_FLITS};
+pub use sim::{CycleSim, NoiProfile, SimResult, DEFAULT_MAX_FLITS};
 pub use topology::Topology;

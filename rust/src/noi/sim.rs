@@ -32,6 +32,7 @@ use crate::model::TrafficMatrix;
 use crate::noi::linkmap::{LinkMap, NO_LINK};
 use crate::noi::routing::RoutingTable;
 use crate::noi::topology::Topology;
+use crate::util::json::JsonWriter;
 
 /// Default volume-sampling bound on injected flits per phase
 /// (overridable via `--max-flits` / `SimOptions::max_flits`).
@@ -127,6 +128,29 @@ pub struct CycleSim {
     active_scratch: Vec<u32>,
     /// sources with pending injections, ascending
     active_src: Vec<u32>,
+    // --- profiling (off by default; accumulates ACROSS phases so a
+    // whole end-to-end run folds into one heatmap) ---
+    /// when true the hot loop pays one predictable branch per hop /
+    /// per active router to feed the histograms below
+    profiling: bool,
+    /// flit-hops carried per directed link (indexed by link id)
+    prof_link_hops: Vec<u64>,
+    /// cycles each router spent with queued input flits
+    prof_router_busy: Vec<u64>,
+    /// total simulated cycles folded into the profile
+    prof_cycles: u64,
+    /// phases folded into the profile
+    prof_phases: u64,
+}
+
+/// Read-only view of the accumulated NoI profile (see
+/// [`CycleSim::enable_profiling`]).
+#[derive(Debug, Clone)]
+pub struct NoiProfile<'a> {
+    pub link_flit_hops: &'a [u64],
+    pub router_busy_cycles: &'a [u64],
+    pub cycles: u64,
+    pub phases: u64,
 }
 
 impl CycleSim {
@@ -168,7 +192,79 @@ impl CycleSim {
             activated: Vec::with_capacity(n),
             active_scratch: Vec::with_capacity(n),
             active_src: Vec::with_capacity(n),
+            profiling: false,
+            prof_link_hops: Vec::new(),
+            prof_router_busy: Vec::new(),
+            prof_cycles: 0,
+            prof_phases: 0,
         }
+    }
+
+    /// Turn on per-link / per-router profiling. Histograms accumulate
+    /// across every subsequent `run_phase` (they survive the per-phase
+    /// `reset`) until [`Self::clear_profile`]. Profiling never touches
+    /// simulation state: results are bit-identical on or off (pinned in
+    /// the tests below).
+    pub fn enable_profiling(&mut self) {
+        self.profiling = true;
+        self.prof_link_hops.resize(self.lm.n_links(), 0);
+        self.prof_router_busy.resize(self.n, 0);
+    }
+
+    /// Zero the accumulated histograms (profiling stays enabled).
+    pub fn clear_profile(&mut self) {
+        self.prof_link_hops.iter_mut().for_each(|x| *x = 0);
+        self.prof_router_busy.iter_mut().for_each(|x| *x = 0);
+        self.prof_cycles = 0;
+        self.prof_phases = 0;
+    }
+
+    /// The accumulated profile (`None` until `enable_profiling`).
+    pub fn profile(&self) -> Option<NoiProfile<'_>> {
+        if !self.profiling {
+            return None;
+        }
+        Some(NoiProfile {
+            link_flit_hops: &self.prof_link_hops,
+            router_busy_cycles: &self.prof_router_busy,
+            cycles: self.prof_cycles,
+            phases: self.prof_phases,
+        })
+    }
+
+    /// Utilization-heatmap export of the accumulated profile: every
+    /// directed link with its endpoints and flit-hop count, every
+    /// router with its busy-cycle count, plus the cycle/phase totals
+    /// to normalize against (`None` until `enable_profiling`).
+    pub fn heatmap_json(&self) -> Option<String> {
+        let prof = self.profile()?;
+        let mut w = JsonWriter::new();
+        w.begin_obj_pretty();
+        w.field_usize("routers", self.n);
+        w.field_usize("links_directed", self.lm.n_links());
+        w.field_u64("cycles", prof.cycles);
+        w.field_u64("phases", prof.phases);
+        w.key("links");
+        w.begin_arr_pretty();
+        for (l, &hops) in prof.link_flit_hops.iter().enumerate() {
+            w.begin_obj();
+            w.field_usize("link", l);
+            w.field_usize("from", self.lm.from[l] as usize);
+            w.field_usize("to", self.lm.to[l] as usize);
+            w.field_u64("flit_hops", hops);
+            w.end();
+        }
+        w.end();
+        w.key("router_busy_cycles");
+        w.begin_arr();
+        for &busy in prof.router_busy_cycles {
+            w.u64_val(busy);
+        }
+        w.end();
+        w.end();
+        let mut out = w.finish();
+        out.push('\n');
+        Some(out)
     }
 
     /// Front flit of link `l`'s FIFO (caller checks `q_len[l] > 0`).
@@ -351,6 +447,10 @@ impl CycleSim {
                 if inputs.is_empty() {
                     continue;
                 }
+                if self.profiling {
+                    // in the worklist ⇒ queued input flits this cycle
+                    self.prof_router_busy[router] += 1;
+                }
                 let start = self.rr[router] % inputs.len();
                 // out-table row hoisted out of the flit loop
                 let row = &self.out_table[router * n..(router + 1) * n];
@@ -405,6 +505,9 @@ impl CycleSim {
                 self.q_push(to, flit);
                 self.add_load(self.lm.to[to] as usize);
                 flit_hops += 1;
+                if self.profiling {
+                    self.prof_link_hops[to] += 1;
+                }
             }
             self.moves = moves;
 
@@ -431,6 +534,9 @@ impl CycleSim {
                         self.add_load(self.lm.to[ol] as usize);
                         // the injected flit traverses its first link now
                         flit_hops += 1;
+                        if self.profiling {
+                            self.prof_link_hops[ol] += 1;
+                        }
                         let p = &mut packets[pid as usize];
                         p.injected += 1;
                         // tail = last flit of the packet's flit budget
@@ -468,6 +574,11 @@ impl CycleSim {
         } else {
             lat_sum / delivered as f64
         };
+
+        if self.profiling {
+            self.prof_cycles += cycle;
+            self.prof_phases += 1;
+        }
 
         SimResult {
             cycles: cycle,
@@ -669,5 +780,78 @@ mod tests {
             assert_eq!(a.mean_packet_latency, b.mean_packet_latency);
             assert_eq!(a.link_utilization, b.link_utilization);
         }
+    }
+
+    #[test]
+    fn profiling_is_bit_identical_and_accounts_every_hop() {
+        // the profiled run must match the unprofiled one exactly, and
+        // the per-link histogram must sum to the flit-hop total across
+        // phases (it accumulates; it is not reset per phase)
+        let (t, r) = mesh4();
+        let mut plain = CycleSim::new(&t, &r, 8);
+        let mut prof = CycleSim::new(&t, &r, 8);
+        prof.enable_profiling();
+        assert!(plain.profile().is_none());
+        let mut total_hops = 0u64;
+        let mut total_cycles = 0u64;
+        for seed in 0..3usize {
+            let mut m = TrafficMatrix::zeros(16, KernelKind::Score, 1);
+            for s in 0..16 {
+                m.add(s, (s + 1 + seed) % 16, 96.0);
+            }
+            let a = plain.run_phase(&m, 32.0);
+            let b = prof.run_phase(&m, 32.0);
+            assert_eq!(a.cycles, b.cycles);
+            assert_eq!(a.flit_hops, b.flit_hops);
+            assert_eq!(a.mean_packet_latency, b.mean_packet_latency);
+            assert_eq!(a.link_utilization, b.link_utilization);
+            total_hops += a.flit_hops;
+            total_cycles += a.cycles;
+        }
+        let p = prof.profile().unwrap();
+        assert_eq!(p.link_flit_hops.iter().sum::<u64>(), total_hops);
+        assert_eq!(p.cycles, total_cycles);
+        assert_eq!(p.phases, 3);
+        assert!(p.router_busy_cycles.iter().sum::<u64>() > 0);
+        prof.clear_profile();
+        let p = prof.profile().unwrap();
+        assert_eq!(p.link_flit_hops.iter().sum::<u64>(), 0);
+        assert_eq!(p.phases, 0);
+    }
+
+    #[test]
+    fn heatmap_export_parses_and_covers_every_link() {
+        let (t, r) = mesh4();
+        let mut sim = CycleSim::new(&t, &r, 8);
+        assert!(sim.heatmap_json().is_none(), "no profile before enabling");
+        sim.enable_profiling();
+        let mut m = TrafficMatrix::zeros(16, KernelKind::Score, 1);
+        m.add(0, 15, 640.0);
+        let res = sim.run_phase(&m, 32.0);
+        assert!(res.drained);
+        let js = sim.heatmap_json().unwrap();
+        let parsed = crate::util::json::Json::parse(&js).unwrap();
+        let n_links = parsed
+            .get("links_directed")
+            .and_then(|v| v.as_usize())
+            .unwrap();
+        let links = parsed.get("links").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(links.len(), n_links);
+        let hop_sum: f64 = links
+            .iter()
+            .map(|l| l.get("flit_hops").and_then(|v| v.as_f64()).unwrap())
+            .sum();
+        assert_eq!(hop_sum as u64, res.flit_hops);
+        // every link row carries resolvable endpoints
+        for l in links {
+            let from = l.get("from").and_then(|v| v.as_usize()).unwrap();
+            let to = l.get("to").and_then(|v| v.as_usize()).unwrap();
+            assert!(from < 16 && to < 16 && from != to);
+        }
+        let busy = parsed
+            .get("router_busy_cycles")
+            .and_then(|v| v.as_arr())
+            .unwrap();
+        assert_eq!(busy.len(), 16);
     }
 }

@@ -1,0 +1,167 @@
+//! Chrome-trace-event JSON export.
+//!
+//! Emits the object form (`{"traceEvents": [...]}`) of the Trace Event
+//! Format, loadable in `chrome://tracing` and <https://ui.perfetto.dev>.
+//! One simulated process (pid 1); each [`TraceBuf`] track becomes a
+//! thread (tid = track) named via `thread_name` metadata. Simulated
+//! seconds become microsecond `ts` values with fixed 3-decimal
+//! precision. Events are stable-sorted by time before writing —
+//! recorders may emit out of order (windowed gauges stamp the window
+//! *start*), and the stable sort keeps a span's `B` ahead of its `E`
+//! when both land on the same timestamp.
+//!
+//! Phase mapping: [`EvKind::Begin`]/[`EvKind::End`] → `"B"`/`"E"`
+//! (nested per track), [`EvKind::AsyncBegin`]/[`EvKind::AsyncEnd`] →
+//! `"b"`/`"e"` with `cat` = event name and a hex `id` (overlapping
+//! request lifecycles), [`EvKind::Instant`] → `"i"` (thread scope),
+//! [`EvKind::Counter`] → `"C"`.
+
+use crate::obs::trace::{EvKind, TraceBuf};
+use crate::util::json::JsonWriter;
+
+/// Render a recorded buffer as Chrome-trace JSON.
+pub fn export(buf: &TraceBuf) -> String {
+    let mut order: Vec<usize> = (0..buf.events.len()).collect();
+    order.sort_by(|&a, &b| {
+        buf.events[a]
+            .t
+            .partial_cmp(&buf.events[b].t)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    let mut w = JsonWriter::new();
+    w.begin_obj_pretty();
+    w.field_str("displayTimeUnit", "ms");
+    w.key("traceEvents");
+    w.begin_arr_pretty();
+
+    // metadata: name the process and each track (thread)
+    w.begin_obj();
+    w.field_str("name", "process_name");
+    w.field_str("ph", "M");
+    w.field_usize("pid", 1);
+    w.field_usize("tid", 0);
+    w.key("args");
+    w.begin_obj();
+    w.field_str("name", "chiplet_hi");
+    w.end();
+    w.end();
+    for (track, name) in &buf.track_names {
+        w.begin_obj();
+        w.field_str("name", "thread_name");
+        w.field_str("ph", "M");
+        w.field_usize("pid", 1);
+        w.field_u64("tid", u64::from(*track));
+        w.key("args");
+        w.begin_obj();
+        w.field_str("name", name);
+        w.end();
+        w.end();
+    }
+
+    for &i in &order {
+        let ev = &buf.events[i];
+        let ph = match ev.kind {
+            EvKind::Begin => "B",
+            EvKind::End => "E",
+            EvKind::AsyncBegin => "b",
+            EvKind::AsyncEnd => "e",
+            EvKind::Instant => "i",
+            EvKind::Counter => "C",
+        };
+        w.begin_obj();
+        w.field_str("name", ev.name);
+        w.field_str("ph", ph);
+        w.field_usize("pid", 1);
+        w.field_u64("tid", u64::from(ev.track));
+        w.key("ts");
+        w.raw_val(&format!("{:.3}", ev.t * 1e6));
+        match ev.kind {
+            EvKind::AsyncBegin | EvKind::AsyncEnd => {
+                // async pairs need a category + id to be matched up
+                w.field_str("cat", ev.name);
+                w.field_str("id", &format!("0x{:x}", ev.id));
+            }
+            EvKind::Instant => {
+                w.field_str("s", "t");
+            }
+            _ => {}
+        }
+        if !ev.args.is_empty() {
+            w.key("args");
+            w.begin_obj();
+            for (k, v) in &ev.args {
+                w.field_f64(k, *v);
+            }
+            w.end();
+        }
+        w.end();
+    }
+
+    w.end();
+    w.end();
+    let mut out = w.finish();
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::obs::trace::Tracer;
+    use crate::util::json::Json;
+
+    #[test]
+    fn export_parses_and_sorts() {
+        let tr = Tracer::recording();
+        tr.name_track(0, "fleet");
+        tr.name_track(1, "inst0");
+        tr.span_begin(1, "step", 2.0, &[("batch", 4.0)]);
+        tr.span_end(1, "step", 3.0);
+        // recorded after, stamped before: the exporter must sort it first
+        tr.counter(1, "batch", 1.0, 4.0);
+        tr.instant(0, "dispatch", 2.5, &[("inst", 0.0)]);
+        tr.async_begin(1, "req", 0x42, 2.0, &[]);
+        tr.async_end(1, "req", 0x42, 3.0);
+        let text = tr.chrome_json().unwrap();
+        let j = Json::parse(&text).expect("chrome export is valid JSON");
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata (process + 2 tracks = 3) + 6 events
+        assert_eq!(evs.len(), 9);
+        let data: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() != Some("M"))
+            .collect();
+        let ts: Vec<f64> = data
+            .iter()
+            .map(|e| e.get("ts").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(ts.windows(2).all(|p| p[0] <= p[1]), "ts not sorted: {ts:?}");
+        assert_eq!(data[0].get("ph").unwrap().as_str(), Some("C"));
+        assert_eq!(
+            data[0].get("args").unwrap().get("value").unwrap().as_f64(),
+            Some(4.0)
+        );
+        let b = data
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str() == Some("b"))
+            .unwrap();
+        assert_eq!(b.get("id").unwrap().as_str(), Some("0x42"));
+        assert_eq!(b.get("cat").unwrap().as_str(), Some("req"));
+    }
+
+    #[test]
+    fn begin_stays_ahead_of_end_on_tie() {
+        let tr = Tracer::recording();
+        tr.span_begin(0, "s", 1.0, &[]);
+        tr.span_end(0, "s", 1.0);
+        let text = tr.chrome_json().unwrap();
+        let j = Json::parse(&text).unwrap();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let phases: Vec<&str> = evs
+            .iter()
+            .filter_map(|e| e.get("ph").unwrap().as_str())
+            .filter(|p| *p != "M")
+            .collect();
+        assert_eq!(phases, ["B", "E"]);
+    }
+}

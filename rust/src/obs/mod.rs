@@ -1,0 +1,32 @@
+//! Observability layer: zero-overhead tracing + time-series telemetry
+//! for the serving fleet and the NoI cycle sim.
+//!
+//! Three pieces:
+//!
+//! - [`trace`] — the event/span recorder. A [`Tracer`] is a cheap
+//!   cloneable handle that is either *off* (the `NullSink` default:
+//!   every emit call is one predictable `Option` branch and returns)
+//!   or *recording* into a shared [`TraceBuf`]. Instrumented code only
+//!   ever reads simulation state when emitting, so traced and untraced
+//!   runs are bit-identical — pinned by tests in `sim/serving.rs` and
+//!   `sim/cluster.rs`, with the disabled-path cost gated by the
+//!   `serving_trace_off_overhead` bench label.
+//! - [`timeline`] — windowed time-series: [`Gauge`] folds per-step
+//!   samples into per-window means, [`RateCounter`] folds increments
+//!   into per-window sums; both emit Chrome counter events at window
+//!   boundaries (`--metrics-every <secs>`, 0 = every sample).
+//! - [`chrome`] — export a [`TraceBuf`] as Chrome-trace-event JSON
+//!   (`{"traceEvents": [...]}`), directly loadable in
+//!   `chrome://tracing` or <https://ui.perfetto.dev>. Tracks map to
+//!   threads: tid 0 is the fleet router, tid i is instance i-1.
+//!
+//! Schema (event names / args / units) is documented in ROADMAP.md
+//! §"Module layering"; time is *simulated* seconds, exported as
+//! microseconds in the `ts` field.
+
+pub mod chrome;
+pub mod timeline;
+pub mod trace;
+
+pub use timeline::{Gauge, RateCounter};
+pub use trace::{EvKind, Event, TraceBuf, Tracer};

@@ -1,0 +1,168 @@
+//! Windowed time-series on top of the trace recorder.
+//!
+//! Per-step signals (batch size, live requests, KV utilization) arrive
+//! at engine-step granularity — far too dense to chart directly on a
+//! long run. A [`Gauge`] folds samples into per-window means and a
+//! [`RateCounter`] folds increments into per-window sums; each window
+//! emits one Chrome counter event stamped at the window start. The
+//! window length comes from [`Tracer::metrics_every`]
+//! (`--metrics-every <secs>`); 0 emits every sample.
+//!
+//! Both types are inert when the tracer is off — `sample`/`add` return
+//! after the same single branch the raw emit calls pay, and no state
+//! is mutated, preserving bit-identity *and* zero allocation.
+
+use crate::obs::trace::Tracer;
+
+/// Windowed mean gauge: `sample()` per observation, one counter event
+/// per elapsed window. Call [`Gauge::flush`] at end of run so the tail
+/// window is not lost.
+#[derive(Debug, Clone)]
+pub struct Gauge {
+    name: &'static str,
+    window_start: f64,
+    sum: f64,
+    n: usize,
+}
+
+impl Gauge {
+    pub fn new(name: &'static str) -> Gauge {
+        Gauge {
+            name,
+            window_start: 0.0,
+            sum: 0.0,
+            n: 0,
+        }
+    }
+
+    pub fn sample(&mut self, tracer: &Tracer, track: u32, t: f64, v: f64) {
+        if !tracer.on() {
+            return;
+        }
+        if self.n > 0 && t - self.window_start >= tracer.metrics_every {
+            self.flush(tracer, track);
+        }
+        if self.n == 0 {
+            self.window_start = t;
+        }
+        self.sum += v;
+        self.n += 1;
+    }
+
+    /// Emit the pending window (mean of its samples), if any.
+    pub fn flush(&mut self, tracer: &Tracer, track: u32) {
+        if self.n == 0 {
+            return;
+        }
+        tracer.counter(track, self.name, self.window_start, self.sum / self.n as f64);
+        self.sum = 0.0;
+        self.n = 0;
+    }
+}
+
+/// Windowed sum counter: `add()` per increment, one counter event per
+/// elapsed window carrying the window's total (e.g. completions or
+/// sheds per window).
+#[derive(Debug, Clone)]
+pub struct RateCounter {
+    name: &'static str,
+    window_start: f64,
+    total: f64,
+    any: bool,
+}
+
+impl RateCounter {
+    pub fn new(name: &'static str) -> RateCounter {
+        RateCounter {
+            name,
+            window_start: 0.0,
+            total: 0.0,
+            any: false,
+        }
+    }
+
+    pub fn add(&mut self, tracer: &Tracer, track: u32, t: f64, inc: f64) {
+        if !tracer.on() {
+            return;
+        }
+        if self.any && t - self.window_start >= tracer.metrics_every {
+            self.flush(tracer, track);
+        }
+        if !self.any {
+            self.window_start = t;
+            self.any = true;
+        }
+        self.total += inc;
+    }
+
+    /// Emit the pending window total, if any.
+    pub fn flush(&mut self, tracer: &Tracer, track: u32) {
+        if !self.any {
+            return;
+        }
+        tracer.counter(track, self.name, self.window_start, self.total);
+        self.total = 0.0;
+        self.any = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::EvKind;
+
+    #[test]
+    fn gauge_windows_fold_to_means() {
+        let tr = Tracer::recording().with_metrics_every(1.0);
+        let mut g = Gauge::new("batch");
+        g.sample(&tr, 1, 0.0, 2.0);
+        g.sample(&tr, 1, 0.5, 4.0); // same window
+        g.sample(&tr, 1, 1.5, 8.0); // rolls the window
+        g.flush(&tr, 1);
+        tr.with_buf(|b| {
+            assert_eq!(b.events.len(), 2);
+            assert_eq!(b.events[0].kind, EvKind::Counter);
+            assert_eq!(b.events[0].t, 0.0);
+            assert_eq!(b.events[0].args[0].1, 3.0); // mean(2, 4)
+            assert_eq!(b.events[1].t, 1.5);
+            assert_eq!(b.events[1].args[0].1, 8.0);
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn zero_window_emits_every_sample() {
+        let tr = Tracer::recording();
+        let mut g = Gauge::new("live");
+        g.sample(&tr, 0, 0.0, 1.0);
+        g.sample(&tr, 0, 0.1, 2.0);
+        g.flush(&tr, 0);
+        assert_eq!(tr.event_count(), 2);
+    }
+
+    #[test]
+    fn rate_counter_sums_per_window() {
+        let tr = Tracer::recording().with_metrics_every(10.0);
+        let mut c = RateCounter::new("completed");
+        c.add(&tr, 0, 0.0, 1.0);
+        c.add(&tr, 0, 3.0, 1.0);
+        c.add(&tr, 0, 12.0, 1.0);
+        c.flush(&tr, 0);
+        tr.with_buf(|b| {
+            assert_eq!(b.events.len(), 2);
+            assert_eq!(b.events[0].args[0].1, 2.0);
+            assert_eq!(b.events[1].args[0].1, 1.0);
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn off_tracer_leaves_state_untouched() {
+        let tr = Tracer::off();
+        let mut g = Gauge::new("x");
+        g.sample(&tr, 0, 1.0, 5.0);
+        g.flush(&tr, 0);
+        assert_eq!(g.n, 0);
+        assert_eq!(g.sum, 0.0);
+    }
+}

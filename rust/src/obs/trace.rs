@@ -1,0 +1,277 @@
+//! Event/span recorder behind a pluggable sink.
+//!
+//! [`Tracer`] is the handle instrumented code holds. It is an enum in
+//! spirit — either the `NullSink` (no buffer: every emit method hits
+//! one predictable `if let` branch and returns) or a recording sink
+//! (`Rc<RefCell<TraceBuf>>`, shared so the fleet router and every
+//! per-instance engine append into one merged trace). Cloning is O(1);
+//! the simulation loops clone the handle once at function entry to
+//! sidestep borrow conflicts with `&mut` run state.
+//!
+//! Recording is append-only and *read-only with respect to simulation
+//! state*: emitting an event never changes a clock, a seed, or a
+//! scheduling decision, which is what makes trace-on vs. trace-off
+//! bit-identity a structural property rather than a hope (the tests in
+//! `sim/serving.rs` / `sim/cluster.rs` pin it anyway).
+//!
+//! `Rc` (not `Arc`) is deliberate: tracing targets the single-threaded
+//! streaming paths. The parallel buffered fleet (`run_with_jobs`)
+//! stays untraced — a `Tracer` is never stored in a config struct, so
+//! `ServingConfig`/`ClusterConfig` remain `Send` for `par_map`.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// What kind of trace event a record is — maps 1:1 onto a Chrome
+/// trace-event `ph` phase in the export.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvKind {
+    /// Synchronous span open (`ph: "B"`) — must nest per track.
+    Begin,
+    /// Synchronous span close (`ph: "E"`).
+    End,
+    /// Async span open (`ph: "b"`) — overlapping lifecycles keyed by `id`.
+    AsyncBegin,
+    /// Async span close (`ph: "e"`), same `id` as its begin.
+    AsyncEnd,
+    /// Instant marker (`ph: "i"`).
+    Instant,
+    /// Counter sample (`ph: "C"`), value in `args`.
+    Counter,
+}
+
+/// One recorded event. `t` is simulated seconds; `track` selects the
+/// timeline row (Chrome tid); `id` keys async begin/end pairs (0 when
+/// unused); `args` are numeric key/value annotations.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub t: f64,
+    pub track: u32,
+    pub kind: EvKind,
+    pub name: &'static str,
+    pub id: u64,
+    pub args: Vec<(&'static str, f64)>,
+}
+
+/// The append-only event buffer behind a recording [`Tracer`].
+#[derive(Debug, Default)]
+pub struct TraceBuf {
+    pub events: Vec<Event>,
+    /// Human-readable labels per track, exported as Chrome
+    /// `thread_name` metadata.
+    pub track_names: Vec<(u32, String)>,
+}
+
+impl TraceBuf {
+    pub fn name_track(&mut self, track: u32, name: &str) {
+        if let Some(e) = self.track_names.iter_mut().find(|(t, _)| *t == track) {
+            e.1 = name.to_string();
+        } else {
+            self.track_names.push((track, name.to_string()));
+        }
+    }
+}
+
+/// Cheap cloneable tracing handle: `Tracer::off()` is the `NullSink`
+/// (default), `Tracer::recording()` appends into a shared [`TraceBuf`].
+#[derive(Clone, Default)]
+pub struct Tracer {
+    buf: Option<Rc<RefCell<TraceBuf>>>,
+    /// Gauge/counter window in simulated seconds (0 = emit every
+    /// sample). Read by `obs::timeline`; plumbed from
+    /// `--metrics-every`.
+    pub metrics_every: f64,
+}
+
+impl Tracer {
+    /// The `NullSink`: every emit is one branch and a return.
+    pub fn off() -> Tracer {
+        Tracer::default()
+    }
+
+    /// A recording sink with a fresh buffer.
+    pub fn recording() -> Tracer {
+        Tracer {
+            buf: Some(Rc::new(RefCell::new(TraceBuf::default()))),
+            metrics_every: 0.0,
+        }
+    }
+
+    /// Set the gauge window (`--metrics-every <secs>`).
+    pub fn with_metrics_every(mut self, secs: f64) -> Tracer {
+        self.metrics_every = secs.max(0.0);
+        self
+    }
+
+    /// True when recording — instrumentation gates emit blocks on this
+    /// so the disabled path pays exactly one predictable branch.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.buf.is_some()
+    }
+
+    #[inline]
+    fn push(&self, ev: Event) {
+        if let Some(buf) = &self.buf {
+            buf.borrow_mut().events.push(ev);
+        }
+    }
+
+    pub fn name_track(&self, track: u32, name: &str) {
+        if let Some(buf) = &self.buf {
+            buf.borrow_mut().name_track(track, name);
+        }
+    }
+
+    /// Open a synchronous span (must nest per track).
+    pub fn span_begin(&self, track: u32, name: &'static str, t: f64, args: &[(&'static str, f64)]) {
+        self.push(Event {
+            t,
+            track,
+            kind: EvKind::Begin,
+            name,
+            id: 0,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Close the innermost synchronous span on `track`.
+    pub fn span_end(&self, track: u32, name: &'static str, t: f64) {
+        self.push(Event {
+            t,
+            track,
+            kind: EvKind::End,
+            name,
+            id: 0,
+            args: Vec::new(),
+        });
+    }
+
+    /// Open an async span — overlapping request lifecycles, keyed by `id`.
+    pub fn async_begin(
+        &self,
+        track: u32,
+        name: &'static str,
+        id: u64,
+        t: f64,
+        args: &[(&'static str, f64)],
+    ) {
+        self.push(Event {
+            t,
+            track,
+            kind: EvKind::AsyncBegin,
+            name,
+            id,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Close the async span opened with the same `(name, id)`.
+    pub fn async_end(&self, track: u32, name: &'static str, id: u64, t: f64) {
+        self.push(Event {
+            t,
+            track,
+            kind: EvKind::AsyncEnd,
+            name,
+            id,
+            args: Vec::new(),
+        });
+    }
+
+    /// Instant marker.
+    pub fn instant(&self, track: u32, name: &'static str, t: f64, args: &[(&'static str, f64)]) {
+        self.push(Event {
+            t,
+            track,
+            kind: EvKind::Instant,
+            name,
+            id: 0,
+            args: args.to_vec(),
+        });
+    }
+
+    /// Counter sample (one series named `name`, value `v`).
+    pub fn counter(&self, track: u32, name: &'static str, t: f64, v: f64) {
+        self.push(Event {
+            t,
+            track,
+            kind: EvKind::Counter,
+            name,
+            id: 0,
+            args: vec![("value", v)],
+        });
+    }
+
+    /// Number of recorded events (0 when off).
+    pub fn event_count(&self) -> usize {
+        self.buf.as_ref().map_or(0, |b| b.borrow().events.len())
+    }
+
+    /// Run `f` against the recorded buffer, if any.
+    pub fn with_buf<R>(&self, f: impl FnOnce(&TraceBuf) -> R) -> Option<R> {
+        self.buf.as_ref().map(|b| f(&b.borrow()))
+    }
+
+    /// Export the recorded trace as Chrome-trace-event JSON
+    /// (`None` when the tracer is off).
+    pub fn chrome_json(&self) -> Option<String> {
+        self.with_buf(crate::obs::chrome::export)
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer")
+            .field("on", &self.on())
+            .field("events", &self.event_count())
+            .field("metrics_every", &self.metrics_every)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_sink_records_nothing() {
+        let t = Tracer::off();
+        assert!(!t.on());
+        t.instant(0, "x", 1.0, &[]);
+        t.counter(1, "g", 2.0, 3.0);
+        t.span_begin(0, "s", 0.0, &[]);
+        t.span_end(0, "s", 1.0);
+        assert_eq!(t.event_count(), 0);
+        assert!(t.chrome_json().is_none());
+    }
+
+    #[test]
+    fn clones_share_one_buffer() {
+        let t = Tracer::recording();
+        let t2 = t.clone();
+        t.instant(0, "a", 0.5, &[("k", 1.0)]);
+        t2.async_begin(1, "req", 7, 1.0, &[]);
+        t2.async_end(1, "req", 7, 2.0);
+        assert_eq!(t.event_count(), 3);
+        t.with_buf(|b| {
+            assert_eq!(b.events[0].name, "a");
+            assert_eq!(b.events[1].kind, EvKind::AsyncBegin);
+            assert_eq!(b.events[1].id, 7);
+            assert_eq!(b.events[2].kind, EvKind::AsyncEnd);
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn track_names_upsert() {
+        let t = Tracer::recording();
+        t.name_track(2, "inst1");
+        t.name_track(2, "inst1 hi");
+        t.name_track(0, "fleet");
+        t.with_buf(|b| {
+            assert_eq!(b.track_names.len(), 2);
+            assert_eq!(b.track_names[0], (2, "inst1 hi".to_string()));
+        })
+        .unwrap();
+    }
+}

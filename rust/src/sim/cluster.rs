@@ -49,6 +49,7 @@ use crate::bail;
 use crate::baselines::Arch;
 use crate::config::{ModelConfig, SystemConfig};
 use crate::moo::design::NoiDesign;
+use crate::obs::{Gauge, Tracer};
 use crate::sim::decode::{decode_step_on, kv_cache_bytes};
 use crate::sim::engine::SimOptions;
 use crate::sim::platform::Platform;
@@ -56,6 +57,7 @@ use crate::sim::serving::{
     ArrivalEvent, ArrivalProcess, LenDist, ServingConfig, ServingReport, ServingSim,
 };
 use crate::util::error::Result;
+use crate::util::json::JsonWriter;
 use crate::util::sketch::{SampleSink, SinkMode};
 use crate::util::stats::percentile;
 use crate::util::{parallel, Rng};
@@ -242,51 +244,44 @@ impl FleetReport {
     }
 
     /// Machine-readable fleet report (the cluster `serve --json`
-    /// interchange); embeds one [`ServingReport::to_json`] per instance.
+    /// interchange); embeds one [`ServingReport::to_json`] per
+    /// instance. Rides the shared [`JsonWriter`] — same pretty byte
+    /// layout the CI smoke artifacts have always pinned, but with real
+    /// string escaping.
     pub fn to_json(&self) -> String {
-        let mut out = String::new();
-        out.push_str("{\n");
-        out.push_str(&format!("  \"policy\": \"{}\",\n", self.policy));
-        out.push_str(&format!("  \"model\": \"{}\",\n", self.model));
-        out.push_str(&format!("  \"requests\": {},\n", self.requests));
-        out.push_str(&format!("  \"completed\": {},\n", self.completed));
-        out.push_str(&format!("  \"rejected\": {},\n", self.rejected));
-        out.push_str(&format!("  \"preemptions\": {},\n", self.preemptions));
-        out.push_str(&format!("  \"shed\": {},\n", self.shed));
-        out.push_str(&format!("  \"scale_ups\": {},\n", self.scale_ups));
-        out.push_str(&format!("  \"scale_downs\": {},\n", self.scale_downs));
-        out.push_str(&format!("  \"makespan_secs\": {},\n", self.makespan_secs));
-        out.push_str(&format!("  \"goodput_req_s\": {},\n", self.goodput_req_s));
-        out.push_str(&format!(
-            "  \"throughput_tok_s\": {},\n",
-            self.throughput_tok_s
-        ));
-        out.push_str(&format!("  \"ttft_p50_secs\": {},\n", self.ttft_p50_secs));
-        out.push_str(&format!("  \"ttft_p95_secs\": {},\n", self.ttft_p95_secs));
-        out.push_str(&format!("  \"ttft_p99_secs\": {},\n", self.ttft_p99_secs));
-        out.push_str(&format!("  \"tpot_p50_secs\": {},\n", self.tpot_p50_secs));
-        out.push_str(&format!("  \"tpot_p95_secs\": {},\n", self.tpot_p95_secs));
-        out.push_str(&format!("  \"tpot_p99_secs\": {},\n", self.tpot_p99_secs));
-        out.push_str(&format!(
-            "  \"mean_utilization\": {},\n",
-            self.mean_utilization
-        ));
-        out.push_str(&format!("  \"sink\": \"{}\",\n", self.sink));
-        out.push_str(&format!(
-            "  \"samples_buffered_peak\": {},\n",
-            self.samples_buffered_peak
-        ));
-        out.push_str(&format!(
-            "  \"peak_live_requests\": {},\n",
-            self.peak_live_requests
-        ));
-        out.push_str("  \"instances\": [\n");
-        for (i, inst) in self.instances.iter().enumerate() {
-            out.push_str("    ");
-            out.push_str(&inst.to_json());
-            out.push_str(if i + 1 < self.instances.len() { ",\n" } else { "\n" });
+        let mut w = JsonWriter::new();
+        w.begin_obj_pretty();
+        w.field_str("policy", &self.policy);
+        w.field_str("model", &self.model);
+        w.field_usize("requests", self.requests);
+        w.field_usize("completed", self.completed);
+        w.field_usize("rejected", self.rejected);
+        w.field_usize("preemptions", self.preemptions);
+        w.field_usize("shed", self.shed);
+        w.field_usize("scale_ups", self.scale_ups);
+        w.field_usize("scale_downs", self.scale_downs);
+        w.field_f64("makespan_secs", self.makespan_secs);
+        w.field_f64("goodput_req_s", self.goodput_req_s);
+        w.field_f64("throughput_tok_s", self.throughput_tok_s);
+        w.field_f64("ttft_p50_secs", self.ttft_p50_secs);
+        w.field_f64("ttft_p95_secs", self.ttft_p95_secs);
+        w.field_f64("ttft_p99_secs", self.ttft_p99_secs);
+        w.field_f64("tpot_p50_secs", self.tpot_p50_secs);
+        w.field_f64("tpot_p95_secs", self.tpot_p95_secs);
+        w.field_f64("tpot_p99_secs", self.tpot_p99_secs);
+        w.field_f64("mean_utilization", self.mean_utilization);
+        w.field_str("sink", &self.sink);
+        w.field_usize("samples_buffered_peak", self.samples_buffered_peak);
+        w.field_usize("peak_live_requests", self.peak_live_requests);
+        w.key("instances");
+        w.begin_arr_pretty();
+        for inst in &self.instances {
+            w.raw_val(&inst.to_json());
         }
-        out.push_str("  ]\n}\n");
+        w.end();
+        w.end();
+        let mut out = w.finish();
+        out.push('\n');
         out
     }
 }
@@ -788,6 +783,22 @@ impl<'a> ClusterSim<'a> {
     /// uniform streams with both knobs off it reproduces the buffered
     /// fleet's dynamics exactly.
     pub fn run_streaming(&self, stream: &StreamConfig) -> Result<FleetReport> {
+        self.run_streaming_traced(stream, &Tracer::off())
+    }
+
+    /// [`Self::run_streaming`] with an observability sink. The router
+    /// emits on track 0 (`dispatch`/`shed` instants, `scale_up`/
+    /// `scale_down` markers, `outstanding` and `active_instances`
+    /// counters) and each instance's engine records its request
+    /// lifecycle on track `i + 1` — one merged trace per fleet run.
+    /// Recording is read-only with respect to simulation state:
+    /// `run_streaming` *is* this function with the `NullSink`, and the
+    /// bit-identity test below pins that the reports match.
+    pub fn run_streaming_traced(
+        &self,
+        stream: &StreamConfig,
+        tracer: &Tracer,
+    ) -> Result<FleetReport> {
         let n = self.cfg.specs.len();
         if n == 0 {
             bail!("cluster needs at least one instance");
@@ -811,16 +822,29 @@ impl<'a> ClusterSim<'a> {
             .map(|s| s.kv_capacity_bytes.unwrap_or(scfg.kv_capacity_bytes).max(1.0))
             .collect();
 
+        if tracer.on() {
+            tracer.name_track(0, "fleet");
+            for (i, spec) in self.cfg.specs.iter().enumerate() {
+                tracer.name_track(i as u32 + 1, &format!("inst{i} {}", spec.arch.name()));
+            }
+        }
         let mut engines: Vec<ServingSim> = Vec::with_capacity(n);
         for (i, p) in platforms.iter().enumerate() {
             let mut cfg_i = scfg.clone();
             if let Some(cap) = self.cfg.specs[i].kv_capacity_bytes {
                 cfg_i.kv_capacity_bytes = cap;
             }
-            let mut eng = ServingSim::new(p, self.model, cfg_i).with_completions(true);
+            let mut eng = ServingSim::new(p, self.model, cfg_i)
+                .with_completions(true)
+                .with_tracer(tracer.clone(), i as u32 + 1);
             eng.begin();
             engines.push(eng);
         }
+
+        // fleet-level windowed telemetry on the router track (inert
+        // when the tracer is off)
+        let mut g_out = Gauge::new("outstanding");
+        let mut g_active = Gauge::new("active_instances");
 
         // fleet-level latency sinks (sketches in streaming mode)
         let mut ttft_sink: SampleSink = scfg.sink.make();
@@ -878,15 +902,37 @@ impl<'a> ClusterSim<'a> {
                             active.sort_unstable();
                             scale_ups += 1;
                             last_scale = t;
+                            if tracer.on() {
+                                tracer.instant(
+                                    0,
+                                    "scale_up",
+                                    t,
+                                    &[("inst", next as f64), ("active", active.len() as f64)],
+                                );
+                            }
                         }
                     } else if per < a.low_watermark && active.len() > a.min_instances.max(1) {
                         // park the highest-index active instance; it
                         // drains what it holds
-                        active.pop();
+                        let parked = active.pop().expect("active fleet is never empty");
                         scale_downs += 1;
                         last_scale = t;
+                        if tracer.on() {
+                            tracer.instant(
+                                0,
+                                "scale_down",
+                                t,
+                                &[("inst", parked as f64), ("active", active.len() as f64)],
+                            );
+                        }
                     }
                 }
+            }
+
+            if tracer.on() {
+                let load: usize = outstanding.iter().map(|o| o.len()).sum();
+                g_out.sample(tracer, 0, t, load as f64);
+                g_active.sample(tracer, 0, t, active.len() as f64);
             }
 
             let na = active.len();
@@ -936,10 +982,21 @@ impl<'a> ClusterSim<'a> {
                 let predicted = (free.max(t) - t) + prefill;
                 if predicted > slo {
                     shed += 1;
+                    if tracer.on() {
+                        tracer.instant(
+                            0,
+                            "shed",
+                            t,
+                            &[("inst", pick as f64), ("predicted_ttft", predicted)],
+                        );
+                    }
                     continue;
                 }
             }
 
+            if tracer.on() {
+                tracer.instant(0, "dispatch", t, &[("inst", pick as f64)]);
+            }
             let eng = &mut engines[pick];
             eng.advance_until(t);
             eng.push_request(t, ev.prompt, ev.gen);
@@ -953,6 +1010,10 @@ impl<'a> ClusterSim<'a> {
             servers[pick][si] = finish;
             outstanding[pick].push(Reverse(FinishTime(finish)));
         }
+
+        // emit the tail gauge windows before the drain
+        g_out.flush(tracer, 0);
+        g_active.flush(tracer, 0);
 
         // drain every engine (parked ones included) and aggregate in
         // spec order
@@ -1414,5 +1475,126 @@ mod tests {
         );
         // 2 instances x 2 banks + 2 fleet banks, <= 15 buffered each
         assert!(big.samples_buffered_peak <= 90);
+    }
+
+    #[test]
+    fn traced_streaming_is_bit_identical_and_captures_fleet_events() {
+        use crate::obs::EvKind;
+        // recording must not move the fleet report by a bit, and the
+        // trace must account for every router decision
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let mk = || ClusterConfig {
+            specs: vec![
+                InstanceSpec::of(Arch::Hi25D),
+                InstanceSpec::of(Arch::Hi25D),
+                InstanceSpec::of(Arch::Hi25D),
+            ],
+            policy: DispatchPolicy::Jsq,
+            serving: poisson(1.0e5, 48),
+        };
+        let stream = StreamConfig {
+            autoscale: Some(AutoscaleConfig {
+                min_instances: 1,
+                high_watermark: 1.0,
+                cooldown_secs: 0.0,
+                ..Default::default()
+            }),
+            slo_ttft_secs: None,
+        };
+        let off = ClusterSim::new(&sys, &m, mk()).run_streaming(&stream).unwrap();
+        let tracer = Tracer::recording();
+        let on = ClusterSim::new(&sys, &m, mk())
+            .run_streaming_traced(&stream, &tracer)
+            .unwrap();
+        assert_eq!(off.to_json(), on.to_json());
+        assert!(on.scale_ups >= 1, "hair-trigger watermark must scale up");
+        let (dispatches, ups, spans_open, spans_closed) = tracer
+            .with_buf(|b| {
+                let count = |f: &dyn Fn(&crate::obs::Event) -> bool| {
+                    b.events.iter().filter(|e| f(e)).count()
+                };
+                (
+                    count(&|e| e.kind == EvKind::Instant && e.name == "dispatch"),
+                    count(&|e| e.kind == EvKind::Instant && e.name == "scale_up"),
+                    count(&|e| e.kind == EvKind::AsyncBegin),
+                    count(&|e| e.kind == EvKind::AsyncEnd),
+                )
+            })
+            .unwrap();
+        assert_eq!(dispatches, on.requests, "every admitted arrival dispatches");
+        assert_eq!(ups, on.scale_ups);
+        assert_eq!(spans_open, on.completed);
+        assert_eq!(spans_open, spans_closed);
+        // tracks: fleet router + one per instance, all named
+        tracer
+            .with_buf(|b| {
+                assert_eq!(b.track_names.len(), 4);
+                assert_eq!(b.track_names[0], (0, "fleet".to_string()));
+                assert!(b.track_names[1].1.starts_with("inst0 "));
+            })
+            .unwrap();
+    }
+
+    #[test]
+    fn traced_streaming_records_shed_decisions() {
+        use crate::obs::EvKind;
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let cfg = ClusterConfig {
+            specs: vec![InstanceSpec::of(Arch::Hi25D)],
+            policy: DispatchPolicy::Jsq,
+            serving: poisson(1.0e5, 16),
+        };
+        let stream = StreamConfig {
+            autoscale: None,
+            slo_ttft_secs: Some(0.0),
+        };
+        let tracer = Tracer::recording();
+        let fleet = ClusterSim::new(&sys, &m, cfg)
+            .run_streaming_traced(&stream, &tracer)
+            .unwrap();
+        assert_eq!(fleet.shed, 16);
+        let (sheds, dispatches) = tracer
+            .with_buf(|b| {
+                (
+                    b.events
+                        .iter()
+                        .filter(|e| e.kind == EvKind::Instant && e.name == "shed")
+                        .count(),
+                    b.events
+                        .iter()
+                        .filter(|e| e.kind == EvKind::Instant && e.name == "dispatch")
+                        .count(),
+                )
+            })
+            .unwrap();
+        assert_eq!(sheds, 16);
+        assert_eq!(dispatches, 0, "shed arrivals never reach an engine");
+    }
+
+    #[test]
+    fn fleet_json_keeps_the_pinned_frame() {
+        // CI smoke artifacts parse this shape; the JsonWriter migration
+        // must keep the pretty frame and the compact per-instance rows
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let cfg = ClusterConfig {
+            specs: vec![InstanceSpec::of(Arch::Hi25D), InstanceSpec::of(Arch::Hi25D)],
+            policy: DispatchPolicy::Jsq,
+            serving: poisson(1.0e5, 8),
+        };
+        let fleet = ClusterSim::new(&sys, &m, cfg).run_with_jobs(1).unwrap();
+        let js = fleet.to_json();
+        assert!(js.starts_with("{\n  \"policy\": \"jsq\",\n  \"model\": "));
+        assert!(js.contains("\n  \"instances\": [\n    {\"arch\": "));
+        assert!(js.contains("},\n    {\"arch\": "));
+        assert!(js.ends_with("}\n  ]\n}\n"));
+        // and it parses back through the in-crate reader
+        let parsed = crate::util::json::Json::parse(&js).unwrap();
+        assert_eq!(
+            parsed.get("instances").and_then(|v| v.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
     }
 }

@@ -129,6 +129,22 @@ impl Platform {
         self.cycle.borrow().max_flits
     }
 
+    /// Turn on the cycle sim's per-link / per-router profiling (the
+    /// `--link-heatmap` path; only meaningful with
+    /// `opts.cycle_accurate`, the analytic path never enters the flit
+    /// simulator). Takes `&self` for the same reason as
+    /// [`Self::set_max_flits`].
+    pub fn enable_noi_profiling(&self) {
+        self.cycle.borrow_mut().enable_profiling();
+    }
+
+    /// Heatmap export of the NoI profile accumulated across every
+    /// cycle-accurate phase this platform has run (`None` until
+    /// [`Self::enable_noi_profiling`]).
+    pub fn noi_heatmap_json(&self) -> Option<String> {
+        self.cycle.borrow().heatmap_json()
+    }
+
     fn build(
         arch: Arch,
         sys: &SystemConfig,
@@ -371,6 +387,30 @@ mod tests {
         assert_eq!(p.max_flits(), 99);
         p.set_max_flits(0); // clamped: a zero bound would divide by zero
         assert_eq!(p.max_flits(), 1);
+    }
+
+    #[test]
+    fn noi_profiling_plumbs_through_and_stays_bit_identical() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let opts = SimOptions {
+            cycle_accurate: true,
+            ..Default::default()
+        };
+        let p = Platform::new(Arch::Hi25D, &sys, &opts);
+        assert!(p.noi_heatmap_json().is_none(), "off by default");
+        p.enable_noi_profiling();
+        let r = p.run(&m, 64, &opts);
+        let base = Platform::new(Arch::Hi25D, &sys, &opts).run(&m, 64, &opts);
+        assert_eq!(r.latency_secs, base.latency_secs, "profiling moved the sim");
+        assert_eq!(r.energy_j, base.energy_j);
+        let js = p.noi_heatmap_json().unwrap();
+        let parsed = crate::util::json::Json::parse(&js).unwrap();
+        assert!(parsed.get("links").and_then(|v| v.as_arr()).is_some());
+        assert!(
+            parsed.get("phases").and_then(|v| v.as_usize()).unwrap() > 0,
+            "cycle-accurate phases must fold into the profile"
+        );
     }
 
     #[test]

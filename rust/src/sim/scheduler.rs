@@ -71,6 +71,12 @@ pub struct ReqState {
     pub kv_held: f64,
     pub energy_j: f64,
     pub preemptions: usize,
+    /// Engine-local trace sequence number (the request's async-span id
+    /// in the `obs` layer). 0 when the run is untraced — the engine
+    /// only assigns it when a recording tracer is attached, and nothing
+    /// in the simulation reads it, so traced and untraced runs stay
+    /// bit-identical.
+    pub trace_id: u64,
 }
 
 impl ReqState {
@@ -88,6 +94,7 @@ impl ReqState {
             kv_held: 0.0,
             energy_j: 0.0,
             preemptions: 0,
+            trace_id: 0,
         }
     }
 

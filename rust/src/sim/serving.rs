@@ -54,10 +54,12 @@
 use std::collections::HashMap;
 
 use crate::config::ModelConfig;
+use crate::obs::{Gauge, Tracer};
 use crate::sim::decode::{decode_step_on, kv_cache_bytes};
 use crate::sim::engine::SimOptions;
 use crate::sim::platform::Platform;
 use crate::sim::scheduler::{scheduler_for, Scheduler, ServingState, StepPlan};
+use crate::util::json::JsonWriter;
 use crate::util::sketch::{SampleSink, SinkMode};
 
 pub use crate::sim::arrivals::{ArrivalEvent, ArrivalProcess, LenDist, Tenant};
@@ -190,44 +192,37 @@ impl ServingReport {
     }
 
     /// Machine-readable report (the `serve --json` interchange; the
-    /// fleet report embeds one of these per instance).
+    /// fleet report embeds one of these per instance). Rides the shared
+    /// [`JsonWriter`] — same compact byte layout the CI smoke artifacts
+    /// have always pinned, but with real string escaping.
     pub fn to_json(&self) -> String {
-        format!(
-            concat!(
-                "{{\"arch\": \"{}\", \"model\": \"{}\", \"scheduler\": \"{}\", ",
-                "\"requests\": {}, \"completed\": {}, \"rejected\": {}, ",
-                "\"preemptions\": {}, \"makespan_secs\": {}, ",
-                "\"throughput_tok_s\": {}, ",
-                "\"ttft_p50_secs\": {}, \"ttft_p95_secs\": {}, \"ttft_p99_secs\": {}, ",
-                "\"tpot_p50_secs\": {}, \"tpot_p95_secs\": {}, \"tpot_p99_secs\": {}, ",
-                "\"energy_per_req_j\": {}, \"mean_batch\": {}, \"peak_kv_bytes\": {}, ",
-                "\"busy_secs\": {}, \"utilization\": {}, \"sink\": \"{}\", ",
-                "\"samples_buffered_peak\": {}, \"peak_live_requests\": {}}}"
-            ),
-            self.arch,
-            self.model,
-            self.scheduler,
-            self.requests,
-            self.completed,
-            self.rejected,
-            self.preemptions,
-            self.makespan_secs,
-            self.throughput_tok_s,
-            self.ttft_p50_secs,
-            self.ttft_p95_secs,
-            self.ttft_p99_secs,
-            self.tpot_p50_secs,
-            self.tpot_p95_secs,
-            self.tpot_p99_secs,
-            self.energy_per_req_j,
-            self.mean_batch,
-            self.peak_kv_bytes,
-            self.busy_secs,
-            self.utilization,
-            self.sink,
-            self.samples_buffered_peak,
-            self.peak_live_requests
-        )
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.field_str("arch", &self.arch);
+        w.field_str("model", &self.model);
+        w.field_str("scheduler", &self.scheduler);
+        w.field_usize("requests", self.requests);
+        w.field_usize("completed", self.completed);
+        w.field_usize("rejected", self.rejected);
+        w.field_usize("preemptions", self.preemptions);
+        w.field_f64("makespan_secs", self.makespan_secs);
+        w.field_f64("throughput_tok_s", self.throughput_tok_s);
+        w.field_f64("ttft_p50_secs", self.ttft_p50_secs);
+        w.field_f64("ttft_p95_secs", self.ttft_p95_secs);
+        w.field_f64("ttft_p99_secs", self.ttft_p99_secs);
+        w.field_f64("tpot_p50_secs", self.tpot_p50_secs);
+        w.field_f64("tpot_p95_secs", self.tpot_p95_secs);
+        w.field_f64("tpot_p99_secs", self.tpot_p99_secs);
+        w.field_f64("energy_per_req_j", self.energy_per_req_j);
+        w.field_f64("mean_batch", self.mean_batch);
+        w.field_f64("peak_kv_bytes", self.peak_kv_bytes);
+        w.field_f64("busy_secs", self.busy_secs);
+        w.field_f64("utilization", self.utilization);
+        w.field_str("sink", &self.sink);
+        w.field_usize("samples_buffered_peak", self.samples_buffered_peak);
+        w.field_usize("peak_live_requests", self.peak_live_requests);
+        w.end();
+        w.finish()
     }
 }
 
@@ -273,6 +268,10 @@ struct EngineRun {
     /// fleet layer's hook for folding into cluster-level sinks.
     emit_completions: bool,
     completions: Vec<(f64, f64)>,
+    /// Windowed per-step telemetry (inert when the tracer is off).
+    g_batch: Gauge,
+    g_live: Gauge,
+    g_kv: Gauge,
 }
 
 /// Request-level serving simulator over a prebuilt platform.
@@ -288,6 +287,12 @@ pub struct ServingSim<'a> {
     prefill_cache: HashMap<usize, (f64, f64)>,
     emit_completions: bool,
     run: Option<EngineRun>,
+    /// Trace sink — `Tracer::off()` (the default) costs one predictable
+    /// branch per emit site; recording only *observes* engine state.
+    tracer: Tracer,
+    /// Trace track (Chrome tid) this engine's events land on. The fleet
+    /// convention is 0 = router, i+1 = instance i.
+    track: u32,
 }
 
 impl<'a> ServingSim<'a> {
@@ -303,6 +308,8 @@ impl<'a> ServingSim<'a> {
             prefill_cache: HashMap::new(),
             emit_completions: false,
             run: None,
+            tracer: Tracer::off(),
+            track: 1,
         }
     }
 
@@ -323,6 +330,17 @@ impl<'a> ServingSim<'a> {
     /// — the fleet layer drains them into cluster-level sinks.
     pub fn with_completions(mut self, on: bool) -> Self {
         self.emit_completions = on;
+        self
+    }
+
+    /// Attach a trace sink; this engine's events go to `track`
+    /// (Chrome tid — the fleet uses 0 for the router, i+1 for
+    /// instance i). With `Tracer::off()` every emit site reduces to
+    /// one predictable branch, and results are bit-identical either
+    /// way (pinned by `trace_on_is_bit_identical...` below).
+    pub fn with_tracer(mut self, tracer: Tracer, track: u32) -> Self {
+        self.tracer = tracer;
+        self.track = track;
         self
     }
 
@@ -375,6 +393,9 @@ impl<'a> ServingSim<'a> {
             tpot: self.cfg.sink.make(),
             emit_completions: self.emit_completions,
             completions: Vec::new(),
+            g_batch: Gauge::new("batch"),
+            g_live: Gauge::new("live_requests"),
+            g_kv: Gauge::new("kv_util"),
         });
     }
 
@@ -402,6 +423,8 @@ impl<'a> ServingSim<'a> {
         } else {
             None
         };
+        let tracer = self.tracer.clone();
+        let track = self.track;
         let run = self.run.as_mut().unwrap();
         run.arrived += 1;
         if run.arrived == 1 {
@@ -409,9 +432,30 @@ impl<'a> ServingSim<'a> {
         }
         if !fits {
             run.st.rejected += 1;
+            if tracer.on() {
+                tracer.instant(
+                    track,
+                    "reject",
+                    t,
+                    &[("prompt", prompt_len as f64), ("gen", gen_tokens as f64)],
+                );
+            }
             return;
         }
         let i = run.st.push(t, prompt_len, gen_tokens, kv_full);
+        if tracer.on() {
+            // request lifecycle = one async span per request, arrival →
+            // retire; the engine-local arrival ordinal keys the pair
+            let seq = run.arrived as u64;
+            run.st.reqs[i].trace_id = seq;
+            tracer.async_begin(
+                track,
+                "req",
+                (u64::from(track) << 40) | seq,
+                t,
+                &[("prompt", prompt_len as f64), ("gen", gen_tokens as f64)],
+            );
+        }
         if let Some((p_secs, p_energy)) = chain {
             let start = run.prefill_free_at.max(t);
             run.prefill_free_at = start + p_secs;
@@ -431,6 +475,8 @@ impl<'a> ServingSim<'a> {
     /// the pushed requests all enter the queue before the next
     /// admission round, reproducing the eager engine bit-for-bit.
     pub fn advance_until(&mut self, bound: f64) {
+        let tracer = self.tracer.clone();
+        let track = self.track;
         let Some(run) = self.run.as_mut() else { return };
         let max_batch = self.cfg.max_batch.max(1);
         loop {
@@ -446,6 +492,19 @@ impl<'a> ServingSim<'a> {
                 let reserve = run.st.admit_reserve_bytes(i, &self.cfg);
                 run.st.kv_reserved += reserve;
                 let prefill_now = self.sched.prefill_at_admission();
+                if tracer.on() {
+                    let rq = &run.st.reqs[i];
+                    tracer.instant(
+                        track,
+                        "admit",
+                        run.st.clock,
+                        &[
+                            ("req", rq.trace_id as f64),
+                            ("wait_secs", run.st.clock - rq.arrival),
+                            ("resumed", if rq.preemptions > 0 { 1.0 } else { 0.0 }),
+                        ],
+                    );
+                }
                 let r = &mut run.st.reqs[i];
                 r.kv_held = reserve;
                 if prefill_now {
@@ -463,9 +522,20 @@ impl<'a> ServingSim<'a> {
                             r.prompt_len,
                         );
                         let frac = remaining as f64 / r.prompt_len as f64;
+                        if tracer.on() {
+                            tracer.span_begin(
+                                track,
+                                "prefill",
+                                run.st.clock,
+                                &[("req", r.trace_id as f64), ("tokens", remaining as f64)],
+                            );
+                        }
                         run.st.clock += p_secs * frac;
                         run.busy_secs += p_secs * frac;
                         r.energy_j += p_energy * frac;
+                        if tracer.on() {
+                            tracer.span_end(track, "prefill", run.st.clock);
+                        }
                     }
                     r.kv_tokens = r.ctx_target();
                     if r.decoded == 0 && r.ready.is_infinite() {
@@ -476,7 +546,7 @@ impl<'a> ServingSim<'a> {
             }
 
             // retire caught-up requests (zero-generation completes here)
-            retire_finished(run);
+            retire_finished(run, &tracer, track);
 
             if run.st.active.is_empty() {
                 // idle: jump to the next event the engine itself knows
@@ -517,6 +587,14 @@ impl<'a> ServingSim<'a> {
                     r.kv_held = 0.0;
                     r.kv_tokens = 0;
                     r.preemptions += 1;
+                    if tracer.on() {
+                        tracer.instant(
+                            track,
+                            "preempt",
+                            run.st.clock,
+                            &[("req", r.trace_id as f64)],
+                        );
+                    }
                     run.st.preemptions += 1;
                     run.st.waiting.push_front(victim);
                     plan.decode.retain(|&i| i != victim);
@@ -566,6 +644,17 @@ impl<'a> ServingSim<'a> {
                     pl,
                 );
                 t_step += p_secs * (c as f64 / pl as f64) * chunk_disc;
+            }
+            if tracer.on() {
+                tracer.span_begin(
+                    track,
+                    "step",
+                    run.st.clock,
+                    &[
+                        ("decode", ndec as f64),
+                        ("prefill_chunks", plan.prefill.len() as f64),
+                    ],
+                );
             }
             run.st.clock += t_step;
             run.busy_secs += t_step;
@@ -635,8 +724,16 @@ impl<'a> ServingSim<'a> {
                 .map(|&i| run.st.reqs[i].kv_tokens as f64 * run.st.kv_token)
                 .sum();
             run.peak_kv = run.peak_kv.max(kv_now);
+            if tracer.on() {
+                tracer.span_end(track, "step", run.st.clock);
+                let t = run.st.clock;
+                run.g_batch.sample(&tracer, track, t, run.st.active.len() as f64);
+                run.g_live.sample(&tracer, track, t, run.st.live() as f64);
+                run.g_kv
+                    .sample(&tracer, track, t, kv_now / self.cfg.kv_capacity_bytes);
+            }
 
-            retire_finished(run);
+            retire_finished(run, &tracer, track);
         }
     }
 
@@ -656,7 +753,13 @@ impl<'a> ServingSim<'a> {
     /// TPOT covers the remaining tokens after the first. Rejected
     /// requests are excluded from the latency samples.
     pub fn finish(&mut self) -> (ServingReport, ServingSamples) {
-        let run = self.run.take().expect("begin() before finish()");
+        let mut run = self.run.take().expect("begin() before finish()");
+        if self.tracer.on() {
+            // emit the tail gauge windows before aggregating
+            run.g_batch.flush(&self.tracer, self.track);
+            run.g_live.flush(&self.tracer, self.track);
+            run.g_kv.flush(&self.tracer, self.track);
+        }
         let first_arrival = if run.first_arrival.is_finite() {
             run.first_arrival
         } else {
@@ -787,7 +890,7 @@ fn plan_growth_bytes(plan: &StepPlan, st: &ServingState) -> f64 {
 /// Remove finished requests from the batch: stamp completion, release
 /// the KV reservation, fold the latency samples into the sinks and
 /// recycle the slab slot.
-fn retire_finished(run: &mut EngineRun) {
+fn retire_finished(run: &mut EngineRun, tracer: &Tracer, track: u32) {
     let clock = run.st.clock;
     let mut w = 0;
     let mut idx = 0;
@@ -821,6 +924,9 @@ fn retire_finished(run: &mut EngineRun) {
         };
         run.total_energy += r.energy_j;
         run.last_finish = run.last_finish.max(r.finish);
+        if tracer.on() {
+            tracer.async_end(track, "req", (u64::from(track) << 40) | r.trace_id, r.finish);
+        }
         run.ttft.push(ttft);
         run.tpot.push(tpot);
         if run.emit_completions {
@@ -1279,5 +1385,152 @@ mod tests {
         assert_eq!(got.ttft_p99_secs, want.ttft_p99_secs);
         assert_eq!(got.tpot_p99_secs, want.tpot_p99_secs);
         assert_eq!(got.energy_per_req_j, want.energy_per_req_j);
+    }
+
+    #[test]
+    fn trace_on_is_bit_identical_to_trace_off() {
+        // recording only *reads* simulation state; the report (every
+        // field, via the byte-stable JSON form) must not move by a bit
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let off = ServingSim::new(&p, &m, burst_cfg(24)).run();
+        let tracer = Tracer::recording().with_metrics_every(0.0);
+        let on = ServingSim::new(&p, &m, burst_cfg(24))
+            .with_tracer(tracer.clone(), 1)
+            .run();
+        assert_eq!(off.to_json(), on.to_json());
+        // every admitted request opens and closes exactly one async span
+        let (b, e) = tracer
+            .with_buf(|buf| {
+                let b = buf
+                    .events
+                    .iter()
+                    .filter(|ev| ev.kind == crate::obs::EvKind::AsyncBegin)
+                    .count();
+                let e = buf
+                    .events
+                    .iter()
+                    .filter(|ev| ev.kind == crate::obs::EvKind::AsyncEnd)
+                    .count();
+                (b, e)
+            })
+            .unwrap();
+        assert_eq!(b, on.completed);
+        assert_eq!(b, e, "every req span must close");
+        assert!(tracer.event_count() > 2 * on.completed, "steps + gauges too");
+    }
+
+    #[test]
+    fn trace_on_is_bit_identical_under_preemption() {
+        // the preempt/resume path has extra emit sites; pin those too
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let kv_full = kv_cache_bytes(&m, 64 + 64);
+        let cfg = ServingConfig {
+            arrivals: ArrivalProcess::Trace(vec![0.0, 0.0, 0.0, 0.0]),
+            prompt_len: 64,
+            gen_tokens: 64,
+            max_batch: 4,
+            kv_capacity_bytes: 2.5 * kv_full,
+            preempt: true,
+            ..Default::default()
+        };
+        let off = ServingSim::new(&p, &m, cfg.clone()).run();
+        assert!(off.preemptions >= 1, "config must actually preempt");
+        let tracer = Tracer::recording();
+        let on = ServingSim::new(&p, &m, cfg)
+            .with_tracer(tracer.clone(), 3)
+            .run();
+        assert_eq!(off.to_json(), on.to_json());
+        let preempts = tracer
+            .with_buf(|buf| {
+                buf.events
+                    .iter()
+                    .filter(|ev| ev.kind == crate::obs::EvKind::Instant && ev.name == "preempt")
+                    .count()
+            })
+            .unwrap();
+        assert_eq!(preempts, on.preemptions);
+    }
+
+    #[test]
+    fn rejects_emit_instants_not_spans() {
+        let sys = SystemConfig::s100();
+        let m = ModelZoo::gpt_j();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let kv_full = kv_cache_bytes(&m, 64 + 64);
+        let cfg = ServingConfig {
+            arrivals: ArrivalProcess::Trace(vec![0.0, 0.001]),
+            prompt_len: 64,
+            gen_tokens: 64,
+            kv_capacity_bytes: 0.5 * kv_full,
+            ..Default::default()
+        };
+        let tracer = Tracer::recording();
+        let r = ServingSim::new(&p, &m, cfg)
+            .with_tracer(tracer.clone(), 1)
+            .run();
+        assert_eq!(r.rejected, 2);
+        let (rejects, spans) = tracer
+            .with_buf(|buf| {
+                let rejects = buf
+                    .events
+                    .iter()
+                    .filter(|ev| ev.name == "reject")
+                    .count();
+                let spans = buf
+                    .events
+                    .iter()
+                    .filter(|ev| ev.kind == crate::obs::EvKind::AsyncBegin)
+                    .count();
+                (rejects, spans)
+            })
+            .unwrap();
+        assert_eq!(rejects, 2);
+        assert_eq!(spans, 0, "rejected requests never open a lifecycle span");
+    }
+
+    #[test]
+    fn report_json_bytes_are_pinned() {
+        // CI artifacts parse this shape; the JsonWriter migration must
+        // keep it byte-for-byte
+        let r = ServingReport {
+            arch: "hi25d".to_string(),
+            model: "gpt-j-6b".to_string(),
+            scheduler: "continuous".to_string(),
+            requests: 4,
+            completed: 3,
+            rejected: 1,
+            preemptions: 0,
+            makespan_secs: 0.5,
+            throughput_tok_s: 96.0,
+            ttft_p50_secs: 0.01,
+            ttft_p95_secs: 0.02,
+            ttft_p99_secs: 0.03,
+            tpot_p50_secs: 0.001,
+            tpot_p95_secs: 0.002,
+            tpot_p99_secs: 0.003,
+            energy_per_req_j: 1.25,
+            mean_batch: 2.5,
+            peak_kv_bytes: 1024.0,
+            busy_secs: 0.25,
+            utilization: 0.5,
+            sink: "exact".to_string(),
+            samples_buffered_peak: 6,
+            peak_live_requests: 4,
+        };
+        assert_eq!(
+            r.to_json(),
+            "{\"arch\": \"hi25d\", \"model\": \"gpt-j-6b\", \"scheduler\": \"continuous\", \
+             \"requests\": 4, \"completed\": 3, \"rejected\": 1, \"preemptions\": 0, \
+             \"makespan_secs\": 0.5, \"throughput_tok_s\": 96, \
+             \"ttft_p50_secs\": 0.01, \"ttft_p95_secs\": 0.02, \"ttft_p99_secs\": 0.03, \
+             \"tpot_p50_secs\": 0.001, \"tpot_p95_secs\": 0.002, \"tpot_p99_secs\": 0.003, \
+             \"energy_per_req_j\": 1.25, \"mean_batch\": 2.5, \"peak_kv_bytes\": 1024, \
+             \"busy_secs\": 0.25, \"utilization\": 0.5, \"sink\": \"exact\", \
+             \"samples_buffered_peak\": 6, \"peak_live_requests\": 4}"
+        );
     }
 }

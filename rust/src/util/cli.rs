@@ -1,8 +1,19 @@
 //! Minimal CLI argument parser (clap is not in the offline registry).
 //!
-//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Supports `--flag`, short `-f` flags, `--key value`, `--key=value`
+//! and positional args. Short flags never take values; a leading dash
+//! followed by a digit or dot (`-5`, `-.5`) still parses as a value /
+//! positional so negative numbers pass through.
 
 use std::collections::BTreeMap;
+
+/// A `-x`/`--x` token (as opposed to a value, positional, or negative
+/// number).
+fn is_flag_token(s: &str) -> bool {
+    s.len() > 1
+        && s.starts_with('-')
+        && !s[1..].starts_with(|c: char| c.is_ascii_digit() || c == '.')
+}
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -21,7 +32,7 @@ impl Args {
                     out.options.insert(k.to_string(), v.to_string());
                 } else if it
                     .peek()
-                    .map(|n| !n.starts_with("--"))
+                    .map(|n| !is_flag_token(n))
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
@@ -29,6 +40,8 @@ impl Args {
                 } else {
                     out.flags.push(rest.to_string());
                 }
+            } else if is_flag_token(&a) {
+                out.flags.push(a[1..].to_string());
             } else {
                 out.positional.push(a);
             }
@@ -121,6 +134,17 @@ mod tests {
         let a = parse(&["serve", "--arch", "hi, transpim,,haima"]);
         assert_eq!(a.get_list("arch"), vec!["hi", "transpim", "haima"]);
         assert!(a.get_list("policy").is_empty());
+    }
+
+    #[test]
+    fn short_flags_and_negative_numbers() {
+        let a = parse(&["serve", "-v", "--streaming", "-q", "--offset", "-5"]);
+        assert!(a.has_flag("v"));
+        assert!(a.has_flag("q"));
+        // `--streaming` must stay a flag even with `-q` right after it
+        assert!(a.has_flag("streaming"));
+        assert_eq!(a.get("offset"), Some("-5"));
+        assert_eq!(a.positional, vec!["serve"]);
     }
 
     #[test]

@@ -1,9 +1,21 @@
-//! Minimal JSON parser — just enough to read `artifacts/manifest.json`
-//! written by `python/compile/aot.py` (objects, arrays, strings, numbers).
+//! Minimal JSON parser + the shared incremental [`JsonWriter`].
 //!
-//! Not a general-purpose parser (no \u escapes beyond BMP passthrough, no
+//! The parser reads `artifacts/manifest.json` written by
+//! `python/compile/aot.py` (objects, arrays, strings, numbers). Not a
+//! general-purpose parser (no \u escapes beyond BMP passthrough, no
 //! scientific-notation edge cases beyond `f64::parse`), but fully
 //! sufficient and unit-tested for the manifest grammar.
+//!
+//! The writer is the one place report emitters get string escaping and
+//! number formatting right: `ServingReport`/`FleetReport`/`SimReport`
+//! `to_json` and the `obs/` Chrome-trace export all ride it. Containers
+//! open in either *compact* (`{"k": v, "k2": v2}` — `", "` separators)
+//! or *pretty* (one field per line, 2-space indent per depth) mode, and
+//! the two nest freely — the fleet report is a pretty object holding an
+//! array of compact per-instance objects. Numbers use Rust's `{}`
+//! Display (shortest roundtrip form, byte-stable with the pre-writer
+//! hand-rolled emitters CI artifacts pin); non-finite floats emit
+//! `null` so output is always valid JSON.
 
 use std::collections::BTreeMap;
 
@@ -227,6 +239,198 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// Escape `s` into `out` as JSON string *contents* (no surrounding
+/// quotes): `"` `\` and control characters are escaped, everything else
+/// (including multi-byte UTF-8) passes through.
+pub fn escape_into(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Frame {
+    obj: bool,
+    pretty: bool,
+    count: usize,
+}
+
+/// Incremental JSON writer with per-container compact/pretty layout.
+///
+/// Keys and values are emitted in call order; separators, indentation
+/// and escaping are handled here. `finish()` returns the buffer (and
+/// debug-asserts every container was closed).
+#[derive(Default)]
+pub struct JsonWriter {
+    buf: String,
+    stack: Vec<Frame>,
+    after_key: bool,
+}
+
+impl JsonWriter {
+    pub fn new() -> JsonWriter {
+        JsonWriter::default()
+    }
+
+    /// Separator before a key (object) or a value (array): comma after
+    /// the first entry, then `" "` in compact mode or newline + 2-space
+    /// indent per depth in pretty mode.
+    fn sep(&mut self) {
+        if let Some(f) = self.stack.last_mut() {
+            let first = f.count == 0;
+            f.count += 1;
+            let pretty = f.pretty;
+            if !first {
+                self.buf.push(',');
+                if !pretty {
+                    self.buf.push(' ');
+                }
+            }
+            if pretty {
+                self.buf.push('\n');
+                for _ in 0..self.stack.len() {
+                    self.buf.push_str("  ");
+                }
+            }
+        }
+    }
+
+    fn pre_value(&mut self) {
+        if self.after_key {
+            self.after_key = false;
+        } else {
+            self.sep();
+        }
+    }
+
+    fn begin(&mut self, obj: bool, pretty: bool) {
+        self.pre_value();
+        self.buf.push(if obj { '{' } else { '[' });
+        self.stack.push(Frame {
+            obj,
+            pretty,
+            count: 0,
+        });
+    }
+
+    /// Open a compact object: `{"k": v, "k2": v2}`.
+    pub fn begin_obj(&mut self) {
+        self.begin(true, false);
+    }
+
+    /// Open a pretty object: one `"key": value` per line.
+    pub fn begin_obj_pretty(&mut self) {
+        self.begin(true, true);
+    }
+
+    /// Open a compact array: `[v, v2]`.
+    pub fn begin_arr(&mut self) {
+        self.begin(false, false);
+    }
+
+    /// Open a pretty array: one element per line.
+    pub fn begin_arr_pretty(&mut self) {
+        self.begin(false, true);
+    }
+
+    /// Close the innermost container.
+    pub fn end(&mut self) {
+        let f = self.stack.pop().expect("JsonWriter::end with no open container");
+        if f.pretty && f.count > 0 {
+            self.buf.push('\n');
+            for _ in 0..self.stack.len() {
+                self.buf.push_str("  ");
+            }
+        }
+        self.buf.push(if f.obj { '}' } else { ']' });
+    }
+
+    /// Emit an object key (escaped) followed by `": "`.
+    pub fn key(&mut self, k: &str) {
+        self.sep();
+        self.buf.push('"');
+        escape_into(k, &mut self.buf);
+        self.buf.push_str("\": ");
+        self.after_key = true;
+    }
+
+    pub fn str_val(&mut self, s: &str) {
+        self.pre_value();
+        self.buf.push('"');
+        escape_into(s, &mut self.buf);
+        self.buf.push('"');
+    }
+
+    /// `{}` Display formatting — matches the pre-writer hand-rolled
+    /// emitters byte-for-byte; non-finite floats become `null`.
+    pub fn f64_val(&mut self, v: f64) {
+        self.pre_value();
+        if v.is_finite() {
+            self.buf.push_str(&format!("{v}"));
+        } else {
+            self.buf.push_str("null");
+        }
+    }
+
+    pub fn usize_val(&mut self, v: usize) {
+        self.pre_value();
+        self.buf.push_str(&format!("{v}"));
+    }
+
+    pub fn u64_val(&mut self, v: u64) {
+        self.pre_value();
+        self.buf.push_str(&format!("{v}"));
+    }
+
+    pub fn bool_val(&mut self, v: bool) {
+        self.pre_value();
+        self.buf.push_str(if v { "true" } else { "false" });
+    }
+
+    /// Pre-formatted value (e.g. fixed-precision timestamps); the
+    /// caller guarantees `s` is valid JSON.
+    pub fn raw_val(&mut self, s: &str) {
+        self.pre_value();
+        self.buf.push_str(s);
+    }
+
+    pub fn field_str(&mut self, k: &str, v: &str) {
+        self.key(k);
+        self.str_val(v);
+    }
+
+    pub fn field_f64(&mut self, k: &str, v: f64) {
+        self.key(k);
+        self.f64_val(v);
+    }
+
+    pub fn field_usize(&mut self, k: &str, v: usize) {
+        self.key(k);
+        self.usize_val(v);
+    }
+
+    pub fn field_u64(&mut self, k: &str, v: u64) {
+        self.key(k);
+        self.u64_val(v);
+    }
+
+    /// Finish and return the buffer.
+    pub fn finish(self) -> String {
+        debug_assert!(self.stack.is_empty(), "unclosed JSON container");
+        self.buf
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -287,5 +491,83 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn writer_compact_layout_is_byte_stable() {
+        // pins the exact compact layout the pre-writer hand-rolled
+        // ServingReport emitter produced: ", " between fields, ": "
+        // after keys, `{}` Display numbers
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.field_str("arch", "hi");
+        w.field_usize("requests", 24);
+        w.field_f64("p99", 0.125);
+        w.field_f64("ratio", 2.0);
+        w.end();
+        assert_eq!(
+            w.finish(),
+            r#"{"arch": "hi", "requests": 24, "p99": 0.125, "ratio": 2}"#
+        );
+    }
+
+    #[test]
+    fn writer_pretty_nests_compact_items() {
+        // pins the FleetReport layout: pretty outer object, pretty
+        // array, compact per-instance objects at 4-space indent
+        let mut w = JsonWriter::new();
+        w.begin_obj_pretty();
+        w.field_str("policy", "jsq");
+        w.key("instances");
+        w.begin_arr_pretty();
+        for i in 0..2 {
+            w.begin_obj();
+            w.field_usize("instance", i);
+            w.end();
+        }
+        w.end();
+        w.end();
+        assert_eq!(
+            w.finish(),
+            "{\n  \"policy\": \"jsq\",\n  \"instances\": [\n    {\"instance\": 0},\n    {\"instance\": 1}\n  ]\n}"
+        );
+    }
+
+    #[test]
+    fn writer_escapes_and_roundtrips() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.field_str("msg", "a\"b\\c\nd\te");
+        w.key("vals");
+        w.begin_arr();
+        w.f64_val(1.5);
+        w.bool_val(true);
+        w.str_val("π");
+        w.end();
+        w.end();
+        let text = w.finish();
+        let j = Json::parse(&text).expect("writer output parses back");
+        assert_eq!(j.get("msg").unwrap().as_str(), Some("a\"b\\c\nd\te"));
+        let vals = j.get("vals").unwrap().as_arr().unwrap();
+        assert_eq!(vals[0].as_f64(), Some(1.5));
+        assert_eq!(vals[2].as_str(), Some("π"));
+    }
+
+    #[test]
+    fn writer_control_chars_use_unicode_escapes() {
+        let mut s = String::new();
+        escape_into("a\u{1}b", &mut s);
+        assert_eq!(s, "a\\u0001b");
+    }
+
+    #[test]
+    fn writer_nonfinite_floats_emit_null() {
+        let mut w = JsonWriter::new();
+        w.begin_arr();
+        w.f64_val(f64::NAN);
+        w.f64_val(f64::INFINITY);
+        w.f64_val(0.5);
+        w.end();
+        assert_eq!(w.finish(), "[null, null, 0.5]");
     }
 }

@@ -1,0 +1,118 @@
+//! Tiny leveled logger (crates.io `log`/`env_logger` are not in the
+//! offline registry).
+//!
+//! Diagnostics and progress narration go through [`log_error!`] /
+//! [`log_warn!`] / [`log_info!`] / [`log_debug!`] and land on
+//! **stderr**, so result output (tables, reports, JSON) on stdout
+//! stays pipeable. The threshold is a process-global atomic set from
+//! the CLI: `--quiet` → errors only, `-v`/`--verbose` → debug,
+//! default → info.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+static THRESHOLD: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global verbosity threshold.
+pub fn set_level(level: Level) {
+    THRESHOLD.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current threshold.
+pub fn level() -> Level {
+    match THRESHOLD.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// True when a record at `l` would be emitted.
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Emit a record (used by the macros; prefer those at call sites).
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        match l {
+            Level::Info => eprintln!("{args}"),
+            _ => eprintln!("{}: {args}", l.tag()),
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_gates_levels() {
+        // serial by construction: tests in this module run in one
+        // process, and we restore the default before returning
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn tags() {
+        assert_eq!(Level::Error.tag(), "error");
+        assert_eq!(Level::Debug.tag(), "debug");
+    }
+}

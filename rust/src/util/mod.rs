@@ -8,6 +8,7 @@ pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod log;
 pub mod parallel;
 pub mod prng;
 pub mod sketch;

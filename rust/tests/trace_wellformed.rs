@@ -1,0 +1,182 @@
+//! Chrome-trace export well-formedness: anything the traced serving
+//! engine or streaming fleet writes must be acceptable to a trace
+//! viewer — valid JSON, sorted timestamps, properly nested B/E spans
+//! per track, matched async b/e pairs per (cat, id), named tracks, and
+//! counters carrying values. Validated with the crate's own JSON
+//! parser so the test stays dependency-free.
+
+use std::collections::HashMap;
+
+use chiplet_hi::baselines::Arch;
+use chiplet_hi::config::{ModelZoo, SystemConfig};
+use chiplet_hi::obs::Tracer;
+use chiplet_hi::sim::{
+    ArrivalProcess, AutoscaleConfig, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec,
+    Platform, ServingConfig, ServingSim, SimOptions, StreamConfig,
+};
+use chiplet_hi::util::json::Json;
+use chiplet_hi::util::SinkMode;
+
+/// Parse and structurally validate a Chrome-trace export; returns the
+/// per-phase event counts for caller-side assertions.
+fn validate_chrome_trace(text: &str) -> HashMap<String, usize> {
+    let j = Json::parse(text).expect("chrome export is valid JSON");
+    assert_eq!(
+        j.get("displayTimeUnit").and_then(|v| v.as_str()),
+        Some("ms")
+    );
+    let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!evs.is_empty());
+
+    let mut saw_process_name = false;
+    let mut named_tids: Vec<usize> = Vec::new();
+    let mut phases: HashMap<String, usize> = HashMap::new();
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut span_stacks: HashMap<usize, Vec<String>> = HashMap::new();
+    let mut open_async: HashMap<String, isize> = HashMap::new();
+
+    for e in evs {
+        let ph = e.get("ph").unwrap().as_str().unwrap().to_string();
+        let name = e.get("name").unwrap().as_str().unwrap().to_string();
+        assert_eq!(e.get("pid").and_then(|v| v.as_usize()), Some(1));
+        let tid = e.get("tid").unwrap().as_usize().unwrap();
+        *phases.entry(ph.clone()).or_insert(0) += 1;
+        if ph == "M" {
+            // metadata rows carry no ts and name the process/tracks
+            match name.as_str() {
+                "process_name" => saw_process_name = true,
+                "thread_name" => {
+                    let label = e.get("args").unwrap().get("name").unwrap();
+                    assert!(label.as_str().is_some());
+                    named_tids.push(tid);
+                }
+                other => panic!("unexpected metadata record '{other}'"),
+            }
+            continue;
+        }
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        assert!(
+            ts >= last_ts,
+            "timestamps not sorted: {ts} after {last_ts}"
+        );
+        last_ts = ts;
+        match ph.as_str() {
+            "B" => span_stacks.entry(tid).or_default().push(name),
+            "E" => {
+                let top = span_stacks.get_mut(&tid).and_then(|s| s.pop());
+                assert_eq!(
+                    top.as_deref(),
+                    Some(name.as_str()),
+                    "E without matching B on tid {tid}"
+                );
+            }
+            "b" | "e" => {
+                assert_eq!(e.get("cat").and_then(|v| v.as_str()), Some(name.as_str()));
+                let id = e.get("id").unwrap().as_str().unwrap();
+                let slot = open_async.entry(format!("{name}/{id}")).or_insert(0);
+                if ph == "b" {
+                    *slot += 1;
+                } else {
+                    assert!(*slot > 0, "async end before begin for {name}/{id}");
+                    *slot -= 1;
+                }
+            }
+            "i" => assert_eq!(e.get("s").and_then(|v| v.as_str()), Some("t")),
+            "C" => {
+                let v = e.get("args").unwrap().get("value").unwrap();
+                assert!(v.as_f64().is_some());
+            }
+            other => panic!("unexpected phase '{other}'"),
+        }
+        assert!(
+            named_tids.contains(&tid),
+            "event on unnamed track tid {tid}"
+        );
+    }
+    assert!(saw_process_name);
+    assert!(
+        span_stacks.values().all(Vec::is_empty),
+        "unclosed B spans: {span_stacks:?}"
+    );
+    assert!(
+        open_async.values().all(|&n| n == 0),
+        "unmatched async pairs"
+    );
+    phases
+}
+
+#[test]
+fn single_engine_trace_is_well_formed() {
+    let sys = SystemConfig::s36();
+    let model = ModelZoo::bert_base();
+    let opts = SimOptions::default();
+    let platform = Platform::new(Arch::Hi25D, &sys, &opts);
+    let tracer = Tracer::recording().with_metrics_every(0.01);
+    tracer.name_track(1, "inst0 2.5D-HI");
+    let cfg = ServingConfig {
+        arrivals: ArrivalProcess::Poisson {
+            rate_per_sec: 500.0,
+            num_requests: 40,
+        },
+        prompt_len: 32,
+        gen_tokens: 8,
+        max_batch: 4,
+        ..Default::default()
+    };
+    let r = ServingSim::new(&platform, &model, cfg)
+        .with_tracer(tracer.clone(), 1)
+        .run();
+    assert!(r.completed > 0);
+    let phases = validate_chrome_trace(&tracer.chrome_json().unwrap());
+    // every accepted request opens and closes one async lifecycle span
+    assert_eq!(phases.get("b"), phases.get("e"));
+    assert_eq!(phases.get("b").copied().unwrap_or(0), r.completed);
+    assert!(phases.get("B").copied().unwrap_or(0) > 0, "no step spans");
+    assert!(phases.get("C").copied().unwrap_or(0) > 0, "no gauge counters");
+}
+
+#[test]
+fn streaming_fleet_trace_is_well_formed() {
+    let sys = SystemConfig::s36();
+    let model = ModelZoo::bert_base();
+    let cfg = ClusterConfig {
+        specs: vec![InstanceSpec::of(Arch::Hi25D); 3],
+        policy: DispatchPolicy::Jsq,
+        serving: ServingConfig {
+            arrivals: ArrivalProcess::Poisson {
+                rate_per_sec: 2.0e4,
+                num_requests: 400,
+            },
+            prompt_len: 32,
+            gen_tokens: 4,
+            max_batch: 16,
+            sink: SinkMode::Sketch,
+            ..Default::default()
+        },
+    };
+    // hair-trigger watermarks so the trace records autoscale activity
+    let stream = StreamConfig {
+        autoscale: Some(AutoscaleConfig {
+            min_instances: 1,
+            max_instances: 3,
+            high_watermark: 1.0,
+            low_watermark: 0.0,
+            cooldown_secs: 0.0,
+        }),
+        slo_ttft_secs: None,
+    };
+    let tracer = Tracer::recording().with_metrics_every(0.005);
+    let fleet = ClusterSim::new(&sys, &model, cfg)
+        .run_streaming_traced(&stream, &tracer)
+        .expect("streaming fleet run");
+    assert!(fleet.scale_ups > 0, "autoscaler never fired");
+    let phases = validate_chrome_trace(&tracer.chrome_json().unwrap());
+    assert_eq!(phases.get("b").copied().unwrap_or(0), fleet.completed);
+    assert_eq!(phases.get("e").copied().unwrap_or(0), fleet.completed);
+    // at least one dispatch instant per routed request (plus admit /
+    // scale_up markers on top)
+    assert!(phases.get("i").copied().unwrap_or(0) >= fleet.requests);
+    assert!(phases.get("C").copied().unwrap_or(0) > 0, "no gauge counters");
+    // process_name + fleet track + one per instance
+    assert!(phases.get("M").copied().unwrap_or(0) >= 5);
+}
