@@ -4,8 +4,10 @@
 //! + memoized MOO batch evaluator vs the pre-PR serial path, and the
 //! flat-arena cycle-sim throughput (exact Mflit-hops/s) plus the
 //! single-build fleet serving wall clock and the single-pass streaming
-//! fleet (P² sketch sinks) sustained request rate. Emits the
-//! machine-readable `BENCH_6.json` perf trajectory (labels are kept
+//! fleet (P² sketch sinks) sustained request rate — plain and under an
+//! active fault plan (crash + stall + thermal/wear bookkeeping), so CI
+//! tracks the health runtime's overhead too. Emits the
+//! machine-readable `BENCH_8.json` perf trajectory (labels are kept
 //! stable across `BENCH_*` generations so CI can diff against the
 //! archived baseline).
 
@@ -19,8 +21,8 @@ use chiplet_hi::noi::{analytic, CycleSim, RoutingTable, Topology};
 use chiplet_hi::obs::Tracer;
 use chiplet_hi::sim::engine::chiplets_for;
 use chiplet_hi::sim::{
-    simulate, ArrivalProcess, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec, Platform,
-    ServingConfig, ServingSim, SimOptions, StreamConfig,
+    simulate, ArrivalProcess, ClusterConfig, ClusterSim, DispatchPolicy, FaultPlan, HealthConfig,
+    InstanceSpec, Platform, ServingConfig, ServingSim, SimOptions, StreamConfig,
 };
 use chiplet_hi::util::bench::Bencher;
 use chiplet_hi::util::{Rng, SinkMode};
@@ -228,9 +230,34 @@ fn main() {
          (2 instances, jsq, P2 sketch sinks, {stream_n} requests)"
     );
 
+    // degraded streaming fleet: same workload with the health runtime
+    // live (thermal + wear bookkeeping each arrival) and a fault plan
+    // that crashes one instance mid-run and stalls the other — the
+    // worst-case per-arrival overhead of the degradation machinery
+    let degraded_stream = StreamConfig {
+        health: Some(HealthConfig::default()),
+        faults: Some(
+            FaultPlan::parse("stall@0.02:0:0.005,crash@0.05:1:0.05")
+                .expect("bench fault plan parses"),
+        ),
+        ..Default::default()
+    };
+    let degraded_label = "fleet_streaming_degraded_2inst_2000req";
+    b.bench(degraded_label, || {
+        let c = ClusterSim::new(&sys, &gpt, stream_cfg.clone());
+        std::hint::black_box(c.run_streaming(&degraded_stream).unwrap());
+    });
+    let degraded_secs = b.min_secs(degraded_label).unwrap_or(f64::NAN);
+    let degraded_rps =
+        b.note_metric("fleet_degraded_reqs_per_s", stream_n as f64 / degraded_secs);
+    println!(
+        "\ndegraded streaming fleet: {degraded_rps:.0} req/s sustained \
+         (health runtime on, 1 crash + 1 stall, {stream_n} requests)"
+    );
+
     // machine-readable perf trajectory (archived by CI)
-    match b.write_json("BENCH_6.json") {
-        Ok(()) => println!("\nwrote BENCH_6.json"),
-        Err(e) => eprintln!("\nfailed to write BENCH_6.json: {e}"),
+    match b.write_json("BENCH_8.json") {
+        Ok(()) => println!("\nwrote BENCH_8.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_8.json: {e}"),
     }
 }

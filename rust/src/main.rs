@@ -18,7 +18,8 @@
 //!              [--preempt] [--kv-gb 8] [--design file] [--all-arch]
 //!              [--arch hi,transpim,...] [--json out.json]
 //!              [--cycle-accurate [--max-flits N]]  (flit-level probes)
-//!              [--instances N --policy rr|jsq|least-kv|p2c]  (fleet mode)
+//!              [--instances N --policy rr|jsq|least-kv|p2c|least-hot|
+//!               wear-level]  (fleet mode)
 //!              [--streaming]  (P2-sketch tails, O(1) sample memory —
 //!                             the 10M-request mode)
 //!              [--heavy-tail SIGMA]  (lognormal prompt/gen lengths)
@@ -27,6 +28,11 @@
 //!              [--autoscale [--min-instances 1] [--max-instances N]
 //!               [--scale-up 12] [--scale-down 2] [--cooldown-ms 500]]
 //!              [--slo-ttft-ms MS]  (shed arrivals predicted to bust it)
+//!              [--health [--t-throttle C] [--throttle-factor F]
+//!               [--retry-limit N] [--retry-backoff-ms MS]
+//!               [--deadline-ms MS]]  (thermal throttling + ReRAM wear)
+//!              [--fault-plan crash@T:I[:D],link@T:I:A-B,stall@T:I:S]
+//!               (seeded failure injection; implies --health)
 //!              [--trace out.json [--metrics-every SECS]]  (Chrome-trace
 //!               export: request lifecycle spans + fleet events + windowed
 //!               gauges; single-instance and streaming-fleet modes)
@@ -48,8 +54,9 @@ use chiplet_hi::endurance;
 use chiplet_hi::model::kernels::Workload;
 use chiplet_hi::moo::{amosa, design::NoiDesign, nsga2, stage, Evaluator, ParetoArchive};
 use chiplet_hi::sim::{
-    self, ArrivalProcess, AutoscaleConfig, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec,
-    LenDist, Platform, ServingConfig, ServingReport, ServingSim, SimOptions, StreamConfig, Tenant,
+    self, ArrivalProcess, AutoscaleConfig, ClusterConfig, ClusterSim, DispatchPolicy, FaultPlan,
+    HealthConfig, InstanceSpec, LenDist, Platform, ServingConfig, ServingReport, ServingSim,
+    SimOptions, StreamConfig, Tenant,
 };
 use chiplet_hi::obs::Tracer;
 use chiplet_hi::util::SinkMode;
@@ -487,7 +494,10 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 };
                 let policy = DispatchPolicy::by_name(args.get_str("policy", "rr"))
                     .ok_or_else(|| {
-                        anyhow!("unknown policy (have: rr, jsq, least-kv, p2c)")
+                        anyhow!(
+                            "unknown policy (have: rr, jsq, least-kv, p2c, \
+                             least-hot, wear-level)"
+                        )
                     })?;
                 let specs: Vec<InstanceSpec> = (0..instances)
                     .map(|i| InstanceSpec {
@@ -508,9 +518,27 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 // --streaming / --autoscale / --slo-ttft-ms select the
                 // single-pass event-loop fleet; plain fleets keep the
                 // buffered exact-quantile path (the test oracle)
+                let faults = args
+                    .get("fault-plan")
+                    .map(FaultPlan::parse)
+                    .transpose()
+                    .with_context(|| "parsing --fault-plan")?;
+                // --health (or any fault plan) arms the degradation
+                // runtime; the thermal/wear knobs refine it
+                let health = (args.has_flag("health") || faults.is_some()).then(|| {
+                    HealthConfig {
+                        t_throttle_c: args.get_f64("t-throttle", 95.0),
+                        throttle_factor: args.get_f64("throttle-factor", 1.5),
+                        retry_limit: args.get_usize("retry-limit", 3) as u32,
+                        backoff_base_secs: args.get_f64("retry-backoff-ms", 1.0) / 1e3,
+                        deadline_secs: args.get_f64("deadline-ms", 1.0e9) / 1e3,
+                        ..Default::default()
+                    }
+                });
                 let streaming = args.has_flag("streaming")
                     || args.has_flag("autoscale")
-                    || args.get("slo-ttft-ms").is_some();
+                    || args.get("slo-ttft-ms").is_some()
+                    || health.is_some();
                 let fleet = if streaming {
                     let stream = StreamConfig {
                         autoscale: args.has_flag("autoscale").then(|| AutoscaleConfig {
@@ -525,6 +553,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                             .map(|v| v.parse::<f64>().map(|ms| ms / 1e3))
                             .transpose()
                             .with_context(|| "parsing --slo-ttft-ms")?,
+                        health,
+                        faults,
                     };
                     sim.run_streaming_traced(&stream, &tracer)?
                 } else {
@@ -564,6 +594,22 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                         fleet.scale_downs,
                         fleet.samples_buffered_peak,
                     );
+                    if fleet.failures + fleet.links_failed + fleet.stalls + fleet.throttle_events
+                        > 0
+                    {
+                        println!(
+                            "health: {} failures, {} retries, {} dropped, {} link reroutes, \
+                             {} stalls, {} throttle flips, peak {:.1} C, peak wear {:.4}",
+                            fleet.failures,
+                            fleet.fault_retries,
+                            fleet.fault_dropped,
+                            fleet.links_failed,
+                            fleet.stalls,
+                            fleet.throttle_events,
+                            fleet.peak_temp_c,
+                            fleet.peak_wear_frac,
+                        );
+                    }
                 }
                 if let Some(path) = args.get("json") {
                     std::fs::write(path, fleet.to_json())
@@ -733,6 +779,9 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             );
             println!(
                 "autoscaling fleet: `serve --instances N --autoscale [--min-instances 1] [--max-instances N] [--scale-up 12] [--scale-down 2] [--cooldown-ms 500] [--slo-ttft-ms 250]`"
+            );
+            println!(
+                "degraded fleet: `serve --instances N --health [--t-throttle 95] [--throttle-factor 1.5] [--fault-plan crash@T:I[:D],link@T:I:A-B,stall@T:I:S] [--retry-limit 3] [--retry-backoff-ms 1] [--deadline-ms MS] --policy least-hot|wear-level`"
             );
             println!(
                 "tracing: `serve ... --trace out.json [--metrics-every 0.5]` (Chrome/Perfetto trace: request spans, fleet events, windowed gauges)"

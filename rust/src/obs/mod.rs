@@ -23,6 +23,16 @@
 //! Schema (event names / args / units) is documented in ROADMAP.md
 //! §"Module layering"; time is *simulated* seconds, exported as
 //! microseconds in the `ts` field.
+//!
+//! The health runtime ([`crate::sim::health`]) extends the streaming
+//! fleet's schema with degradation events: `fail` / `recover` /
+//! `retry` / `drop` instants on the fleet track (tid 0, args carry the
+//! instance, attempt count and down time), `link_fail` / `stall` /
+//! `throttle_on` / `throttle_off` / `evict` instants on the instance
+//! tracks, and per-instance `temp_c` / `wear_frac` gauges flushed on
+//! the same `--metrics-every` windows as the load gauges. All of it is
+//! emitted through the same [`Tracer`] handle, so a fault-free run
+//! with tracing off stays bit-identical to the pre-health engine.
 
 pub mod chrome;
 pub mod timeline;

@@ -34,6 +34,15 @@
 //!   load watermarks, with the router re-anchored to the active set)
 //!   and SLO-aware admission (arrivals whose predicted TTFT busts the
 //!   target are shed at the front door to protect the served tail).
+//!   With a [`StreamConfig::health`] model or [`StreamConfig::faults`]
+//!   plan attached it is also where *degradation* lives: per-instance
+//!   RC thermal state throttles hot engines, ReRAM write wear decays
+//!   effective KV capacity, injected crashes evict in-flight requests
+//!   into a bounded retry/backoff queue, masked NoI links reroute (or
+//!   escalate to a crash when the mask would disconnect), and the
+//!   health-aware `least-hot` / `wear-level` policies steer around
+//!   degraded instances. Both knobs `None` is bit-identical to a
+//!   health-free build (pinned below).
 //!
 //! Each instance's [`Platform`] is built **exactly once** and threaded
 //! through the whole estimate → dispatch → simulate pipeline: the
@@ -43,7 +52,7 @@
 //! `!Sync`, so sharing is out — moving is free).
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::bail;
 use crate::baselines::Arch;
@@ -52,6 +61,10 @@ use crate::moo::design::NoiDesign;
 use crate::obs::{Gauge, Tracer};
 use crate::sim::decode::{decode_step_on, kv_cache_bytes};
 use crate::sim::engine::SimOptions;
+use crate::sim::health::{
+    EvictedReq, FaultEvent, FaultKind, FaultPlan, FleetHealth, HealthConfig, LinkFailOutcome,
+    RetryEntry,
+};
 use crate::sim::platform::Platform;
 use crate::sim::serving::{
     ArrivalEvent, ArrivalProcess, LenDist, ServingConfig, ServingReport, ServingSim,
@@ -77,6 +90,14 @@ pub enum DispatchPolicy {
     /// Power-of-two-choices: sample two distinct instances (seeded,
     /// deterministic), keep the shorter queue.
     P2c,
+    /// Health-aware: coolest instance first (ties → shortest queue,
+    /// then lowest index). Needs the streaming fleet's health runtime
+    /// ([`crate::sim::HealthConfig`]); scores like JSQ without one.
+    LeastHot,
+    /// Health-aware wear leveling: least ReRAM write wear first (ties
+    /// → shortest queue, then lowest index). Scores like JSQ without a
+    /// health runtime or on wear-free fleets.
+    WearLevel,
 }
 
 impl DispatchPolicy {
@@ -86,6 +107,8 @@ impl DispatchPolicy {
             DispatchPolicy::Jsq => "jsq",
             DispatchPolicy::LeastKv => "least-kv",
             DispatchPolicy::P2c => "p2c",
+            DispatchPolicy::LeastHot => "least-hot",
+            DispatchPolicy::WearLevel => "wear-level",
         }
     }
 
@@ -95,10 +118,14 @@ impl DispatchPolicy {
             "jsq" => Some(DispatchPolicy::Jsq),
             "lkv" | "least-kv" => Some(DispatchPolicy::LeastKv),
             "p2c" | "power-of-two" => Some(DispatchPolicy::P2c),
+            "least-hot" | "coolest" => Some(DispatchPolicy::LeastHot),
+            "wear-level" | "wear" => Some(DispatchPolicy::WearLevel),
             _ => None,
         }
     }
 
+    /// The health-agnostic policies (the buffered oracle's sweep set —
+    /// the health-aware pair degenerates to JSQ without a runtime).
     pub fn all() -> [DispatchPolicy; 4] {
         [
             DispatchPolicy::RoundRobin,
@@ -162,6 +189,29 @@ impl Default for AutoscaleConfig {
     }
 }
 
+impl AutoscaleConfig {
+    /// Reject configurations that would silently misbehave in
+    /// `run_streaming`: an inverted instance range can never satisfy
+    /// both bounds, and a non-positive (or NaN) cooldown lets the
+    /// scaler flap on every arrival.
+    pub fn validate(&self) -> Result<()> {
+        if self.max_instances < self.min_instances {
+            bail!(
+                "autoscale max_instances ({}) < min_instances ({})",
+                self.max_instances,
+                self.min_instances
+            );
+        }
+        if self.cooldown_secs.is_nan() || self.cooldown_secs <= 0.0 {
+            bail!(
+                "autoscale cooldown must be > 0 s (got {})",
+                self.cooldown_secs
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Streaming-mode scenario knobs (both off by default: the streaming
 /// run then behaves like the buffered fleet, just in O(1) memory).
 #[derive(Debug, Clone, Default)]
@@ -172,6 +222,13 @@ pub struct StreamConfig {
     /// this instance's prefill) exceeds the target — protects the p99
     /// of what is actually served.
     pub slo_ttft_secs: Option<f64>,
+    /// Degradation model (thermal throttling + ReRAM wear); `None`
+    /// keeps the fleet pristine and bit-identical to pre-health builds.
+    pub health: Option<HealthConfig>,
+    /// Seeded fault schedule (crashes / link failures / stalls);
+    /// `None` injects nothing. Faults alone imply a default
+    /// [`HealthConfig`] for retry bookkeeping.
+    pub faults: Option<FaultPlan>,
 }
 
 /// Fleet scenario: instances + router policy + the shared workload.
@@ -221,6 +278,24 @@ pub struct FleetReport {
     pub samples_buffered_peak: usize,
     /// Sum of per-instance live-request high-water marks.
     pub peak_live_requests: usize,
+    /// Injected instance crashes applied (streaming + faults only).
+    pub failures: usize,
+    /// Re-dispatch attempts of crash-evicted requests.
+    pub fault_retries: usize,
+    /// Requests lost to the retry budget, deadline, or a dead fleet.
+    pub fault_dropped: usize,
+    /// NoI link failures rerouted (escalated to a crash when masking
+    /// the link would disconnect the NoI).
+    pub links_failed: usize,
+    /// Transient stalls applied.
+    pub stalls: usize,
+    /// Thermal throttle state flips across the fleet.
+    pub throttle_events: usize,
+    /// Hottest per-instance RC temperature reached (°C; 0 when the
+    /// health model is off).
+    pub peak_temp_c: f64,
+    /// Highest ReRAM wear fraction reached (0 when off / wear-free).
+    pub peak_wear_frac: f64,
     /// Per-instance reports, in spec order.
     pub instances: Vec<ServingReport>,
 }
@@ -273,6 +348,14 @@ impl FleetReport {
         w.field_str("sink", &self.sink);
         w.field_usize("samples_buffered_peak", self.samples_buffered_peak);
         w.field_usize("peak_live_requests", self.peak_live_requests);
+        w.field_usize("failures", self.failures);
+        w.field_usize("fault_retries", self.fault_retries);
+        w.field_usize("fault_dropped", self.fault_dropped);
+        w.field_usize("links_failed", self.links_failed);
+        w.field_usize("stalls", self.stalls);
+        w.field_usize("throttle_events", self.throttle_events);
+        w.field_f64("peak_temp_c", self.peak_temp_c);
+        w.field_f64("peak_wear_frac", self.peak_wear_frac);
         w.key("instances");
         w.begin_arr_pretty();
         for inst in &self.instances {
@@ -452,7 +535,11 @@ pub fn route_requests(
         }
         let pick = match policy {
             DispatchPolicy::RoundRobin => k % n,
-            DispatchPolicy::Jsq => (0..n).min_by_key(|&i| outstanding[i].len()).unwrap(),
+            // The buffered oracle has no health runtime: the
+            // health-aware policies degenerate to their JSQ tiebreak.
+            DispatchPolicy::Jsq | DispatchPolicy::LeastHot | DispatchPolicy::WearLevel => {
+                (0..n).min_by_key(|&i| outstanding[i].len()).unwrap()
+            }
             DispatchPolicy::LeastKv => (0..n)
                 .min_by(|&a, &b| {
                     let la = outstanding[a].len() as f64 * kv_full / caps[a];
@@ -542,7 +629,9 @@ fn route_events(
         }
         let pick = match policy {
             DispatchPolicy::RoundRobin => k % n,
-            DispatchPolicy::Jsq => (0..n).min_by_key(|&i| outstanding[i].len()).unwrap(),
+            DispatchPolicy::Jsq | DispatchPolicy::LeastHot | DispatchPolicy::WearLevel => {
+                (0..n).min_by_key(|&i| outstanding[i].len()).unwrap()
+            }
             DispatchPolicy::LeastKv => (0..n)
                 .min_by(|&a, &b| {
                     let la = kv_out[a] / caps[a];
@@ -574,6 +663,260 @@ fn route_events(
         outstanding[pick].push(Reverse(OutEntry { finish, kv }));
     }
     assigned
+}
+
+/// Crash instance `inst` at time `t`: mark it down in the health
+/// ledger, drain + evict its engine, clear its virtual router state,
+/// pull it from the active set (activating a survivor if that empties
+/// the fleet), and queue every evicted request for re-dispatch after
+/// one backoff. No-op when the instance is already down.
+#[allow(clippy::too_many_arguments)]
+fn crash_instance(
+    inst: usize,
+    t: f64,
+    down_secs: f64,
+    h: &mut FleetHealth,
+    retry_q: &mut BinaryHeap<Reverse<RetryEntry>>,
+    retry_seq: &mut u64,
+    engines: &mut [ServingSim],
+    outstanding: &mut [BinaryHeap<Reverse<FinishTime>>],
+    servers: &mut [Vec<f64>],
+    active: &mut Vec<usize>,
+    sinks: (&mut SampleSink, &mut SampleSink),
+    tracer: &Tracer,
+) {
+    if !h.crash(inst, t, down_secs) {
+        return;
+    }
+    if tracer.on() {
+        tracer.instant(
+            0,
+            "fail",
+            t,
+            &[("inst", inst as f64), ("down_secs", down_secs)],
+        );
+    }
+    let eng = &mut engines[inst];
+    eng.advance_until(t);
+    for (a, b) in eng.take_completions() {
+        sinks.0.push(a);
+        sinks.1.push(b);
+    }
+    let evicted = eng.fail_crash();
+    outstanding[inst].clear();
+    for s in servers[inst].iter_mut() {
+        *s = 0.0;
+    }
+    active.retain(|&i| i != inst);
+    if active.is_empty() {
+        // graceful degradation: never leave a live fleet unreachable —
+        // promote the lowest-index survivor (autoscaling parked it)
+        if let Some(i) = (0..engines.len()).find(|&i| h.alive(i)) {
+            active.push(i);
+        }
+    }
+    for r in evicted {
+        retry_q.push(Reverse(RetryEntry::new(
+            t + h.cfg.backoff_base_secs,
+            *retry_seq,
+            r,
+            1,
+        )));
+        *retry_seq += 1;
+    }
+}
+
+/// Apply every health action due by `until`, in time order with a
+/// fixed tie priority (recoveries, then injected faults, then
+/// retries — a retry firing at a recovery instant may use the revived
+/// instance). Retries re-dispatch to the least-loaded alive active
+/// instance with a *fixed* tiebreak — never the policy RNG, so
+/// fault-free streams stay bit-identical — backing off exponentially
+/// while the fleet is down and dropping on the retry budget or the
+/// per-request deadline.
+#[allow(clippy::too_many_arguments)]
+fn apply_health_until(
+    until: f64,
+    h: &mut FleetHealth,
+    fault_q: &mut VecDeque<FaultEvent>,
+    retry_q: &mut BinaryHeap<Reverse<RetryEntry>>,
+    retry_seq: &mut u64,
+    engines: &mut [ServingSim],
+    outstanding: &mut [BinaryHeap<Reverse<FinishTime>>],
+    servers: &mut [Vec<f64>],
+    active: &mut Vec<usize>,
+    sinks: (&mut SampleSink, &mut SampleSink),
+    buffered_peak: &mut usize,
+    basis: &[(f64, f64)],
+    ref_prompt: usize,
+    tracer: &Tracer,
+) {
+    let n = engines.len();
+    loop {
+        let t_rec = h.next_recovery();
+        let t_fault = fault_q.front().map_or(f64::INFINITY, |e| e.t);
+        let t_retry = retry_q
+            .peek()
+            .map_or(f64::INFINITY, |Reverse(e)| e.fire_t());
+        let tmin = t_rec.min(t_fault).min(t_retry);
+        if !tmin.is_finite() || tmin > until {
+            break;
+        }
+
+        if t_rec <= t_fault && t_rec <= t_retry {
+            if let Some(i) = h.recover_due(t_rec) {
+                if !active.contains(&i) {
+                    active.push(i);
+                    active.sort_unstable();
+                }
+                outstanding[i].clear();
+                for s in servers[i].iter_mut() {
+                    *s = 0.0;
+                }
+                if tracer.on() {
+                    tracer.instant(0, "recover", t_rec, &[("inst", i as f64)]);
+                }
+            }
+            continue;
+        }
+
+        if t_fault <= t_retry {
+            let ev = fault_q.pop_front().expect("peeked a fault event");
+            match ev.kind {
+                FaultKind::Crash { inst, down_secs } if inst < n => {
+                    crash_instance(
+                        inst,
+                        ev.t,
+                        down_secs,
+                        h,
+                        retry_q,
+                        retry_seq,
+                        engines,
+                        outstanding,
+                        servers,
+                        active,
+                        (&mut *sinks.0, &mut *sinks.1),
+                        tracer,
+                    );
+                }
+                FaultKind::LinkFail { inst, a, b } if inst < n && h.alive(inst) => {
+                    match h.fail_link(inst, a, b) {
+                        LinkFailOutcome::Rerouted { stretch } => {
+                            if tracer.on() {
+                                tracer.instant(
+                                    inst as u32 + 1,
+                                    "link_fail",
+                                    ev.t,
+                                    &[("a", a as f64), ("b", b as f64), ("stretch", stretch)],
+                                );
+                            }
+                        }
+                        LinkFailOutcome::WouldDisconnect => {
+                            // masking the link would partition the NoI:
+                            // the instance is unreachable — a crash
+                            crash_instance(
+                                inst,
+                                ev.t,
+                                0.0,
+                                h,
+                                retry_q,
+                                retry_seq,
+                                engines,
+                                outstanding,
+                                servers,
+                                active,
+                                (&mut *sinks.0, &mut *sinks.1),
+                                tracer,
+                            );
+                        }
+                        LinkFailOutcome::NoSuchLink => {}
+                    }
+                }
+                FaultKind::Stall { inst, secs } if inst < n && h.alive(inst) => {
+                    let eng = &mut engines[inst];
+                    eng.advance_until(ev.t);
+                    eng.inject_stall(secs);
+                    for (a, b) in eng.take_completions() {
+                        sinks.0.push(a);
+                        sinks.1.push(b);
+                    }
+                    h.stalls += 1;
+                    if tracer.on() {
+                        tracer.instant(inst as u32 + 1, "stall", ev.t, &[("secs", secs)]);
+                    }
+                }
+                // out-of-range instance or dead target: the fault has
+                // nothing to act on
+                _ => {}
+            }
+            continue;
+        }
+
+        let Reverse(entry) = retry_q.pop().expect("peeked a retry entry");
+        let t = entry.fire_t();
+        if entry.attempts > h.cfg.retry_limit || t > entry.arrival() + h.cfg.deadline_secs {
+            h.dropped += 1;
+            if tracer.on() {
+                tracer.instant(0, "drop", t, &[("attempts", f64::from(entry.attempts))]);
+            }
+            continue;
+        }
+        let pick = active
+            .iter()
+            .copied()
+            .filter(|&i| h.alive(i))
+            .min_by_key(|&i| (outstanding[i].len(), i));
+        let Some(p) = pick else {
+            // whole fleet down: back off exponentially and try again
+            let req = EvictedReq {
+                arrival: entry.arrival(),
+                prompt: entry.req.prompt,
+                gen: entry.req.gen,
+            };
+            let delay = h.cfg.backoff_base_secs * 2.0f64.powi(entry.attempts as i32);
+            retry_q.push(Reverse(RetryEntry::new(
+                t + delay,
+                *retry_seq,
+                req,
+                entry.attempts + 1,
+            )));
+            *retry_seq += 1;
+            continue;
+        };
+        h.retries += 1;
+        if tracer.on() {
+            tracer.instant(
+                0,
+                "retry",
+                t,
+                &[("inst", p as f64), ("attempt", f64::from(entry.attempts))],
+            );
+        }
+        let eng = &mut engines[p];
+        eng.advance_until(t);
+        eng.push_request(t, entry.req.prompt, entry.req.gen);
+        for (a, b) in eng.take_completions() {
+            sinks.0.push(a);
+            sinks.1.push(b);
+        }
+        *buffered_peak =
+            (*buffered_peak).max(sinks.0.buffered_len() + sinks.1.buffered_len());
+        let ev = ArrivalEvent {
+            t,
+            prompt: entry.req.prompt,
+            gen: entry.req.gen,
+        };
+        let est = event_est(basis[p], &ev, ref_prompt) * h.slowdown(p);
+        let (si, free) = servers[p]
+            .iter()
+            .copied()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let finish = free.max(t) + est;
+        servers[p][si] = finish;
+        outstanding[p].push(Reverse(FinishTime(finish)));
+    }
 }
 
 /// Fleet simulator: dispatch + N request-level engines + aggregation.
@@ -768,6 +1111,14 @@ impl<'a> ClusterSim<'a> {
             sink: "exact".to_string(),
             samples_buffered_peak: buffered,
             peak_live_requests: live,
+            failures: 0,
+            fault_retries: 0,
+            fault_dropped: 0,
+            links_failed: 0,
+            stalls: 0,
+            throttle_events: 0,
+            peak_temp_c: 0.0,
+            peak_wear_frac: 0.0,
             instances,
         })
     }
@@ -791,6 +1142,10 @@ impl<'a> ClusterSim<'a> {
     /// `scale_down` markers, `outstanding` and `active_instances`
     /// counters) and each instance's engine records its request
     /// lifecycle on track `i + 1` — one merged trace per fleet run.
+    /// Health-enabled runs add `fail`/`recover`/`retry`/`drop` instants
+    /// on the fleet track and `link_fail`/`stall`/`throttle_on`/
+    /// `throttle_off` instants plus `temp_c`/`wear_frac` gauges on the
+    /// instance tracks.
     /// Recording is read-only with respect to simulation state:
     /// `run_streaming` *is* this function with the `NullSink`, and the
     /// bit-identity test below pins that the reports match.
@@ -802,6 +1157,9 @@ impl<'a> ClusterSim<'a> {
         let n = self.cfg.specs.len();
         if n == 0 {
             bail!("cluster needs at least one instance");
+        }
+        if let Some(a) = stream.autoscale.as_ref() {
+            a.validate()?;
         }
         let scfg = &self.cfg.serving;
         let opts = SimOptions::default();
@@ -821,6 +1179,26 @@ impl<'a> ClusterSim<'a> {
             .iter()
             .map(|s| s.kv_capacity_bytes.unwrap_or(scfg.kv_capacity_bytes).max(1.0))
             .collect();
+
+        // degradation/fault runtime — engaged only when asked; with
+        // both knobs `None` every health branch below is untaken and
+        // the run is bit-identical to a health-free build
+        let mut health = if stream.health.is_some() || stream.faults.is_some() {
+            Some(FleetHealth::new(
+                stream.health.clone().unwrap_or_default(),
+                &platforms,
+                &caps,
+            ))
+        } else {
+            None
+        };
+        let mut fault_q: VecDeque<FaultEvent> = stream
+            .faults
+            .as_ref()
+            .map(|p| p.events.iter().copied().collect())
+            .unwrap_or_default();
+        let mut retry_q: BinaryHeap<Reverse<RetryEntry>> = BinaryHeap::new();
+        let mut retry_seq = 0u64;
 
         if tracer.on() {
             tracer.name_track(0, "fleet");
@@ -879,6 +1257,44 @@ impl<'a> ClusterSim<'a> {
         for ev in events {
             requests += 1;
             let t = ev.t;
+
+            // settle health actions due by this arrival (injected
+            // faults, retry re-dispatches, recoveries), then refresh
+            // the thermal state so routing sees current temperatures
+            if let Some(h) = health.as_mut() {
+                apply_health_until(
+                    t,
+                    h,
+                    &mut fault_q,
+                    &mut retry_q,
+                    &mut retry_seq,
+                    &mut engines,
+                    &mut outstanding,
+                    &mut servers,
+                    &mut active,
+                    (&mut ttft_sink, &mut tpot_sink),
+                    &mut buffered_peak,
+                    &basis,
+                    scfg.prompt_len,
+                    tracer,
+                );
+                for i in 0..n {
+                    if h.alive(i) {
+                        h.update_thermal(i, t, engines[i].energy_dissipated(), tracer);
+                        engines[i].set_throttle(h.slowdown(i));
+                    }
+                }
+                if active.is_empty() {
+                    // every instance is down: nowhere to route — the
+                    // arrival lands in the fault-drop ledger
+                    h.dropped += 1;
+                    if tracer.on() {
+                        tracer.instant(0, "drop", t, &[("fleet_down", 1.0)]);
+                    }
+                    continue;
+                }
+            }
+
             for o in outstanding.iter_mut() {
                 while let Some(&Reverse(FinishTime(f))) = o.peek() {
                     if f <= t {
@@ -897,7 +1313,14 @@ impl<'a> ClusterSim<'a> {
                     let per = load as f64 / active.len() as f64;
                     if per > a.high_watermark && active.len() < a.max_instances.min(n) {
                         // activate the lowest-index parked instance
-                        if let Some(next) = (0..n).find(|i| !active.contains(i)) {
+                        // (never a crashed one)
+                        if let Some(next) = (0..n).find(|&i| {
+                            !active.contains(&i)
+                                && match &health {
+                                    Some(h) => h.alive(i),
+                                    None => true,
+                                }
+                        }) {
                             active.push(next);
                             active.sort_unstable();
                             scale_ups += 1;
@@ -965,9 +1388,51 @@ impl<'a> ClusterSim<'a> {
                         ia
                     }
                 }
+                DispatchPolicy::LeastHot => match &health {
+                    // coolest instance first; queue depth then index
+                    // break ties (exact JSQ without a health runtime)
+                    Some(h) => active
+                        .iter()
+                        .copied()
+                        .min_by(|&a, &b| {
+                            h.temp_c(a)
+                                .total_cmp(&h.temp_c(b))
+                                .then_with(|| outstanding[a].len().cmp(&outstanding[b].len()))
+                                .then(a.cmp(&b))
+                        })
+                        .unwrap(),
+                    None => active
+                        .iter()
+                        .copied()
+                        .min_by_key(|&i| (outstanding[i].len(), i))
+                        .unwrap(),
+                },
+                DispatchPolicy::WearLevel => match &health {
+                    // least-worn ReRAM first; same tiebreak ladder
+                    Some(h) => active
+                        .iter()
+                        .copied()
+                        .min_by(|&a, &b| {
+                            h.wear_frac(a)
+                                .total_cmp(&h.wear_frac(b))
+                                .then_with(|| outstanding[a].len().cmp(&outstanding[b].len()))
+                                .then(a.cmp(&b))
+                        })
+                        .unwrap(),
+                    None => active
+                        .iter()
+                        .copied()
+                        .min_by_key(|&i| (outstanding[i].len(), i))
+                        .unwrap(),
+                },
             };
 
-            let est = event_est(basis[pick], &ev, scfg.prompt_len);
+            let mut est = event_est(basis[pick], &ev, scfg.prompt_len);
+            if let Some(h) = health.as_ref() {
+                // throttled/rerouted instances serve slower in the
+                // router's virtual-server model too
+                est *= h.slowdown(pick);
+            }
             let (si, free) = servers[pick]
                 .iter()
                 .copied()
@@ -1005,10 +1470,40 @@ impl<'a> ClusterSim<'a> {
                 tpot_sink.push(b);
             }
             buffered_peak = buffered_peak.max(ttft_sink.buffered_len() + tpot_sink.buffered_len());
+            if let Some(h) = health.as_mut() {
+                // ReRAM write wear from this dispatch; decayed KV
+                // capacity feeds straight back into the engine
+                if let Some(kv) = h.note_dispatch(pick, self.model, ev.prompt + ev.gen, t, tracer)
+                {
+                    engines[pick].set_kv_capacity(kv);
+                }
+            }
 
             let finish = free.max(t) + est;
             servers[pick][si] = finish;
             outstanding[pick].push(Reverse(FinishTime(finish)));
+        }
+
+        // settle every fault, retry and recovery scheduled past the
+        // last arrival, then flush the per-instance health gauges
+        if let Some(h) = health.as_mut() {
+            apply_health_until(
+                f64::INFINITY,
+                h,
+                &mut fault_q,
+                &mut retry_q,
+                &mut retry_seq,
+                &mut engines,
+                &mut outstanding,
+                &mut servers,
+                &mut active,
+                (&mut ttft_sink, &mut tpot_sink),
+                &mut buffered_peak,
+                &basis,
+                scfg.prompt_len,
+                tracer,
+            );
+            h.flush_gauges(tracer);
         }
 
         // emit the tail gauge windows before the drain
@@ -1047,6 +1542,20 @@ impl<'a> ClusterSim<'a> {
         let busy: f64 = instances.iter().map(|r| r.busy_secs).sum();
         let inst_buffered: usize = instances.iter().map(|r| r.samples_buffered_peak).sum();
         let live: usize = instances.iter().map(|r| r.peak_live_requests).sum();
+        let (failures, fault_retries, fault_dropped, links_failed, stalls, throttle_events, peak_temp_c, peak_wear_frac) =
+            match &health {
+                Some(h) => (
+                    h.failures,
+                    h.retries,
+                    h.dropped,
+                    h.links_failed,
+                    h.stalls,
+                    h.throttle_events,
+                    h.peak_temp_c(),
+                    h.peak_wear_frac(),
+                ),
+                None => (0, 0, 0, 0, 0, 0, 0.0, 0.0),
+            };
 
         Ok(FleetReport {
             policy: self.cfg.policy.name().to_string(),
@@ -1071,6 +1580,14 @@ impl<'a> ClusterSim<'a> {
             sink: ttft_sink.mode().name().to_string(),
             samples_buffered_peak: inst_buffered + buffered_peak,
             peak_live_requests: live,
+            failures,
+            fault_retries,
+            fault_dropped,
+            links_failed,
+            stalls,
+            throttle_events,
+            peak_temp_c,
+            peak_wear_frac,
             instances,
         })
     }
@@ -1416,10 +1933,10 @@ mod tests {
                 autoscale: Some(AutoscaleConfig {
                     min_instances: 1,
                     high_watermark: 1.0,
-                    cooldown_secs: 0.0,
+                    cooldown_secs: 1.0e-6,
                     ..Default::default()
                 }),
-                slo_ttft_secs: None,
+                ..Default::default()
             })
             .unwrap();
         assert!(scaled.scale_ups >= 1, "burst must trigger scale-up");
@@ -1427,8 +1944,8 @@ mod tests {
         // an impossible SLO sheds everything at the front door...
         let strict = ClusterSim::new(&sys, &m, mk())
             .run_streaming(&StreamConfig {
-                autoscale: None,
                 slo_ttft_secs: Some(0.0),
+                ..Default::default()
             })
             .unwrap();
         assert_eq!(strict.shed, 48);
@@ -1436,8 +1953,8 @@ mod tests {
         // ...and a generous one sheds nothing
         let lax = ClusterSim::new(&sys, &m, mk())
             .run_streaming(&StreamConfig {
-                autoscale: None,
                 slo_ttft_secs: Some(1.0e9),
+                ..Default::default()
             })
             .unwrap();
         assert_eq!(lax.shed, 0);
@@ -1497,10 +2014,10 @@ mod tests {
             autoscale: Some(AutoscaleConfig {
                 min_instances: 1,
                 high_watermark: 1.0,
-                cooldown_secs: 0.0,
+                cooldown_secs: 1.0e-6,
                 ..Default::default()
             }),
-            slo_ttft_secs: None,
+            ..Default::default()
         };
         let off = ClusterSim::new(&sys, &m, mk()).run_streaming(&stream).unwrap();
         let tracer = Tracer::recording();
@@ -1547,8 +2064,8 @@ mod tests {
             serving: poisson(1.0e5, 16),
         };
         let stream = StreamConfig {
-            autoscale: None,
             slo_ttft_secs: Some(0.0),
+            ..Default::default()
         };
         let tracer = Tracer::recording();
         let fleet = ClusterSim::new(&sys, &m, cfg)
@@ -1595,6 +2112,223 @@ mod tests {
         assert_eq!(
             parsed.get("instances").and_then(|v| v.as_arr()).map(|a| a.len()),
             Some(2)
+        );
+    }
+
+    #[test]
+    fn autoscale_validation_rejects_bad_configs() {
+        let bad_range = AutoscaleConfig {
+            min_instances: 4,
+            max_instances: 2,
+            ..Default::default()
+        };
+        assert!(bad_range.validate().is_err());
+        let bad_cooldown = AutoscaleConfig {
+            cooldown_secs: 0.0,
+            ..Default::default()
+        };
+        assert!(bad_cooldown.validate().is_err());
+        let nan_cooldown = AutoscaleConfig {
+            cooldown_secs: f64::NAN,
+            ..Default::default()
+        };
+        assert!(nan_cooldown.validate().is_err());
+        assert!(AutoscaleConfig::default().validate().is_ok());
+        // and the streaming entry point refuses to run on one
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let cfg = ClusterConfig {
+            specs: vec![InstanceSpec::of(Arch::Hi25D)],
+            policy: DispatchPolicy::Jsq,
+            serving: poisson(1.0e5, 4),
+        };
+        let res = ClusterSim::new(&sys, &m, cfg).run_streaming(&StreamConfig {
+            autoscale: Some(AutoscaleConfig {
+                min_instances: 2,
+                max_instances: 1,
+                ..Default::default()
+            }),
+            ..Default::default()
+        });
+        assert!(res.is_err(), "inverted instance range must be rejected");
+    }
+
+    #[test]
+    fn health_policies_parse_and_fall_back_to_jsq() {
+        assert_eq!(DispatchPolicy::by_name("least-hot"), Some(DispatchPolicy::LeastHot));
+        assert_eq!(DispatchPolicy::by_name("wear-level"), Some(DispatchPolicy::WearLevel));
+        assert_eq!(DispatchPolicy::by_name("wear"), Some(DispatchPolicy::WearLevel));
+        assert_eq!(DispatchPolicy::LeastHot.name(), "least-hot");
+        assert_eq!(DispatchPolicy::WearLevel.name(), "wear-level");
+        let _ = HealthConfig::default();
+        // without a health runtime both degenerate to the JSQ pick
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let mk = |p| ClusterConfig {
+            specs: vec![InstanceSpec::of(Arch::Hi25D), InstanceSpec::of(Arch::Hi25D)],
+            policy: p,
+            serving: poisson(1.0e5, 32),
+        };
+        let jsq = ClusterSim::new(&sys, &m, mk(DispatchPolicy::Jsq))
+            .run_streaming(&StreamConfig::default())
+            .unwrap();
+        for p in [DispatchPolicy::LeastHot, DispatchPolicy::WearLevel] {
+            let r = ClusterSim::new(&sys, &m, mk(p))
+                .run_streaming(&StreamConfig::default())
+                .unwrap();
+            assert_eq!(r.completed, jsq.completed);
+            assert_eq!(r.makespan_secs, jsq.makespan_secs);
+            assert_eq!(r.ttft_p99_secs, jsq.ttft_p99_secs);
+        }
+    }
+
+    #[test]
+    fn inert_health_runtime_is_bit_identical() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let mk = || ClusterConfig {
+            specs: vec![InstanceSpec::of(Arch::Hi25D), InstanceSpec::of(Arch::Hi25D)],
+            policy: DispatchPolicy::Jsq,
+            serving: poisson(1.0e5, 32),
+        };
+        let plain = ClusterSim::new(&sys, &m, mk())
+            .run_streaming(&StreamConfig::default())
+            .unwrap();
+        // health runtime attached but with nothing enabled and an empty
+        // fault plan: every dynamic quantity it feeds back (throttle,
+        // est scale, KV capacity) is exactly neutral
+        let inert = ClusterSim::new(&sys, &m, mk())
+            .run_streaming(&StreamConfig {
+                health: Some(HealthConfig {
+                    thermal: false,
+                    wear: false,
+                    ..Default::default()
+                }),
+                faults: Some(FaultPlan::default()),
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(plain.completed, inert.completed);
+        assert_eq!(plain.makespan_secs, inert.makespan_secs);
+        assert_eq!(plain.ttft_p50_secs, inert.ttft_p50_secs);
+        assert_eq!(plain.ttft_p99_secs, inert.ttft_p99_secs);
+        assert_eq!(plain.tpot_p50_secs, inert.tpot_p50_secs);
+        assert_eq!(plain.throughput_tok_s, inert.throughput_tok_s);
+        assert_eq!(inert.failures, 0);
+        assert_eq!(inert.fault_retries, 0);
+        assert_eq!(inert.fault_dropped, 0);
+        assert_eq!(inert.throttle_events, 0);
+    }
+
+    #[test]
+    fn fault_injection_preserves_request_accounting() {
+        // burst hard enough that both crashed instances hold live
+        // requests when they die
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let mk = || ClusterConfig {
+            specs: vec![
+                InstanceSpec::of(Arch::Hi25D),
+                InstanceSpec::of(Arch::Hi25D),
+                InstanceSpec::of(Arch::Hi25D),
+            ],
+            policy: DispatchPolicy::Jsq,
+            serving: poisson(1.0e6, 64),
+        };
+        let plan = FaultPlan::new(vec![
+            FaultEvent {
+                t: 3.0e-5,
+                kind: FaultKind::Stall { inst: 2, secs: 2.0e-5 },
+            },
+            FaultEvent {
+                t: 5.0e-5,
+                kind: FaultKind::Crash { inst: 1, down_secs: 2.0e-4 },
+            },
+            FaultEvent {
+                t: 8.0e-5,
+                kind: FaultKind::Crash { inst: 0, down_secs: 0.0 },
+            },
+        ]);
+        let stream = StreamConfig {
+            faults: Some(plan),
+            ..Default::default()
+        };
+        let a = ClusterSim::new(&sys, &m, mk()).run_streaming(&stream).unwrap();
+        let b = ClusterSim::new(&sys, &m, mk()).run_streaming(&stream).unwrap();
+        assert_eq!(a.failures, 2, "both crashes must land");
+        assert_eq!(a.stalls, 1);
+        assert!(a.fault_retries >= 1, "evicted in-flight requests must re-dispatch");
+        assert_eq!(
+            a.completed + a.rejected + a.shed + a.fault_dropped,
+            a.requests,
+            "every arrival retires exactly once: none lost, none double-counted"
+        );
+        assert!(a.completed > 0, "survivors keep serving through the faults");
+        // and the whole degraded run is deterministic
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.fault_retries, b.fault_retries);
+        assert_eq!(a.fault_dropped, b.fault_dropped);
+        assert_eq!(a.makespan_secs, b.makespan_secs);
+        assert_eq!(a.ttft_p99_secs, b.ttft_p99_secs);
+    }
+
+    #[test]
+    fn link_failure_reroutes_without_losing_requests() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        // pick a link that actually exists on the instance's NoI
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        let (a, b) = p.design.topo.links[0];
+        let cfg = ClusterConfig {
+            specs: vec![InstanceSpec::of(Arch::Hi25D), InstanceSpec::of(Arch::Hi25D)],
+            policy: DispatchPolicy::Jsq,
+            serving: poisson(1.0e5, 32),
+        };
+        let stream = StreamConfig {
+            faults: Some(FaultPlan::new(vec![FaultEvent {
+                t: 2.0e-5,
+                kind: FaultKind::LinkFail { inst: 0, a, b },
+            }])),
+            ..Default::default()
+        };
+        let r = ClusterSim::new(&sys, &m, cfg).run_streaming(&stream).unwrap();
+        assert_eq!(r.links_failed, 1, "the masked link must reroute");
+        assert_eq!(r.failures, 0, "a reroutable link failure is not a crash");
+        assert_eq!(r.completed, r.requests, "rerouting slows but never loses requests");
+        assert_eq!(r.fault_dropped, 0);
+    }
+
+    #[test]
+    fn aggressive_thermal_model_throttles_and_reports() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let mk = || ClusterConfig {
+            specs: vec![InstanceSpec::of(Arch::Hi25D), InstanceSpec::of(Arch::Hi25D)],
+            policy: DispatchPolicy::Jsq,
+            serving: poisson(1.0e5, 32),
+        };
+        let plain = ClusterSim::new(&sys, &m, mk())
+            .run_streaming(&StreamConfig::default())
+            .unwrap();
+        // throttle threshold a hair above ambient with a fast RC:
+        // any sustained power trips it
+        let hot = ClusterSim::new(&sys, &m, mk())
+            .run_streaming(&StreamConfig {
+                health: Some(HealthConfig {
+                    t_throttle_c: 45.2,
+                    tau_secs: 1.0e-5,
+                    wear: false,
+                    ..Default::default()
+                }),
+                ..Default::default()
+            })
+            .unwrap();
+        assert!(hot.throttle_events >= 1, "near-ambient threshold must trip");
+        assert!(hot.peak_temp_c > 45.0, "dissipated energy must heat the RC state");
+        assert_eq!(hot.completed, hot.requests, "throttling degrades, never drops");
+        assert!(
+            hot.makespan_secs >= plain.makespan_secs,
+            "throttled steps cannot finish sooner than unthrottled ones"
         );
     }
 }

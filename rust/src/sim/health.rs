@@ -1,0 +1,726 @@
+//! Degradation and fault subsystem for the serving fleet: per-instance
+//! RC thermal state fed by engine energy (throttling past a budget),
+//! ReRAM write wear on PIM-style instances (KV-capacity decay via the
+//! endurance model), and a seeded [`FaultPlan`] injecting instance
+//! crashes, NoI link failures (rerouted with the link masked) and
+//! transient stalls.
+//!
+//! The streaming fleet ([`crate::sim::ClusterSim::run_streaming`])
+//! owns a [`FleetHealth`] runtime only when degradation or faults are
+//! requested; with both off, no code in this module runs and the fleet
+//! is bit-identical to a build without it. Everything here is
+//! deterministic: fault times come from the plan, retry times from
+//! exponential backoff off the failure instant, and no path draws from
+//! the router RNG.
+//!
+//! Trace schema additions (PR 8, on top of the PR 7 `obs` layer):
+//! instants `fail`/`recover`/`retry`/`drop` (fleet track 0),
+//! `link_fail`/`stall`/`throttle_on`/`throttle_off` (instance tracks),
+//! and per-instance gauges `temp_c` / `wear_frac`.
+
+use crate::baselines::Arch;
+use crate::config::{HwParams, ModelConfig};
+use crate::endurance::attention_in_reram;
+use crate::noi::routing::RoutingScratch;
+use crate::noi::{RoutingTable, Topology};
+use crate::obs::{Gauge, Tracer};
+use crate::sim::Platform;
+use crate::thermal::evaluate_2_5d;
+use crate::util::error::Result;
+use crate::{anyhow, bail};
+
+/// Degradation knobs. `Default` gives physically-motivated values: the
+/// throttle trips at the DRAM ceiling (95 C), wear follows the device
+/// endurance in [`HwParams`], and retries back off from 1 ms.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthConfig {
+    /// Accumulate engine energy into RC temperature and throttle.
+    pub thermal: bool,
+    /// Accumulate ReRAM write wear on PIM-style instances.
+    pub wear: bool,
+    /// Throttle trip point in °C (hysteresis-free threshold).
+    pub t_throttle_c: f64,
+    /// Step-cost multiplier while over the trip point (> 1 = slower).
+    pub throttle_factor: f64,
+    /// RC time constant of the thermal state, in simulated seconds.
+    pub tau_secs: f64,
+    /// Re-dispatch attempts per failure before a request is dropped.
+    pub retry_limit: u32,
+    /// First retry delay; attempt k waits `base * 2^(k-1)`.
+    pub backoff_base_secs: f64,
+    /// Absolute per-request deadline (from arrival) for re-dispatch.
+    pub deadline_secs: f64,
+    /// Wear never shrinks effective KV capacity below this fraction.
+    pub wear_kv_floor: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> HealthConfig {
+        HealthConfig {
+            thermal: true,
+            wear: true,
+            t_throttle_c: 95.0,
+            throttle_factor: 1.5,
+            tau_secs: 0.05,
+            retry_limit: 3,
+            backoff_base_secs: 1.0e-3,
+            deadline_secs: 1.0e6,
+            wear_kv_floor: 0.25,
+        }
+    }
+}
+
+/// One injected fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Instance goes down, shedding live requests; `down_secs <= 0`
+    /// means it never comes back.
+    Crash { inst: usize, down_secs: f64 },
+    /// NoI link (a, b) of one instance fails and traffic reroutes.
+    LinkFail { inst: usize, a: usize, b: usize },
+    /// Instance freezes for `secs` of simulated time.
+    Stall { inst: usize, secs: f64 },
+}
+
+/// A fault scheduled at simulated time `t`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub t: f64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, time-sorted fault schedule.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultPlan {
+        events.sort_by(|a, b| a.t.total_cmp(&b.t));
+        FaultPlan { events }
+    }
+
+    /// Parse a comma-separated spec, e.g.
+    /// `crash@2.0:1:0.5,link@1.0:0:2-3,stall@0.5:2:0.125`:
+    /// `crash@T:INST[:DOWN_SECS]` (omitted = down forever),
+    /// `link@T:INST:A-B`, `stall@T:INST:SECS`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut events = Vec::new();
+        for entry in spec.split(',').filter(|s| !s.trim().is_empty()) {
+            let entry = entry.trim();
+            let (kind, rest) = entry
+                .split_once('@')
+                .ok_or_else(|| anyhow!("fault entry '{entry}' missing '@'"))?;
+            let mut parts = rest.split(':');
+            let t: f64 = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| anyhow!("fault entry '{entry}': bad time"))?;
+            if t.is_nan() || t < 0.0 {
+                bail!("fault entry '{entry}': time must be >= 0");
+            }
+            let inst: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| anyhow!("fault entry '{entry}': bad instance"))?;
+            let kind = match kind {
+                "crash" => FaultKind::Crash {
+                    inst,
+                    down_secs: match parts.next() {
+                        None => 0.0,
+                        Some(s) => s
+                            .parse()
+                            .map_err(|_| anyhow!("fault entry '{entry}': bad down_secs"))?,
+                    },
+                },
+                "link" => {
+                    let ab = parts
+                        .next()
+                        .ok_or_else(|| anyhow!("fault entry '{entry}': missing A-B link"))?;
+                    let (a, b) = ab
+                        .split_once('-')
+                        .and_then(|(a, b)| Some((a.parse().ok()?, b.parse().ok()?)))
+                        .ok_or_else(|| anyhow!("fault entry '{entry}': bad A-B link"))?;
+                    FaultKind::LinkFail { inst, a, b }
+                }
+                "stall" => FaultKind::Stall {
+                    inst,
+                    secs: parts
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| anyhow!("fault entry '{entry}': bad stall secs"))?,
+                },
+                other => bail!("unknown fault kind '{other}' (have: crash, link, stall)"),
+            };
+            if parts.next().is_some() {
+                bail!("fault entry '{entry}': trailing fields");
+            }
+            events.push(FaultEvent { t, kind });
+        }
+        Ok(FaultPlan::new(events))
+    }
+}
+
+/// A request evicted from a crashed engine, carrying what the router
+/// needs to re-dispatch it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvictedReq {
+    pub arrival: f64,
+    pub prompt: usize,
+    pub gen: usize,
+}
+
+/// Pending re-dispatch of an evicted request. Ordered by (fire time,
+/// sequence) so a `BinaryHeap<Reverse<RetryEntry>>` pops
+/// deterministically; fire times are non-negative, so the raw IEEE bit
+/// pattern is order-preserving and gives a total `Ord` without float
+/// wrappers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct RetryEntry {
+    t_bits: u64,
+    pub seq: u64,
+    pub req: EvictedReqBits,
+    pub attempts: u32,
+}
+
+/// `EvictedReq` with the arrival time carried as bits so the entry can
+/// derive total `Eq`/`Ord` (the payload does not participate in
+/// ordering beyond tie-breaking deterministically).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct EvictedReqBits {
+    pub arrival_bits: u64,
+    pub prompt: usize,
+    pub gen: usize,
+}
+
+impl RetryEntry {
+    pub fn new(fire_t: f64, seq: u64, req: EvictedReq, attempts: u32) -> RetryEntry {
+        debug_assert!(fire_t >= 0.0, "retry fire time must be non-negative");
+        RetryEntry {
+            t_bits: fire_t.to_bits(),
+            seq,
+            req: EvictedReqBits {
+                arrival_bits: req.arrival.to_bits(),
+                prompt: req.prompt,
+                gen: req.gen,
+            },
+            attempts,
+        }
+    }
+
+    pub fn fire_t(&self) -> f64 {
+        f64::from_bits(self.t_bits)
+    }
+
+    pub fn arrival(&self) -> f64 {
+        f64::from_bits(self.req.arrival_bits)
+    }
+}
+
+/// Outcome of masking one NoI link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LinkFailOutcome {
+    /// Routed around: mean path length stretched by this factor (>= 1).
+    Rerouted { stretch: f64 },
+    /// Removing the link would disconnect the NoI — callers escalate
+    /// (the streaming fleet treats it as an instance crash).
+    WouldDisconnect,
+    /// The instance's topology has no such link; the event is a no-op.
+    NoSuchLink,
+}
+
+/// Archs whose attention path writes ReRAM cells per token (the PIM
+/// baselines); the 2.5D/3D-HI mappings keep ReRAM read-only after
+/// programming and never wear.
+pub fn arch_wears_reram(arch: Arch) -> bool {
+    matches!(
+        arch,
+        Arch::HaimaChiplet | Arch::TransPimChiplet | Arch::HaimaOriginal | Arch::TransPimOriginal
+    )
+}
+
+struct InstHealth {
+    alive: bool,
+    down_until: f64,
+    temp_c: f64,
+    last_t: f64,
+    last_energy: f64,
+    throttled: bool,
+    wear_writes: f64,
+    wear_frac: f64,
+    wear_applies: bool,
+    hop_stretch: f64,
+    base_kv_bytes: f64,
+    base_mean_hops: f64,
+    topo: Topology,
+    routes: RoutingTable,
+    scratch: RoutingScratch,
+    hw: HwParams,
+    site_power: Vec<f64>,
+    g_temp: Gauge,
+    g_wear: Gauge,
+}
+
+/// Per-instance degradation state plus fleet-level fault counters; the
+/// streaming fleet's health runtime.
+pub struct FleetHealth {
+    pub cfg: HealthConfig,
+    insts: Vec<InstHealth>,
+    /// Instance crashes applied.
+    pub failures: usize,
+    /// Re-dispatch attempts of evicted requests.
+    pub retries: usize,
+    /// Requests lost to the retry budget, deadline, or a dead fleet.
+    pub dropped: usize,
+    /// Link failures successfully rerouted.
+    pub links_failed: usize,
+    /// Transient stalls applied.
+    pub stalls: usize,
+    /// Throttle state flips (on or off).
+    pub throttle_events: usize,
+}
+
+impl FleetHealth {
+    /// Build health state mirroring the fleet's platforms;
+    /// `base_kv_bytes[i]` is instance i's undegraded KV capacity.
+    pub fn new(cfg: HealthConfig, platforms: &[Platform], base_kv_bytes: &[f64]) -> FleetHealth {
+        let insts = platforms
+            .iter()
+            .zip(base_kv_bytes)
+            .map(|(p, &kv)| InstHealth {
+                alive: true,
+                down_until: f64::NEG_INFINITY,
+                temp_c: p.sys.hw.t_ambient_c,
+                last_t: f64::NAN,
+                last_energy: 0.0,
+                throttled: false,
+                wear_writes: 0.0,
+                wear_frac: 0.0,
+                wear_applies: arch_wears_reram(p.arch),
+                hop_stretch: 1.0,
+                base_kv_bytes: kv,
+                base_mean_hops: p.routes.mean_hops().max(1e-9),
+                topo: p.design.topo.clone(),
+                routes: p.routes.clone(),
+                scratch: RoutingScratch::default(),
+                hw: p.sys.hw.clone(),
+                site_power: vec![0.0; p.chiplets.len().max(1)],
+                g_temp: Gauge::new("temp_c"),
+                g_wear: Gauge::new("wear_frac"),
+            })
+            .collect();
+        FleetHealth {
+            cfg,
+            insts,
+            failures: 0,
+            retries: 0,
+            dropped: 0,
+            links_failed: 0,
+            stalls: 0,
+            throttle_events: 0,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn alive(&self, i: usize) -> bool {
+        self.insts[i].alive
+    }
+
+    pub fn temp_c(&self, i: usize) -> f64 {
+        self.insts[i].temp_c
+    }
+
+    pub fn wear_frac(&self, i: usize) -> f64 {
+        self.insts[i].wear_frac
+    }
+
+    /// Combined step-cost multiplier: thermal throttle × NoI hop
+    /// stretch. 1.0 for a healthy instance.
+    pub fn slowdown(&self, i: usize) -> f64 {
+        let inst = &self.insts[i];
+        let thermal = if inst.throttled {
+            self.cfg.throttle_factor
+        } else {
+            1.0
+        };
+        thermal * inst.hop_stretch
+    }
+
+    pub fn peak_temp_c(&self) -> f64 {
+        self.insts
+            .iter()
+            .map(|h| h.temp_c)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn peak_wear_frac(&self) -> f64 {
+        self.insts.iter().map(|h| h.wear_frac).fold(0.0, f64::max)
+    }
+
+    /// Fold the instance's cumulative dissipated energy (joules, as
+    /// reported by its engine) into the RC thermal state at time `t`.
+    /// Returns true when the throttle state flipped.
+    pub fn update_thermal(&mut self, i: usize, t: f64, energy_j: f64, tracer: &Tracer) -> bool {
+        if !self.cfg.thermal {
+            return false;
+        }
+        let inst = &mut self.insts[i];
+        if inst.last_t.is_nan() {
+            inst.last_t = t;
+            inst.last_energy = energy_j;
+            return false;
+        }
+        let dt = t - inst.last_t;
+        if dt <= 0.0 {
+            return false;
+        }
+        let de = (energy_j - inst.last_energy).max(0.0);
+        inst.last_t = t;
+        inst.last_energy = energy_j;
+        // steady state for the current power draw, spread over the
+        // interposer sites, relaxed toward with the RC constant
+        let per_site = de / dt / inst.site_power.len() as f64;
+        for s in inst.site_power.iter_mut() {
+            *s = per_site;
+        }
+        let t_ss = evaluate_2_5d(&inst.hw, &inst.site_power);
+        let alpha = 1.0 - (-dt / self.cfg.tau_secs.max(1e-12)).exp();
+        inst.temp_c += (t_ss - inst.temp_c) * alpha;
+        let track = (i + 1) as u32;
+        inst.g_temp.sample(tracer, track, t, inst.temp_c);
+        let hot = inst.temp_c > self.cfg.t_throttle_c;
+        if hot == inst.throttled {
+            return false;
+        }
+        inst.throttled = hot;
+        self.throttle_events += 1;
+        tracer.instant(
+            track,
+            if hot { "throttle_on" } else { "throttle_off" },
+            t,
+            &[("temp_c", inst.temp_c)],
+        );
+        true
+    }
+
+    /// Account one dispatched request's ReRAM write wear on instance
+    /// `i`; returns the new effective KV capacity when it decayed.
+    pub fn note_dispatch(
+        &mut self,
+        i: usize,
+        model: &ModelConfig,
+        seq_len: usize,
+        t: f64,
+        tracer: &Tracer,
+    ) -> Option<f64> {
+        if !self.cfg.wear {
+            return None;
+        }
+        let inst = &mut self.insts[i];
+        if !inst.wear_applies {
+            return None;
+        }
+        let rep = attention_in_reram(&inst.hw, model, seq_len.max(1));
+        inst.wear_writes += rep.writes_per_cell_per_seq;
+        inst.wear_frac = (inst.wear_writes / inst.hw.reram_endurance.max(1.0)).min(1.0);
+        inst.g_wear
+            .sample(tracer, (i + 1) as u32, t, inst.wear_frac);
+        Some(inst.base_kv_bytes * (1.0 - inst.wear_frac).max(self.cfg.wear_kv_floor))
+    }
+
+    /// Mark instance `i` down at time `t`. Returns false when it was
+    /// already down (the event is a no-op).
+    pub fn crash(&mut self, i: usize, t: f64, down_secs: f64) -> bool {
+        let inst = &mut self.insts[i];
+        if !inst.alive {
+            return false;
+        }
+        inst.alive = false;
+        inst.down_until = if down_secs > 0.0 {
+            t + down_secs
+        } else {
+            f64::INFINITY
+        };
+        self.failures += 1;
+        true
+    }
+
+    /// Earliest pending recovery time, or +inf when nothing is down.
+    pub fn next_recovery(&self) -> f64 {
+        self.insts
+            .iter()
+            .filter(|h| !h.alive)
+            .map(|h| h.down_until)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Revive the lowest-index instance whose downtime elapsed by `t`.
+    /// A revived instance reboots cold (ambient temperature, throttle
+    /// off, RC state reset) but keeps its permanent wear.
+    pub fn recover_due(&mut self, t: f64) -> Option<usize> {
+        let i = self
+            .insts
+            .iter()
+            .position(|h| !h.alive && h.down_until <= t)?;
+        let inst = &mut self.insts[i];
+        inst.alive = true;
+        inst.down_until = f64::NEG_INFINITY;
+        inst.temp_c = inst.hw.t_ambient_c;
+        inst.last_t = f64::NAN;
+        inst.last_energy = 0.0;
+        if inst.throttled {
+            inst.throttled = false;
+            self.throttle_events += 1;
+        }
+        Some(i)
+    }
+
+    /// Mask NoI link (a, b) on instance `i` and reroute its traffic.
+    /// The rebuilt table is bit-identical to a fresh build on the
+    /// masked topology (pinned by the oracle test below); the mean-hop
+    /// stretch feeds the instance slowdown.
+    pub fn fail_link(&mut self, i: usize, a: usize, b: usize) -> LinkFailOutcome {
+        let inst = &mut self.insts[i];
+        if !inst.topo.has_link(a, b) {
+            return LinkFailOutcome::NoSuchLink;
+        }
+        if !inst.topo.remove_link_checked(a, b) {
+            return LinkFailOutcome::WouldDisconnect;
+        }
+        inst.routes.rebuild_into(&inst.topo, &mut inst.scratch);
+        let stretch = (inst.routes.mean_hops() / inst.base_mean_hops).max(1.0);
+        inst.hop_stretch *= stretch;
+        self.links_failed += 1;
+        LinkFailOutcome::Rerouted { stretch }
+    }
+
+    /// Flush the per-instance gauges into the trace (end of run).
+    pub fn flush_gauges(&mut self, tracer: &Tracer) {
+        for (i, inst) in self.insts.iter_mut().enumerate() {
+            inst.g_temp.flush(tracer, (i + 1) as u32);
+            inst.g_wear.flush(tracer, (i + 1) as u32);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelZoo, SystemConfig};
+    use crate::sim::SimOptions;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    fn one_platform(arch: Arch) -> Vec<Platform> {
+        let sys = SystemConfig::s36();
+        vec![Platform::new(arch, &sys, &SimOptions::default())]
+    }
+
+    #[test]
+    fn fault_plan_parses_and_sorts_by_time() {
+        let p = FaultPlan::parse("crash@2.0:1:0.5,link@1.0:0:2-3,stall@0.5:2:0.125").unwrap();
+        assert_eq!(p.events.len(), 3);
+        assert_eq!(
+            p.events[0].kind,
+            FaultKind::Stall {
+                inst: 2,
+                secs: 0.125
+            }
+        );
+        assert_eq!(p.events[1].kind, FaultKind::LinkFail { inst: 0, a: 2, b: 3 });
+        assert_eq!(
+            p.events[2].kind,
+            FaultKind::Crash {
+                inst: 1,
+                down_secs: 0.5
+            }
+        );
+        assert!(p.events.windows(2).all(|w| w[0].t <= w[1].t));
+        // crash without down_secs = down forever
+        let q = FaultPlan::parse("crash@0.25:0").unwrap();
+        assert_eq!(
+            q.events[0].kind,
+            FaultKind::Crash {
+                inst: 0,
+                down_secs: 0.0
+            }
+        );
+    }
+
+    #[test]
+    fn fault_plan_rejects_malformed_specs() {
+        for bad in [
+            "crash",
+            "crash@x:0",
+            "crash@-1.0:0",
+            "link@1:0:2",
+            "link@1:0",
+            "stall@1:0",
+            "wat@1:0",
+            "crash@1:0:0.5:9",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted '{bad}'");
+        }
+        assert!(FaultPlan::parse("").unwrap().events.is_empty());
+    }
+
+    #[test]
+    fn retry_heap_pops_in_time_then_seq_order() {
+        let req = EvictedReq {
+            arrival: 0.5,
+            prompt: 8,
+            gen: 2,
+        };
+        let mut heap = BinaryHeap::new();
+        heap.push(Reverse(RetryEntry::new(2.0, 0, req, 1)));
+        heap.push(Reverse(RetryEntry::new(1.0, 5, req, 1)));
+        heap.push(Reverse(RetryEntry::new(1.0, 2, req, 2)));
+        let order: Vec<(f64, u64)> = std::iter::from_fn(|| heap.pop())
+            .map(|Reverse(e)| (e.fire_t(), e.seq))
+            .collect();
+        assert_eq!(order, vec![(1.0, 2), (1.0, 5), (2.0, 0)]);
+        let e = RetryEntry::new(1.0, 2, req, 2);
+        assert_eq!(e.arrival(), 0.5);
+        assert_eq!(e.req.prompt, 8);
+    }
+
+    #[test]
+    fn link_mask_reroute_matches_fresh_build_oracle() {
+        let platforms = one_platform(Arch::Hi25D);
+        let (a, b) = platforms[0].design.topo.links[0];
+        let n = platforms[0].design.topo.n;
+        let kv = [1.0e9];
+        let mut h = FleetHealth::new(HealthConfig::default(), &platforms, &kv);
+        match h.fail_link(0, a, b) {
+            LinkFailOutcome::Rerouted { stretch } => assert!(stretch >= 1.0),
+            // seed designs are link-sparse; a bridge link must refuse
+            LinkFailOutcome::WouldDisconnect => {
+                assert!(h.insts[0].topo.has_link(a, b), "refused mask must restore");
+                return;
+            }
+            LinkFailOutcome::NoSuchLink => panic!("link listed in topo not found"),
+        }
+        let mut masked = platforms[0].design.topo.clone();
+        assert!(masked.remove_link_checked(a, b));
+        let oracle = RoutingTable::build(&masked);
+        for s in 0..n {
+            for d in 0..n {
+                assert_eq!(
+                    h.insts[0].routes.hops(s, d),
+                    oracle.hops(s, d),
+                    "hops {s}->{d}"
+                );
+                assert_eq!(
+                    h.insts[0].routes.next_hop(s, d),
+                    oracle.next_hop(s, d),
+                    "next {s}->{d}"
+                );
+            }
+        }
+        assert_eq!(h.links_failed, 1);
+        assert!(h.slowdown(0) >= 1.0);
+        assert_eq!(
+            h.fail_link(0, a, b),
+            LinkFailOutcome::NoSuchLink,
+            "masked link is gone"
+        );
+    }
+
+    #[test]
+    fn thermal_rc_rises_under_power_and_throttles() {
+        let platforms = one_platform(Arch::Hi25D);
+        let ambient = platforms[0].sys.hw.t_ambient_c;
+        let cfg = HealthConfig {
+            t_throttle_c: ambient + 1.0,
+            tau_secs: 0.01,
+            ..Default::default()
+        };
+        let kv = [1.0e9];
+        let mut h = FleetHealth::new(cfg.clone(), &platforms, &kv);
+        let tracer = Tracer::off();
+        // 100 W sustained: steady state is far above ambient + 1
+        let mut flipped = false;
+        for k in 0..200 {
+            let t = k as f64 * 1.0e-3;
+            flipped |= h.update_thermal(0, t, 100.0 * t, &tracer);
+        }
+        assert!(h.temp_c(0) > ambient + 1.0, "temp {}", h.temp_c(0));
+        assert!(flipped, "throttle never tripped");
+        assert_eq!(h.slowdown(0), cfg.throttle_factor);
+        assert!(h.throttle_events >= 1);
+        assert!(h.peak_temp_c() >= h.temp_c(0));
+        // zero power relaxes back toward ambient and un-throttles
+        let e_final = 100.0 * 199.0e-3;
+        for k in 200..600 {
+            h.update_thermal(0, k as f64 * 1.0e-3, e_final, &tracer);
+        }
+        assert!(h.temp_c(0) < ambient + 1.0, "temp {}", h.temp_c(0));
+        assert_eq!(h.slowdown(0), 1.0);
+    }
+
+    #[test]
+    fn wear_accumulates_on_pim_archs_only_and_decays_kv() {
+        let mut sys = SystemConfig::s36();
+        sys.hw.reram_endurance = 1.0e7; // make wear visible quickly
+        let opts = SimOptions::default();
+        let platforms = vec![
+            Platform::new(Arch::TransPimChiplet, &sys, &opts),
+            Platform::new(Arch::Hi25D, &sys, &opts),
+        ];
+        let kv = [1.0e9, 1.0e9];
+        let mut h = FleetHealth::new(HealthConfig::default(), &platforms, &kv);
+        let tracer = Tracer::off();
+        let model = ModelZoo::bert_base();
+        let first = h.note_dispatch(0, &model, 64, 0.0, &tracer);
+        let cap1 = first.expect("PIM arch must wear");
+        assert!(cap1 < 1.0e9, "capacity must decay, got {cap1}");
+        let cap2 = h.note_dispatch(0, &model, 64, 1.0e-3, &tracer).unwrap();
+        assert!(cap2 < cap1, "wear is monotone");
+        assert!(h.wear_frac(0) > 0.0 && h.wear_frac(0) <= 1.0);
+        // the floor holds no matter how many writes land
+        for k in 0..200 {
+            h.note_dispatch(0, &model, 512, k as f64, &tracer);
+        }
+        let floor = 1.0e9 * HealthConfig::default().wear_kv_floor;
+        let cap = h.note_dispatch(0, &model, 512, 300.0, &tracer).unwrap();
+        assert!((cap - floor).abs() < 1e-3, "cap {cap} vs floor {floor}");
+        // non-PIM instance never wears
+        assert_eq!(h.note_dispatch(1, &model, 64, 0.0, &tracer), None);
+        assert_eq!(h.wear_frac(1), 0.0);
+        assert!(h.peak_wear_frac() > 0.0);
+    }
+
+    #[test]
+    fn crash_and_recover_cycle() {
+        let platforms = one_platform(Arch::Hi25D);
+        let kv = [1.0e9];
+        let mut h = FleetHealth::new(HealthConfig::default(), &platforms, &kv);
+        assert!(h.crash(0, 1.0, 0.5));
+        assert!(!h.alive(0));
+        assert!(!h.crash(0, 1.1, 0.5), "double crash is a no-op");
+        assert_eq!(h.failures, 1);
+        assert_eq!(h.next_recovery(), 1.5);
+        assert_eq!(h.recover_due(1.2), None, "not due yet");
+        assert_eq!(h.recover_due(1.5), Some(0));
+        assert!(h.alive(0));
+        assert_eq!(h.next_recovery(), f64::INFINITY);
+        // a crash with down_secs <= 0 never recovers
+        assert!(h.crash(0, 2.0, 0.0));
+        assert_eq!(h.next_recovery(), f64::INFINITY);
+        assert_eq!(h.recover_due(1.0e12), None);
+    }
+
+    #[test]
+    fn wear_arch_predicate_matches_pim_baselines() {
+        assert!(!arch_wears_reram(Arch::Hi25D));
+        assert!(!arch_wears_reram(Arch::Hi3D));
+        assert!(arch_wears_reram(Arch::HaimaChiplet));
+        assert!(arch_wears_reram(Arch::TransPimChiplet));
+        assert!(arch_wears_reram(Arch::HaimaOriginal));
+        assert!(arch_wears_reram(Arch::TransPimOriginal));
+    }
+}

@@ -26,16 +26,23 @@
 //!   [`crate::util::sketch::SampleSink`]s (exact buffers or P² sketches)
 //!   and recycle their slab slots, so memory is O(live requests).
 //! - [`cluster`]: N platforms (optionally heterogeneous) behind a
-//!   front-end router (round-robin / JSQ / least-KV / power-of-two)
-//!   sharing one arrival stream — fleet goodput and aggregate tails.
+//!   front-end router (round-robin / JSQ / least-KV / power-of-two,
+//!   plus the health-aware least-hot / wear-level policies) sharing
+//!   one arrival stream — fleet goodput and aggregate tails.
 //!   Two modes: the buffered exact-quantile oracle (`run_with_jobs`)
 //!   and the single-pass streaming fleet (`run_streaming`) with
 //!   optional load-watermark autoscaling and SLO-aware shedding.
+//! - [`health`]: degradation + faults for the streaming fleet — RC
+//!   thermal state with throttling, ReRAM write wear decaying KV
+//!   capacity, and a seeded [`FaultPlan`] of instance crashes,
+//!   rerouted NoI link failures and transient stalls, with bounded
+//!   retry/backoff re-dispatch of evicted requests.
 
 pub mod arrivals;
 pub mod cluster;
 pub mod decode;
 pub mod engine;
+pub mod health;
 pub mod platform;
 pub mod scheduler;
 pub mod serving;
@@ -48,6 +55,10 @@ pub use cluster::{
 };
 pub use decode::{decode_step, decode_step_on, generate, generate_on, DecodeReport};
 pub use engine::{simulate, SimOptions};
+pub use health::{
+    arch_wears_reram, EvictedReq, FaultEvent, FaultKind, FaultPlan, FleetHealth, HealthConfig,
+    LinkFailOutcome, RetryEntry,
+};
 pub use platform::{platform_build_count, Platform};
 pub use scheduler::{ChunkedPrefill, ContinuousBatching, Scheduler, StepPlan};
 pub use serving::{ArrivalProcess, ServingConfig, ServingReport, ServingSamples, ServingSim};

@@ -194,6 +194,25 @@ impl ServingState {
         self.reqs.len() - self.free.len()
     }
 
+    /// Crash eviction: drain every live request (active first, then
+    /// waiting, both in queue order), release their KV reservations and
+    /// recycle their slots. Returns the evicted slot indices in the
+    /// drained order with a *snapshot* of each request (slots are
+    /// already recycled when this returns — callers must not index
+    /// `reqs` with them).
+    pub fn evict_live(&mut self) -> Vec<(usize, ReqState)> {
+        let mut out = Vec::with_capacity(self.active.len() + self.waiting.len());
+        let drained: Vec<usize> = self.active.drain(..).chain(self.waiting.drain(..)).collect();
+        for i in drained {
+            let snap = self.reqs[i].clone();
+            self.kv_reserved -= snap.kv_held;
+            self.reqs[i].kv_held = 0.0;
+            self.release(i);
+            out.push((i, snap));
+        }
+        out
+    }
+
     /// Bytes admission must reserve for request `i`. Without preemption
     /// the full prompt+gen footprint is reserved up front (no swap-out
     /// ever needed). With preemption, first admission is optimistic

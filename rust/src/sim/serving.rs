@@ -57,6 +57,7 @@ use crate::config::ModelConfig;
 use crate::obs::{Gauge, Tracer};
 use crate::sim::decode::{decode_step_on, kv_cache_bytes};
 use crate::sim::engine::SimOptions;
+use crate::sim::health::EvictedReq;
 use crate::sim::platform::Platform;
 use crate::sim::scheduler::{scheduler_for, Scheduler, ServingState, StepPlan};
 use crate::util::json::JsonWriter;
@@ -262,6 +263,9 @@ struct EngineRun {
     decoded_tokens: u64,
     busy_secs: f64,
     total_energy: f64,
+    /// Running joules dissipated by all work (including requests still
+    /// in flight) — the fleet health layer's thermal input.
+    energy_dissipated: f64,
     ttft: SampleSink,
     tpot: SampleSink,
     /// Also buffer (ttft, tpot) pairs for the caller to drain — the
@@ -293,6 +297,10 @@ pub struct ServingSim<'a> {
     /// Trace track (Chrome tid) this engine's events land on. The fleet
     /// convention is 0 = router, i+1 = instance i.
     track: u32,
+    /// Degradation multiplier on step durations (thermal throttle × NoI
+    /// reroute stretch); exactly 1.0 = healthy, and the hot loop skips
+    /// the multiply so healthy runs stay bit-identical.
+    throttle: f64,
 }
 
 impl<'a> ServingSim<'a> {
@@ -310,6 +318,7 @@ impl<'a> ServingSim<'a> {
             run: None,
             tracer: Tracer::off(),
             track: 1,
+            throttle: 1.0,
         }
     }
 
@@ -389,6 +398,7 @@ impl<'a> ServingSim<'a> {
             decoded_tokens: 0,
             busy_secs: 0.0,
             total_energy: 0.0,
+            energy_dissipated: 0.0,
             ttft: self.cfg.sink.make(),
             tpot: self.cfg.sink.make(),
             emit_completions: self.emit_completions,
@@ -459,6 +469,7 @@ impl<'a> ServingSim<'a> {
         if let Some((p_secs, p_energy)) = chain {
             let start = run.prefill_free_at.max(t);
             run.prefill_free_at = start + p_secs;
+            run.energy_dissipated += p_energy;
             let r = &mut run.st.reqs[i];
             r.ready = run.prefill_free_at;
             r.energy_j += p_energy;
@@ -530,9 +541,15 @@ impl<'a> ServingSim<'a> {
                                 &[("req", r.trace_id as f64), ("tokens", remaining as f64)],
                             );
                         }
-                        run.st.clock += p_secs * frac;
-                        run.busy_secs += p_secs * frac;
+                        let p_dt = if self.throttle != 1.0 {
+                            p_secs * frac * self.throttle
+                        } else {
+                            p_secs * frac
+                        };
+                        run.st.clock += p_dt;
+                        run.busy_secs += p_dt;
                         r.energy_j += p_energy * frac;
+                        run.energy_dissipated += p_energy * frac;
                         if tracer.on() {
                             tracer.span_end(track, "prefill", run.st.clock);
                         }
@@ -656,6 +673,11 @@ impl<'a> ServingSim<'a> {
                     ],
                 );
             }
+            // degradation hook: a throttled instance's step dilates in
+            // time only (the work, and so the energy, is unchanged)
+            if self.throttle != 1.0 {
+                t_step *= self.throttle;
+            }
             run.st.clock += t_step;
             run.busy_secs += t_step;
             run.batch_sum += run.st.active.len() as f64;
@@ -675,6 +697,7 @@ impl<'a> ServingSim<'a> {
                 let kv_token = run.st.kv_token;
                 let r = &mut run.st.reqs[i];
                 r.energy_j += p_energy * frac * chunk_disc;
+                run.energy_dissipated += p_energy * frac * chunk_disc;
                 r.kv_tokens += c;
                 let need = r.kv_tokens as f64 * kv_token;
                 if need > r.kv_held {
@@ -708,6 +731,7 @@ impl<'a> ServingSim<'a> {
                     r.first_token = clock; // first decoded token lands now
                 }
                 r.energy_j += (e_i - run.omega * run.a_joules).max(0.0) + shared_energy;
+                run.energy_dissipated += (e_i - run.omega * run.a_joules).max(0.0) + shared_energy;
                 r.decoded += 1;
                 r.kv_tokens += 1;
                 run.decoded_tokens += 1;
@@ -743,6 +767,77 @@ impl<'a> ServingSim<'a> {
         match self.run.as_mut() {
             Some(run) => std::mem::take(&mut run.completions),
             None => Vec::new(),
+        }
+    }
+
+    /// Cumulative joules dissipated so far (prefill + decode work,
+    /// including requests still in flight) — the fleet health layer's
+    /// thermal input. 0 before `begin()`.
+    pub fn energy_dissipated(&self) -> f64 {
+        self.run.as_ref().map_or(0.0, |r| r.energy_dissipated)
+    }
+
+    /// Engine clock in simulated seconds; 0 before `begin()`.
+    pub fn clock(&self) -> f64 {
+        self.run.as_ref().map_or(0.0, |r| r.st.clock)
+    }
+
+    /// Degradation hook: multiply subsequent step durations by
+    /// `factor` (thermal throttle × NoI reroute stretch). Exactly 1.0
+    /// restores the healthy path, which skips the multiply entirely —
+    /// healthy runs stay bit-identical to a build without the hook.
+    pub fn set_throttle(&mut self, factor: f64) {
+        self.throttle = if factor.is_finite() && factor > 0.0 {
+            factor
+        } else {
+            1.0
+        };
+    }
+
+    /// Degradation hook: shrink (or restore) the effective KV capacity
+    /// — ReRAM write wear decays it on PIM-style instances. Affects
+    /// future admission/rejection decisions only; held reservations
+    /// are untouched.
+    pub fn set_kv_capacity(&mut self, bytes: f64) {
+        self.cfg.kv_capacity_bytes = bytes.max(0.0);
+    }
+
+    /// Instance crash: evict every live request (active first, then
+    /// waiting, in queue order), releasing KV reservations and slab
+    /// slots. Evicted lifecycles close their trace spans at the
+    /// current clock and count neither completed nor rejected here —
+    /// the returned snapshots are the fleet's to re-dispatch or drop.
+    pub fn fail_crash(&mut self) -> Vec<EvictedReq> {
+        let tracer = self.tracer.clone();
+        let track = self.track;
+        let Some(run) = self.run.as_mut() else {
+            return Vec::new();
+        };
+        let clock = run.st.clock;
+        let evicted = run.st.evict_live();
+        let mut out = Vec::with_capacity(evicted.len());
+        for (_, r) in evicted {
+            if tracer.on() {
+                tracer.instant(track, "evict", clock, &[("req", r.trace_id as f64)]);
+                tracer.async_end(track, "req", (u64::from(track) << 40) | r.trace_id, clock);
+            }
+            out.push(EvictedReq {
+                arrival: r.arrival,
+                prompt: r.prompt_len,
+                gen: r.gen_tokens,
+            });
+        }
+        out
+    }
+
+    /// Transient stall: freeze the whole instance for `secs` of
+    /// simulated time. In-flight work resumes where it left off and the
+    /// disaggregated prefill unit is pushed out with the engine.
+    pub fn inject_stall(&mut self, secs: f64) {
+        let Some(run) = self.run.as_mut() else { return };
+        if secs > 0.0 {
+            run.st.clock += secs;
+            run.prefill_free_at += secs;
         }
     }
 

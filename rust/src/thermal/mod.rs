@@ -48,7 +48,24 @@ pub struct ThermalReport {
 }
 
 /// Evaluate Eq 16-18 for a stack power map.
+///
+/// Degenerate maps are handled explicitly: a zero-tier or zero-column
+/// stack has nothing to heat and reports ambient with a zero objective
+/// (instead of folding over empty rows into `f64::MIN` garbage), and
+/// negative or NaN wattages clamp to zero heat so no sign error can
+/// poison the MOO objectives downstream.
 pub fn evaluate_stack(hw: &HwParams, p: &StackPower) -> ThermalReport {
+    if p.tiers == 0 || p.columns == 0 {
+        return ThermalReport {
+            t: vec![vec![0.0; p.columns]; p.tiers],
+            delta_t: vec![0.0; p.tiers],
+            t_peak: hw.t_ambient_c,
+            objective: 0.0,
+        };
+    }
+    // negative wattage is nonphysical (and NaN compares false with
+    // everything): clamp to zero heat at the source
+    let pw = |i: usize, n: usize| p.power[i][n].max(0.0);
     let mut t = vec![vec![0.0; p.columns]; p.tiers];
     for n in 0..p.columns {
         // Eq 16: resistive ladder from the sink upward
@@ -58,9 +75,9 @@ pub fn evaluate_stack(hw: &HwParams, p: &StackPower) -> ThermalReport {
             for i in 0..=k {
                 // Σ_{j=1..i} R_j — uniform per-tier resistance
                 let r_below = hw.theta_tier_k_per_w * (i + 1) as f64;
-                rise += p.power[i][n] * r_below;
+                rise += pw(i, n) * r_below;
             }
-            let total_power: f64 = (0..=k).map(|i| p.power[i][n]).sum();
+            let total_power: f64 = (0..=k).map(|i| pw(i, n)).sum();
             rise += hw.theta_base_k_per_w * total_power;
             t[k][n] = hw.t_ambient_c + rise;
         }
@@ -97,8 +114,9 @@ pub fn evaluate_stack(hw: &HwParams, p: &StackPower) -> ThermalReport {
 /// lateral+base resistance (the interposer spreads heat well; hotspots
 /// come from power density).
 pub fn evaluate_2_5d(hw: &HwParams, site_power_w: &[f64]) -> f64 {
-    let peak = site_power_w.iter().cloned().fold(0.0, f64::max);
-    let total: f64 = site_power_w.iter().sum();
+    // same clamp as `evaluate_stack`: negative/NaN wattage is zero heat
+    let peak = site_power_w.iter().map(|w| w.max(0.0)).fold(0.0, f64::max);
+    let total: f64 = site_power_w.iter().map(|w| w.max(0.0)).sum();
     hw.t_ambient_c
         + peak * hw.theta_lateral_k_per_w
         + total * hw.theta_base_k_per_w / (site_power_w.len().max(1) as f64).sqrt()
@@ -107,10 +125,18 @@ pub fn evaluate_2_5d(hw: &HwParams, site_power_w: &[f64]) -> f64 {
 /// Eq 19: thermal-noise σ of a ReRAM cell conductance read.
 /// G: cell conductance (S), t_celsius: cell temperature, f: operating
 /// frequency (Hz), v: read voltage (V).
+/// Nonphysical inputs clamp instead of going NaN: negative conductance
+/// or frequency and temperatures below absolute zero floor at 0 (σ = 0),
+/// a zero/NaN read voltage reports +inf, and a negative voltage reads as
+/// its magnitude — the MOO objectives never see NaN.
 pub fn reram_noise_sigma(g: f64, t_celsius: f64, f: f64, v: f64) -> f64 {
     const K_B: f64 = 1.380_649e-23;
-    let t_kelvin = t_celsius + 273.15;
-    (4.0 * g * K_B * t_kelvin * f).sqrt() / v
+    let t_kelvin = (t_celsius + 273.15).max(0.0);
+    let num = (4.0 * g.max(0.0) * K_B * t_kelvin * f.max(0.0)).sqrt();
+    if v.is_nan() || v == 0.0 {
+        return f64::INFINITY;
+    }
+    num / v.abs()
 }
 
 /// MOO noise objective: noise σ of the hottest ReRAM chiplet, normalized
@@ -208,6 +234,49 @@ mod tests {
         }
         let r = evaluate_stack(&h, &p);
         assert!(r.t_peak > h.dram_t_max_c, "peak {}", r.t_peak);
+    }
+
+    #[test]
+    fn degenerate_stacks_report_ambient_not_garbage() {
+        let h = hw();
+        for p in [
+            StackPower::new(0, 4),
+            StackPower::new(3, 0),
+            StackPower::new(0, 0),
+        ] {
+            let r = evaluate_stack(&h, &p);
+            assert_eq!(r.t_peak, h.t_ambient_c, "{}x{}", p.tiers, p.columns);
+            assert_eq!(r.objective, 0.0, "{}x{}", p.tiers, p.columns);
+        }
+    }
+
+    #[test]
+    fn negative_and_nan_wattage_clamp_to_zero_heat() {
+        let h = hw();
+        let mut p = StackPower::new(2, 2);
+        p.set(0, 0, -5.0);
+        p.set(1, 1, f64::NAN);
+        let r = evaluate_stack(&h, &p);
+        assert!((r.t_peak - h.t_ambient_c).abs() < 1e-9, "peak {}", r.t_peak);
+        assert!(r.objective.is_finite() && r.objective >= 0.0);
+        for row in &r.t {
+            for &v in row {
+                assert!(v.is_finite());
+            }
+        }
+        assert_eq!(evaluate_2_5d(&h, &[-3.0, -1.0]), h.t_ambient_c);
+        assert!(evaluate_2_5d(&h, &[f64::NAN, 2.0]).is_finite());
+    }
+
+    #[test]
+    fn noise_sigma_never_goes_nan() {
+        assert_eq!(reram_noise_sigma(-4e-5, 45.0, 1.2e9, 0.2), 0.0);
+        assert_eq!(reram_noise_sigma(4e-5, -400.0, 1.2e9, 0.2), 0.0);
+        assert_eq!(reram_noise_sigma(4e-5, 45.0, -1.2e9, 0.2), 0.0);
+        assert!(reram_noise_sigma(4e-5, 45.0, 1.2e9, 0.0).is_infinite());
+        let neg_v = reram_noise_sigma(4e-5, 45.0, 1.2e9, -0.2);
+        assert!(neg_v > 0.0 && neg_v.is_finite());
+        assert!(reram_noise_sigma(4e-5, 45.0, 1.2e9, f64::NAN).is_infinite());
     }
 
     #[test]

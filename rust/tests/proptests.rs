@@ -282,3 +282,122 @@ fn prop_custom_allocation_invariants() {
         assert!(sys.grid.0 * sys.grid.1 >= n);
     }
 }
+
+/// PROPERTY: a P2 quantile estimate is always bracketed by the sample
+/// min/max it has seen — a hard invariant of the marker construction
+/// (interior heights are constrained between their neighbors) — under
+/// adversarial streams: sorted ascending/descending, constant, and
+/// two-point.
+#[test]
+fn prop_p2_estimate_bracketed_by_sample_extremes() {
+    use chiplet_hi::util::P2Quantile;
+    let mut rng = Rng::new(0xB0B5);
+    for case in 0..CASES {
+        let n = rng.range(1, 400);
+        let lo = rng.f64() * 10.0;
+        let span = rng.f64() * 100.0 + 1e-6;
+        let stream: Vec<f64> = match case % 4 {
+            0 => (0..n).map(|i| lo + span * i as f64 / n as f64).collect(),
+            1 => (0..n).map(|i| lo + span * (n - i) as f64 / n as f64).collect(),
+            2 => vec![lo; n],
+            _ => (0..n)
+                .map(|_| if rng.f64() < 0.5 { lo } else { lo + span })
+                .collect(),
+        };
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let mut sk = P2Quantile::new(q);
+            let (mut mn, mut mx) = (f64::INFINITY, f64::NEG_INFINITY);
+            for &x in &stream {
+                sk.push(x);
+                mn = mn.min(x);
+                mx = mx.max(x);
+                let v = sk.value();
+                assert!(
+                    v >= mn - 1e-9 && v <= mx + 1e-9,
+                    "case {case} q={q}: estimate {v} outside [{mn}, {mx}]"
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY: P2 estimates are monotone in rank — on the same stream a
+/// higher quantile never estimates below a lower one (within a small
+/// interpolation tolerance scaled to the stream's spread). Checked on
+/// sorted and constant streams, where quantiles are well separated;
+/// discrete two-point streams sit on mass discontinuities where P2's
+/// parabolic interpolation is unspecified — those are covered by the
+/// bracketing property above.
+#[test]
+fn prop_p2_monotone_in_rank() {
+    use chiplet_hi::util::P2Quantile;
+    const LADDER: [f64; 5] = [0.1, 0.25, 0.5, 0.75, 0.9];
+    let mut rng = Rng::new(0xCAFE);
+    for case in 0..CASES {
+        let n = rng.range(6, 500);
+        let lo = rng.f64() * 5.0;
+        let span = rng.f64() * 50.0 + 1e-6;
+        let stream: Vec<f64> = match case % 3 {
+            0 => (0..n).map(|i| lo + span * i as f64 / n as f64).collect(),
+            1 => (0..n).map(|i| lo + span * (n - i) as f64 / n as f64).collect(),
+            _ => vec![lo; n],
+        };
+        let mut sketches: Vec<P2Quantile> = LADDER.iter().map(|&q| P2Quantile::new(q)).collect();
+        for &x in &stream {
+            for sk in sketches.iter_mut() {
+                sk.push(x);
+            }
+        }
+        // P2 markers interpolate, so allow a sliver of the spread
+        let tol = 1e-9 + 0.05 * span;
+        for w in 0..LADDER.len() - 1 {
+            let (a, b) = (sketches[w].value(), sketches[w + 1].value());
+            assert!(
+                b >= a - tol,
+                "case {case}: q={} value {b} < q={} value {a}",
+                LADDER[w + 1],
+                LADDER[w]
+            );
+        }
+    }
+}
+
+/// PROPERTY: TailSketch tracks min/max/count exactly on every stream
+/// (two-point adversarial included), and on sorted/constant streams
+/// its tails stay ordered p50 <= p95 <= p99 within interpolation
+/// tolerance and bracketed by the extremes.
+#[test]
+fn prop_tail_sketch_orders_tails_and_tracks_extremes() {
+    use chiplet_hi::util::TailSketch;
+    let mut rng = Rng::new(0xDEAD);
+    for case in 0..CASES {
+        let n = rng.range(10, 800);
+        let span = rng.f64() * 20.0 + 1e-6;
+        let two_point = case % 4 == 3;
+        let stream: Vec<f64> = match case % 4 {
+            0 => (0..n).map(|i| span * i as f64 / n as f64).collect(),
+            1 => (0..n).map(|i| span * (n - i) as f64 / n as f64).collect(),
+            2 => vec![span; n],
+            _ => (0..n)
+                .map(|_| if rng.f64() < 0.5 { 0.0 } else { span })
+                .collect(),
+        };
+        let mut sk = TailSketch::new();
+        let (mut mn, mut mx) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &x in &stream {
+            sk.push(x);
+            mn = mn.min(x);
+            mx = mx.max(x);
+        }
+        assert_eq!(sk.count(), n as u64, "case {case}");
+        assert_eq!(sk.min(), mn, "case {case}");
+        assert_eq!(sk.max(), mx, "case {case}");
+        let (p50, p95, p99) = (sk.quantile(50.0), sk.quantile(95.0), sk.quantile(99.0));
+        assert!(p50 >= mn - 1e-9 && p99 <= mx + 1e-9, "case {case}: tails outside extremes");
+        if !two_point {
+            let tol = 1e-9 + 0.05 * span;
+            assert!(p95 >= p50 - tol, "case {case}: p95 {p95} < p50 {p50}");
+            assert!(p99 >= p95 - tol, "case {case}: p99 {p99} < p95 {p95}");
+        }
+    }
+}

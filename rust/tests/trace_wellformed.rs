@@ -11,8 +11,8 @@ use chiplet_hi::baselines::Arch;
 use chiplet_hi::config::{ModelZoo, SystemConfig};
 use chiplet_hi::obs::Tracer;
 use chiplet_hi::sim::{
-    ArrivalProcess, AutoscaleConfig, ClusterConfig, ClusterSim, DispatchPolicy, InstanceSpec,
-    Platform, ServingConfig, ServingSim, SimOptions, StreamConfig,
+    ArrivalProcess, AutoscaleConfig, ClusterConfig, ClusterSim, DispatchPolicy, FaultPlan,
+    HealthConfig, InstanceSpec, Platform, ServingConfig, ServingSim, SimOptions, StreamConfig,
 };
 use chiplet_hi::util::json::Json;
 use chiplet_hi::util::SinkMode;
@@ -161,9 +161,9 @@ fn streaming_fleet_trace_is_well_formed() {
             max_instances: 3,
             high_watermark: 1.0,
             low_watermark: 0.0,
-            cooldown_secs: 0.0,
+            cooldown_secs: 1.0e-6,
         }),
-        slo_ttft_secs: None,
+        ..Default::default()
     };
     let tracer = Tracer::recording().with_metrics_every(0.005);
     let fleet = ClusterSim::new(&sys, &model, cfg)
@@ -179,4 +179,47 @@ fn streaming_fleet_trace_is_well_formed() {
     assert!(phases.get("C").copied().unwrap_or(0) > 0, "no gauge counters");
     // process_name + fleet track + one per instance
     assert!(phases.get("M").copied().unwrap_or(0) >= 5);
+}
+
+#[test]
+fn degraded_fleet_trace_is_well_formed() {
+    let sys = SystemConfig::s36();
+    let model = ModelZoo::bert_base();
+    let cfg = ClusterConfig {
+        specs: vec![InstanceSpec::of(Arch::Hi25D); 3],
+        policy: DispatchPolicy::Jsq,
+        serving: ServingConfig {
+            arrivals: ArrivalProcess::Poisson {
+                rate_per_sec: 1.0e6,
+                num_requests: 400,
+            },
+            prompt_len: 32,
+            gen_tokens: 4,
+            max_batch: 16,
+            sink: SinkMode::Sketch,
+            ..Default::default()
+        },
+    };
+    let plan = FaultPlan::parse("stall@0.00003:2:0.00002,crash@0.00005:1:0.0002")
+        .expect("fault plan parses");
+    let stream = StreamConfig {
+        health: Some(HealthConfig::default()),
+        faults: Some(plan),
+        ..Default::default()
+    };
+    let tracer = Tracer::recording().with_metrics_every(0.005);
+    let fleet = ClusterSim::new(&sys, &model, cfg)
+        .run_streaming_traced(&stream, &tracer)
+        .expect("degraded streaming fleet run");
+    assert!(fleet.failures >= 1, "crash never fired");
+    assert!(fleet.stalls >= 1, "stall never fired");
+    let phases = validate_chrome_trace(&tracer.chrome_json().unwrap());
+    // requests evicted by the crash close their lifecycle span at
+    // eviction and open a fresh one when re-dispatched, so async begins
+    // still pair with ends even though some spans never retire.
+    assert_eq!(phases.get("b"), phases.get("e"));
+    assert!(phases.get("b").copied().unwrap_or(0) >= fleet.completed);
+    // the fault machinery leaves instants behind (fail / stall / retry)
+    assert!(phases.get("i").copied().unwrap_or(0) >= fleet.requests);
+    assert!(phases.get("C").copied().unwrap_or(0) > 0, "no gauge counters");
 }
