@@ -4,10 +4,13 @@
 Compares the ns_per_iter of selected bench labels in a current report
 against an archived baseline and fails (exit 1) when any watched label
 regressed by more than the tolerance. Intended for CI: the baseline is
-the archived artifact of a previous generation (e.g. BENCH_5.json) and
-the current file is the one the bench smoke just emitted (BENCH_6.json).
+the archived artifact of a previous generation (e.g. BENCH_8.json) and
+the current file is the one the bench smoke just emitted (BENCH_9.json).
 When the baseline file is absent the check is skipped with exit 0 —
-fresh machines and forks have no trajectory to compare against.
+fresh machines and forks have no trajectory to compare against — and a
+watched label missing from the baseline is skipped individually, so
+newly added labels (e.g. the §Perf iteration 7 pair) seed themselves on
+their first gated run and are enforced from the next archive onward.
 
 When both reports carry raw per-sample timings (`samples_ns`, emitted
 by the in-crate bench harness) with at least --min-samples entries on

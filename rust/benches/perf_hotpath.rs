@@ -6,16 +6,19 @@
 //! single-build fleet serving wall clock and the single-pass streaming
 //! fleet (P² sketch sinks) sustained request rate — plain and under an
 //! active fault plan (crash + stall + thermal/wear bookkeeping), so CI
-//! tracks the health runtime's overhead too. Emits the
-//! machine-readable `BENCH_8.json` perf trajectory (labels are kept
-//! stable across `BENCH_*` generations so CI can diff against the
-//! archived baseline).
+//! tracks the health runtime's overhead too, plus the §Perf iteration 7
+//! targets: a sparse cycle-sim phase dominated by quiescent cycles
+//! (event-driven fast-forward) and a wide-fleet dispatch run (the
+//! O(log n) tournament-tree router). Emits the machine-readable
+//! `BENCH_9.json` perf trajectory (labels are kept stable across
+//! `BENCH_*` generations so CI can diff against the archived
+//! baseline).
 
 use chiplet_hi::arch::{Placement, SfcKind};
 use chiplet_hi::baselines::Arch;
 use chiplet_hi::config::{ModelZoo, SystemConfig};
-use chiplet_hi::model::kernels::Workload;
-use chiplet_hi::model::traffic::hi_traffic;
+use chiplet_hi::model::kernels::{KernelKind, Workload};
+use chiplet_hi::model::traffic::{hi_traffic, TrafficMatrix};
 use chiplet_hi::moo::{design::NoiDesign, Evaluator};
 use chiplet_hi::noi::{analytic, CycleSim, RoutingTable, Topology};
 use chiplet_hi::obs::Tracer;
@@ -255,9 +258,53 @@ fn main() {
          (health runtime on, 1 crash + 1 stall, {stream_n} requests)"
     );
 
+    // sparse cycle-sim phase (§Perf iteration 7): one lone flit
+    // marching the full diagonal of a 16×16 mesh — almost every cycle
+    // is a single-event tick the fast-forward path collapses, so this
+    // label tracks the event-driven win directly (the dense
+    // cycle_sim_score_phase above pins "fast-forward doesn't slow the
+    // saturated case")
+    let p16 = Placement::identity(256, 16, 16);
+    let topo16 = Topology::mesh(&p16);
+    let routes16 = RoutingTable::build(&topo16);
+    let mut sparse = TrafficMatrix::zeros(256, KernelKind::Score, 1);
+    sparse.add(0, 255, 32.0); // corner-to-corner: a 30-hop lone march
+    let mut sim16 = CycleSim::new(&topo16, &routes16, 8);
+    b.bench("cycle_sim_sparse_phase_16x16", || {
+        std::hint::black_box(sim16.run_phase(&sparse, 32.0));
+    });
+    let sparse_res = sim16.run_phase(&sparse, 32.0);
+    println!(
+        "\nsparse cycle-sim phase: {} cycles, {} fast-forwarded",
+        sparse_res.cycles, sparse_res.ff_cycles_skipped
+    );
+
+    // wide-fleet dispatch (§Perf iteration 7): 64 uneven instances,
+    // 5000 arrivals through the least-KV router — the per-arrival
+    // instance pick is the tournament tree's O(log n) path
+    let mut frng = Rng::new(0xF1EE7);
+    let fest: Vec<f64> = (0..64).map(|_| 0.004 + 0.08 * frng.f64()).collect();
+    let fcaps: Vec<f64> = (0..64).map(|_| (2.0 + 14.0 * frng.f64()) * 1.0e9).collect();
+    let farrivals = ArrivalProcess::Poisson {
+        rate_per_sec: 2.0e3,
+        num_requests: 5000,
+    }
+    .times(0x64D1);
+    b.bench("fleet_dispatch_64inst_leastkv_5000req", || {
+        std::hint::black_box(chiplet_hi::sim::route_requests(
+            DispatchPolicy::LeastKv,
+            &farrivals,
+            &fest,
+            &fcaps,
+            3.0e7,
+            8,
+            0x5EED,
+        ));
+    });
+
     // machine-readable perf trajectory (archived by CI)
-    match b.write_json("BENCH_8.json") {
-        Ok(()) => println!("\nwrote BENCH_8.json"),
-        Err(e) => eprintln!("\nfailed to write BENCH_8.json: {e}"),
+    match b.write_json("BENCH_9.json") {
+        Ok(()) => println!("\nwrote BENCH_9.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_9.json: {e}"),
     }
 }

@@ -27,6 +27,22 @@
 //! active-injector list, and `out_taken` is cleared lazily with a cycle
 //! stamp. Results are bit-identical to the pre-rewrite layout (pinned in
 //! tests/cycle_golden.rs).
+//!
+//! Event-driven fast-forward (§Perf iteration 7): the per-cycle loop no
+//! longer ticks through cycles that cannot change state. Two cases are
+//! replayed arithmetically, bit-identical to the ticked execution:
+//! (a) a *lone-flit march* — every injector drained and exactly one
+//! flit in flight means a contention-free walk of the remaining routing
+//! path, so the clock jumps straight to the ejection cycle (dominant in
+//! sparse phases: a single long flow on a big mesh collapses from
+//! O(diameter) iterations to one); and (b) a *dead-state jump* — a
+//! cycle that moved nothing (no ejection, forward or injection) can
+//! never make progress again, because arbitration decisions depend only
+//! on queue state, which has stopped changing — so the spin to the
+//! `max_cycles` safety bound is skipped in one step. Skipped cycles are
+//! counted in [`SimResult::ff_cycles_skipped`] / [`NoiProfile`] so
+//! tests can assert the fast path engages (tests/cycle_golden.rs pins
+//! bit-identity against the VecDeque reference model).
 
 use crate::model::TrafficMatrix;
 use crate::noi::linkmap::{LinkMap, NO_LINK};
@@ -77,6 +93,12 @@ pub struct SimResult {
     /// delivered subset — callers must not silently mix them with
     /// drained phases.
     pub drained: bool,
+    /// Cycles the event-driven fast-forward replayed arithmetically
+    /// instead of ticking (§Perf iteration 7). Pure instrumentation:
+    /// every other field is bit-identical whether the fast path engaged
+    /// or not, and this counter is excluded from the golden-test field
+    /// comparison for exactly that reason.
+    pub ff_cycles_skipped: u64,
 }
 
 /// Flit-level simulator for one (topology, routing table) pair.
@@ -128,6 +150,10 @@ pub struct CycleSim {
     active_scratch: Vec<u32>,
     /// sources with pending injections, ascending
     active_src: Vec<u32>,
+    /// lifetime fast-forwarded-cycle total (across phases; survives the
+    /// per-phase `reset` — the `sim::Platform` counter plumbing reads
+    /// it without needing profiling enabled)
+    ff_skipped_total: u64,
     // --- profiling (off by default; accumulates ACROSS phases so a
     // whole end-to-end run folds into one heatmap) ---
     /// when true the hot loop pays one predictable branch per hop /
@@ -141,6 +167,9 @@ pub struct CycleSim {
     prof_cycles: u64,
     /// phases folded into the profile
     prof_phases: u64,
+    /// fast-forwarded cycles folded into the profile (subset of
+    /// `prof_cycles`; cleared with the histograms)
+    prof_ff_skipped: u64,
 }
 
 /// Read-only view of the accumulated NoI profile (see
@@ -151,6 +180,9 @@ pub struct NoiProfile<'a> {
     pub router_busy_cycles: &'a [u64],
     pub cycles: u64,
     pub phases: u64,
+    /// Cycles replayed by the event-driven fast-forward across the
+    /// profiled phases (subset of `cycles`).
+    pub ff_cycles_skipped: u64,
 }
 
 impl CycleSim {
@@ -192,12 +224,21 @@ impl CycleSim {
             activated: Vec::with_capacity(n),
             active_scratch: Vec::with_capacity(n),
             active_src: Vec::with_capacity(n),
+            ff_skipped_total: 0,
             profiling: false,
             prof_link_hops: Vec::new(),
             prof_router_busy: Vec::new(),
             prof_cycles: 0,
             prof_phases: 0,
+            prof_ff_skipped: 0,
         }
+    }
+
+    /// Lifetime count of cycles the event-driven fast-forward replayed
+    /// arithmetically, summed over every phase since construction
+    /// (§Perf iteration 7). Always maintained — no profiling needed.
+    pub fn ff_cycles_skipped_total(&self) -> u64 {
+        self.ff_skipped_total
     }
 
     /// Turn on per-link / per-router profiling. Histograms accumulate
@@ -217,6 +258,7 @@ impl CycleSim {
         self.prof_router_busy.iter_mut().for_each(|x| *x = 0);
         self.prof_cycles = 0;
         self.prof_phases = 0;
+        self.prof_ff_skipped = 0;
     }
 
     /// The accumulated profile (`None` until `enable_profiling`).
@@ -229,6 +271,7 @@ impl CycleSim {
             router_busy_cycles: &self.prof_router_busy,
             cycles: self.prof_cycles,
             phases: self.prof_phases,
+            ff_cycles_skipped: self.prof_ff_skipped,
         })
     }
 
@@ -244,6 +287,7 @@ impl CycleSim {
         w.field_usize("links_directed", self.lm.n_links());
         w.field_u64("cycles", prof.cycles);
         w.field_u64("phases", prof.phases);
+        w.field_u64("ff_cycles_skipped", prof.ff_cycles_skipped);
         w.key("links");
         w.begin_arr_pretty();
         for (l, &hops) in prof.link_flit_hops.iter().enumerate() {
@@ -423,6 +467,9 @@ impl CycleSim {
         let mut cycle: u64 = 0;
         let mut done_packets = 0usize;
         let mut flit_hops: u64 = 0;
+        let mut ff_skipped: u64 = 0;
+        // flits currently queued in the network (injected, not ejected)
+        let mut in_flight: usize = 0;
         let mut remaining = vec![0usize; n_packets]; // flits not yet at dst
         for (i, p) in packets.iter().enumerate() {
             remaining[i] = p.flits;
@@ -432,7 +479,80 @@ impl CycleSim {
         let max_cycles = (total_flits as u64 + 1) * (self.diameter as u64 + 4) * 4 + 10_000;
 
         while done_packets < n_packets && cycle < max_cycles {
+            // §Perf iteration 7 (a): lone-flit fast-forward. With every
+            // injector drained and exactly one flit in flight, the
+            // network is contention-free — the flit advances one hop
+            // per cycle along its routing path and ejects one cycle
+            // after reaching its destination's input queue. Replay the
+            // walk arithmetically instead of ticking the arbitration
+            // loop; all accounting (flit_hops, profiling histograms,
+            // t_done) lands exactly where the ticked loop puts it.
+            if in_flight == 1 && self.active_src.is_empty() && self.active.len() == 1 {
+                let r0 = self.active[0] as usize;
+                let mut l0 = usize::MAX;
+                for &l in self.lm.in_links(r0) {
+                    if self.q_len[l as usize] > 0 {
+                        l0 = l as usize;
+                        break;
+                    }
+                }
+                debug_assert!(l0 != usize::MAX, "active router must hold the lone flit");
+                let flit = self.q_front(l0);
+                let dst = flit.dst as usize;
+                // validate the remaining path first: d hops from r0 to
+                // dst. Bail to the ticked loop on same-cycle ejection
+                // (dst == r0 — nothing to skip), a routing hole
+                // (NO_LINK: the dead-state jump below owns that spin)
+                // or a malformed routing cycle (d would exceed n).
+                let mut d = 0usize;
+                let mut at = r0;
+                let mut ok = dst != r0;
+                while ok && at != dst {
+                    let ol = self.out_table[at * n + dst];
+                    if ol == NO_LINK || d >= n {
+                        ok = false;
+                    } else {
+                        at = self.lm.to[ol as usize] as usize;
+                        d += 1;
+                    }
+                }
+                if ok {
+                    let pid = flit.packet as usize;
+                    debug_assert_eq!(remaining[pid], 1, "lone flit is the packet tail");
+                    // cycles left under the safety bound; a full walk
+                    // spends d hop cycles plus one ejection cycle
+                    let avail = max_cycles - cycle;
+                    let hops = (d as u64).min(avail) as usize;
+                    let mut at = r0;
+                    for _ in 0..hops {
+                        let ol = self.out_table[at * n + dst] as usize;
+                        flit_hops += 1;
+                        if self.profiling {
+                            self.prof_link_hops[ol] += 1;
+                            self.prof_router_busy[at] += 1;
+                        }
+                        at = self.lm.to[ol] as usize;
+                    }
+                    ff_skipped += (d as u64 + 1).min(avail) - 1;
+                    if avail > d as u64 {
+                        cycle += d as u64 + 1;
+                        if self.profiling {
+                            self.prof_router_busy[dst] += 1;
+                        }
+                        remaining[pid] -= 1;
+                        packets[pid].t_done = cycle;
+                        done_packets += 1;
+                    } else {
+                        // safety bound lands mid-march: the ticked loop
+                        // would stop after `avail` hop cycles, tail
+                        // still queued
+                        cycle = max_cycles;
+                    }
+                    continue;
+                }
+            }
             cycle += 1;
+            let mut injected_now = 0u32;
             // 1) link traversal: each router forwards up to one flit per
             //    *output* link per cycle, arbitrating round-robin over
             //    its input queues. Only routers with queued flits are
@@ -486,6 +606,7 @@ impl CycleSim {
                 let l = l as usize;
                 let flit = self.q_pop(l);
                 self.router_load[self.lm.to[l] as usize] -= 1;
+                in_flight -= 1;
                 let pid = flit.packet as usize;
                 remaining[pid] -= 1;
                 if remaining[pid] == 0 {
@@ -532,6 +653,8 @@ impl CycleSim {
                     if (self.q_len[ol] as usize) < self.buffer_flits {
                         self.q_push(ol, Flit { packet: pid, dst });
                         self.add_load(self.lm.to[ol] as usize);
+                        in_flight += 1;
+                        injected_now += 1;
                         // the injected flit traverses its first link now
                         flit_hops += 1;
                         if self.profiling {
@@ -555,6 +678,29 @@ impl CycleSim {
             self.active_src = active_src;
 
             self.rebuild_worklist();
+
+            // §Perf iteration 7 (b): dead-state jump. A cycle that
+            // moved nothing — no ejection, no forward, no injection —
+            // can never make progress again: arbitration and injection
+            // decisions depend only on queue/backlog state, which has
+            // stopped changing (out_taken stamps are per-cycle and none
+            // were set; rr order is irrelevant because every input is
+            // scanned regardless). Replay the spin to the safety bound
+            // in one step, keeping the busy-cycle histogram exact.
+            if self.arrivals.is_empty() && self.moves.is_empty() && injected_now == 0 {
+                let skipped = max_cycles - cycle;
+                if skipped > 0 {
+                    if self.profiling {
+                        for &r in &self.active {
+                            if !self.lm.in_links(r as usize).is_empty() {
+                                self.prof_router_busy[r as usize] += skipped;
+                            }
+                        }
+                    }
+                    ff_skipped += skipped;
+                    cycle = max_cycles;
+                }
+            }
         }
 
         // stats over delivered packets only: undelivered packets (safety
@@ -575,9 +721,11 @@ impl CycleSim {
             lat_sum / delivered as f64
         };
 
+        self.ff_skipped_total += ff_skipped;
         if self.profiling {
             self.prof_cycles += cycle;
             self.prof_phases += 1;
+            self.prof_ff_skipped += ff_skipped;
         }
 
         SimResult {
@@ -595,6 +743,7 @@ impl CycleSim {
             },
             scale,
             drained: done_packets == n_packets,
+            ff_cycles_skipped: ff_skipped,
         }
     }
 
@@ -817,6 +966,69 @@ mod tests {
         let p = prof.profile().unwrap();
         assert_eq!(p.link_flit_hops.iter().sum::<u64>(), 0);
         assert_eq!(p.phases, 0);
+    }
+
+    #[test]
+    fn fast_forward_collapses_lone_flit_march() {
+        // a single 1-flit corner-to-corner flow: after the injection
+        // cycle the network holds exactly one flit, so the fast-forward
+        // replays the remaining 5-hop march + ejection arithmetically —
+        // same cycles/hops/latency the ticked loop produces (pinned
+        // against the VecDeque reference in tests/cycle_golden.rs)
+        let (t, r) = mesh4();
+        let mut sim = CycleSim::new(&t, &r, 8);
+        let mut m = TrafficMatrix::zeros(16, KernelKind::Score, 1);
+        m.add(0, 15, 32.0);
+        let res = sim.run_phase(&m, 32.0);
+        assert!(res.drained);
+        assert_eq!(res.cycles, 7);
+        assert_eq!(res.flit_hops, 6);
+        assert_eq!(res.mean_packet_latency, 6.0);
+        assert_eq!(res.ff_cycles_skipped, 5);
+    }
+
+    #[test]
+    fn dead_state_jump_skips_the_spin_to_the_safety_bound() {
+        // an unreachable destination: the injector is stuck on NO_LINK
+        // forever, so cycle 1 moves nothing and the dead-state jump
+        // replays the whole spin to max_cycles in one step
+        let t = Topology::new(3, vec![(0, 1)]);
+        let r = RoutingTable::build(&t);
+        let mut sim = CycleSim::new(&t, &r, 8);
+        let mut m = TrafficMatrix::zeros(3, KernelKind::Score, 1);
+        m.add(0, 2, 32.0);
+        let res = sim.run_phase(&m, 32.0);
+        assert!(!res.drained);
+        assert_eq!(res.delivered, 0);
+        assert!(res.cycles >= 10_000, "spun to the safety bound");
+        assert_eq!(res.ff_cycles_skipped, res.cycles - 1, "all but cycle 1 skipped");
+        // the next phase on the reused sim is unaffected
+        let mut m2 = TrafficMatrix::zeros(3, KernelKind::Score, 1);
+        m2.add(0, 1, 32.0);
+        let r2 = sim.run_phase(&m2, 32.0);
+        assert!(r2.drained);
+        assert_eq!(r2.cycles, 2);
+    }
+
+    #[test]
+    fn ff_total_accumulates_across_phases_and_survives_clear_profile() {
+        let (t, r) = mesh4();
+        let mut sim = CycleSim::new(&t, &r, 8);
+        sim.enable_profiling();
+        assert_eq!(sim.ff_cycles_skipped_total(), 0);
+        let mut m = TrafficMatrix::zeros(16, KernelKind::Score, 1);
+        m.add(0, 15, 32.0);
+        let a = sim.run_phase(&m, 32.0);
+        let b = sim.run_phase(&m, 32.0);
+        assert!(a.ff_cycles_skipped > 0);
+        assert_eq!(a.ff_cycles_skipped, b.ff_cycles_skipped);
+        let total = a.ff_cycles_skipped + b.ff_cycles_skipped;
+        assert_eq!(sim.ff_cycles_skipped_total(), total);
+        assert_eq!(sim.profile().unwrap().ff_cycles_skipped, total);
+        // clear_profile drops the profiled view, not the lifetime total
+        sim.clear_profile();
+        assert_eq!(sim.profile().unwrap().ff_cycles_skipped, 0);
+        assert_eq!(sim.ff_cycles_skipped_total(), total);
     }
 
     #[test]

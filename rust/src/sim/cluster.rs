@@ -15,6 +15,15 @@
 //! arrival order, so the assignment — and therefore the whole fleet
 //! simulation — is deterministic and independent of `--jobs`.
 //!
+//! Since §Perf iteration 7 the queue-scoring policies (`jsq`,
+//! `least-kv`, `least-hot`, `wear-level`) pick through a
+//! [`MinTree`](crate::sim::dispatch::MinTree) tournament tree updated
+//! incrementally on dispatch/retire/scale/health events — O(log n) per
+//! arrival instead of the O(n) `min_by` scan, bit-identical to the
+//! scan's lowest-index-wins tie-breaking (debug builds re-derive every
+//! pick with the reference scan, and the retain-sweep golden below
+//! pins the routed assignment end to end).
+//!
 //! Two execution modes share that router model:
 //!
 //! - [`ClusterSim::run_with_jobs`] — the *buffered oracle*: dispatch the
@@ -60,6 +69,7 @@ use crate::config::{ModelConfig, SystemConfig};
 use crate::moo::design::NoiDesign;
 use crate::obs::{Gauge, Tracer};
 use crate::sim::decode::{decode_step_on, kv_cache_bytes};
+use crate::sim::dispatch::{Key, MinTree};
 use crate::sim::engine::SimOptions;
 use crate::sim::health::{
     EvictedReq, FaultEvent, FaultKind, FaultPlan, FleetHealth, HealthConfig, LinkFailOutcome,
@@ -489,6 +499,184 @@ pub(crate) fn p2c_pair(rng: &mut Rng, n: usize) -> (usize, usize) {
     (a.min(b), a.max(b))
 }
 
+/// Whether `policy` ranks instances by a queue score (and therefore
+/// picks through the [`MinTree`]); `RoundRobin` and `P2c` never consult
+/// queue ranks.
+fn policy_is_indexed(policy: DispatchPolicy) -> bool {
+    !matches!(policy, DispatchPolicy::RoundRobin | DispatchPolicy::P2c)
+}
+
+/// [`MinTree`] key for the buffered scalar router ([`route_requests`]):
+/// depth-scaled KV pressure for `LeastKv`, raw queue depth otherwise
+/// (the health-aware policies degenerate to their JSQ tiebreak in the
+/// buffered oracle — it has no health runtime).
+fn request_key(policy: DispatchPolicy, len: usize, kv_full: f64, cap: f64) -> Key {
+    match policy {
+        DispatchPolicy::LeastKv => Key::of(len as f64 * kv_full / cap, 0.0),
+        _ => Key::of(len as f64, 0.0),
+    }
+}
+
+/// [`MinTree`] key for the event router ([`route_events`]):
+/// `kv_pressure` is the instance's outstanding per-event KV sum over
+/// its capacity.
+fn event_key(policy: DispatchPolicy, len: usize, kv_pressure: f64) -> Key {
+    match policy {
+        DispatchPolicy::LeastKv => Key::of(kv_pressure, 0.0),
+        _ => Key::of(len as f64, 0.0),
+    }
+}
+
+/// [`MinTree`] key for the streaming router — the single call site
+/// every maintenance path shares (init, retire, dispatch, autoscale,
+/// health resync and the metric restage before health-aware picks),
+/// replacing the four near-identical `min_by` blocks the policies used
+/// to carry inline.
+fn stream_key(
+    policy: DispatchPolicy,
+    i: usize,
+    outstanding: &[BinaryHeap<Reverse<FinishTime>>],
+    caps: &[f64],
+    health: Option<&FleetHealth>,
+) -> Key {
+    let len = outstanding[i].len() as f64;
+    match policy {
+        DispatchPolicy::LeastKv => Key::of(len / caps[i], 0.0),
+        // coolest / least-worn first, queue depth breaking ties (exact
+        // JSQ without a health runtime)
+        DispatchPolicy::LeastHot => match health {
+            Some(h) => Key::of(h.temp_c(i), len),
+            None => Key::of(len, 0.0),
+        },
+        DispatchPolicy::WearLevel => match health {
+            Some(h) => Key::of(h.wear_frac(i), len),
+            None => Key::of(len, 0.0),
+        },
+        _ => Key::of(len, 0.0),
+    }
+}
+
+/// The pre-tree `route_requests` scan, kept as the debug-build
+/// reference: every indexed pick is re-derived against it under
+/// `debug_assertions`, so the whole existing test suite doubles as a
+/// bit-identity harness for the tree.
+#[cfg(debug_assertions)]
+fn scan_pick_requests(
+    policy: DispatchPolicy,
+    outstanding: &[BinaryHeap<Reverse<FinishTime>>],
+    kv_full: f64,
+    caps: &[f64],
+) -> usize {
+    let n = outstanding.len();
+    match policy {
+        DispatchPolicy::Jsq | DispatchPolicy::LeastHot | DispatchPolicy::WearLevel => {
+            (0..n).min_by_key(|&i| outstanding[i].len()).unwrap()
+        }
+        DispatchPolicy::LeastKv => (0..n)
+            .min_by(|&a, &b| {
+                let la = outstanding[a].len() as f64 * kv_full / caps[a];
+                let lb = outstanding[b].len() as f64 * kv_full / caps[b];
+                la.total_cmp(&lb)
+            })
+            .unwrap(),
+        DispatchPolicy::RoundRobin | DispatchPolicy::P2c => {
+            unreachable!("only queue-scoring policies use the tree")
+        }
+    }
+}
+
+/// Debug-build reference scan for [`route_events`] (see
+/// [`scan_pick_requests`]).
+#[cfg(debug_assertions)]
+fn scan_pick_events(
+    policy: DispatchPolicy,
+    outstanding: &[BinaryHeap<Reverse<OutEntry>>],
+    kv_out: &[f64],
+    caps: &[f64],
+) -> usize {
+    let n = outstanding.len();
+    match policy {
+        DispatchPolicy::Jsq | DispatchPolicy::LeastHot | DispatchPolicy::WearLevel => {
+            (0..n).min_by_key(|&i| outstanding[i].len()).unwrap()
+        }
+        DispatchPolicy::LeastKv => (0..n)
+            .min_by(|&a, &b| {
+                let la = kv_out[a] / caps[a];
+                let lb = kv_out[b] / caps[b];
+                la.total_cmp(&lb)
+            })
+            .unwrap(),
+        DispatchPolicy::RoundRobin | DispatchPolicy::P2c => {
+            unreachable!("only queue-scoring policies use the tree")
+        }
+    }
+}
+
+/// Debug-build reference scan for the streaming router: the pre-tree
+/// per-policy `min_by` blocks, verbatim, over the active set.
+#[cfg(debug_assertions)]
+fn scan_pick_streaming(
+    policy: DispatchPolicy,
+    active: &[usize],
+    outstanding: &[BinaryHeap<Reverse<FinishTime>>],
+    caps: &[f64],
+    health: Option<&FleetHealth>,
+) -> usize {
+    match policy {
+        DispatchPolicy::Jsq => active
+            .iter()
+            .copied()
+            .min_by_key(|&i| (outstanding[i].len(), i))
+            .unwrap(),
+        DispatchPolicy::LeastKv => active
+            .iter()
+            .copied()
+            .min_by(|&a, &b| {
+                let la = outstanding[a].len() as f64 / caps[a];
+                let lb = outstanding[b].len() as f64 / caps[b];
+                la.total_cmp(&lb).then(a.cmp(&b))
+            })
+            .unwrap(),
+        DispatchPolicy::LeastHot => match health {
+            Some(h) => active
+                .iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    h.temp_c(a)
+                        .total_cmp(&h.temp_c(b))
+                        .then_with(|| outstanding[a].len().cmp(&outstanding[b].len()))
+                        .then(a.cmp(&b))
+                })
+                .unwrap(),
+            None => active
+                .iter()
+                .copied()
+                .min_by_key(|&i| (outstanding[i].len(), i))
+                .unwrap(),
+        },
+        DispatchPolicy::WearLevel => match health {
+            Some(h) => active
+                .iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    h.wear_frac(a)
+                        .total_cmp(&h.wear_frac(b))
+                        .then_with(|| outstanding[a].len().cmp(&outstanding[b].len()))
+                        .then(a.cmp(&b))
+                })
+                .unwrap(),
+            None => active
+                .iter()
+                .copied()
+                .min_by_key(|&i| (outstanding[i].len(), i))
+                .unwrap(),
+        },
+        DispatchPolicy::RoundRobin | DispatchPolicy::P2c => {
+            unreachable!("only queue-scoring policies use the tree")
+        }
+    }
+}
+
 /// Deterministic front-end dispatch: split one shared arrival stream
 /// over the instances of a fleet. Each instance is modeled as
 /// `max_batch` deterministic servers with service time `est[i]`;
@@ -523,8 +711,22 @@ pub fn route_requests(
         (0..n).map(|_| BinaryHeap::new()).collect();
     let mut servers: Vec<Vec<f64>> = vec![vec![0.0f64; max_batch]; n];
     let mut rng = Rng::new(seed ^ 0xC1A5_7E55);
+    // O(log n) pick for the queue-scoring policies (§Perf iteration 7):
+    // the tree mirrors each instance's key and is point-updated on every
+    // retire/dispatch, so the per-arrival scan is gone.
+    let indexed = policy_is_indexed(policy);
+    let mut tree = MinTree::new(if indexed { n } else { 0 });
+    if indexed {
+        for i in 0..n {
+            tree.stage(i, request_key(policy, 0, kv_full, caps[i]));
+        }
+        tree.rebuild();
+    }
+    let mut changed: Vec<usize> = Vec::new();
     for (k, &t) in arrivals.iter().enumerate() {
-        for o in outstanding.iter_mut() {
+        changed.clear();
+        for (i, o) in outstanding.iter_mut().enumerate() {
+            let before = o.len();
             while let Some(&Reverse(FinishTime(f))) = o.peek() {
                 if f <= t {
                     o.pop();
@@ -532,21 +734,17 @@ pub fn route_requests(
                     break;
                 }
             }
+            if o.len() != before {
+                changed.push(i);
+            }
+        }
+        if indexed {
+            for &i in &changed {
+                tree.update(i, request_key(policy, outstanding[i].len(), kv_full, caps[i]));
+            }
         }
         let pick = match policy {
             DispatchPolicy::RoundRobin => k % n,
-            // The buffered oracle has no health runtime: the
-            // health-aware policies degenerate to their JSQ tiebreak.
-            DispatchPolicy::Jsq | DispatchPolicy::LeastHot | DispatchPolicy::WearLevel => {
-                (0..n).min_by_key(|&i| outstanding[i].len()).unwrap()
-            }
-            DispatchPolicy::LeastKv => (0..n)
-                .min_by(|&a, &b| {
-                    let la = outstanding[a].len() as f64 * kv_full / caps[a];
-                    let lb = outstanding[b].len() as f64 * kv_full / caps[b];
-                    la.partial_cmp(&lb).unwrap()
-                })
-                .unwrap(),
             DispatchPolicy::P2c => {
                 let (x, y) = p2c_pair(&mut rng, n);
                 if outstanding[y].len() < outstanding[x].len() {
@@ -555,6 +753,15 @@ pub fn route_requests(
                     x
                 }
             }
+            // Jsq / LeastKv, plus the health-aware policies which
+            // degenerate to their JSQ tiebreak in the buffered oracle
+            // (it has no health runtime).
+            _ => {
+                let p = tree.best().expect("n > 0 slots are all active");
+                #[cfg(debug_assertions)]
+                assert_eq!(p, scan_pick_requests(policy, &outstanding, kv_full, caps));
+                p
+            }
         };
         assigned[pick].push(t);
         // estimated start on the instance's max_batch virtual servers
@@ -562,11 +769,14 @@ pub fn route_requests(
             .iter()
             .copied()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
             .unwrap();
         let finish = free.max(t) + est[pick];
         servers[pick][si] = finish;
         outstanding[pick].push(Reverse(FinishTime(finish)));
+        if indexed {
+            tree.update(pick, request_key(policy, outstanding[pick].len(), kv_full, caps[pick]));
+        }
     }
     assigned
 }
@@ -615,9 +825,20 @@ fn route_events(
     let mut kv_out = vec![0.0f64; n];
     let mut servers: Vec<Vec<f64>> = vec![vec![0.0f64; max_batch]; n];
     let mut rng = Rng::new(seed ^ 0xC1A5_7E55);
+    let indexed = policy_is_indexed(policy);
+    let mut tree = MinTree::new(if indexed { n } else { 0 });
+    if indexed {
+        for i in 0..n {
+            tree.stage(i, event_key(policy, 0, 0.0));
+        }
+        tree.rebuild();
+    }
+    let mut changed: Vec<usize> = Vec::new();
     for (k, ev) in events.iter().enumerate() {
         let t = ev.t;
-        for (o, kv) in outstanding.iter_mut().zip(kv_out.iter_mut()) {
+        changed.clear();
+        for (i, (o, kv)) in outstanding.iter_mut().zip(kv_out.iter_mut()).enumerate() {
+            let before = o.len();
             while let Some(Reverse(e)) = o.peek() {
                 if e.finish <= t {
                     *kv -= e.kv;
@@ -626,19 +847,17 @@ fn route_events(
                     break;
                 }
             }
+            if o.len() != before {
+                changed.push(i);
+            }
+        }
+        if indexed {
+            for &i in &changed {
+                tree.update(i, event_key(policy, outstanding[i].len(), kv_out[i] / caps[i]));
+            }
         }
         let pick = match policy {
             DispatchPolicy::RoundRobin => k % n,
-            DispatchPolicy::Jsq | DispatchPolicy::LeastHot | DispatchPolicy::WearLevel => {
-                (0..n).min_by_key(|&i| outstanding[i].len()).unwrap()
-            }
-            DispatchPolicy::LeastKv => (0..n)
-                .min_by(|&a, &b| {
-                    let la = kv_out[a] / caps[a];
-                    let lb = kv_out[b] / caps[b];
-                    la.partial_cmp(&lb).unwrap()
-                })
-                .unwrap(),
             DispatchPolicy::P2c => {
                 let (x, y) = p2c_pair(&mut rng, n);
                 if outstanding[y].len() < outstanding[x].len() {
@@ -646,6 +865,12 @@ fn route_events(
                 } else {
                     x
                 }
+            }
+            _ => {
+                let p = tree.best().expect("n > 0 slots are all active");
+                #[cfg(debug_assertions)]
+                assert_eq!(p, scan_pick_events(policy, &outstanding, &kv_out, caps));
+                p
             }
         };
         assigned[pick].push(*ev);
@@ -655,12 +880,18 @@ fn route_events(
             .iter()
             .copied()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
             .unwrap();
         let finish = free.max(t) + est;
         servers[pick][si] = finish;
         kv_out[pick] += kv;
         outstanding[pick].push(Reverse(OutEntry { finish, kv }));
+        if indexed {
+            tree.update(
+                pick,
+                event_key(policy, outstanding[pick].len(), kv_out[pick] / caps[pick]),
+            );
+        }
     }
     assigned
 }
@@ -734,6 +965,11 @@ fn crash_instance(
 /// fault-free streams stay bit-identical — backing off exponentially
 /// while the fleet is down and dropping on the retry budget or the
 /// per-request deadline.
+///
+/// Returns `true` when any action fired — the streaming router's
+/// dispatch tree resyncs its keys only on that signal (§Perf
+/// iteration 7), since every branch below may change queue depths or
+/// the active set.
 #[allow(clippy::too_many_arguments)]
 fn apply_health_until(
     until: f64,
@@ -750,8 +986,9 @@ fn apply_health_until(
     basis: &[(f64, f64)],
     ref_prompt: usize,
     tracer: &Tracer,
-) {
+) -> bool {
     let n = engines.len();
+    let mut changed = false;
     loop {
         let t_rec = h.next_recovery();
         let t_fault = fault_q.front().map_or(f64::INFINITY, |e| e.t);
@@ -762,6 +999,7 @@ fn apply_health_until(
         if !tmin.is_finite() || tmin > until {
             break;
         }
+        changed = true;
 
         if t_rec <= t_fault && t_rec <= t_retry {
             if let Some(i) = h.recover_due(t_rec) {
@@ -911,12 +1149,13 @@ fn apply_health_until(
             .iter()
             .copied()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
             .unwrap();
         let finish = free.max(t) + est;
         servers[p][si] = finish;
         outstanding[p].push(Reverse(FinishTime(finish)));
     }
+    changed
 }
 
 /// Fleet simulator: dispatch + N request-level engines + aggregation.
@@ -1251,6 +1490,27 @@ impl<'a> ClusterSim<'a> {
         let mut scale_ups = 0usize;
         let mut scale_downs = 0usize;
 
+        // O(log n) dispatch tree (§Perf iteration 7): one active slot
+        // per member of the active set, kept in sync at every mutation
+        // point below (retire sweep, dispatch, autoscale, health
+        // actions). The health-aware metric policies restage the active
+        // keys before each pick instead — thermal state moves with
+        // every arrival, so their scores cannot be maintained
+        // incrementally (the O(n) restage is the cost the old scan
+        // paid anyway).
+        let policy = self.cfg.policy;
+        let indexed = policy_is_indexed(policy);
+        let metric_scan = health.is_some()
+            && matches!(policy, DispatchPolicy::LeastHot | DispatchPolicy::WearLevel);
+        let mut tree = MinTree::new(if indexed { n } else { 0 });
+        if indexed {
+            for &i in &active {
+                tree.stage(i, stream_key(policy, i, &outstanding, &caps, health.as_ref()));
+            }
+            tree.rebuild();
+        }
+        let mut retired: Vec<usize> = Vec::new();
+
         let events =
             scfg.arrivals
                 .events(scfg.seed, scfg.prompt_len, scfg.gen_tokens, &scfg.len_dist);
@@ -1262,7 +1522,7 @@ impl<'a> ClusterSim<'a> {
             // faults, retry re-dispatches, recoveries), then refresh
             // the thermal state so routing sees current temperatures
             if let Some(h) = health.as_mut() {
-                apply_health_until(
+                let health_changed = apply_health_until(
                     t,
                     h,
                     &mut fault_q,
@@ -1284,6 +1544,18 @@ impl<'a> ClusterSim<'a> {
                         engines[i].set_throttle(h.slowdown(i));
                     }
                 }
+                if indexed && health_changed {
+                    // crashes, recoveries and retries may have moved
+                    // queues or the active set: resync the whole tree
+                    // (rare relative to arrivals)
+                    for i in 0..n {
+                        tree.stage(i, Key::INACTIVE);
+                    }
+                    for &i in &active {
+                        tree.stage(i, stream_key(policy, i, &outstanding, &caps, Some(&*h)));
+                    }
+                    tree.rebuild();
+                }
                 if active.is_empty() {
                     // every instance is down: nowhere to route — the
                     // arrival lands in the fault-drop ledger
@@ -1295,12 +1567,26 @@ impl<'a> ClusterSim<'a> {
                 }
             }
 
-            for o in outstanding.iter_mut() {
+            retired.clear();
+            for (i, o) in outstanding.iter_mut().enumerate() {
+                let before = o.len();
                 while let Some(&Reverse(FinishTime(f))) = o.peek() {
                     if f <= t {
                         o.pop();
                     } else {
                         break;
+                    }
+                }
+                if o.len() != before {
+                    retired.push(i);
+                }
+            }
+            if indexed {
+                for &i in &retired {
+                    // parked instances drain without a tree slot
+                    if tree.is_active(i) {
+                        let k = stream_key(policy, i, &outstanding, &caps, health.as_ref());
+                        tree.update(i, k);
                     }
                 }
             }
@@ -1323,6 +1609,12 @@ impl<'a> ClusterSim<'a> {
                         }) {
                             active.push(next);
                             active.sort_unstable();
+                            if indexed {
+                                tree.set(
+                                    next,
+                                    stream_key(policy, next, &outstanding, &caps, health.as_ref()),
+                                );
+                            }
                             scale_ups += 1;
                             last_scale = t;
                             if tracer.on() {
@@ -1338,6 +1630,9 @@ impl<'a> ClusterSim<'a> {
                         // park the highest-index active instance; it
                         // drains what it holds
                         let parked = active.pop().expect("active fleet is never empty");
+                        if indexed {
+                            tree.clear(parked);
+                        }
                         scale_downs += 1;
                         last_scale = t;
                         if tracer.on() {
@@ -1359,26 +1654,12 @@ impl<'a> ClusterSim<'a> {
             }
 
             let na = active.len();
-            let pick = match self.cfg.policy {
+            let pick = match policy {
                 DispatchPolicy::RoundRobin => {
                     let p = active[rr_cursor % na];
                     rr_cursor += 1;
                     p
                 }
-                DispatchPolicy::Jsq => active
-                    .iter()
-                    .copied()
-                    .min_by_key(|&i| (outstanding[i].len(), i))
-                    .unwrap(),
-                DispatchPolicy::LeastKv => active
-                    .iter()
-                    .copied()
-                    .min_by(|&a, &b| {
-                        let la = outstanding[a].len() as f64 / caps[a];
-                        let lb = outstanding[b].len() as f64 / caps[b];
-                        la.total_cmp(&lb).then(a.cmp(&b))
-                    })
-                    .unwrap(),
                 DispatchPolicy::P2c => {
                     let (x, y) = p2c_pair(&mut rng, na);
                     let (ia, ib) = (active[x], active[y]);
@@ -1388,43 +1669,29 @@ impl<'a> ClusterSim<'a> {
                         ia
                     }
                 }
-                DispatchPolicy::LeastHot => match &health {
-                    // coolest instance first; queue depth then index
-                    // break ties (exact JSQ without a health runtime)
-                    Some(h) => active
-                        .iter()
-                        .copied()
-                        .min_by(|&a, &b| {
-                            h.temp_c(a)
-                                .total_cmp(&h.temp_c(b))
-                                .then_with(|| outstanding[a].len().cmp(&outstanding[b].len()))
-                                .then(a.cmp(&b))
-                        })
-                        .unwrap(),
-                    None => active
-                        .iter()
-                        .copied()
-                        .min_by_key(|&i| (outstanding[i].len(), i))
-                        .unwrap(),
-                },
-                DispatchPolicy::WearLevel => match &health {
-                    // least-worn ReRAM first; same tiebreak ladder
-                    Some(h) => active
-                        .iter()
-                        .copied()
-                        .min_by(|&a, &b| {
-                            h.wear_frac(a)
-                                .total_cmp(&h.wear_frac(b))
-                                .then_with(|| outstanding[a].len().cmp(&outstanding[b].len()))
-                                .then(a.cmp(&b))
-                        })
-                        .unwrap(),
-                    None => active
-                        .iter()
-                        .copied()
-                        .min_by_key(|&i| (outstanding[i].len(), i))
-                        .unwrap(),
-                },
+                // Jsq / LeastKv / LeastHot / WearLevel: the tree holds
+                // each policy's key (see `stream_key`), so the four
+                // former per-policy scans collapse into one O(1) read.
+                _ => {
+                    if metric_scan {
+                        // thermal/wear scores moved with this arrival:
+                        // restage the active keys, then pick
+                        for &i in &active {
+                            tree.stage(
+                                i,
+                                stream_key(policy, i, &outstanding, &caps, health.as_ref()),
+                            );
+                        }
+                        tree.rebuild();
+                    }
+                    let p = tree.best().expect("active fleet is never empty");
+                    #[cfg(debug_assertions)]
+                    assert_eq!(
+                        p,
+                        scan_pick_streaming(policy, &active, &outstanding, &caps, health.as_ref())
+                    );
+                    p
+                }
             };
 
             let mut est = event_est(basis[pick], &ev, scfg.prompt_len);
@@ -1437,7 +1704,7 @@ impl<'a> ClusterSim<'a> {
                 .iter()
                 .copied()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(&b.1))
                 .unwrap();
 
             // SLO admission: shed if the predicted TTFT (virtual queue
@@ -1482,6 +1749,9 @@ impl<'a> ClusterSim<'a> {
             let finish = free.max(t) + est;
             servers[pick][si] = finish;
             outstanding[pick].push(Reverse(FinishTime(finish)));
+            if indexed {
+                tree.update(pick, stream_key(policy, pick, &outstanding, &caps, health.as_ref()));
+            }
         }
 
         // settle every fault, retry and recovery scheduled past the
@@ -1738,7 +2008,11 @@ mod tests {
             }
             let pick = match policy {
                 DispatchPolicy::RoundRobin => k % n,
-                DispatchPolicy::Jsq => (0..n).min_by_key(|&i| outstanding[i].len()).unwrap(),
+                // the buffered oracle's health-aware policies degenerate
+                // to their JSQ tiebreak (no health runtime)
+                DispatchPolicy::Jsq | DispatchPolicy::LeastHot | DispatchPolicy::WearLevel => {
+                    (0..n).min_by_key(|&i| outstanding[i].len()).unwrap()
+                }
                 DispatchPolicy::LeastKv => (0..n)
                     .min_by(|&a, &b| {
                         let la = outstanding[a].len() as f64 * kv_full / caps[a];
@@ -1788,6 +2062,67 @@ mod tests {
                 retain_sweep_reference(policy, &arrivals, &est, &caps, kv_full, 4, 0x5EED);
             assert_eq!(heap, golden, "policy {}", policy.name());
             let routed: usize = heap.iter().map(Vec::len).sum();
+            assert_eq!(routed, arrivals.len(), "policy {}", policy.name());
+        }
+    }
+
+    #[test]
+    fn tree_dispatch_matches_retain_sweep_on_a_wide_fleet() {
+        // 64 uneven instances, 400 arrivals: the tournament-tree picks
+        // (§Perf iteration 7) must reproduce the O(n)-scan retain-sweep
+        // reference request for request, for every policy — including
+        // the health-aware pair, which degenerates to JSQ in the
+        // buffered oracle
+        let arrivals = ArrivalProcess::Poisson {
+            rate_per_sec: 900.0,
+            num_requests: 400,
+        }
+        .times(0x64D1);
+        let mut rng = crate::util::Rng::new(0xA11D);
+        let est: Vec<f64> = (0..64).map(|_| 0.004 + 0.08 * rng.f64()).collect();
+        let caps: Vec<f64> = (0..64).map(|_| (2.0 + 14.0 * rng.f64()) * 1.0e9).collect();
+        let kv_full = 3.0e7;
+        for policy in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::Jsq,
+            DispatchPolicy::LeastKv,
+            DispatchPolicy::P2c,
+            DispatchPolicy::LeastHot,
+            DispatchPolicy::WearLevel,
+        ] {
+            let tree = route_requests(policy, &arrivals, &est, &caps, kv_full, 4, 0x5EED);
+            let golden =
+                retain_sweep_reference(policy, &arrivals, &est, &caps, kv_full, 4, 0x5EED);
+            assert_eq!(tree, golden, "policy {}", policy.name());
+            let routed: usize = tree.iter().map(Vec::len).sum();
+            assert_eq!(routed, arrivals.len(), "policy {}", policy.name());
+        }
+    }
+
+    #[test]
+    fn nan_scores_route_deterministically_instead_of_panicking() {
+        // a poisoned service estimate / KV capacity used to panic the
+        // router comparators (`partial_cmp().unwrap()`); under
+        // `total_cmp` a NaN score sorts after every real one, so the
+        // poisoned instance is simply picked last — dispatch stays
+        // deterministic and every arrival is still routed
+        let arrivals = ArrivalProcess::Poisson {
+            rate_per_sec: 200.0,
+            num_requests: 40,
+        }
+        .times(0xBAD);
+        let est = [f64::NAN, 0.02, 0.01];
+        let caps = [f64::NAN, 4.0e9, 8.0e9];
+        for policy in [
+            DispatchPolicy::Jsq,
+            DispatchPolicy::LeastKv,
+            DispatchPolicy::LeastHot,
+            DispatchPolicy::WearLevel,
+        ] {
+            let a = route_requests(policy, &arrivals, &est, &caps, 3.0e7, 4, 1);
+            let b = route_requests(policy, &arrivals, &est, &caps, 3.0e7, 4, 1);
+            assert_eq!(a, b, "policy {} must stay deterministic", policy.name());
+            let routed: usize = a.iter().map(Vec::len).sum();
             assert_eq!(routed, arrivals.len(), "policy {}", policy.name());
         }
     }

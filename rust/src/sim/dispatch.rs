@@ -1,0 +1,285 @@
+//! Indexed dispatch priority structure — the O(log n) replacement for
+//! the per-arrival `(0..n).min_by(...)` instance scans in the fleet
+//! routers (§Perf iteration 7 of the serving stack).
+//!
+//! [`MinTree`] is a tournament (winner) tree over a fixed slot range:
+//! each leaf holds one instance's dispatch [`Key`], each internal node
+//! the winning leaf index of its subtree. Point updates (a dispatch
+//! bumping one queue, a retire draining one, a health event parking an
+//! instance) recompute one root-to-leaf path in O(log n); the winner is
+//! read off the root in O(1). A bulk [`MinTree::rebuild`] restores the
+//! whole tree in O(n) for fleet-wide key refreshes (thermal sweeps
+//! touch every instance's temperature, so the health-aware policies
+//! restage all keys before picking).
+//!
+//! Determinism contract: ties break to the LOWEST leaf index — the left
+//! child wins equal keys, and the left subtree always holds the smaller
+//! indices — which is exactly the first-minimum semantics of the
+//! `min_by`/`min_by_key` scans this structure replaces. The routers pin
+//! that equivalence with debug-mode reference scans and the retain-sweep
+//! golden tests in `sim::cluster`.
+//!
+//! Keys compare with [`f64::total_cmp`], never `partial_cmp().unwrap()`:
+//! a NaN score (poisoned service estimate, degenerate KV capacity) must
+//! route *somewhere* deterministically instead of panicking the fleet —
+//! under total order NaN sorts after every real score, so a poisoned
+//! instance is simply picked last. Inactive slots are flagged out of
+//! band (`active: false`) rather than scored `+inf`, so even a NaN key
+//! still beats a parked instance.
+
+use std::cmp::Ordering;
+
+/// One instance's dispatch score: a two-level key compared as
+/// `(a, b)` lexicographically under `total_cmp`, with inactive slots
+/// losing to every active one. Policies map onto it as, e.g., JSQ →
+/// `(queue_len, 0)`, least-KV → `(kv_pressure, 0)`, least-hot →
+/// `(temp_c, queue_len)`, wear-level → `(wear_frac, queue_len)`.
+#[derive(Debug, Clone, Copy)]
+pub struct Key {
+    /// Eligible for dispatch (alive + in the active set). Explicit
+    /// flag, not an `f64::INFINITY` sentinel: NaN scores must still
+    /// beat parked slots.
+    pub active: bool,
+    pub a: f64,
+    pub b: f64,
+}
+
+impl Key {
+    /// A parked/dead slot: loses to every active key.
+    pub const INACTIVE: Key = Key {
+        active: false,
+        a: 0.0,
+        b: 0.0,
+    };
+
+    /// An active key with primary score `a` and tiebreak score `b`.
+    pub fn of(a: f64, b: f64) -> Key {
+        Key { active: true, a, b }
+    }
+
+    /// Strictly better than `other` (equal keys do NOT beat — the tree
+    /// keeps the left/lower-index winner on ties).
+    fn beats(&self, other: &Key) -> bool {
+        match (self.active, other.active) {
+            (false, _) => false,
+            (true, false) => true,
+            (true, true) => match self.a.total_cmp(&other.a) {
+                Ordering::Less => true,
+                Ordering::Greater => false,
+                Ordering::Equal => self.b.total_cmp(&other.b) == Ordering::Less,
+            },
+        }
+    }
+}
+
+/// Tournament tree over `n` slots; see the module docs for the
+/// determinism contract.
+pub struct MinTree {
+    n: usize,
+    /// leaf span: smallest power of two >= max(n, 1)
+    size: usize,
+    /// per-leaf keys, padded to `size` with [`Key::INACTIVE`]
+    keys: Vec<Key>,
+    /// winner array: `win[1]` is the root winner's leaf index,
+    /// `win[size + i] == i` are the leaves
+    win: Vec<u32>,
+}
+
+impl MinTree {
+    pub fn new(n: usize) -> MinTree {
+        let size = n.max(1).next_power_of_two();
+        let mut win = vec![0u32; 2 * size];
+        for (i, w) in win.iter_mut().enumerate().skip(size) {
+            *w = (i - size) as u32;
+        }
+        let mut t = MinTree {
+            n,
+            size,
+            keys: vec![Key::INACTIVE; size],
+            win,
+        };
+        t.rebuild();
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn is_active(&self, i: usize) -> bool {
+        self.keys[i].active
+    }
+
+    /// Point update: set slot `i`'s key and recompute its root path in
+    /// O(log n).
+    pub fn update(&mut self, i: usize, key: Key) {
+        debug_assert!(i < self.n, "slot {i} out of range {}", self.n);
+        self.keys[i] = key;
+        let mut p = (self.size + i) >> 1;
+        while p >= 1 {
+            let l = self.win[2 * p] as usize;
+            let r = self.win[2 * p + 1] as usize;
+            self.win[p] = if self.keys[r].beats(&self.keys[l]) {
+                r as u32
+            } else {
+                l as u32
+            };
+            p >>= 1;
+        }
+    }
+
+    /// Activate slot `i` with `key` (alias of [`Self::update`], named
+    /// for the autoscaler call sites).
+    pub fn set(&mut self, i: usize, key: Key) {
+        self.update(i, key);
+    }
+
+    /// Park slot `i`: it can no longer win until re-`set`.
+    pub fn clear(&mut self, i: usize) {
+        self.update(i, Key::INACTIVE);
+    }
+
+    /// Write slot `i`'s key WITHOUT recomputing winners — pair with
+    /// [`Self::rebuild`] for O(n) bulk refreshes.
+    pub fn stage(&mut self, i: usize, key: Key) {
+        debug_assert!(i < self.n, "slot {i} out of range {}", self.n);
+        self.keys[i] = key;
+    }
+
+    /// Recompute every internal winner bottom-up in O(n).
+    pub fn rebuild(&mut self) {
+        for p in (1..self.size).rev() {
+            let l = self.win[2 * p] as usize;
+            let r = self.win[2 * p + 1] as usize;
+            self.win[p] = if self.keys[r].beats(&self.keys[l]) {
+                r as u32
+            } else {
+                l as u32
+            };
+        }
+    }
+
+    /// The winning (minimum-key) active slot, lowest index on ties;
+    /// `None` when every slot is parked.
+    pub fn best(&self) -> Option<usize> {
+        let w = self.win[1] as usize;
+        if self.keys[w].active {
+            Some(w)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// The scan the tree replaces: first index with the minimum
+    /// (active, a, b) key under total order.
+    fn scan_best(keys: &[Key]) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, k) in keys.iter().enumerate() {
+            if !k.active {
+                continue;
+            }
+            match best {
+                None => best = Some(i),
+                Some(b) => {
+                    if k.beats(&keys[b]) {
+                        best = Some(i);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn ties_break_to_lowest_index() {
+        for n in [1usize, 2, 3, 5, 8, 13] {
+            let mut t = MinTree::new(n);
+            for i in 0..n {
+                t.set(i, Key::of(1.0, 2.0));
+            }
+            assert_eq!(t.best(), Some(0), "n={n}");
+            // equal primary, tiebreak decides
+            t.update(2.min(n - 1), Key::of(1.0, 1.0));
+            assert_eq!(t.best(), Some(2.min(n - 1)), "n={n}");
+        }
+    }
+
+    #[test]
+    fn empty_and_parked_trees_have_no_winner() {
+        let t = MinTree::new(0);
+        assert!(t.is_empty());
+        assert_eq!(t.best(), None);
+        let mut t = MinTree::new(6);
+        assert_eq!(t.best(), None, "all slots start parked");
+        t.set(3, Key::of(9.0, 0.0));
+        assert!(t.is_active(3));
+        assert_eq!(t.best(), Some(3));
+        t.clear(3);
+        assert_eq!(t.best(), None);
+    }
+
+    #[test]
+    fn nan_keys_lose_to_reals_but_beat_parked_slots() {
+        let mut t = MinTree::new(4);
+        t.set(1, Key::of(f64::NAN, 0.0));
+        // a NaN score still routes (deterministically) on an otherwise
+        // parked fleet — the scan it replaces would have panicked
+        assert_eq!(t.best(), Some(1));
+        t.set(2, Key::of(1.0e9, 0.0));
+        assert_eq!(t.best(), Some(2), "any real beats NaN under total_cmp");
+        t.set(0, Key::of(f64::NAN, 0.0));
+        t.clear(2);
+        assert_eq!(t.best(), Some(0), "NaN vs NaN ties to the lowest index");
+    }
+
+    #[test]
+    fn random_updates_match_the_linear_scan() {
+        let mut rng = Rng::new(0x7EE5);
+        for &n in &[1usize, 3, 7, 16, 33] {
+            let mut t = MinTree::new(n);
+            let mut keys = vec![Key::INACTIVE; n];
+            for step in 0..400 {
+                let i = rng.below(n);
+                let k = match rng.below(5) {
+                    0 => Key::INACTIVE,
+                    1 => Key::of(rng.below(4) as f64, 0.0),
+                    _ => Key::of(rng.f64(), rng.below(3) as f64),
+                };
+                keys[i] = k;
+                t.update(i, k);
+                assert_eq!(t.best(), scan_best(&keys), "n={n} step={step}");
+            }
+        }
+    }
+
+    #[test]
+    fn bulk_rebuild_matches_incremental_updates() {
+        let mut rng = Rng::new(0xB1A5);
+        let n = 21;
+        let mut inc = MinTree::new(n);
+        let mut bulk = MinTree::new(n);
+        for _ in 0..50 {
+            for i in 0..n {
+                let k = if rng.below(4) == 0 {
+                    Key::INACTIVE
+                } else {
+                    Key::of(rng.f64(), rng.f64())
+                };
+                inc.update(i, k);
+                bulk.stage(i, k);
+            }
+            bulk.rebuild();
+            assert_eq!(inc.best(), bulk.best());
+        }
+    }
+}

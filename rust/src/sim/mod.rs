@@ -32,6 +32,10 @@
 //!   Two modes: the buffered exact-quantile oracle (`run_with_jobs`)
 //!   and the single-pass streaming fleet (`run_streaming`) with
 //!   optional load-watermark autoscaling and SLO-aware shedding.
+//! - [`dispatch`]: the indexed dispatch priority structure behind the
+//!   fleet routers — a tournament tree giving O(log n) per-arrival
+//!   instance picks with scan-identical lowest-index tie-breaking
+//!   (§Perf iteration 7).
 //! - [`health`]: degradation + faults for the streaming fleet — RC
 //!   thermal state with throttling, ReRAM write wear decaying KV
 //!   capacity, and a seeded [`FaultPlan`] of instance crashes,
@@ -41,6 +45,7 @@
 pub mod arrivals;
 pub mod cluster;
 pub mod decode;
+pub mod dispatch;
 pub mod engine;
 pub mod health;
 pub mod platform;

@@ -145,6 +145,16 @@ impl Platform {
         self.cycle.borrow().heatmap_json()
     }
 
+    /// Total cycles the cycle-accurate NoI simulator fast-forwarded
+    /// over across every phase this platform has run (§Perf
+    /// iteration 7). Always-on — independent of
+    /// [`Self::enable_noi_profiling`] — and purely observational: the
+    /// skipped cycles are replayed into the stats, so results are
+    /// bit-identical whatever this counts.
+    pub fn noi_ff_cycles_skipped(&self) -> u64 {
+        self.cycle.borrow().ff_cycles_skipped_total()
+    }
+
     fn build(
         arch: Arch,
         sys: &SystemConfig,
@@ -411,6 +421,28 @@ mod tests {
             parsed.get("phases").and_then(|v| v.as_usize()).unwrap() > 0,
             "cycle-accurate phases must fold into the profile"
         );
+        assert!(
+            parsed.get("ff_cycles_skipped").and_then(|v| v.as_usize()).is_some(),
+            "the profile must expose the fast-forward counter"
+        );
+    }
+
+    #[test]
+    fn ff_counter_is_plumbed_through_the_platform() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let opts = SimOptions {
+            cycle_accurate: true,
+            ..Default::default()
+        };
+        let p = Platform::new(Arch::Hi25D, &sys, &opts);
+        assert_eq!(p.noi_ff_cycles_skipped(), 0, "nothing run yet");
+        p.run(&m, 64, &opts);
+        // dense all-to-all phases may or may not hit a fast-forwardable
+        // state; the counter only has to be readable and monotone
+        let after_one = p.noi_ff_cycles_skipped();
+        p.run(&m, 64, &opts);
+        assert!(p.noi_ff_cycles_skipped() >= after_one, "lifetime counter is monotone");
     }
 
     #[test]

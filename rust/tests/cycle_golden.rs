@@ -268,6 +268,8 @@ impl RefSim {
             },
             scale,
             drained: done_packets == n_packets,
+            // the reference ticks every cycle: nothing is fast-forwarded
+            ff_cycles_skipped: 0,
         }
     }
 }
@@ -283,6 +285,10 @@ fn mesh4() -> (Topology, RoutingTable) {
     (t, r)
 }
 
+/// Field-by-field equality, EXCLUDING `ff_cycles_skipped`: that counter
+/// is pure instrumentation of the production fast-forward (the ticking
+/// reference never skips), and every simulated quantity must agree
+/// regardless of how many cycles were replayed arithmetically.
 fn assert_identical(a: &SimResult, b: &SimResult, tag: &str) {
     assert_eq!(a.cycles, b.cycles, "{tag}: cycles");
     assert_eq!(a.packets, b.packets, "{tag}: packets");
@@ -416,6 +422,64 @@ fn arena_sim_matches_reference_under_volume_sampling() {
     let b = reference.run_phase(&m, 32.0);
     assert!(a.scale > 1.0);
     assert_identical(&a, &b, "sampled phase");
+}
+
+#[test]
+fn sparse_long_flow_fast_forwards_and_matches_reference() {
+    // a single 1-flit flow across a 16x16 mesh: after the injection
+    // cycle the network holds one flit with 29 hops to go, so the
+    // fast-forward must replay the whole march (29 skipped cycles)
+    // while staying bit-identical to the ticking reference
+    let p = Placement::identity(256, 16, 16);
+    let t = Topology::mesh(&p);
+    let r = RoutingTable::build(&t);
+    let mut arena = CycleSim::new(&t, &r, 8);
+    let mut reference = RefSim::new(&t, &r, 8);
+    let mut m = TrafficMatrix::zeros(256, KernelKind::Score, 1);
+    m.add(0, 255, 32.0);
+    let a = arena.run_phase(&m, 32.0);
+    let b = reference.run_phase(&m, 32.0);
+    assert_identical(&a, &b, "sparse 16x16 phase");
+    assert!(a.drained);
+    assert_eq!(a.cycles, 31, "inject c1, 29 forwards, eject c31");
+    assert_eq!(a.ff_cycles_skipped, 29, "the march must be fast-forwarded");
+    assert_eq!(b.ff_cycles_skipped, 0);
+}
+
+#[test]
+fn staggered_waves_leave_a_quiescent_tail_that_fast_forwards() {
+    // waves of different lengths on an 8x8 mesh: two short local bursts
+    // (on leftward links no monotone 0→63 shortest path can use, so
+    // they never contend with the long flow) drain early, leaving the
+    // corner-to-corner flit marching alone — the tail of the phase must
+    // fast-forward and the whole phase must match the reference
+    let p = Placement::identity(64, 8, 8);
+    let t = Topology::mesh(&p);
+    let r = RoutingTable::build(&t);
+    let mut arena = CycleSim::new(&t, &r, 8);
+    let mut reference = RefSim::new(&t, &r, 8);
+    let mut m = TrafficMatrix::zeros(64, KernelKind::Score, 1);
+    m.add(0, 63, 32.0); // 14-hop lone marcher
+    m.add(18, 17, 256.0); // 8-flit burst, done by cycle 9
+    m.add(45, 44, 64.0); // 2-flit burst, done by cycle 3
+    let a = arena.run_phase(&m, 32.0);
+    let b = reference.run_phase(&m, 32.0);
+    assert_identical(&a, &b, "staggered waves phase");
+    assert!(a.drained);
+    assert!(
+        a.ff_cycles_skipped > 0,
+        "quiescent tail must engage the fast path (skipped {})",
+        a.ff_cycles_skipped
+    );
+    // run a second, denser phase through the SAME sims: scratch state
+    // left by a fast-forwarded phase must not leak
+    let mut m2 = TrafficMatrix::zeros(64, KernelKind::Score, 1);
+    for s in 0..8 {
+        m2.add(s, 63 - s, 128.0);
+    }
+    let a2 = arena.run_phase(&m2, 32.0);
+    let b2 = reference.run_phase(&m2, 32.0);
+    assert_identical(&a2, &b2, "post-fast-forward reuse phase");
 }
 
 #[test]
