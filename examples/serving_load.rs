@@ -231,6 +231,7 @@ fn main() {
             cooldown_secs: 0.2,
         }),
         slo_ttft_secs: Some(50.0 * est_fast),
+        ..Default::default()
     };
     let fleet = ClusterSim::new(&sys, &model, streaming)
         .run_streaming(&stream)

@@ -52,6 +52,7 @@ fn main() {
             cooldown_secs: 0.05,
         }),
         slo_ttft_secs: None,
+        ..Default::default()
     };
     let tracer = Tracer::recording().with_metrics_every(0.01);
     let fleet = ClusterSim::new(&sys, &model, cfg)

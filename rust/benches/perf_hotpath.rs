@@ -9,10 +9,11 @@
 //! tracks the health runtime's overhead too, plus the §Perf iteration 7
 //! targets: a sparse cycle-sim phase dominated by quiescent cycles
 //! (event-driven fast-forward) and a wide-fleet dispatch run (the
-//! O(log n) tournament-tree router). Emits the machine-readable
-//! `BENCH_9.json` perf trajectory (labels are kept stable across
-//! `BENCH_*` generations so CI can diff against the archived
-//! baseline).
+//! O(log n) tournament-tree router), plus the recovery runtime under a
+//! crash storm (periodic KV checkpointing + replica restores). Emits
+//! the machine-readable `BENCH_10.json` perf trajectory (labels are
+//! kept stable across `BENCH_*` generations so CI can diff against the
+//! archived baseline).
 
 use chiplet_hi::arch::{Placement, SfcKind};
 use chiplet_hi::baselines::Arch;
@@ -24,8 +25,9 @@ use chiplet_hi::noi::{analytic, CycleSim, RoutingTable, Topology};
 use chiplet_hi::obs::Tracer;
 use chiplet_hi::sim::engine::chiplets_for;
 use chiplet_hi::sim::{
-    simulate, ArrivalProcess, ClusterConfig, ClusterSim, DispatchPolicy, FaultPlan, HealthConfig,
-    InstanceSpec, Platform, ServingConfig, ServingSim, SimOptions, StreamConfig,
+    simulate, ArrivalProcess, CheckpointConfig, ClusterConfig, ClusterSim, DispatchPolicy,
+    FaultPlan, HealthConfig, InstanceSpec, Platform, ServingConfig, ServingSim, SimOptions,
+    StreamConfig,
 };
 use chiplet_hi::util::bench::Bencher;
 use chiplet_hi::util::{Rng, SinkMode};
@@ -258,6 +260,34 @@ fn main() {
          (health runtime on, 1 crash + 1 stall, {stream_n} requests)"
     );
 
+    // recovery runtime: the same streaming fleet with periodic KV
+    // checkpoint/replication live and a crash storm mid-run — the
+    // per-arrival cost of checkpoint ticks + replica restores on top
+    // of the degraded path above
+    let recovery_stream = StreamConfig {
+        faults: Some(
+            FaultPlan::parse("crash@0.05:0:0.05,crash@0.12:1:0.05")
+                .expect("bench fault plan parses"),
+        ),
+        checkpoint: Some(CheckpointConfig {
+            interval_secs: 0.01,
+            link_gbps: 64.0,
+        }),
+        ..Default::default()
+    };
+    let recovery_label = "fleet_recovery_2inst_2000req";
+    b.bench(recovery_label, || {
+        let c = ClusterSim::new(&sys, &gpt, stream_cfg.clone());
+        std::hint::black_box(c.run_streaming(&recovery_stream).unwrap());
+    });
+    let recovery_secs = b.min_secs(recovery_label).unwrap_or(f64::NAN);
+    let recovery_rps =
+        b.note_metric("fleet_recovery_reqs_per_s", stream_n as f64 / recovery_secs);
+    println!(
+        "\nrecovering streaming fleet: {recovery_rps:.0} req/s sustained \
+         (10 ms KV checkpoints, 2 crashes, {stream_n} requests)"
+    );
+
     // sparse cycle-sim phase (§Perf iteration 7): one lone flit
     // marching the full diagonal of a 16×16 mesh — almost every cycle
     // is a single-event tick the fast-forward path collapses, so this
@@ -303,8 +333,8 @@ fn main() {
     });
 
     // machine-readable perf trajectory (archived by CI)
-    match b.write_json("BENCH_9.json") {
-        Ok(()) => println!("\nwrote BENCH_9.json"),
-        Err(e) => eprintln!("\nfailed to write BENCH_9.json: {e}"),
+    match b.write_json("BENCH_10.json") {
+        Ok(()) => println!("\nwrote BENCH_10.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_10.json: {e}"),
     }
 }

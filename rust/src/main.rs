@@ -33,6 +33,15 @@
 //!               [--deadline-ms MS]]  (thermal throttling + ReRAM wear)
 //!              [--fault-plan crash@T:I[:D],link@T:I:A-B,stall@T:I:S]
 //!               (seeded failure injection; implies --health)
+//!              [--ckpt-every-ms MS [--ckpt-gbps 64]]  (periodic KV
+//!               checkpoint/replication to a peer instance: crash
+//!               victims resume from their last checkpointed token
+//!               instead of recomputing the whole context)
+//!              [--snapshot-at T --snapshot out.json]  (serialize the
+//!               full streaming-fleet state at simulated time T and
+//!               exit; resuming reproduces the uncut run bit for bit)
+//!              [--resume snap.json]  (continue a snapshotted run;
+//!               needs the exact config that wrote the snapshot)
 //!              [--trace out.json [--metrics-every SECS]]  (Chrome-trace
 //!               export: request lifecycle spans + fleet events + windowed
 //!               gauges; single-instance and streaming-fleet modes)
@@ -54,9 +63,9 @@ use chiplet_hi::endurance;
 use chiplet_hi::model::kernels::Workload;
 use chiplet_hi::moo::{amosa, design::NoiDesign, nsga2, stage, Evaluator, ParetoArchive};
 use chiplet_hi::sim::{
-    self, ArrivalProcess, AutoscaleConfig, ClusterConfig, ClusterSim, DispatchPolicy, FaultPlan,
-    HealthConfig, InstanceSpec, LenDist, Platform, ServingConfig, ServingReport, ServingSim,
-    SimOptions, StreamConfig, Tenant,
+    self, ArrivalProcess, AutoscaleConfig, CheckpointConfig, ClusterConfig, ClusterSim,
+    DispatchPolicy, FaultPlan, HealthConfig, InstanceSpec, LenDist, Platform, ServingConfig,
+    ServingReport, ServingSim, SimOptions, StreamConfig, StreamOutcome, Tenant,
 };
 use chiplet_hi::obs::Tracer;
 use chiplet_hi::util::SinkMode;
@@ -285,7 +294,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 &["mu", "sigma", "extra objectives"],
             );
             let mut front = archive.objectives();
-            front.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+            front.sort_by(|a, b| a[0].total_cmp(&b[0]));
             for o in &front {
                 t.row(vec![
                     format!("{:.4}", o[0]),
@@ -535,10 +544,43 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                         ..Default::default()
                     }
                 });
+                // --ckpt-every-ms arms KV checkpoint/replication;
+                // --snapshot-at/--snapshot/--resume split-and-continue
+                // a run — all of them are streaming-fleet features
+                let checkpoint = args
+                    .get("ckpt-every-ms")
+                    .map(|v| -> Result<CheckpointConfig> {
+                        Ok(CheckpointConfig {
+                            interval_secs: v
+                                .parse::<f64>()
+                                .map_err(|_| anyhow!("--ckpt-every-ms expects a number"))?
+                                / 1e3,
+                            link_gbps: args.get_f64("ckpt-gbps", 64.0),
+                        })
+                    })
+                    .transpose()?;
+                let snap_at = args
+                    .get("snapshot-at")
+                    .map(|v| {
+                        v.parse::<f64>()
+                            .map_err(|_| anyhow!("--snapshot-at expects seconds"))
+                    })
+                    .transpose()?;
+                let snapshot_path = args.get("snapshot");
+                let resume_path = args.get("resume");
+                if snap_at.is_some() != snapshot_path.is_some() {
+                    bail!("--snapshot-at and --snapshot go together");
+                }
+                if resume_path.is_some() && snap_at.is_some() {
+                    bail!("--resume and --snapshot-at are mutually exclusive");
+                }
                 let streaming = args.has_flag("streaming")
                     || args.has_flag("autoscale")
                     || args.get("slo-ttft-ms").is_some()
-                    || health.is_some();
+                    || health.is_some()
+                    || checkpoint.is_some()
+                    || snap_at.is_some()
+                    || resume_path.is_some();
                 let fleet = if streaming {
                     let stream = StreamConfig {
                         autoscale: args.has_flag("autoscale").then(|| AutoscaleConfig {
@@ -555,8 +597,31 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                             .with_context(|| "parsing --slo-ttft-ms")?,
                         health,
                         faults,
+                        checkpoint,
                     };
-                    sim.run_streaming_traced(&stream, &tracer)?
+                    if let (Some(t), Some(path)) = (snap_at, snapshot_path) {
+                        match sim.run_streaming_snapshot(&stream, &tracer, t)? {
+                            StreamOutcome::Snapshot(js) => {
+                                std::fs::write(path, &js)
+                                    .with_context(|| format!("writing snapshot to {path}"))?;
+                                log_info!("wrote fleet snapshot at t={t}s to {path}");
+                                return Ok(());
+                            }
+                            StreamOutcome::Report(r) => {
+                                log_warn!(
+                                    "stream ended before the snapshot cut at {t}s; \
+                                     reporting the full run"
+                                );
+                                r
+                            }
+                        }
+                    } else if let Some(rp) = resume_path {
+                        let js = std::fs::read_to_string(rp)
+                            .with_context(|| format!("reading snapshot {rp}"))?;
+                        sim.run_streaming_resume(&stream, &tracer, &js)?
+                    } else {
+                        sim.run_streaming_traced(&stream, &tracer)?
+                    }
                 } else {
                     if trace_path.is_some() {
                         log_warn!(
@@ -608,6 +673,15 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                             fleet.throttle_events,
                             fleet.peak_temp_c,
                             fleet.peak_wear_frac,
+                        );
+                    }
+                    if fleet.checkpoint_bytes > 0.0 || fleet.recovered_tokens > 0 {
+                        println!(
+                            "recovery: {} tokens recovered from replicas, {} recomputed, \
+                             {:.2} MB checkpointed",
+                            fleet.recovered_tokens,
+                            fleet.recomputed_tokens,
+                            fleet.checkpoint_bytes / 1e6,
                         );
                     }
                 }
@@ -782,6 +856,9 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             );
             println!(
                 "degraded fleet: `serve --instances N --health [--t-throttle 95] [--throttle-factor 1.5] [--fault-plan crash@T:I[:D],link@T:I:A-B,stall@T:I:S] [--retry-limit 3] [--retry-backoff-ms 1] [--deadline-ms MS] --policy least-hot|wear-level`"
+            );
+            println!(
+                "crash recovery: `serve --instances N --fault-plan ... --ckpt-every-ms 50 [--ckpt-gbps 64]` (KV checkpoint/replication — victims resume, not recompute); snapshot/resume: `serve ... --snapshot-at T --snapshot s.json`, later `serve ... --resume s.json` (bit-identical continuation)"
             );
             println!(
                 "tracing: `serve ... --trace out.json [--metrics-every 0.5]` (Chrome/Perfetto trace: request spans, fleet events, windowed gauges)"

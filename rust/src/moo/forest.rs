@@ -48,7 +48,7 @@ impl Tree {
         let mut best: Option<(usize, f64, f64)> = None; // (feat, thr, score)
         for &f in &feats {
             let mut vals: Vec<f64> = idx.iter().map(|&i| xs[i][f]).collect();
-            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.sort_by(|a, b| a.total_cmp(b));
             vals.dedup();
             if vals.len() < 2 {
                 continue;
@@ -218,6 +218,18 @@ mod tests {
         let ys = vec![3.5; 100];
         let rf = RandomForest::fit(&xs, &ys, 5, 4, 1);
         assert!((rf.predict(&[1.0, 2.0, 3.0, 4.0]) - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_feature_values_do_not_panic_the_split_sort() {
+        let (mut xs, ys) = make_data(60, |x| x[0], 6);
+        for (i, x) in xs.iter_mut().enumerate() {
+            if i % 7 == 0 {
+                x[1] = f64::NAN;
+            }
+        }
+        let rf = RandomForest::fit(&xs, &ys, 5, 4, 11);
+        assert!(rf.predict(&[5.0, 5.0, 5.0, 5.0]).is_finite());
     }
 
     #[test]

@@ -81,7 +81,7 @@ pub fn crowding(objs: &[Vec<f64>], idx: &[usize]) -> Vec<f64> {
     let dim = objs[idx[0]].len();
     for d in 0..dim {
         let mut order: Vec<usize> = (0..idx.len()).collect();
-        order.sort_by(|&a, &b| objs[idx[a]][d].partial_cmp(&objs[idx[b]][d]).unwrap());
+        order.sort_by(|&a, &b| objs[idx[a]][d].total_cmp(&objs[idx[b]][d]));
         let lo = objs[idx[order[0]]][d];
         let hi = objs[idx[*order.last().unwrap()]][d];
         let span = (hi - lo).max(1e-12);
@@ -192,11 +192,7 @@ pub fn nsga2(ev: &Evaluator, seeds: Vec<NoiDesign>, cfg: &Nsga2Config) -> Nsga2R
                 crowd[i] = c[k];
             }
         }
-        order.sort_by(|&a, &b| {
-            fronts[a]
-                .cmp(&fronts[b])
-                .then(crowd[b].partial_cmp(&crowd[a]).unwrap())
-        });
+        order.sort_by(|&a, &b| fronts[a].cmp(&fronts[b]).then(crowd[b].total_cmp(&crowd[a])));
         order.truncate(cfg.pop);
         pop = order.iter().map(|&i| all[i].clone()).collect();
         objs = order.iter().map(|&i| all_objs[i].clone()).collect();
@@ -247,6 +243,29 @@ mod tests {
         let c = crowding(&objs, &idx);
         assert!(c[0].is_infinite() && c[2].is_infinite());
         assert!(c[1].is_finite() && c[1] > 0.0);
+    }
+
+    #[test]
+    fn poisoned_nan_objectives_sort_without_panicking() {
+        // A degenerate evaluation (NaN latency from a disconnected
+        // candidate) must not panic the crowding sort or the
+        // environmental selection — total_cmp orders NaN after reals.
+        let objs = vec![
+            vec![1.0, 1.0],
+            vec![f64::NAN, 2.0],
+            vec![0.5, f64::NAN],
+            vec![f64::NAN, f64::NAN],
+            vec![2.0, 0.5],
+        ];
+        let idx: Vec<usize> = (0..objs.len()).collect();
+        let c = crowding(&objs, &idx);
+        assert_eq!(c.len(), objs.len());
+        // fronts + (front, -crowding) ordering: the same composite sort
+        // the GA's environmental selection runs each generation
+        let fronts = nondominated_sort(&objs);
+        let mut order: Vec<usize> = (0..objs.len()).collect();
+        order.sort_by(|&a, &b| fronts[a].cmp(&fronts[b]).then(c[b].total_cmp(&c[a])));
+        assert_eq!(order.len(), objs.len());
     }
 
     #[test]

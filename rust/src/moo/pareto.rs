@@ -73,7 +73,7 @@ impl<T: Clone> ParetoArchive<T> {
         self.entries.iter().min_by(|a, b| {
             let sa: f64 = a.0.iter().sum();
             let sb: f64 = b.0.iter().sum();
-            sa.partial_cmp(&sb).unwrap()
+            sa.total_cmp(&sb)
         })
     }
 
@@ -189,6 +189,16 @@ mod tests {
         }
         assert!(a.len() <= 10);
         assert!(a.len() >= 5, "archive kept a spread");
+    }
+
+    #[test]
+    fn best_scalar_survives_nan_objectives() {
+        let mut a = ParetoArchive::new();
+        a.insert(vec![f64::NAN, 0.2], "poisoned");
+        a.insert(vec![1.0, 1.0], "real");
+        // NaN sums sort after every real sum under total_cmp, so the
+        // real entry wins instead of the scan panicking
+        assert_eq!(a.best_scalar().unwrap().1, "real");
     }
 
     #[test]

@@ -33,7 +33,7 @@ pub fn hypervolume(front: &[Vec<f64>], ref_pt: &[f64]) -> f64 {
 
 fn hv2d(pts: &[&Vec<f64>], ref_pt: &[f64]) -> f64 {
     let mut sorted: Vec<&Vec<f64>> = pts.to_vec();
-    sorted.sort_by(|a, b| a[0].partial_cmp(&b[0]).unwrap());
+    sorted.sort_by(|a, b| a[0].total_cmp(&b[0]));
     let mut hv = 0.0;
     let mut prev_y = ref_pt[1];
     for p in sorted {
@@ -109,6 +109,16 @@ mod tests {
         let strong = vec![vec![1.0, 1.0]];
         let r = [3.0, 3.0];
         assert!(hypervolume(&strong, &r) > hypervolume(&weak, &r));
+    }
+
+    #[test]
+    fn nan_front_point_does_not_panic_the_2d_sweep() {
+        // NaN coordinates fail the `x <= r` reference filter, so the
+        // point contributes nothing — but a poisoned value must never
+        // panic the sort if it slips through as a comparison operand.
+        let front = vec![vec![1.0, 1.0], vec![f64::NAN, 0.5], vec![0.5, f64::NAN]];
+        let hv = hypervolume(&front, &[2.0, 2.0]);
+        assert!((hv - 1.0).abs() < 1e-12, "hv {hv}");
     }
 
     #[test]

@@ -30,9 +30,15 @@
 //! instance, attempt count and down time), `link_fail` / `stall` /
 //! `throttle_on` / `throttle_off` / `evict` instants on the instance
 //! tracks, and per-instance `temp_c` / `wear_frac` gauges flushed on
-//! the same `--metrics-every` windows as the load gauges. All of it is
-//! emitted through the same [`Tracer`] handle, so a fault-free run
-//! with tracing off stays bit-identical to the pre-health engine.
+//! the same `--metrics-every` windows as the load gauges. The recovery
+//! runtime ([`crate::sim::recovery`]) adds `ckpt` instants on the
+//! instance tracks (args: live requests checkpointed, replica bytes
+//! shipped) and `restore` instants on the fleet track (args: target
+//! instance, replica peer, checkpointed context length) whenever a
+//! crash victim resumes from its replica instead of recomputing. All
+//! of it is emitted through the same [`Tracer`] handle, so a
+//! fault-free run with tracing off stays bit-identical to the
+//! pre-health engine.
 
 pub mod chrome;
 pub mod timeline;

@@ -13,6 +13,13 @@
 //! [`LenDist::LogNormal`] reshapes request sizes without perturbing a
 //! single arrival time — load sweeps stay comparable across length
 //! regimes, and the jobs=1-vs-N determinism contract is untouched.
+//!
+//! Because every generator is a pure function of its seed, an
+//! [`ArrivalGen`] never needs to be serialized: the fleet
+//! snapshot/resume path (`sim/recovery.rs`) records only how many
+//! events were consumed and fast-forwards a fresh iterator past them
+//! (`Iterator::nth`), landing on the exact same PRNG state and
+//! remaining stream as the uncut run.
 
 use crate::util::Rng;
 

@@ -63,7 +63,6 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
-use crate::bail;
 use crate::baselines::Arch;
 use crate::config::{ModelConfig, SystemConfig};
 use crate::moo::design::NoiDesign;
@@ -76,14 +75,16 @@ use crate::sim::health::{
     RetryEntry,
 };
 use crate::sim::platform::Platform;
+use crate::sim::recovery::{fnv1a, CheckpointConfig, RecoveryRt, SNAPSHOT_VERSION};
 use crate::sim::serving::{
     ArrivalEvent, ArrivalProcess, LenDist, ServingConfig, ServingReport, ServingSim,
 };
 use crate::util::error::Result;
-use crate::util::json::JsonWriter;
+use crate::util::json::{Json, JsonWriter};
 use crate::util::sketch::{SampleSink, SinkMode};
 use crate::util::stats::percentile;
 use crate::util::{parallel, Rng};
+use crate::{anyhow, bail};
 
 /// How the front-end router picks an instance for each arriving request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -239,6 +240,13 @@ pub struct StreamConfig {
     /// `None` injects nothing. Faults alone imply a default
     /// [`HealthConfig`] for retry bookkeeping.
     pub faults: Option<FaultPlan>,
+    /// Periodic KV checkpoint/replication to a peer instance; crash
+    /// victims then resume from their last checkpointed token instead
+    /// of recomputing (see [`crate::sim::recovery`]). `None` disables
+    /// checkpointing and keeps runs bit-identical to pre-recovery
+    /// builds. Checkpointing alone arms an *inert* health runtime
+    /// (thermal + wear off) for the retry machinery.
+    pub checkpoint: Option<CheckpointConfig>,
 }
 
 /// Fleet scenario: instances + router policy + the shared workload.
@@ -306,6 +314,18 @@ pub struct FleetReport {
     pub peak_temp_c: f64,
     /// Highest ReRAM wear fraction reached (0 when off / wear-free).
     pub peak_wear_frac: f64,
+    /// Fleet-wide decoded tokens (the numerator of
+    /// `throughput_tok_s`); bounds `recovered_tokens` from above.
+    pub decoded_tokens: u64,
+    /// Distinct decoded tokens resumed from replica checkpoints after
+    /// crashes instead of being recomputed (0 without checkpointing).
+    pub recovered_tokens: u64,
+    /// Context tokens re-prefilled from scratch after crashes — the
+    /// whole held context on the recompute path, only the
+    /// post-checkpoint delta on restores.
+    pub recomputed_tokens: u64,
+    /// Replica bytes shipped by checkpoint rounds.
+    pub checkpoint_bytes: f64,
     /// Per-instance reports, in spec order.
     pub instances: Vec<ServingReport>,
 }
@@ -366,6 +386,10 @@ impl FleetReport {
         w.field_usize("throttle_events", self.throttle_events);
         w.field_f64("peak_temp_c", self.peak_temp_c);
         w.field_f64("peak_wear_frac", self.peak_wear_frac);
+        w.field_u64("decoded_tokens", self.decoded_tokens);
+        w.field_u64("recovered_tokens", self.recovered_tokens);
+        w.field_u64("recomputed_tokens", self.recomputed_tokens);
+        w.field_f64("checkpoint_bytes", self.checkpoint_bytes);
         w.key("instances");
         w.begin_arr_pretty();
         for inst in &self.instances {
@@ -377,6 +401,17 @@ impl FleetReport {
         out.push('\n');
         out
     }
+}
+
+/// What a snapshot-armed streaming run produced: either the run
+/// finished before the cut time (a normal [`FleetReport`]) or it
+/// stopped at the cut and serialized its full state — a versioned,
+/// config-fingerprinted JSON document that
+/// [`ClusterSim::run_streaming_resume`] continues bit-identically.
+#[derive(Debug, Clone)]
+pub enum StreamOutcome {
+    Report(FleetReport),
+    Snapshot(String),
 }
 
 fn build_platform(
@@ -896,6 +931,32 @@ fn route_events(
     assigned
 }
 
+// ---- fleet-snapshot field accessors (resume side): every miss names
+// the field so a truncated or hand-edited snapshot fails loudly
+fn snap_usize(j: &Json, k: &str) -> Result<usize> {
+    j.get(k)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("fleet snapshot: missing or invalid '{k}'"))
+}
+
+fn snap_u64(j: &Json, k: &str) -> Result<u64> {
+    j.get(k)
+        .and_then(Json::as_u64_str)
+        .ok_or_else(|| anyhow!("fleet snapshot: missing or invalid '{k}'"))
+}
+
+fn snap_bits(j: &Json, k: &str) -> Result<f64> {
+    j.get(k)
+        .and_then(Json::as_bits)
+        .ok_or_else(|| anyhow!("fleet snapshot: missing or invalid '{k}'"))
+}
+
+fn snap_arr<'a>(j: &'a Json, k: &str) -> Result<&'a [Json]> {
+    j.get(k)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("fleet snapshot: missing or invalid '{k}'"))
+}
+
 /// Crash instance `inst` at time `t`: mark it down in the health
 /// ledger, drain + evict its engine, clear its virtual router state,
 /// pull it from the active set (activating a survivor if that empties
@@ -946,7 +1007,19 @@ fn crash_instance(
             active.push(i);
         }
     }
-    for r in evicted {
+    let n = engines.len();
+    for mut r in evicted {
+        // the replica (if any) lives on the crashed instance's ring
+        // neighbour; a single-instance fleet replicates to itself, so
+        // its checkpoints can never survive the crash
+        let peer = (inst + 1) % n;
+        if peer == inst {
+            r.ckpt_ctx = 0;
+            r.ckpt_decoded = 0;
+            r.ckpt_fresh = 0;
+            r.ckpt_bytes = 0.0;
+        }
+        r.peer = peer;
         retry_q.push(Reverse(RetryEntry::new(
             t + h.cfg.backoff_base_secs,
             *retry_seq,
@@ -958,22 +1031,32 @@ fn crash_instance(
 }
 
 /// Apply every health action due by `until`, in time order with a
-/// fixed tie priority (recoveries, then injected faults, then
-/// retries — a retry firing at a recovery instant may use the revived
-/// instance). Retries re-dispatch to the least-loaded alive active
-/// instance with a *fixed* tiebreak — never the policy RNG, so
-/// fault-free streams stay bit-identical — backing off exponentially
-/// while the fleet is down and dropping on the retry budget or the
-/// per-request deadline.
+/// fixed tie priority (checkpoint rounds, then recoveries, then
+/// injected faults, then retries — a checkpoint landing exactly at a
+/// crash instant still protects the victims, and a retry firing at a
+/// recovery instant may use the revived instance). Retries re-dispatch
+/// to the least-loaded alive active instance with a *fixed* tiebreak —
+/// never the policy RNG, so fault-free streams stay bit-identical —
+/// backing off exponentially while the fleet is down and dropping on
+/// the retry budget or the per-request deadline. With a recovery
+/// runtime attached, a retry whose victim holds a usable replica
+/// (checkpointed, peer alive) restores from its last checkpointed
+/// token instead of recomputing the whole context.
 ///
-/// Returns `true` when any action fired — the streaming router's
-/// dispatch tree resyncs its keys only on that signal (§Perf
-/// iteration 7), since every branch below may change queue depths or
-/// the active set.
+/// Checkpoint rounds tick through the arrival window (`until` finite)
+/// and keep pace with pending recoveries/faults/retries during the
+/// final settle, but stop once nothing else is due — an unbounded
+/// drain would otherwise tick forever.
+///
+/// Returns `true` when any queue- or fleet-shape-changing action
+/// fired — the streaming router's dispatch tree resyncs its keys only
+/// on that signal (§Perf iteration 7). Checkpoint rounds never move
+/// queue depths or the active set and do not raise it.
 #[allow(clippy::too_many_arguments)]
 fn apply_health_until(
     until: f64,
     h: &mut FleetHealth,
+    recovery: &mut Option<RecoveryRt>,
     fault_q: &mut VecDeque<FaultEvent>,
     retry_q: &mut BinaryHeap<Reverse<RetryEntry>>,
     retry_seq: &mut u64,
@@ -995,9 +1078,49 @@ fn apply_health_until(
         let t_retry = retry_q
             .peek()
             .map_or(f64::INFINITY, |Reverse(e)| e.fire_t());
-        let tmin = t_rec.min(t_fault).min(t_retry);
+        let t_work = t_rec.min(t_fault).min(t_retry);
+        let t_ckpt = match recovery.as_ref() {
+            Some(rt) if until.is_finite() || t_work.is_finite() => rt.next_ckpt,
+            _ => f64::INFINITY,
+        };
+        let tmin = t_work.min(t_ckpt);
         if !tmin.is_finite() || tmin > until {
             break;
+        }
+
+        if t_ckpt <= t_work {
+            let rt = recovery.as_mut().expect("tick time came from the runtime");
+            for i in 0..n {
+                if !h.alive(i) {
+                    continue;
+                }
+                let eng = &mut engines[i];
+                eng.advance_until(t_ckpt);
+                let (count, bytes) = eng.checkpoint_live();
+                if bytes > 0.0 {
+                    // replication is dead time on the source engine
+                    eng.inject_stall(rt.cfg.xfer_secs(bytes));
+                }
+                for (a, b) in eng.take_completions() {
+                    sinks.0.push(a);
+                    sinks.1.push(b);
+                }
+                if count > 0 {
+                    rt.checkpoint_bytes += bytes;
+                    if tracer.on() {
+                        tracer.instant(
+                            i as u32 + 1,
+                            "ckpt",
+                            t_ckpt,
+                            &[("reqs", count as f64), ("bytes", bytes)],
+                        );
+                    }
+                }
+            }
+            *buffered_peak =
+                (*buffered_peak).max(sinks.0.buffered_len() + sinks.1.buffered_len());
+            rt.next_ckpt += rt.cfg.interval_secs;
+            continue;
         }
         changed = true;
 
@@ -1105,17 +1228,13 @@ fn apply_health_until(
             .filter(|&i| h.alive(i))
             .min_by_key(|&i| (outstanding[i].len(), i));
         let Some(p) = pick else {
-            // whole fleet down: back off exponentially and try again
-            let req = EvictedReq {
-                arrival: entry.arrival(),
-                prompt: entry.req.prompt,
-                gen: entry.req.gen,
-            };
+            // whole fleet down: back off exponentially and try again,
+            // carrying the checkpoint payload along
             let delay = h.cfg.backoff_base_secs * 2.0f64.powi(entry.attempts as i32);
             retry_q.push(Reverse(RetryEntry::new(
                 t + delay,
                 *retry_seq,
-                req,
+                entry.req.req(),
                 entry.attempts + 1,
             )));
             *retry_seq += 1;
@@ -1130,9 +1249,41 @@ fn apply_health_until(
                 &[("inst", p as f64), ("attempt", f64::from(entry.attempts))],
             );
         }
+        let req = entry.req.req();
         let eng = &mut engines[p];
         eng.advance_until(t);
-        eng.push_request(t, entry.req.prompt, entry.req.gen);
+        let restorable = req.ckpt_ctx > 0 && req.peer < n && h.alive(req.peer);
+        match recovery.as_mut() {
+            Some(rt) if restorable => {
+                // pull the replica from the peer (dead time on the
+                // target engine), then resume from the checkpointed
+                // token: only the post-checkpoint context delta is
+                // re-prefilled
+                eng.inject_stall(rt.cfg.xfer_secs(req.ckpt_bytes));
+                eng.push_restored(t, req.prompt, req.gen, req.ckpt_ctx, req.ckpt_decoded);
+                rt.recovered_tokens += req.ckpt_fresh as u64;
+                rt.recomputed_tokens += req.ctx.saturating_sub(req.ckpt_ctx) as u64;
+                if tracer.on() {
+                    tracer.instant(
+                        0,
+                        "restore",
+                        t,
+                        &[
+                            ("inst", p as f64),
+                            ("peer", req.peer as f64),
+                            ("ctx", req.ckpt_ctx as f64),
+                        ],
+                    );
+                }
+            }
+            rt_opt => {
+                // no usable replica: recompute the whole held context
+                eng.push_request(t, req.prompt, req.gen);
+                if let Some(rt) = rt_opt {
+                    rt.recomputed_tokens += req.ctx as u64;
+                }
+            }
+        }
         for (a, b) in eng.take_completions() {
             sinks.0.push(a);
             sinks.1.push(b);
@@ -1141,8 +1292,8 @@ fn apply_health_until(
             (*buffered_peak).max(sinks.0.buffered_len() + sinks.1.buffered_len());
         let ev = ArrivalEvent {
             t,
-            prompt: entry.req.prompt,
-            gen: entry.req.gen,
+            prompt: req.prompt,
+            gen: req.gen,
         };
         let est = event_est(basis[p], &ev, ref_prompt) * h.slowdown(p);
         let (si, free) = servers[p]
@@ -1358,6 +1509,10 @@ impl<'a> ClusterSim<'a> {
             throttle_events: 0,
             peak_temp_c: 0.0,
             peak_wear_frac: 0.0,
+            decoded_tokens: decoded,
+            recovered_tokens: 0,
+            recomputed_tokens: 0,
+            checkpoint_bytes: 0.0,
             instances,
         })
     }
@@ -1393,6 +1548,72 @@ impl<'a> ClusterSim<'a> {
         stream: &StreamConfig,
         tracer: &Tracer,
     ) -> Result<FleetReport> {
+        match self.run_streaming_inner(stream, tracer, None, None)? {
+            StreamOutcome::Report(r) => Ok(r),
+            StreamOutcome::Snapshot(_) => unreachable!("no snapshot cut was requested"),
+        }
+    }
+
+    /// Run the streaming fleet until the first arrival at or past
+    /// `snap_at` (simulated seconds), then stop and serialize the
+    /// complete simulation state instead of processing it. Returns
+    /// [`StreamOutcome::Snapshot`] with the JSON document, or
+    /// [`StreamOutcome::Report`] when the stream ends before the cut.
+    /// Resuming the snapshot under the *same* cluster + stream config
+    /// (enforced by a fingerprint) reproduces the uncut run's
+    /// [`FleetReport`] bit for bit — the pinned test below splits a
+    /// degraded autoscaling run at several cuts and diffs the JSON.
+    ///
+    /// Gauge/trace state is not serialized: snapshots capture the
+    /// simulation, not the observability stream (resume with a fresh
+    /// tracer records only post-cut events).
+    pub fn run_streaming_snapshot(
+        &self,
+        stream: &StreamConfig,
+        tracer: &Tracer,
+        snap_at: f64,
+    ) -> Result<StreamOutcome> {
+        if snap_at.is_nan() {
+            bail!("snapshot cut time must be a number");
+        }
+        self.run_streaming_inner(stream, tracer, None, Some(snap_at))
+    }
+
+    /// Continue a run from a [`Self::run_streaming_snapshot`] document.
+    /// The snapshot's version and config fingerprint must match; the
+    /// resumed run replays nothing — it fast-forwards the lazy arrival
+    /// generator past the consumed prefix and restores every engine,
+    /// router, health, retry and sketch state bit-exactly.
+    pub fn run_streaming_resume(
+        &self,
+        stream: &StreamConfig,
+        tracer: &Tracer,
+        snapshot: &str,
+    ) -> Result<FleetReport> {
+        let j = Json::parse(snapshot).map_err(|e| anyhow!("fleet snapshot: {e}"))?;
+        match self.run_streaming_inner(stream, tracer, Some(&j), None)? {
+            StreamOutcome::Report(r) => Ok(r),
+            StreamOutcome::Snapshot(_) => unreachable!("no snapshot cut was requested"),
+        }
+    }
+
+    /// FNV-1a over the Debug-rendered cluster + stream configuration:
+    /// the cheap stable fingerprint that pins a snapshot to the exact
+    /// scenario that produced it.
+    fn stream_fingerprint(&self, stream: &StreamConfig) -> u64 {
+        fnv1a(&format!(
+            "{:?}|{}|{:?}",
+            self.cfg, self.model.name, stream
+        ))
+    }
+
+    fn run_streaming_inner(
+        &self,
+        stream: &StreamConfig,
+        tracer: &Tracer,
+        resume: Option<&Json>,
+        snap_at: Option<f64>,
+    ) -> Result<StreamOutcome> {
         let n = self.cfg.specs.len();
         if n == 0 {
             bail!("cluster needs at least one instance");
@@ -1420,17 +1641,36 @@ impl<'a> ClusterSim<'a> {
             .collect();
 
         // degradation/fault runtime — engaged only when asked; with
-        // both knobs `None` every health branch below is untaken and
-        // the run is bit-identical to a health-free build
-        let mut health = if stream.health.is_some() || stream.faults.is_some() {
-            Some(FleetHealth::new(
-                stream.health.clone().unwrap_or_default(),
-                &platforms,
-                &caps,
-            ))
+        // every knob `None` each health branch below is untaken and
+        // the run is bit-identical to a health-free build.
+        // Checkpointing needs the retry machinery, so it arms the
+        // runtime too — but with the degradation models off unless a
+        // HealthConfig asked for them
+        let mut health = if stream.health.is_some()
+            || stream.faults.is_some()
+            || stream.checkpoint.is_some()
+        {
+            let hcfg = match (&stream.health, &stream.faults) {
+                (Some(h), _) => h.clone(),
+                (None, Some(_)) => HealthConfig::default(),
+                (None, None) => HealthConfig {
+                    thermal: false,
+                    wear: false,
+                    ..Default::default()
+                },
+            };
+            Some(FleetHealth::new(hcfg, &platforms, &caps))
         } else {
             None
         };
+        let mut recovery: Option<RecoveryRt> = match &stream.checkpoint {
+            Some(c) => {
+                c.validate()?;
+                Some(RecoveryRt::new(c.clone()))
+            }
+            None => None,
+        };
+        let total_faults = stream.faults.as_ref().map_or(0, |p| p.events.len());
         let mut fault_q: VecDeque<FaultEvent> = stream
             .faults
             .as_ref()
@@ -1490,6 +1730,142 @@ impl<'a> ClusterSim<'a> {
         let mut scale_ups = 0usize;
         let mut scale_downs = 0usize;
 
+        // ---- resume: overwrite the freshly initialized state with the
+        // snapshot's (the dispatch tree below is derived state and is
+        // built *after* this block, from the restored active set)
+        let mut seen = 0usize;
+        if let Some(j) = resume {
+            let ver = snap_u64(j, "version")?;
+            if ver != SNAPSHOT_VERSION {
+                bail!("fleet snapshot version {ver} is not the supported {SNAPSHOT_VERSION}");
+            }
+            let fp = snap_u64(j, "fp")?;
+            let want = self.stream_fingerprint(stream);
+            if fp != want {
+                bail!(
+                    "fleet snapshot fingerprint {fp:#018x} does not match this cluster/stream \
+                     configuration ({want:#018x}): resume needs the exact config that wrote it"
+                );
+            }
+            requests = snap_usize(j, "requests")?;
+            seen = requests;
+            shed = snap_usize(j, "shed")?;
+            scale_ups = snap_usize(j, "scale_ups")?;
+            scale_downs = snap_usize(j, "scale_downs")?;
+            let rs = snap_arr(j, "rng")?;
+            if rs.len() != 4 {
+                bail!("fleet snapshot: rng state needs 4 words, got {}", rs.len());
+            }
+            let mut st = [0u64; 4];
+            for (slot, v) in st.iter_mut().zip(rs) {
+                *slot = v
+                    .as_u64_str()
+                    .ok_or_else(|| anyhow!("fleet snapshot: bad rng word"))?;
+            }
+            rng = Rng::from_state(st);
+            active.clear();
+            for v in snap_arr(j, "active")? {
+                let i = v
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("fleet snapshot: bad active index"))?;
+                if i >= n {
+                    bail!("fleet snapshot: active instance {i} out of range (fleet of {n})");
+                }
+                active.push(i);
+            }
+            last_scale = snap_bits(j, "last_scale")?;
+            rr_cursor = snap_usize(j, "rr_cursor")?;
+            buffered_peak = snap_usize(j, "buffered_peak")?;
+            let oj = snap_arr(j, "outstanding")?;
+            let sj = snap_arr(j, "servers")?;
+            if oj.len() != n || sj.len() != n {
+                bail!("fleet snapshot: per-instance router state does not match the fleet size");
+            }
+            for i in 0..n {
+                outstanding[i].clear();
+                for v in oj[i]
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("fleet snapshot: bad outstanding row"))?
+                {
+                    let f = v
+                        .as_bits()
+                        .ok_or_else(|| anyhow!("fleet snapshot: bad finish time"))?;
+                    outstanding[i].push(Reverse(FinishTime(f)));
+                }
+                let row = sj[i]
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("fleet snapshot: bad servers row"))?;
+                servers[i].clear();
+                for v in row {
+                    servers[i].push(
+                        v.as_bits()
+                            .ok_or_else(|| anyhow!("fleet snapshot: bad server time"))?,
+                    );
+                }
+            }
+            ttft_sink = j
+                .get("ttft")
+                .and_then(SampleSink::restore)
+                .ok_or_else(|| anyhow!("fleet snapshot: missing or invalid 'ttft'"))?;
+            tpot_sink = j
+                .get("tpot")
+                .and_then(SampleSink::restore)
+                .ok_or_else(|| anyhow!("fleet snapshot: missing or invalid 'tpot'"))?;
+            retry_seq = snap_u64(j, "retry_seq")?;
+            for e in snap_arr(j, "retries")? {
+                let req = EvictedReq {
+                    arrival: snap_bits(e, "arrival")?,
+                    prompt: snap_usize(e, "prompt")?,
+                    gen: snap_usize(e, "gen")?,
+                    ctx: snap_usize(e, "ctx")?,
+                    ckpt_ctx: snap_usize(e, "ckpt_ctx")?,
+                    ckpt_decoded: snap_usize(e, "ckpt_decoded")?,
+                    ckpt_fresh: snap_usize(e, "ckpt_fresh")?,
+                    ckpt_bytes: snap_bits(e, "ckpt_bytes")?,
+                    peer: snap_usize(e, "peer")?,
+                };
+                retry_q.push(Reverse(RetryEntry::new(
+                    snap_bits(e, "t")?,
+                    snap_u64(e, "seq")?,
+                    req,
+                    snap_usize(e, "attempts")? as u32,
+                )));
+            }
+            let consumed = snap_usize(j, "faults_consumed")?;
+            if consumed > fault_q.len() {
+                bail!(
+                    "fleet snapshot: {consumed} faults consumed but the plan has {}",
+                    fault_q.len()
+                );
+            }
+            fault_q.drain(..consumed);
+            match (health.as_mut(), j.get("health")) {
+                (Some(h), Some(hj)) => h.restore_from(hj)?,
+                (None, None) => {}
+                _ => bail!("fleet snapshot: health section does not match this configuration"),
+            }
+            match (recovery.as_mut(), j.get("recovery")) {
+                (Some(rt), Some(rj)) => {
+                    rt.next_ckpt = snap_bits(rj, "next_ckpt")?;
+                    rt.recovered_tokens = snap_u64(rj, "recovered_tokens")?;
+                    rt.recomputed_tokens = snap_u64(rj, "recomputed_tokens")?;
+                    rt.checkpoint_bytes = snap_bits(rj, "checkpoint_bytes")?;
+                }
+                (None, None) => {}
+                _ => bail!("fleet snapshot: recovery section does not match this configuration"),
+            }
+            let ej = snap_arr(j, "engines")?;
+            if ej.len() != n {
+                bail!(
+                    "fleet snapshot: {} engine sections for a fleet of {n}",
+                    ej.len()
+                );
+            }
+            for (eng, s) in engines.iter_mut().zip(ej) {
+                eng.restore_from(s)?;
+            }
+        }
+
         // O(log n) dispatch tree (§Perf iteration 7): one active slot
         // per member of the active set, kept in sync at every mutation
         // point below (retire sweep, dispatch, autoscale, health
@@ -1511,10 +1887,119 @@ impl<'a> ClusterSim<'a> {
         }
         let mut retired: Vec<usize> = Vec::new();
 
-        let events =
+        let mut events =
             scfg.arrivals
                 .events(scfg.seed, scfg.prompt_len, scfg.gen_tokens, &scfg.len_dist);
+        if seen > 0 {
+            // fast-forward the lazy arrival stream past the consumed
+            // prefix — generators are pure functions of the seed, so
+            // regeneration is exact (see `sim::arrivals`)
+            let _ = events.nth(seen - 1);
+        }
         for ev in events {
+            if let Some(cut) = snap_at {
+                if ev.t >= cut {
+                    // stop *before* consuming this arrival — the
+                    // resumed run regenerates and processes it — and
+                    // serialize everything the loop reads or writes
+                    let mut w = JsonWriter::new();
+                    w.begin_obj();
+                    w.field_u64_str("version", SNAPSHOT_VERSION);
+                    w.field_u64_str("fp", self.stream_fingerprint(stream));
+                    w.field_usize("requests", requests);
+                    w.field_usize("shed", shed);
+                    w.field_usize("scale_ups", scale_ups);
+                    w.field_usize("scale_downs", scale_downs);
+                    w.key("rng");
+                    w.begin_arr();
+                    for s in rng.state() {
+                        w.u64_str_val(s);
+                    }
+                    w.end();
+                    w.key("active");
+                    w.begin_arr();
+                    for &i in &active {
+                        w.usize_val(i);
+                    }
+                    w.end();
+                    w.field_bits("last_scale", last_scale);
+                    w.field_usize("rr_cursor", rr_cursor);
+                    w.field_usize("buffered_peak", buffered_peak);
+                    w.key("outstanding");
+                    w.begin_arr();
+                    for o in &outstanding {
+                        // heap iteration order is arbitrary: serialize
+                        // sorted so equal snapshots are byte-equal
+                        let mut fs: Vec<f64> = o.iter().map(|r| (r.0).0).collect();
+                        fs.sort_by(f64::total_cmp);
+                        w.begin_arr();
+                        for f in fs {
+                            w.bits_val(f);
+                        }
+                        w.end();
+                    }
+                    w.end();
+                    w.key("servers");
+                    w.begin_arr();
+                    for sv in &servers {
+                        w.begin_arr();
+                        for &f in sv {
+                            w.bits_val(f);
+                        }
+                        w.end();
+                    }
+                    w.end();
+                    w.key("ttft");
+                    ttft_sink.snapshot_into(&mut w);
+                    w.key("tpot");
+                    tpot_sink.snapshot_into(&mut w);
+                    w.field_u64_str("retry_seq", retry_seq);
+                    w.key("retries");
+                    w.begin_arr();
+                    let mut entries: Vec<RetryEntry> =
+                        retry_q.iter().map(|r| r.0).collect();
+                    entries.sort_unstable();
+                    for e in &entries {
+                        w.begin_obj();
+                        w.field_bits("t", e.fire_t());
+                        w.field_u64_str("seq", e.seq);
+                        w.field_usize("attempts", e.attempts as usize);
+                        w.field_bits("arrival", e.arrival());
+                        w.field_usize("prompt", e.req.prompt);
+                        w.field_usize("gen", e.req.gen);
+                        w.field_usize("ctx", e.req.ctx);
+                        w.field_usize("ckpt_ctx", e.req.ckpt_ctx);
+                        w.field_usize("ckpt_decoded", e.req.ckpt_decoded);
+                        w.field_usize("ckpt_fresh", e.req.ckpt_fresh);
+                        w.field_bits("ckpt_bytes", e.req.ckpt_bytes());
+                        w.field_usize("peer", e.req.peer);
+                        w.end();
+                    }
+                    w.end();
+                    w.field_usize("faults_consumed", total_faults - fault_q.len());
+                    if let Some(h) = &health {
+                        w.key("health");
+                        h.snapshot_into(&mut w);
+                    }
+                    if let Some(rt) = &recovery {
+                        w.key("recovery");
+                        w.begin_obj();
+                        w.field_bits("next_ckpt", rt.next_ckpt);
+                        w.field_u64_str("recovered_tokens", rt.recovered_tokens);
+                        w.field_u64_str("recomputed_tokens", rt.recomputed_tokens);
+                        w.field_bits("checkpoint_bytes", rt.checkpoint_bytes);
+                        w.end();
+                    }
+                    w.key("engines");
+                    w.begin_arr();
+                    for eng in &engines {
+                        eng.snapshot_into(&mut w);
+                    }
+                    w.end();
+                    w.end();
+                    return Ok(StreamOutcome::Snapshot(w.finish()));
+                }
+            }
             requests += 1;
             let t = ev.t;
 
@@ -1525,6 +2010,7 @@ impl<'a> ClusterSim<'a> {
                 let health_changed = apply_health_until(
                     t,
                     h,
+                    &mut recovery,
                     &mut fault_q,
                     &mut retry_q,
                     &mut retry_seq,
@@ -1760,6 +2246,7 @@ impl<'a> ClusterSim<'a> {
             apply_health_until(
                 f64::INFINITY,
                 h,
+                &mut recovery,
                 &mut fault_q,
                 &mut retry_q,
                 &mut retry_seq,
@@ -1826,8 +2313,12 @@ impl<'a> ClusterSim<'a> {
                 ),
                 None => (0, 0, 0, 0, 0, 0, 0.0, 0.0),
             };
+        let (recovered_tokens, recomputed_tokens, checkpoint_bytes) = match &recovery {
+            Some(rt) => (rt.recovered_tokens, rt.recomputed_tokens, rt.checkpoint_bytes),
+            None => (0, 0, 0.0),
+        };
 
-        Ok(FleetReport {
+        Ok(StreamOutcome::Report(FleetReport {
             policy: self.cfg.policy.name().to_string(),
             model: self.model.name.to_string(),
             requests,
@@ -1858,8 +2349,12 @@ impl<'a> ClusterSim<'a> {
             throttle_events,
             peak_temp_c,
             peak_wear_frac,
+            decoded_tokens: decoded,
+            recovered_tokens,
+            recomputed_tokens,
+            checkpoint_bytes,
             instances,
-        })
+        }))
     }
 }
 
@@ -2017,7 +2512,7 @@ mod tests {
                     .min_by(|&a, &b| {
                         let la = outstanding[a].len() as f64 * kv_full / caps[a];
                         let lb = outstanding[b].len() as f64 * kv_full / caps[b];
-                        la.partial_cmp(&lb).unwrap()
+                        la.total_cmp(&lb)
                     })
                     .unwrap(),
                 DispatchPolicy::P2c => {
@@ -2034,7 +2529,7 @@ mod tests {
                 .iter()
                 .copied()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(&b.1))
                 .unwrap();
             let finish = free.max(t) + est[pick];
             servers[pick][si] = finish;
@@ -2665,5 +3160,250 @@ mod tests {
             hot.makespan_secs >= plain.makespan_secs,
             "throttled steps cannot finish sooner than unthrottled ones"
         );
+    }
+
+    #[test]
+    fn checkpointing_with_no_faults_is_inert() {
+        // a checkpoint interval beyond the run never ticks, and a
+        // crash-free checkpointed run must stay bit-identical to the
+        // plain stream (the inert health runtime it arms included)
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let mk = || ClusterConfig {
+            specs: vec![InstanceSpec::of(Arch::Hi25D), InstanceSpec::of(Arch::Hi25D)],
+            policy: DispatchPolicy::Jsq,
+            serving: poisson(1.0e5, 32),
+        };
+        let plain = ClusterSim::new(&sys, &m, mk())
+            .run_streaming(&StreamConfig::default())
+            .unwrap();
+        let ckpt = ClusterSim::new(&sys, &m, mk())
+            .run_streaming(&StreamConfig {
+                checkpoint: Some(CheckpointConfig {
+                    interval_secs: 1.0e18,
+                    link_gbps: 64.0,
+                }),
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(plain.completed, ckpt.completed);
+        assert_eq!(plain.makespan_secs, ckpt.makespan_secs);
+        assert_eq!(plain.ttft_p50_secs, ckpt.ttft_p50_secs);
+        assert_eq!(plain.ttft_p99_secs, ckpt.ttft_p99_secs);
+        assert_eq!(plain.tpot_p50_secs, ckpt.tpot_p50_secs);
+        assert_eq!(plain.throughput_tok_s, ckpt.throughput_tok_s);
+        assert_eq!(plain.decoded_tokens, ckpt.decoded_tokens);
+        assert_eq!(ckpt.recovered_tokens, 0);
+        assert_eq!(ckpt.recomputed_tokens, 0);
+        assert_eq!(ckpt.checkpoint_bytes, 0.0);
+        // and the validation gate rejects degenerate knobs up front
+        let bad = ClusterSim::new(&sys, &m, mk()).run_streaming(&StreamConfig {
+            checkpoint: Some(CheckpointConfig {
+                interval_secs: 0.0,
+                link_gbps: 64.0,
+            }),
+            ..Default::default()
+        });
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn checkpointing_recovers_instead_of_recomputing() {
+        // same seed, same mid-decode crash: with checkpoint rounds
+        // landing before the crash, the victims resume from their last
+        // checkpointed token — strictly fewer recomputed tokens than
+        // the from-scratch retry path, and real recovered credit
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let mk = || ClusterConfig {
+            specs: vec![InstanceSpec::of(Arch::Hi25D), InstanceSpec::of(Arch::Hi25D)],
+            policy: DispatchPolicy::Jsq,
+            serving: ServingConfig {
+                gen_tokens: 64,
+                ..poisson(1.0e5, 32)
+            },
+        };
+        let plain = ClusterSim::new(&sys, &m, mk())
+            .run_streaming(&StreamConfig::default())
+            .unwrap();
+        let t_crash = 0.5 * plain.makespan_secs;
+        let faults = FaultPlan::new(vec![FaultEvent {
+            t: t_crash,
+            kind: FaultKind::Crash {
+                inst: 0,
+                down_secs: 1.0e3,
+            },
+        }]);
+        let run = |interval: f64| {
+            ClusterSim::new(&sys, &m, mk())
+                .run_streaming(&StreamConfig {
+                    faults: Some(faults.clone()),
+                    checkpoint: Some(CheckpointConfig {
+                        interval_secs: interval,
+                        link_gbps: 64.0,
+                    }),
+                    ..Default::default()
+                })
+                .unwrap()
+        };
+        // ticks can never land before the crash: pure recompute
+        let recompute = run(1.0e18);
+        // several rounds land first: victims restore from replicas
+        let ckpt = run(t_crash / 8.0);
+        assert_eq!(recompute.failures, 1);
+        assert_eq!(ckpt.failures, 1);
+        assert_eq!(recompute.recovered_tokens, 0);
+        assert!(
+            recompute.recomputed_tokens > 0,
+            "a mid-decode crash must force recompute work without checkpoints"
+        );
+        assert!(
+            ckpt.recovered_tokens > 0,
+            "checkpointed victims must resume from their replicas"
+        );
+        assert!(
+            ckpt.recomputed_tokens < recompute.recomputed_tokens,
+            "restores must re-prefill strictly less than from-scratch retries \
+             ({} vs {})",
+            ckpt.recomputed_tokens,
+            recompute.recomputed_tokens
+        );
+        assert!(ckpt.checkpoint_bytes > 0.0);
+        assert!(
+            ckpt.recovered_tokens <= ckpt.decoded_tokens,
+            "recovered credit is bounded by tokens actually decoded"
+        );
+        for r in [&recompute, &ckpt] {
+            assert_eq!(
+                r.completed + r.rejected + r.shed + r.fault_dropped,
+                r.requests,
+                "every arrival retires exactly once"
+            );
+            assert!(r.fault_retries >= 1);
+        }
+        // the whole recovery path is deterministic
+        let again = run(t_crash / 8.0);
+        assert_eq!(ckpt.to_json(), again.to_json());
+    }
+
+    #[test]
+    fn snapshot_resume_is_bit_identical() {
+        // split a degraded autoscaling checkpointed stream at two cut
+        // points: snapshot + resume must reproduce the uncut run's
+        // report byte for byte
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let serving = poisson(1.0e5, 48);
+        let arrivals = serving.arrivals.times(serving.seed);
+        let mk = || ClusterConfig {
+            specs: vec![
+                InstanceSpec::of(Arch::Hi25D),
+                InstanceSpec::of(Arch::Hi25D),
+                InstanceSpec::of(Arch::Hi25D),
+            ],
+            policy: DispatchPolicy::Jsq,
+            serving: serving.clone(),
+        };
+        let window = arrivals[arrivals.len() - 1];
+        let stream = StreamConfig {
+            autoscale: Some(AutoscaleConfig {
+                min_instances: 1,
+                high_watermark: 1.0,
+                cooldown_secs: 1.0e-6,
+                ..Default::default()
+            }),
+            health: Some(HealthConfig {
+                t_throttle_c: 45.2,
+                tau_secs: 1.0e-5,
+                wear: false,
+                ..Default::default()
+            }),
+            faults: Some(FaultPlan::new(vec![
+                FaultEvent {
+                    t: 0.25 * window,
+                    kind: FaultKind::Stall {
+                        inst: 0,
+                        secs: 5.0e-5,
+                    },
+                },
+                FaultEvent {
+                    t: 0.45 * window,
+                    kind: FaultKind::Crash {
+                        inst: 1,
+                        down_secs: 0.3 * window,
+                    },
+                },
+            ])),
+            checkpoint: Some(CheckpointConfig {
+                interval_secs: 0.1 * window,
+                link_gbps: 64.0,
+            }),
+            ..Default::default()
+        };
+        let full = ClusterSim::new(&sys, &m, mk()).run_streaming(&stream).unwrap();
+        assert_eq!(full.failures, 1, "the scenario must actually degrade");
+        for cut in [arrivals[12], arrivals[40]] {
+            let sim = ClusterSim::new(&sys, &m, mk());
+            let snap = match sim
+                .run_streaming_snapshot(&stream, &Tracer::off(), cut)
+                .unwrap()
+            {
+                StreamOutcome::Snapshot(s) => s,
+                StreamOutcome::Report(_) => panic!("cut at {cut} must land mid-stream"),
+            };
+            let resumed = sim
+                .run_streaming_resume(&stream, &Tracer::off(), &snap)
+                .unwrap();
+            assert_eq!(resumed.makespan_secs, full.makespan_secs, "cut {cut}");
+            assert_eq!(resumed.ttft_p99_secs, full.ttft_p99_secs, "cut {cut}");
+            assert_eq!(resumed.tpot_p50_secs, full.tpot_p50_secs, "cut {cut}");
+            assert_eq!(resumed.throughput_tok_s, full.throughput_tok_s, "cut {cut}");
+            assert_eq!(resumed.to_json(), full.to_json(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn snapshot_rejects_mismatched_config_or_version() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let serving = poisson(1.0e5, 16);
+        let cut = serving.arrivals.times(serving.seed)[8];
+        let mk = |n: usize| ClusterConfig {
+            specs: vec![InstanceSpec::of(Arch::Hi25D), InstanceSpec::of(Arch::Hi25D)],
+            policy: DispatchPolicy::Jsq,
+            serving: poisson(1.0e5, n),
+        };
+        let stream = StreamConfig {
+            checkpoint: Some(CheckpointConfig::default()),
+            ..Default::default()
+        };
+        let sim = ClusterSim::new(&sys, &m, mk(16));
+        let snap = match sim
+            .run_streaming_snapshot(&stream, &Tracer::off(), cut)
+            .unwrap()
+        {
+            StreamOutcome::Snapshot(s) => s,
+            StreamOutcome::Report(_) => panic!("cut must land mid-stream"),
+        };
+        // a different workload shape is a fingerprint mismatch...
+        let other = ClusterSim::new(&sys, &m, mk(24));
+        assert!(other
+            .run_streaming_resume(&stream, &Tracer::off(), &snap)
+            .is_err());
+        // ...so are different stream knobs...
+        assert!(sim
+            .run_streaming_resume(&StreamConfig::default(), &Tracer::off(), &snap)
+            .is_err());
+        // ...and a tampered envelope
+        assert!(sim
+            .run_streaming_resume(&stream, &Tracer::off(), &snap.replace("\"version\"", "\"v\""))
+            .is_err());
+        assert!(sim
+            .run_streaming_resume(&stream, &Tracer::off(), &snap.replace("\"fp\"", "\"f_\""))
+            .is_err());
+        // while the untouched snapshot resumes cleanly
+        assert!(sim
+            .run_streaming_resume(&stream, &Tracer::off(), &snap)
+            .is_ok());
     }
 }

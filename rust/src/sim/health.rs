@@ -27,6 +27,7 @@ use crate::obs::{Gauge, Tracer};
 use crate::sim::Platform;
 use crate::thermal::evaluate_2_5d;
 use crate::util::error::Result;
+use crate::util::json::{Json, JsonWriter};
 use crate::{anyhow, bail};
 
 /// Degradation knobs. `Default` gives physically-motivated values: the
@@ -105,56 +106,69 @@ impl FaultPlan {
     /// `crash@2.0:1:0.5,link@1.0:0:2-3,stall@0.5:2:0.125`:
     /// `crash@T:INST[:DOWN_SECS]` (omitted = down forever),
     /// `link@T:INST:A-B`, `stall@T:INST:SECS`.
+    /// Every parse error names the offending event spec and the field
+    /// that failed (e.g. `bad fault event 'crash@x:1': unparseable
+    /// time 'x'`), so a long comma-separated plan pinpoints its typo.
     pub fn parse(spec: &str) -> Result<FaultPlan> {
         let mut events = Vec::new();
         for entry in spec.split(',').filter(|s| !s.trim().is_empty()) {
             let entry = entry.trim();
-            let (kind, rest) = entry
-                .split_once('@')
-                .ok_or_else(|| anyhow!("fault entry '{entry}' missing '@'"))?;
+            let (kind, rest) = entry.split_once('@').ok_or_else(|| {
+                anyhow!("bad fault event '{entry}': missing '@' between kind and time")
+            })?;
             let mut parts = rest.split(':');
-            let t: f64 = parts
-                .next()
-                .and_then(|s| s.parse().ok())
-                .ok_or_else(|| anyhow!("fault entry '{entry}': bad time"))?;
+            let t_str = parts.next().unwrap_or("");
+            let t: f64 = t_str
+                .parse()
+                .map_err(|_| anyhow!("bad fault event '{entry}': unparseable time '{t_str}'"))?;
             if t.is_nan() || t < 0.0 {
-                bail!("fault entry '{entry}': time must be >= 0");
+                bail!("bad fault event '{entry}': time '{t_str}' must be >= 0");
             }
-            let inst: usize = parts
+            let inst_str = parts
                 .next()
-                .and_then(|s| s.parse().ok())
-                .ok_or_else(|| anyhow!("fault entry '{entry}': bad instance"))?;
+                .ok_or_else(|| anyhow!("bad fault event '{entry}': missing instance field"))?;
+            let inst: usize = inst_str.parse().map_err(|_| {
+                anyhow!("bad fault event '{entry}': unparseable instance '{inst_str}'")
+            })?;
             let kind = match kind {
                 "crash" => FaultKind::Crash {
                     inst,
                     down_secs: match parts.next() {
                         None => 0.0,
-                        Some(s) => s
-                            .parse()
-                            .map_err(|_| anyhow!("fault entry '{entry}': bad down_secs"))?,
+                        Some(s) => s.parse().map_err(|_| {
+                            anyhow!("bad fault event '{entry}': unparseable down_secs '{s}'")
+                        })?,
                     },
                 },
                 "link" => {
-                    let ab = parts
-                        .next()
-                        .ok_or_else(|| anyhow!("fault entry '{entry}': missing A-B link"))?;
+                    let ab = parts.next().ok_or_else(|| {
+                        anyhow!("bad fault event '{entry}': missing A-B link field")
+                    })?;
                     let (a, b) = ab
                         .split_once('-')
                         .and_then(|(a, b)| Some((a.parse().ok()?, b.parse().ok()?)))
-                        .ok_or_else(|| anyhow!("fault entry '{entry}': bad A-B link"))?;
+                        .ok_or_else(|| {
+                            anyhow!("bad fault event '{entry}': unparseable A-B link '{ab}'")
+                        })?;
                     FaultKind::LinkFail { inst, a, b }
                 }
-                "stall" => FaultKind::Stall {
-                    inst,
-                    secs: parts
-                        .next()
-                        .and_then(|s| s.parse().ok())
-                        .ok_or_else(|| anyhow!("fault entry '{entry}': bad stall secs"))?,
-                },
-                other => bail!("unknown fault kind '{other}' (have: crash, link, stall)"),
+                "stall" => {
+                    let s = parts.next().ok_or_else(|| {
+                        anyhow!("bad fault event '{entry}': missing stall secs field")
+                    })?;
+                    FaultKind::Stall {
+                        inst,
+                        secs: s.parse().map_err(|_| {
+                            anyhow!("bad fault event '{entry}': unparseable stall secs '{s}'")
+                        })?,
+                    }
+                }
+                other => bail!(
+                    "bad fault event '{entry}': unknown kind '{other}' (have: crash, link, stall)"
+                ),
             };
-            if parts.next().is_some() {
-                bail!("fault entry '{entry}': trailing fields");
+            if let Some(extra) = parts.next() {
+                bail!("bad fault event '{entry}': trailing field '{extra}'");
             }
             events.push(FaultEvent { t, kind });
         }
@@ -163,12 +177,49 @@ impl FaultPlan {
 }
 
 /// A request evicted from a crashed engine, carrying what the router
-/// needs to re-dispatch it.
+/// needs to re-dispatch it — plus the KV-checkpoint state (PR 10) a
+/// restore needs to resume from the last replicated token instead of
+/// recomputing the whole context.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EvictedReq {
     pub arrival: f64,
     pub prompt: usize,
     pub gen: usize,
+    /// KV context (prompt prefix + decoded tokens) held at eviction —
+    /// the work a from-scratch re-dispatch recomputes.
+    pub ctx: usize,
+    /// Context length captured by the last KV checkpoint (0 = none;
+    /// the retry falls back to the PR 8 recompute path).
+    pub ckpt_ctx: usize,
+    /// Decoded tokens captured by the last checkpoint.
+    pub ckpt_decoded: usize,
+    /// Decoded tokens newly covered by that checkpoint, i.e. not
+    /// already credited by an earlier restore of the same request —
+    /// keeps `recovered_tokens` from double-counting across repeated
+    /// crash/restore cycles.
+    pub ckpt_fresh: usize,
+    /// Replica size in bytes (ckpt_ctx × KV bytes/token); the restore
+    /// transfer charged against the checkpoint link.
+    pub ckpt_bytes: f64,
+    /// Instance holding the replica; a restore requires it alive.
+    pub peer: usize,
+}
+
+impl EvictedReq {
+    /// An eviction with no checkpoint state (the recompute-only path).
+    pub fn plain(arrival: f64, prompt: usize, gen: usize) -> EvictedReq {
+        EvictedReq {
+            arrival,
+            prompt,
+            gen,
+            ctx: 0,
+            ckpt_ctx: 0,
+            ckpt_decoded: 0,
+            ckpt_fresh: 0,
+            ckpt_bytes: 0.0,
+            peer: 0,
+        }
+    }
 }
 
 /// Pending re-dispatch of an evicted request. Ordered by (fire time,
@@ -184,14 +235,42 @@ pub struct RetryEntry {
     pub attempts: u32,
 }
 
-/// `EvictedReq` with the arrival time carried as bits so the entry can
+/// `EvictedReq` with the float fields carried as bits so the entry can
 /// derive total `Eq`/`Ord` (the payload does not participate in
-/// ordering beyond tie-breaking deterministically).
+/// ordering beyond tie-breaking deterministically — `seq` is unique
+/// and compares first).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct EvictedReqBits {
     pub arrival_bits: u64,
     pub prompt: usize,
     pub gen: usize,
+    pub ctx: usize,
+    pub ckpt_ctx: usize,
+    pub ckpt_decoded: usize,
+    pub ckpt_fresh: usize,
+    pub ckpt_bytes_bits: u64,
+    pub peer: usize,
+}
+
+impl EvictedReqBits {
+    /// Back to the float-carrying form for a re-dispatch or requeue.
+    pub fn req(&self) -> EvictedReq {
+        EvictedReq {
+            arrival: f64::from_bits(self.arrival_bits),
+            prompt: self.prompt,
+            gen: self.gen,
+            ctx: self.ctx,
+            ckpt_ctx: self.ckpt_ctx,
+            ckpt_decoded: self.ckpt_decoded,
+            ckpt_fresh: self.ckpt_fresh,
+            ckpt_bytes: f64::from_bits(self.ckpt_bytes_bits),
+            peer: self.peer,
+        }
+    }
+
+    pub fn ckpt_bytes(&self) -> f64 {
+        f64::from_bits(self.ckpt_bytes_bits)
+    }
 }
 
 impl RetryEntry {
@@ -204,6 +283,12 @@ impl RetryEntry {
                 arrival_bits: req.arrival.to_bits(),
                 prompt: req.prompt,
                 gen: req.gen,
+                ctx: req.ctx,
+                ckpt_ctx: req.ckpt_ctx,
+                ckpt_decoded: req.ckpt_decoded,
+                ckpt_fresh: req.ckpt_fresh,
+                ckpt_bytes_bits: req.ckpt_bytes.to_bits(),
+                peer: req.peer,
             },
             attempts,
         }
@@ -279,6 +364,11 @@ pub struct FleetHealth {
     pub stalls: usize,
     /// Throttle state flips (on or off).
     pub throttle_events: usize,
+    /// Every `(inst, a, b)` link mask that actually rerouted, in
+    /// application order — the replay log the snapshot/resume path uses
+    /// to rebuild the (non-serializable) masked topologies and routing
+    /// tables bit-identically.
+    pub failed_links: Vec<(usize, usize, usize)>,
 }
 
 impl FleetHealth {
@@ -319,6 +409,7 @@ impl FleetHealth {
             links_failed: 0,
             stalls: 0,
             throttle_events: 0,
+            failed_links: Vec::new(),
         }
     }
 
@@ -495,7 +586,131 @@ impl FleetHealth {
         let stretch = (inst.routes.mean_hops() / inst.base_mean_hops).max(1.0);
         inst.hop_stretch *= stretch;
         self.links_failed += 1;
+        self.failed_links.push((i, a, b));
         LinkFailOutcome::Rerouted { stretch }
+    }
+
+    /// Serialize the mutable health state into `w` (floats bit-exact).
+    /// Topologies/routing tables are not serialized — the `failed_links`
+    /// replay log rebuilds them on restore; trace gauges are telemetry,
+    /// not simulation state, and are skipped.
+    pub fn snapshot_into(&self, w: &mut JsonWriter) {
+        w.begin_obj();
+        w.field_usize("failures", self.failures);
+        w.field_usize("retries", self.retries);
+        w.field_usize("dropped", self.dropped);
+        w.field_usize("links_failed", self.links_failed);
+        w.field_usize("stalls", self.stalls);
+        w.field_usize("throttle_events", self.throttle_events);
+        w.key("failed_links");
+        w.begin_arr();
+        for &(i, a, b) in &self.failed_links {
+            w.begin_arr();
+            w.usize_val(i);
+            w.usize_val(a);
+            w.usize_val(b);
+            w.end();
+        }
+        w.end();
+        w.key("insts");
+        w.begin_arr();
+        for inst in &self.insts {
+            w.begin_obj();
+            w.key("alive");
+            w.bool_val(inst.alive);
+            w.field_bits("down_until", inst.down_until);
+            w.field_bits("temp_c", inst.temp_c);
+            w.field_bits("last_t", inst.last_t);
+            w.field_bits("last_energy", inst.last_energy);
+            w.key("throttled");
+            w.bool_val(inst.throttled);
+            w.field_bits("wear_writes", inst.wear_writes);
+            w.field_bits("wear_frac", inst.wear_frac);
+            w.field_bits("hop_stretch", inst.hop_stretch);
+            w.end();
+        }
+        w.end();
+        w.end();
+    }
+
+    /// Restore state serialized by [`Self::snapshot_into`] into a
+    /// freshly built runtime (same config, platforms and capacities):
+    /// replays the recorded link masks to rebuild the degraded routing
+    /// tables, then overwrites every mutable scalar.
+    pub fn restore_from(&mut self, j: &Json) -> Result<()> {
+        let links = j
+            .get("failed_links")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("health snapshot: missing 'failed_links'"))?;
+        for l in links {
+            let t = l
+                .as_arr()
+                .filter(|t| t.len() == 3)
+                .ok_or_else(|| anyhow!("health snapshot: malformed failed_links entry"))?;
+            let (i, a, b) = (
+                t[0].as_usize()
+                    .ok_or_else(|| anyhow!("health snapshot: bad link instance"))?,
+                t[1].as_usize()
+                    .ok_or_else(|| anyhow!("health snapshot: bad link endpoint"))?,
+                t[2].as_usize()
+                    .ok_or_else(|| anyhow!("health snapshot: bad link endpoint"))?,
+            );
+            if i >= self.insts.len() {
+                bail!("health snapshot: link instance {i} out of range");
+            }
+            match self.fail_link(i, a, b) {
+                LinkFailOutcome::Rerouted { .. } => {}
+                other => bail!(
+                    "health snapshot: replaying link mask {i}:{a}-{b} gave {other:?}, \
+                     expected a reroute (snapshot/config mismatch?)"
+                ),
+            }
+        }
+        let insts = j
+            .get("insts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("health snapshot: missing 'insts'"))?;
+        if insts.len() != self.insts.len() {
+            bail!(
+                "health snapshot: {} instances serialized, runtime has {}",
+                insts.len(),
+                self.insts.len()
+            );
+        }
+        let hb = |o: &Json, k: &str| -> Result<f64> {
+            o.get(k)
+                .and_then(Json::as_bits)
+                .ok_or_else(|| anyhow!("health snapshot: missing/invalid f64 field '{k}'"))
+        };
+        for (inst, o) in self.insts.iter_mut().zip(insts) {
+            inst.alive = o
+                .get("alive")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow!("health snapshot: missing 'alive'"))?;
+            inst.down_until = hb(o, "down_until")?;
+            inst.temp_c = hb(o, "temp_c")?;
+            inst.last_t = hb(o, "last_t")?;
+            inst.last_energy = hb(o, "last_energy")?;
+            inst.throttled = o
+                .get("throttled")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow!("health snapshot: missing 'throttled'"))?;
+            inst.wear_writes = hb(o, "wear_writes")?;
+            inst.wear_frac = hb(o, "wear_frac")?;
+            inst.hop_stretch = hb(o, "hop_stretch")?;
+        }
+        let hc = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("health snapshot: missing counter '{k}'"))
+        };
+        self.failures = hc("failures")?;
+        self.retries = hc("retries")?;
+        self.dropped = hc("dropped")?;
+        self.links_failed = hc("links_failed")?;
+        self.stalls = hc("stalls")?;
+        self.throttle_events = hc("throttle_events")?;
+        Ok(())
     }
 
     /// Flush the per-instance gauges into the trace (end of run).
@@ -569,12 +784,38 @@ mod tests {
     }
 
     #[test]
+    fn fault_plan_errors_name_the_event_and_the_field() {
+        let cases = [
+            ("crash", "missing '@' between kind and time"),
+            ("crash@x:1", "unparseable time 'x'"),
+            ("crash@-1.0:0", "time '-1.0' must be >= 0"),
+            ("crash@1.0", "missing instance field"),
+            ("crash@1.0:zz", "unparseable instance 'zz'"),
+            ("crash@1:0:soon", "unparseable down_secs 'soon'"),
+            ("link@1:0", "missing A-B link field"),
+            ("link@1:0:2", "unparseable A-B link '2'"),
+            ("link@1:0:a-b", "unparseable A-B link 'a-b'"),
+            ("stall@1:0", "missing stall secs field"),
+            ("stall@1:0:x", "unparseable stall secs 'x'"),
+            ("wat@1:0", "unknown kind 'wat'"),
+            ("crash@1:0:0.5:9", "trailing field '9'"),
+        ];
+        for (bad, needle) in cases {
+            let err = FaultPlan::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains(&format!("bad fault event '{bad}'")),
+                "'{bad}' error must quote the event spec, got: {err}"
+            );
+            assert!(err.contains(needle), "'{bad}' must name the field, got: {err}");
+        }
+        // a good event before the bad one still names the bad one
+        let err = FaultPlan::parse("crash@1:0,stall@2:1:x").unwrap_err().to_string();
+        assert!(err.contains("'stall@2:1:x'"), "got: {err}");
+    }
+
+    #[test]
     fn retry_heap_pops_in_time_then_seq_order() {
-        let req = EvictedReq {
-            arrival: 0.5,
-            prompt: 8,
-            gen: 2,
-        };
+        let req = EvictedReq::plain(0.5, 8, 2);
         let mut heap = BinaryHeap::new();
         heap.push(Reverse(RetryEntry::new(2.0, 0, req, 1)));
         heap.push(Reverse(RetryEntry::new(1.0, 5, req, 1)));
@@ -712,6 +953,62 @@ mod tests {
         assert!(h.crash(0, 2.0, 0.0));
         assert_eq!(h.next_recovery(), f64::INFINITY);
         assert_eq!(h.recover_due(1.0e12), None);
+    }
+
+    #[test]
+    fn health_snapshot_restore_roundtrips_bit_exactly() {
+        // mutate every kind of state — thermal, wear, a crash, a link
+        // mask, counters — snapshot, restore into a fresh runtime, and
+        // compare every observable bit-for-bit
+        let sys = SystemConfig::s36();
+        let opts = SimOptions::default();
+        let platforms = vec![
+            Platform::new(Arch::TransPimChiplet, &sys, &opts),
+            Platform::new(Arch::Hi25D, &sys, &opts),
+        ];
+        let kv = [1.0e9, 2.0e9];
+        let mut h = FleetHealth::new(HealthConfig::default(), &platforms, &kv);
+        let tracer = Tracer::off();
+        let model = ModelZoo::bert_base();
+        h.update_thermal(0, 0.0, 0.0, &tracer);
+        h.update_thermal(0, 0.01, 5.0, &tracer);
+        h.note_dispatch(0, &model, 64, 0.01, &tracer);
+        h.crash(1, 0.02, 0.5);
+        h.stalls += 1;
+        h.retries += 3;
+        h.dropped += 1;
+        let (a, b) = platforms[0].design.topo.links[0];
+        let masked = matches!(h.fail_link(0, a, b), LinkFailOutcome::Rerouted { .. });
+        let mut w = JsonWriter::new();
+        h.snapshot_into(&mut w);
+        let j = Json::parse(&w.finish()).expect("health snapshot parses");
+        let mut g = FleetHealth::new(HealthConfig::default(), &platforms, &kv);
+        g.restore_from(&j).expect("health snapshot restores");
+        for i in 0..2 {
+            assert_eq!(g.alive(i), h.alive(i), "inst {i}");
+            assert_eq!(g.temp_c(i).to_bits(), h.temp_c(i).to_bits(), "inst {i}");
+            assert_eq!(g.wear_frac(i).to_bits(), h.wear_frac(i).to_bits(), "inst {i}");
+            assert_eq!(g.slowdown(i).to_bits(), h.slowdown(i).to_bits(), "inst {i}");
+        }
+        assert_eq!(g.next_recovery(), h.next_recovery());
+        assert_eq!(g.failures, h.failures);
+        assert_eq!(g.retries, h.retries);
+        assert_eq!(g.dropped, h.dropped);
+        assert_eq!(g.links_failed, h.links_failed);
+        assert_eq!(g.stalls, h.stalls);
+        assert_eq!(g.throttle_events, h.throttle_events);
+        assert_eq!(g.failed_links, h.failed_links);
+        if masked {
+            assert_eq!(
+                g.insts[0].routes.mean_hops().to_bits(),
+                h.insts[0].routes.mean_hops().to_bits(),
+                "replayed routing table must match the original"
+            );
+        }
+        // instance-count mismatch is a hard error, not silent corruption
+        let solo = vec![Platform::new(Arch::Hi25D, &sys, &opts)];
+        let mut bad = FleetHealth::new(HealthConfig::default(), &solo, &kv[..1]);
+        assert!(bad.restore_from(&j).is_err());
     }
 
     #[test]

@@ -41,6 +41,12 @@
 //!   capacity, and a seeded [`FaultPlan`] of instance crashes,
 //!   rerouted NoI link failures and transient stalls, with bounded
 //!   retry/backoff re-dispatch of evicted requests.
+//! - [`recovery`]: crash recovery without recompute — periodic KV
+//!   checkpoint/replication to a peer instance (transfer charged as
+//!   engine dead time), crash victims restored from their last
+//!   checkpointed token via the retry heap, and the versioned
+//!   deterministic snapshot/resume format splitting a streaming run at
+//!   any point with a bit-identical `FleetReport`.
 
 pub mod arrivals;
 pub mod cluster;
@@ -49,6 +55,7 @@ pub mod dispatch;
 pub mod engine;
 pub mod health;
 pub mod platform;
+pub mod recovery;
 pub mod scheduler;
 pub mod serving;
 
@@ -56,7 +63,7 @@ pub use arrivals::{ArrivalEvent, ArrivalGen, LenDist, Tenant};
 pub use cluster::{
     estimate_service_secs, estimate_service_secs_on, instance_cost_basis, route_requests,
     AutoscaleConfig, ClusterConfig, ClusterSim, DispatchPolicy, FleetReport, InstanceSpec,
-    StreamConfig,
+    StreamConfig, StreamOutcome,
 };
 pub use decode::{decode_step, decode_step_on, generate, generate_on, DecodeReport};
 pub use engine::{simulate, SimOptions};
@@ -65,5 +72,6 @@ pub use health::{
     LinkFailOutcome, RetryEntry,
 };
 pub use platform::{platform_build_count, Platform};
+pub use recovery::{CheckpointConfig, RecoveryRt, SNAPSHOT_VERSION};
 pub use scheduler::{ChunkedPrefill, ContinuousBatching, Scheduler, StepPlan};
 pub use serving::{ArrivalProcess, ServingConfig, ServingReport, ServingSamples, ServingSim};

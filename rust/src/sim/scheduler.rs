@@ -77,6 +77,17 @@ pub struct ReqState {
     /// in the simulation reads it, so traced and untraced runs stay
     /// bit-identical.
     pub trace_id: u64,
+    /// KV context captured by this request's last replica checkpoint
+    /// (0 = never checkpointed). Stamped by
+    /// [`crate::sim::ServingSim::checkpoint_live`]; read at crash
+    /// eviction so the retry can restore instead of recompute.
+    pub ckpt_ctx: usize,
+    /// Decoded tokens captured by that checkpoint.
+    pub ckpt_decoded: usize,
+    /// Decoded tokens this request was restored with (0 for a fresh
+    /// arrival) — the watermark that keeps repeated crash/restore
+    /// cycles from re-crediting the same recovered tokens.
+    pub resumed_from: usize,
 }
 
 impl ReqState {
@@ -95,6 +106,9 @@ impl ReqState {
             energy_j: 0.0,
             preemptions: 0,
             trace_id: 0,
+            ckpt_ctx: 0,
+            ckpt_decoded: 0,
+            resumed_from: 0,
         }
     }
 
@@ -130,8 +144,9 @@ pub struct ServingState {
     /// Request slab; slots are recycled via the free list after
     /// retirement.
     pub reqs: Vec<ReqState>,
-    /// Recycled slab slots.
-    free: Vec<usize>,
+    /// Recycled slab slots. Crate-visible so the engine's
+    /// snapshot/restore path can serialize the slab structure exactly.
+    pub(crate) free: Vec<usize>,
     /// Arrived, not yet admitted (FCFS; preempted requests re-enter at
     /// the front so resume has priority).
     pub waiting: VecDeque<usize>,

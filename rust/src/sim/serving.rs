@@ -59,9 +59,11 @@ use crate::sim::decode::{decode_step_on, kv_cache_bytes};
 use crate::sim::engine::SimOptions;
 use crate::sim::health::EvictedReq;
 use crate::sim::platform::Platform;
-use crate::sim::scheduler::{scheduler_for, Scheduler, ServingState, StepPlan};
-use crate::util::json::JsonWriter;
+use crate::sim::scheduler::{scheduler_for, ReqState, Scheduler, ServingState, StepPlan};
+use crate::util::error::Result;
+use crate::util::json::{Json, JsonWriter};
 use crate::util::sketch::{SampleSink, SinkMode};
+use crate::{anyhow, bail};
 
 pub use crate::sim::arrivals::{ArrivalEvent, ArrivalProcess, LenDist, Tenant};
 
@@ -413,8 +415,10 @@ impl<'a> ServingSim<'a> {
     /// [`Self::advance_until`]`(t)` first so the engine has caught up).
     /// Oversized footprints are rejected here, everything else joins the
     /// admission queue; in disaggregated mode the serial off-engine
-    /// prefill instance is booked immediately.
-    pub fn push_request(&mut self, t: f64, prompt_len: usize, gen_tokens: usize) {
+    /// prefill instance is booked immediately. Returns the queued
+    /// request's slab slot (`None` if rejected) — the recovery layer's
+    /// [`Self::push_restored`] uses it to preset checkpointed progress.
+    pub fn push_request(&mut self, t: f64, prompt_len: usize, gen_tokens: usize) -> Option<usize> {
         let prompt_len = prompt_len.max(1);
         let kv_full = kv_cache_bytes(self.model, prompt_len + gen_tokens);
         let fits = kv_full <= self.cfg.kv_capacity_bytes;
@@ -450,7 +454,7 @@ impl<'a> ServingSim<'a> {
                     &[("prompt", prompt_len as f64), ("gen", gen_tokens as f64)],
                 );
             }
-            return;
+            return None;
         }
         let i = run.st.push(t, prompt_len, gen_tokens, kv_full);
         if tracer.on() {
@@ -475,6 +479,80 @@ impl<'a> ServingSim<'a> {
             r.energy_j += p_energy;
         }
         run.st.waiting.push_back(i);
+        Some(i)
+    }
+
+    /// Feed a crash victim restored from its replica checkpoint: queue
+    /// it like a fresh arrival (same footprint rejection rules), then
+    /// preset the checkpointed progress — `decoded` tokens already
+    /// delivered and `ctx` context tokens of KV rematerialized from the
+    /// replica — so admission prefills only the post-checkpoint context
+    /// delta instead of the whole prompt. The restore transfer time is
+    /// the caller's to charge (via [`Self::inject_stall`]).
+    pub fn push_restored(
+        &mut self,
+        t: f64,
+        prompt_len: usize,
+        gen_tokens: usize,
+        ctx: usize,
+        decoded: usize,
+    ) {
+        let Some(i) = self.push_request(t, prompt_len, gen_tokens) else {
+            return;
+        };
+        let run = self.run.as_mut().expect("push_request ran under begin()");
+        let r = &mut run.st.reqs[i];
+        let decoded = decoded.min(r.gen_tokens);
+        let ctx = ctx.min(r.prompt_len + decoded);
+        r.decoded = decoded;
+        r.kv_tokens = ctx;
+        r.resumed_from = decoded;
+        r.ckpt_ctx = ctx;
+        r.ckpt_decoded = decoded;
+        if decoded > 0 {
+            // already past its first token before the crash: the
+            // restored lifecycle re-enters mid-decode, so its local
+            // TTFT clock is the restore instant (first-token latency
+            // was paid, and sampled, before the crash)
+            r.ready = t;
+            r.first_token = t;
+        }
+    }
+
+    /// Checkpoint round: stamp every live request's current context and
+    /// decoded count as replicated to this instance's peer, returning
+    /// `(requests, bytes)` of replica traffic (context tokens × KV
+    /// bytes/token; requests with no KV yet ship nothing). The fleet
+    /// recovery layer charges the transfer as engine dead time via
+    /// [`Self::inject_stall`] and attributes the bytes.
+    pub fn checkpoint_live(&mut self) -> (usize, f64) {
+        let Some(run) = self.run.as_mut() else {
+            return (0, 0.0);
+        };
+        let kv_token = run.st.kv_token;
+        let mut count = 0usize;
+        let mut bytes = 0.0f64;
+        for k in 0..run.st.active.len() {
+            let i = run.st.active[k];
+            let r = &mut run.st.reqs[i];
+            r.ckpt_ctx = r.kv_tokens;
+            r.ckpt_decoded = r.decoded;
+            if r.kv_tokens > 0 {
+                count += 1;
+                bytes += r.kv_tokens as f64 * kv_token;
+            }
+        }
+        for k in 0..run.st.waiting.len() {
+            let i = run.st.waiting[k];
+            let r = &mut run.st.reqs[i];
+            r.ckpt_ctx = r.kv_tokens;
+            r.ckpt_decoded = r.decoded;
+            if r.kv_tokens > 0 {
+                count += 1;
+                bytes += r.kv_tokens as f64 * kv_token;
+            }
+        }
+        (count, bytes)
     }
 
     /// Simulate until the engine clock reaches `bound` (or everything
@@ -814,6 +892,7 @@ impl<'a> ServingSim<'a> {
             return Vec::new();
         };
         let clock = run.st.clock;
+        let kv_token = run.st.kv_token;
         let evicted = run.st.evict_live();
         let mut out = Vec::with_capacity(evicted.len());
         for (_, r) in evicted {
@@ -825,6 +904,15 @@ impl<'a> ServingSim<'a> {
                 arrival: r.arrival,
                 prompt: r.prompt_len,
                 gen: r.gen_tokens,
+                ctx: r.kv_tokens,
+                ckpt_ctx: r.ckpt_ctx,
+                ckpt_decoded: r.ckpt_decoded,
+                // distinct tokens a restore would newly recover: the
+                // checkpointed prefix minus whatever this incarnation
+                // was itself restored with (repeat-crash watermark)
+                ckpt_fresh: r.ckpt_decoded.saturating_sub(r.resumed_from),
+                ckpt_bytes: r.ckpt_ctx as f64 * kv_token,
+                peer: 0,
             });
         }
         out
@@ -839,6 +927,190 @@ impl<'a> ServingSim<'a> {
             run.st.clock += secs;
             run.prefill_free_at += secs;
         }
+    }
+
+    /// Serialize the full in-flight run state (between `begin` and
+    /// `finish`) into `w` as one JSON object — every float as its IEEE
+    /// bit pattern, every u64 as a decimal string, so a restored run
+    /// continues bit-identically. Everything *derivable* from the
+    /// platform/model/config (cost intercepts, memo caches, the
+    /// per-token KV size) is rebuilt by [`Self::begin`] on the other
+    /// side and deliberately not serialized; trace gauges are windowed
+    /// telemetry, not simulation state, and are skipped too.
+    pub fn snapshot_into(&self, w: &mut JsonWriter) {
+        let run = self.run.as_ref().expect("begin() before snapshot_into()");
+        w.begin_obj();
+        w.field_bits("clock", run.st.clock);
+        w.field_bits("kv_reserved", run.st.kv_reserved);
+        w.field_usize("completed", run.st.completed);
+        w.field_usize("rejected", run.st.rejected);
+        w.field_usize("preemptions", run.st.preemptions);
+        w.field_usize("peak_live", run.st.peak_live);
+        w.key("reqs");
+        w.begin_arr();
+        for r in &run.st.reqs {
+            w.begin_obj();
+            w.field_bits("arrival", r.arrival);
+            w.field_usize("prompt_len", r.prompt_len);
+            w.field_usize("gen_tokens", r.gen_tokens);
+            w.field_bits("kv_full", r.kv_full);
+            w.field_bits("ready", r.ready);
+            w.field_bits("first_token", r.first_token);
+            w.field_bits("finish", r.finish);
+            w.field_usize("decoded", r.decoded);
+            w.field_usize("kv_tokens", r.kv_tokens);
+            w.field_bits("kv_held", r.kv_held);
+            w.field_bits("energy_j", r.energy_j);
+            w.field_usize("preemptions", r.preemptions);
+            w.field_u64_str("trace_id", r.trace_id);
+            w.field_usize("ckpt_ctx", r.ckpt_ctx);
+            w.field_usize("ckpt_decoded", r.ckpt_decoded);
+            w.field_usize("resumed_from", r.resumed_from);
+            w.end();
+        }
+        w.end();
+        w.key("free");
+        w.begin_arr();
+        for &i in &run.st.free {
+            w.usize_val(i);
+        }
+        w.end();
+        w.key("waiting");
+        w.begin_arr();
+        for &i in &run.st.waiting {
+            w.usize_val(i);
+        }
+        w.end();
+        w.key("active");
+        w.begin_arr();
+        for &i in &run.st.active {
+            w.usize_val(i);
+        }
+        w.end();
+        w.field_bits("prefill_free_at", run.prefill_free_at);
+        w.field_usize("arrived", run.arrived);
+        w.field_bits("first_arrival", run.first_arrival);
+        w.field_bits("last_finish", run.last_finish);
+        w.field_bits("peak_kv", run.peak_kv);
+        w.field_bits("batch_sum", run.batch_sum);
+        w.field_usize("batch_steps", run.batch_steps);
+        w.field_u64_str("decoded_tokens", run.decoded_tokens);
+        w.field_bits("busy_secs", run.busy_secs);
+        w.field_bits("total_energy", run.total_energy);
+        w.field_bits("energy_dissipated", run.energy_dissipated);
+        w.field_bits("throttle", self.throttle);
+        // wear/degradation may have shrunk the effective pool below the
+        // configured value — the live knob is state, not config
+        w.field_bits("kv_capacity", self.cfg.kv_capacity_bytes);
+        w.key("ttft");
+        run.ttft.snapshot_into(w);
+        w.key("tpot");
+        run.tpot.snapshot_into(w);
+        w.key("completions");
+        w.begin_arr();
+        for &(a, b) in &run.completions {
+            w.begin_arr();
+            w.bits_val(a);
+            w.bits_val(b);
+            w.end();
+        }
+        w.end();
+        w.end();
+    }
+
+    /// Restore a run serialized by [`Self::snapshot_into`]. Call
+    /// [`Self::begin`] first on an identically configured engine (it
+    /// rebuilds the derived state); this overwrites the mutable state
+    /// so the next `advance_until`/`push_request` continues exactly
+    /// where the snapshotted run left off.
+    pub fn restore_from(&mut self, j: &Json) -> Result<()> {
+        let run = self.run.as_mut().expect("begin() before restore_from()");
+        run.st.clock = snap_f64(j, "clock")?;
+        run.st.kv_reserved = snap_f64(j, "kv_reserved")?;
+        run.st.completed = snap_usize(j, "completed")?;
+        run.st.rejected = snap_usize(j, "rejected")?;
+        run.st.preemptions = snap_usize(j, "preemptions")?;
+        run.st.peak_live = snap_usize(j, "peak_live")?;
+        let reqs = j
+            .get("reqs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("engine snapshot: missing 'reqs' array"))?;
+        run.st.reqs.clear();
+        for r in reqs {
+            run.st.reqs.push(ReqState {
+                arrival: snap_f64(r, "arrival")?,
+                prompt_len: snap_usize(r, "prompt_len")?,
+                gen_tokens: snap_usize(r, "gen_tokens")?,
+                kv_full: snap_f64(r, "kv_full")?,
+                ready: snap_f64(r, "ready")?,
+                first_token: snap_f64(r, "first_token")?,
+                finish: snap_f64(r, "finish")?,
+                decoded: snap_usize(r, "decoded")?,
+                kv_tokens: snap_usize(r, "kv_tokens")?,
+                kv_held: snap_f64(r, "kv_held")?,
+                energy_j: snap_f64(r, "energy_j")?,
+                preemptions: snap_usize(r, "preemptions")?,
+                trace_id: snap_u64(r, "trace_id")?,
+                ckpt_ctx: snap_usize(r, "ckpt_ctx")?,
+                ckpt_decoded: snap_usize(r, "ckpt_decoded")?,
+                resumed_from: snap_usize(r, "resumed_from")?,
+            });
+        }
+        run.st.free = snap_idx_vec(j, "free")?;
+        run.st.waiting = snap_idx_vec(j, "waiting")?.into();
+        run.st.active = snap_idx_vec(j, "active")?;
+        let n = run.st.reqs.len();
+        for &i in run
+            .st
+            .free
+            .iter()
+            .chain(run.st.waiting.iter())
+            .chain(run.st.active.iter())
+        {
+            if i >= n {
+                bail!("engine snapshot: request index {i} out of range ({n} slots)");
+            }
+        }
+        run.prefill_free_at = snap_f64(j, "prefill_free_at")?;
+        run.arrived = snap_usize(j, "arrived")?;
+        run.first_arrival = snap_f64(j, "first_arrival")?;
+        run.last_finish = snap_f64(j, "last_finish")?;
+        run.peak_kv = snap_f64(j, "peak_kv")?;
+        run.batch_sum = snap_f64(j, "batch_sum")?;
+        run.batch_steps = snap_usize(j, "batch_steps")?;
+        run.decoded_tokens = snap_u64(j, "decoded_tokens")?;
+        run.busy_secs = snap_f64(j, "busy_secs")?;
+        run.total_energy = snap_f64(j, "total_energy")?;
+        run.energy_dissipated = snap_f64(j, "energy_dissipated")?;
+        run.ttft = j
+            .get("ttft")
+            .and_then(SampleSink::restore)
+            .ok_or_else(|| anyhow!("engine snapshot: missing/invalid 'ttft' sink"))?;
+        run.tpot = j
+            .get("tpot")
+            .and_then(SampleSink::restore)
+            .ok_or_else(|| anyhow!("engine snapshot: missing/invalid 'tpot' sink"))?;
+        let comps = j
+            .get("completions")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("engine snapshot: missing 'completions' array"))?;
+        run.completions.clear();
+        for c in comps {
+            let pair = c
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| anyhow!("engine snapshot: malformed completion pair"))?;
+            let a = pair[0]
+                .as_bits()
+                .ok_or_else(|| anyhow!("engine snapshot: malformed completion ttft"))?;
+            let b = pair[1]
+                .as_bits()
+                .ok_or_else(|| anyhow!("engine snapshot: malformed completion tpot"))?;
+            run.completions.push((a, b));
+        }
+        self.throttle = snap_f64(j, "throttle")?;
+        self.cfg.kv_capacity_bytes = snap_f64(j, "kv_capacity")?;
+        Ok(())
     }
 
     /// End the run and aggregate. TTFT = first decoded token minus
@@ -928,6 +1200,37 @@ impl<'a> ServingSim<'a> {
         self.advance_until(f64::INFINITY);
         self.finish()
     }
+}
+
+/// Bit-exact f64 field of an engine-snapshot object.
+fn snap_f64(j: &Json, k: &str) -> Result<f64> {
+    j.get(k)
+        .and_then(Json::as_bits)
+        .ok_or_else(|| anyhow!("engine snapshot: missing/invalid f64 field '{k}'"))
+}
+
+fn snap_usize(j: &Json, k: &str) -> Result<usize> {
+    j.get(k)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("engine snapshot: missing/invalid usize field '{k}'"))
+}
+
+fn snap_u64(j: &Json, k: &str) -> Result<u64> {
+    j.get(k)
+        .and_then(Json::as_u64_str)
+        .ok_or_else(|| anyhow!("engine snapshot: missing/invalid u64 field '{k}'"))
+}
+
+fn snap_idx_vec(j: &Json, k: &str) -> Result<Vec<usize>> {
+    j.get(k)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("engine snapshot: missing index array '{k}'"))?
+        .iter()
+        .map(|v| {
+            v.as_usize()
+                .ok_or_else(|| anyhow!("engine snapshot: non-index entry in '{k}'"))
+        })
+        .collect()
 }
 
 /// Memoized full-prefill cost (secs, joules) at this prompt length.
@@ -1627,5 +1930,103 @@ mod tests {
              \"busy_secs\": 0.25, \"utilization\": 0.5, \"sink\": \"exact\", \
              \"samples_buffered_peak\": 6, \"peak_live_requests\": 4}"
         );
+    }
+
+    #[test]
+    fn checkpointed_crash_restores_cheaper_than_recompute() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        // decode-dominated so the request is mid-decode at half the
+        // one-shot makespan
+        let cfg = ServingConfig {
+            arrivals: ArrivalProcess::Trace(vec![0.0]),
+            prompt_len: 16,
+            gen_tokens: 64,
+            ..Default::default()
+        };
+        let full = ServingSim::new(&p, &m, cfg.clone()).run();
+        assert_eq!(full.completed, 1);
+        let span = full.makespan_secs;
+        let mut sim = ServingSim::new(&p, &m, cfg.clone());
+        sim.begin();
+        sim.push_request(0.0, 16, 64);
+        sim.advance_until(0.5 * span);
+        let (cnt, bytes) = sim.checkpoint_live();
+        assert_eq!(cnt, 1);
+        assert!(bytes > 0.0);
+        sim.advance_until(0.6 * span);
+        let evicted = sim.fail_crash();
+        assert_eq!(evicted.len(), 1);
+        let v = &evicted[0];
+        assert!(v.ckpt_decoded > 0, "mid-decode checkpoint must capture tokens");
+        assert!(v.ckpt_ctx >= 16 && v.ctx >= v.ckpt_ctx);
+        assert_eq!(v.ckpt_fresh, v.ckpt_decoded, "first incarnation: all fresh");
+        assert!(v.ckpt_bytes > 0.0);
+        assert_eq!(v.peer, 0, "peer assignment is the fleet's job");
+        // restoring from the checkpoint re-runs only the tail of the work
+        let mut rest = ServingSim::new(&p, &m, cfg.clone());
+        rest.begin();
+        rest.push_restored(0.0, v.prompt, v.gen, v.ckpt_ctx, v.ckpt_decoded);
+        rest.advance_until(f64::INFINITY);
+        let (rr, _) = rest.finish();
+        assert_eq!(rr.completed, 1);
+        let mut reco = ServingSim::new(&p, &m, cfg);
+        reco.begin();
+        reco.push_request(0.0, v.prompt, v.gen);
+        reco.advance_until(f64::INFINITY);
+        let (cr, _) = reco.finish();
+        assert!(
+            rr.busy_secs < cr.busy_secs,
+            "restore {} must beat recompute {}",
+            rr.busy_secs,
+            cr.busy_secs
+        );
+    }
+
+    #[test]
+    fn engine_snapshot_restore_continues_bit_identically() {
+        let sys = SystemConfig::s36();
+        let m = ModelZoo::bert_base();
+        let p = Platform::new(Arch::Hi25D, &sys, &SimOptions::default());
+        for sink in [SinkMode::Exact, SinkMode::Sketch] {
+            let cfg = ServingConfig {
+                arrivals: ArrivalProcess::Poisson {
+                    rate_per_sec: 1.0e5,
+                    num_requests: 120,
+                },
+                prompt_len: 32,
+                gen_tokens: 4,
+                max_batch: 8,
+                sink,
+                ..Default::default()
+            };
+            let events: Vec<ArrivalEvent> = cfg
+                .arrivals
+                .events(cfg.seed, cfg.prompt_len, cfg.gen_tokens, &cfg.len_dist)
+                .collect();
+            let (want, _) = ServingSim::new(&p, &m, cfg.clone()).run_detailed();
+            for cut in [40usize, 90] {
+                let mut a = ServingSim::new(&p, &m, cfg.clone());
+                a.begin();
+                for ev in &events[..cut] {
+                    a.advance_until(ev.t);
+                    a.push_request(ev.t, ev.prompt, ev.gen);
+                }
+                let mut w = JsonWriter::new();
+                a.snapshot_into(&mut w);
+                let j = Json::parse(&w.finish()).expect("engine snapshot parses");
+                let mut b = ServingSim::new(&p, &m, cfg.clone());
+                b.begin();
+                b.restore_from(&j).expect("engine snapshot restores");
+                for ev in &events[cut..] {
+                    b.advance_until(ev.t);
+                    b.push_request(ev.t, ev.prompt, ev.gen);
+                }
+                b.advance_until(f64::INFINITY);
+                let (got, _) = b.finish();
+                assert_eq!(got.to_json(), want.to_json(), "cut={cut}");
+            }
+        }
     }
 }

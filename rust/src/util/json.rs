@@ -69,6 +69,13 @@ impl Json {
         self.as_f64().map(|n| n as usize)
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -81,6 +88,20 @@ impl Json {
             Json::Obj(m) => Some(m),
             _ => None,
         }
+    }
+
+    /// A `u64` carried as a decimal string — the lossless encoding the
+    /// snapshot format uses, since `Json::Num(f64)` truncates integers
+    /// past 2^53 and `f64_val` nulls non-finite floats.
+    pub fn as_u64_str(&self) -> Option<u64> {
+        self.as_str().and_then(|s| s.parse().ok())
+    }
+
+    /// An `f64` carried bit-exactly as its IEEE-754 pattern in a
+    /// decimal string (the inverse of [`JsonWriter::bits_val`]);
+    /// preserves -0.0, infinities and NaN payloads.
+    pub fn as_bits(&self) -> Option<f64> {
+        self.as_u64_str().map(f64::from_bits)
     }
 }
 
@@ -424,6 +445,31 @@ impl JsonWriter {
         self.u64_val(v);
     }
 
+    /// A `u64` as a decimal *string* value — lossless for the full
+    /// 64-bit range (see [`Json::as_u64_str`]).
+    pub fn u64_str_val(&mut self, v: u64) {
+        self.pre_value();
+        self.buf.push('"');
+        self.buf.push_str(&format!("{v}"));
+        self.buf.push('"');
+    }
+
+    /// An `f64` bit-exactly, as its IEEE-754 pattern in a decimal
+    /// string (see [`Json::as_bits`]).
+    pub fn bits_val(&mut self, v: f64) {
+        self.u64_str_val(v.to_bits());
+    }
+
+    pub fn field_u64_str(&mut self, k: &str, v: u64) {
+        self.key(k);
+        self.u64_str_val(v);
+    }
+
+    pub fn field_bits(&mut self, k: &str, v: f64) {
+        self.key(k);
+        self.bits_val(v);
+    }
+
     /// Finish and return the buffer.
     pub fn finish(self) -> String {
         debug_assert!(self.stack.is_empty(), "unclosed JSON container");
@@ -558,6 +604,42 @@ mod tests {
         let mut s = String::new();
         escape_into("a\u{1}b", &mut s);
         assert_eq!(s, "a\\u0001b");
+    }
+
+    #[test]
+    fn bit_exact_roundtrip_survives_nonfinite_and_full_u64() {
+        let floats = [
+            0.5,
+            -0.0,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            f64::MIN_POSITIVE,
+            1.0e300,
+        ];
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.field_u64_str("big", u64::MAX);
+        w.key("fs");
+        w.begin_arr();
+        for &v in &floats {
+            w.bits_val(v);
+        }
+        w.end();
+        w.end();
+        let j = Json::parse(&w.finish()).unwrap();
+        assert_eq!(j.get("big").unwrap().as_u64_str(), Some(u64::MAX));
+        let back: Vec<f64> = j
+            .get("fs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_bits().unwrap())
+            .collect();
+        for (a, b) in floats.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

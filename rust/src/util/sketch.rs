@@ -11,6 +11,7 @@
 //! the target quantiles with bounded relative error — see the pinned
 //! tolerances in the tests below and the quantile contract in ROADMAP.
 
+use crate::util::json::{Json, JsonWriter};
 use crate::util::stats::percentile;
 
 /// One P² marker bank tracking a single quantile `q` in (0, 1).
@@ -134,6 +135,60 @@ impl P2Quantile {
             self.heights[2]
         }
     }
+
+    /// Serialize the full marker state bit-exactly (snapshot/resume):
+    /// a restored estimator continues the stream as if never paused.
+    pub fn snapshot_into(&self, w: &mut JsonWriter) {
+        w.begin_obj();
+        w.field_bits("q", self.q);
+        w.field_u64_str("count", self.count);
+        for (key, vals) in [
+            ("initial", self.initial.as_slice()),
+            ("heights", self.heights.as_slice()),
+            ("positions", self.positions.as_slice()),
+            ("desired", self.desired.as_slice()),
+            ("increments", self.increments.as_slice()),
+        ] {
+            w.key(key);
+            w.begin_arr();
+            for &v in vals {
+                w.bits_val(v);
+            }
+            w.end();
+        }
+        w.end();
+    }
+
+    /// Rebuild from [`P2Quantile::snapshot_into`] output; `None` on a
+    /// malformed snapshot.
+    pub fn restore(j: &Json) -> Option<P2Quantile> {
+        fn five(j: &Json, key: &str) -> Option<[f64; 5]> {
+            let a = j.get(key)?.as_arr()?;
+            if a.len() != 5 {
+                return None;
+            }
+            let mut out = [0.0; 5];
+            for (d, v) in out.iter_mut().zip(a) {
+                *d = v.as_bits()?;
+            }
+            Some(out)
+        }
+        let initial = j
+            .get("initial")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_bits())
+            .collect::<Option<Vec<f64>>>()?;
+        Some(P2Quantile {
+            q: j.get("q")?.as_bits()?,
+            count: j.get("count")?.as_u64_str()?,
+            initial,
+            heights: five(j, "heights")?,
+            positions: five(j, "positions")?,
+            desired: five(j, "desired")?,
+            increments: five(j, "increments")?,
+        })
+    }
 }
 
 /// Streaming tail summary: p50/p95/p99 P² estimators plus running
@@ -222,6 +277,33 @@ impl TailSketch {
     pub fn buffered_len(&self) -> usize {
         self.p50.buffered_len() + self.p95.buffered_len() + self.p99.buffered_len()
     }
+
+    /// Serialize all three marker banks + running stats bit-exactly.
+    pub fn snapshot_into(&self, w: &mut JsonWriter) {
+        w.begin_obj();
+        w.field_u64_str("count", self.count);
+        w.field_bits("sum", self.sum);
+        w.field_bits("min", self.min);
+        w.field_bits("max", self.max);
+        for (key, p2) in [("p50", &self.p50), ("p95", &self.p95), ("p99", &self.p99)] {
+            w.key(key);
+            p2.snapshot_into(w);
+        }
+        w.end();
+    }
+
+    /// Rebuild from [`TailSketch::snapshot_into`] output.
+    pub fn restore(j: &Json) -> Option<TailSketch> {
+        Some(TailSketch {
+            p50: P2Quantile::restore(j.get("p50")?)?,
+            p95: P2Quantile::restore(j.get("p95")?)?,
+            p99: P2Quantile::restore(j.get("p99")?)?,
+            count: j.get("count")?.as_u64_str()?,
+            sum: j.get("sum")?.as_bits()?,
+            min: j.get("min")?.as_bits()?,
+            max: j.get("max")?.as_bits()?,
+        })
+    }
 }
 
 /// Which sink flavor a run should use for its latency samples.
@@ -307,6 +389,44 @@ impl SampleSink {
         match self {
             SampleSink::Exact(_) => SinkMode::Exact,
             SampleSink::Sketch(_) => SinkMode::Sketch,
+        }
+    }
+
+    /// Serialize the sink bit-exactly (snapshot/resume): Exact dumps
+    /// its buffered samples, Sketch its P² marker banks.
+    pub fn snapshot_into(&self, w: &mut JsonWriter) {
+        w.begin_obj();
+        match self {
+            SampleSink::Exact(v) => {
+                w.field_str("mode", "exact");
+                w.key("samples");
+                w.begin_arr();
+                for &x in v {
+                    w.bits_val(x);
+                }
+                w.end();
+            }
+            SampleSink::Sketch(s) => {
+                w.field_str("mode", "sketch");
+                w.key("sketch");
+                s.snapshot_into(w);
+            }
+        }
+        w.end();
+    }
+
+    /// Rebuild from [`SampleSink::snapshot_into`] output.
+    pub fn restore(j: &Json) -> Option<SampleSink> {
+        match j.get("mode")?.as_str()? {
+            "exact" => Some(SampleSink::Exact(
+                j.get("samples")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_bits())
+                    .collect::<Option<Vec<f64>>>()?,
+            )),
+            "sketch" => Some(SampleSink::Sketch(TailSketch::restore(j.get("sketch")?)?)),
+            _ => None,
         }
     }
 }
@@ -432,6 +552,31 @@ mod tests {
         let empty = TailSketch::new();
         assert_eq!(empty.mean(), 0.0);
         assert_eq!(empty.quantile(99.0), 0.0);
+    }
+
+    #[test]
+    fn sink_snapshot_restore_continues_the_stream_bit_exactly() {
+        for mode in [SinkMode::Exact, SinkMode::Sketch] {
+            let mut rng = Rng::new(0xD1CE);
+            let xs: Vec<f64> = (0..4_000).map(|_| (1.2 * rng.normal()).exp()).collect();
+            let mut live = mode.make();
+            for &x in &xs[..2_500] {
+                live.push(x);
+            }
+            let mut w = JsonWriter::new();
+            live.snapshot_into(&mut w);
+            let j = Json::parse(&w.finish()).expect("snapshot parses");
+            let mut resumed = SampleSink::restore(&j).expect("snapshot restores");
+            assert_eq!(live, resumed, "{mode:?} state roundtrip");
+            for &x in &xs[2_500..] {
+                live.push(x);
+                resumed.push(x);
+            }
+            assert_eq!(live, resumed, "{mode:?} diverged after resume");
+            for p in [50.0, 95.0, 99.0] {
+                assert_eq!(live.quantile(p).to_bits(), resumed.quantile(p).to_bits());
+            }
+        }
     }
 
     #[test]
